@@ -1,0 +1,62 @@
+//! Layout explorer: sweep kernel sizes, layouts, and cache parameters
+//! beyond the paper's three configurations — the "what if" tool a user
+//! of this library would reach for when sizing their own accelerator.
+//!
+//! Run: `cargo run --release --example layout_explorer [--tiny]`
+
+use bwma::accel::AccelKind;
+use bwma::layout::Layout;
+use bwma::sim::{simulate, SimConfig};
+use bwma::util::table;
+
+fn main() {
+    let tiny = std::env::args().any(|a| a == "--tiny");
+    let mk = |accel, layout| {
+        let mut cfg = if tiny {
+            SimConfig::tiny(accel, layout, 1)
+        } else {
+            SimConfig::paper(accel, layout, 1)
+        };
+        // The tiny model dims are divisible by 4..32 as well.
+        if tiny {
+            cfg.bert.d_head = 64;
+        }
+        cfg
+    };
+
+    println!("# kernel-size sweep: how the BWMA advantage tracks the accelerator size\n");
+    let mut rows = Vec::new();
+    for b in [4usize, 8, 16, 32] {
+        for kind in ["sa", "simd"] {
+            let accel = match kind {
+                "sa" => AccelKind::Sa { b },
+                _ => AccelKind::Simd { b },
+            };
+            let r = simulate(&mk(accel, Layout::Rwma));
+            let w = simulate(&mk(accel, Layout::Bwma));
+            let miss_ratio =
+                r.mem.l1d_total().misses as f64 / w.mem.l1d_total().misses.max(1) as f64;
+            rows.push(vec![
+                accel.label(),
+                table::cycles(r.total_cycles),
+                table::cycles(w.total_cycles),
+                format!("{:.2}x", w.speedup_over(&r)),
+                format!("{miss_ratio:.1}x"),
+            ]);
+        }
+    }
+    print!(
+        "{}",
+        table::render(
+            &["accelerator", "RWMA", "BWMA", "speedup", "L1-D miss ratio"],
+            &rows
+        )
+    );
+
+    println!("\n# observations");
+    println!("- the smaller the kernel, the more memory-bound the tile stream and the");
+    println!("  larger BWMA's relative win (an RWMA tile row uses only b of each 64-byte line);");
+    println!("- at b=32 an RWMA tile row is half a line and the layouts converge;");
+    println!("- SIMD engines see smaller (but still large) gains: compute occupies a bigger");
+    println!("  share of each tile step, diluting the memory effect.");
+}

@@ -1,0 +1,63 @@
+//! Multi-core scaling study (the paper's Fig. 6b scenario) as a library-
+//! API walkthrough: build configs programmatically, run the simulator,
+//! and reason about where the time goes as cores are added.
+//!
+//! Run: `cargo run --release --example multicore_scaling [--tiny]`
+
+use bwma::accel::AccelKind;
+use bwma::layout::Layout;
+use bwma::sim::{simulate, SimConfig};
+use bwma::util::table;
+
+fn main() {
+    let tiny = std::env::args().any(|a| a == "--tiny");
+    let mk = |layout, cores| {
+        if tiny {
+            SimConfig::tiny(AccelKind::Sa { b: 16 }, layout, cores)
+        } else {
+            SimConfig::paper(AccelKind::Sa { b: 16 }, layout, cores)
+        }
+    };
+
+    println!("# Fig. 6b scenario: SA16x16, BERT-base encoder layer, 1/2/4 cores\n");
+    let mut rows = Vec::new();
+    let mut single_bwma = 0u64;
+    let mut dual_rwma = 0u64;
+    for cores in [1usize, 2, 4] {
+        let r = simulate(&mk(Layout::Rwma, cores));
+        let b = simulate(&mk(Layout::Bwma, cores));
+        if cores == 1 {
+            single_bwma = b.total_cycles;
+        }
+        if cores == 2 {
+            dual_rwma = r.total_cycles;
+        }
+        rows.push(vec![
+            cores.to_string(),
+            table::cycles(r.total_cycles),
+            table::cycles(b.total_cycles),
+            format!("{:.2}x", b.speedup_over(&r)),
+            format!("{:.1}%", 100.0 * r.non_gemm_share()),
+            format!("{:.1}%", 100.0 * b.non_gemm_share()),
+        ]);
+    }
+    print!(
+        "{}",
+        table::render(
+            &["cores", "RWMA", "BWMA", "BWMA speedup", "RWMA non-GEMM", "BWMA non-GEMM"],
+            &rows
+        )
+    );
+
+    println!();
+    if single_bwma < dual_rwma {
+        println!(
+            "✓ paper's standout claim holds: 1-core BWMA ({}) beats 2-core RWMA ({}) —",
+            table::cycles(single_bwma),
+            table::cycles(dual_rwma)
+        );
+        println!("  rearranging memory (zero hardware cost) outperforms doubling the cores.");
+    } else {
+        println!("✗ claim does NOT hold at this scale (expected at paper scale only)");
+    }
+}

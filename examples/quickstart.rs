@@ -1,0 +1,62 @@
+//! Quickstart: the two halves of the reproduction in one file.
+//!
+//! 1. **Timing** — simulate one BERT-base encoder layer on a single-core
+//!    SA16x16 system under RWMA and BWMA and print the speed-up (the
+//!    paper's Fig. 6a data point).
+//! 2. **Numerics** — load the AOT-compiled encoder artifact via PJRT, run
+//!    a real forward pass from Rust, and round-trip the block-wise layout
+//!    packing on the host side.
+//!
+//! Run: `cargo run --release --example quickstart` (after `make artifacts`).
+
+use anyhow::Result;
+
+use bwma::accel::AccelKind;
+use bwma::layout::Layout;
+use bwma::runtime::{artifacts_dir, GoldenSet, Runtime, Tensor};
+use bwma::sim::{simulate, SimConfig};
+use bwma::util::table;
+
+fn main() -> Result<()> {
+    // ---- 1. Timing: RWMA vs BWMA on the simulated testbed ----
+    println!("# simulating one BERT-base encoder layer (SA16x16, 1 core)…");
+    let rwma = simulate(&SimConfig::paper(AccelKind::Sa { b: 16 }, Layout::Rwma, 1));
+    let bwma = simulate(&SimConfig::paper(AccelKind::Sa { b: 16 }, Layout::Bwma, 1));
+    println!(
+        "RWMA: {} ({:.0} ms)   BWMA: {} ({:.0} ms)   speed-up: {:.2}x",
+        table::cycles(rwma.total_cycles),
+        rwma.seconds() * 1e3,
+        table::cycles(bwma.total_cycles),
+        bwma.seconds() * 1e3,
+        bwma.speedup_over(&rwma)
+    );
+    println!(
+        "L1-D misses: {} → {} ({:.1}x fewer)\n",
+        table::count(rwma.mem.l1d_total().misses),
+        table::count(bwma.mem.l1d_total().misses),
+        rwma.mem.l1d_total().misses as f64 / bwma.mem.l1d_total().misses as f64
+    );
+
+    // ---- 2. Numerics: run the compiled encoder from Rust via PJRT ----
+    println!("# loading AOT artifact and running a real forward pass…");
+    let dir = artifacts_dir()?;
+    let rt = Runtime::cpu()?;
+    let golden = GoldenSet::load(&dir, "encoder_jnp_b16")?;
+    let exe = rt.load_hlo(&dir.join("encoder_jnp_b16.hlo.txt"))?;
+    let out = exe.run1(&golden.inputs(), golden.expected().shape.clone())?;
+    println!(
+        "encoder output: shape {:?}, max|Δ| vs python golden = {:.2e}",
+        out.shape,
+        out.max_abs_diff(golden.expected())
+    );
+    assert!(out.allclose(golden.expected(), 1e-4, 1e-4), "numerics must match");
+
+    // ---- 3. Host-side layout round-trip (the BWMA pack itself) ----
+    let x = Tensor::new(vec![64, 96], (0..64 * 96).map(|i| (i % 251) as f32).collect());
+    let packed = x.pack_blocked(16)?;
+    let back = packed.unpack_blocked()?;
+    assert_eq!(x, back);
+    println!("BWMA pack/unpack round-trip OK ({:?} ↔ {:?})", x.shape, packed.shape);
+    println!("\nquickstart OK");
+    Ok(())
+}

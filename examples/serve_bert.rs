@@ -1,0 +1,114 @@
+//! End-to-end serving driver (EXPERIMENTS.md §End-to-end): a threaded
+//! router → dynamic batcher → PJRT executor serving real BERT-encoder
+//! forward passes on synthetic token streams, with Python nowhere on the
+//! request path.
+//!
+//! The workload models an online arrival process: `--requests N` requests
+//! arrive in bursts; the batcher fuses them into the largest compiled
+//! batch variant (1/2/4/8). Reports throughput, latency percentiles and
+//! batch-size distribution, and cross-checks one response against the
+//! golden to prove the numerics survive the serving path.
+//!
+//! Run: `cargo run --release --example serve_bert -- [--requests 64] [--max-batch 8]`
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use bwma::coordinator::server::{BatchRunner, WithParams};
+use bwma::coordinator::{LatencyStats, Server, ServerConfig};
+use bwma::runtime::{artifacts_dir, GoldenSet, Runtime, Tensor};
+use bwma::util::XorShift64;
+
+fn arg(name: &str, default: usize) -> usize {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() -> Result<()> {
+    let n_requests = arg("--requests", 64);
+    let max_batch = arg("--max-batch", 8);
+    let tag = "encoder_jnp_b16";
+
+    let dir = artifacts_dir()?;
+    let golden = GoldenSet::load(&dir, tag)?;
+    let in_shape = golden.tensors["in_x"].shape.clone();
+    let out_shape = golden.expected().shape.clone();
+    let params: Vec<Tensor> = golden
+        .input_order
+        .iter()
+        .filter(|n| *n != "in_x")
+        .map(|n| golden.tensors[n].clone())
+        .collect();
+
+    println!("# serve_bert: BERT-base encoder (seq 128, d 768, block 16) over PJRT");
+    println!("# loading batch variants (this compiles 4 executables)…");
+    let dir2 = dir.clone();
+    let params2 = params.clone();
+    let out_shape2 = out_shape.clone();
+    let t_load = Instant::now();
+    let server = Server::start(ServerConfig { max_batch, ..Default::default() }, move || {
+        let rt = Runtime::cpu()?;
+        let mut variants: BTreeMap<usize, Box<dyn BatchRunner>> = BTreeMap::new();
+        for bsz in [1usize, 2, 4, 8] {
+            let path = dir2.join(format!("encoder_jnp_b16_batch{bsz}.hlo.txt"));
+            let exe = rt.load_hlo(&path)?;
+            variants.insert(bsz, Box::new(WithParams { exe, params: params2.clone() }));
+        }
+        Ok((variants, out_shape2))
+    })?;
+    println!("# ready in {:?}\n", t_load.elapsed());
+
+    // Golden request first: the serving path must preserve numerics.
+    let golden_rx = server.submit(golden.tensors["in_x"].clone());
+
+    // Synthetic burst traffic.
+    let mut rng = XorShift64::new(0xBEEF);
+    let n_in: usize = in_shape.iter().product();
+    let t0 = Instant::now();
+    let mut pending = Vec::new();
+    for _ in 0..n_requests {
+        let mut data = vec![0.0f32; n_in];
+        rng.fill_f32(&mut data);
+        pending.push(server.submit(Tensor::new(in_shape.clone(), data)));
+    }
+    let mut latencies = Vec::new();
+    let mut exec_times = Vec::new();
+    for rx in pending {
+        let resp = rx.recv().context("response channel")??;
+        latencies.push(resp.queue_time + resp.exec_time);
+        exec_times.push(resp.exec_time);
+    }
+    let wall = t0.elapsed();
+
+    let gresp = golden_rx.recv().context("golden response")??;
+    let gdiff = gresp.output.max_abs_diff(golden.expected());
+    anyhow::ensure!(
+        gresp.output.allclose(golden.expected(), 1e-4, 1e-4),
+        "serving path corrupted the numerics (max|Δ| = {gdiff:.2e})"
+    );
+
+    let metrics = server.shutdown()?;
+    let lat = LatencyStats::from_samples(latencies);
+    let exec = LatencyStats::from_samples(exec_times);
+    println!("requests        : {}", metrics.requests);
+    println!("wall time       : {wall:?}");
+    println!("throughput      : {:.1} seq/s", n_requests as f64 / wall.as_secs_f64());
+    println!("latency p50/p99 : {:?} / {:?}", lat.p50(), lat.p99());
+    println!("model exec p50  : {:?}", exec.p50());
+    println!("batches         : {} (mean size {:.2})", metrics.batches, metrics.mean_batch_size());
+    print!("batch size hist : ");
+    for (sz, n) in metrics.batch_size_hist.iter().enumerate() {
+        if *n > 0 {
+            print!("{sz}×{n} ");
+        }
+    }
+    println!("\ngolden check    : max|Δ| = {gdiff:.2e} OK");
+    println!("\nserve_bert OK");
+    Ok(())
+}

@@ -1,0 +1,192 @@
+"""AOT bridge: lower the Layer-2 model to HLO *text* artifacts + goldens.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >=
+0.5 emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (written to ../artifacts, gitignored):
+
+* ``encoder_jnp_b16.hlo.txt``    -- BERT-base encoder layer (seq 128,
+  d_model 768, block 16), fused-jnp compute path. The serving artifact.
+* ``encoder_pallas_b8.hlo.txt``  -- tiny encoder layer on the *Pallas*
+  kernel path (interpret mode): proves the L1 kernels survive
+  AOT-lowering and execute correctly from Rust.
+* ``bwma_gemm_b16.hlo.txt``      -- the standalone Pallas blocked-GEMM
+  kernel (64x64x64, block 16): the runtime hot-path microbench artifact.
+
+For every artifact a goldens directory holds the exact inputs (params +
+activation, raw little-endian f32) and the expected output, plus a
+manifest mapping names to shapes, so the Rust integration tests can
+verify numerics end to end.
+
+Model parameters are *inputs* of the lowered function (not baked
+constants): HLO text prints f32 constants in decimal, so baking BERT-base
+weights would produce a ~400 MB artifact.
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .kernels import ref
+from .kernels.bwma_gemm import bwma_gemm
+from .model import BertDims, encoder_layer, init_params
+
+PARAM_ORDER = ("wq", "wk", "wv", "wo", "w1", "w2", "ln1_g", "ln1_b", "ln2_g", "ln2_b")
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def flat_params(params: dict) -> list:
+    return [params[k] for k in PARAM_ORDER]
+
+
+def encoder_fn(dims: BertDims, use_pallas: bool):
+    def fn(x_blk, *flat):
+        params = dict(zip(PARAM_ORDER, flat))
+        return (encoder_layer(x_blk, params, dims, use_pallas=use_pallas),)
+
+    return fn
+
+
+def write_golden(dirpath: pathlib.Path, name: str, arr: np.ndarray) -> str:
+    arr = np.asarray(arr, dtype=np.float32)
+    (dirpath / f"{name}.bin").write_bytes(arr.tobytes())  # C-order, LE f32
+    return f"{name} f32 {' '.join(str(d) for d in arr.shape)}\n"
+
+
+def emit_encoder(outdir: pathlib.Path, tag: str, dims: BertDims, use_pallas: bool, seed: int) -> None:
+    dims.validate()
+    key = jax.random.PRNGKey(seed)
+    kp, kx = jax.random.split(key)
+    params = init_params(dims, kp)
+    b = dims.block
+    x = jax.random.normal(kx, (dims.seq, dims.d_model), jnp.float32)
+    x_blk = ref.pack_bwma(x, b)
+
+    fn = encoder_fn(dims, use_pallas)
+    args = [x_blk] + flat_params(params)
+    specs = [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in args]
+    lowered = jax.jit(fn).lower(*specs)
+    hlo = to_hlo_text(lowered)
+    (outdir / f"{tag}.hlo.txt").write_text(hlo)
+
+    # Goldens: inputs + expected output.
+    (out_blk,) = fn(*args)
+    gdir = outdir / "goldens" / tag
+    gdir.mkdir(parents=True, exist_ok=True)
+    manifest = ""
+    manifest += write_golden(gdir, "in_x", np.asarray(x_blk))
+    for name, arr in zip(PARAM_ORDER, flat_params(params)):
+        manifest += write_golden(gdir, f"in_{name}", np.asarray(arr))
+    manifest += write_golden(gdir, "out", np.asarray(out_blk))
+    (gdir / "manifest.txt").write_text(manifest)
+    print(f"wrote {tag}: {len(hlo)} chars, dims={dims}")
+
+
+def emit_encoder_batched(
+    outdir: pathlib.Path, tag: str, dims: BertDims, batch: int, seed: int
+) -> None:
+    """Batch-B variant of the (jnp-path) encoder: vmap over the activation,
+    parameters shared. These are the serving artifacts the dynamic batcher
+    dispatches to (one compiled executable per batch size)."""
+    dims.validate()
+    key = jax.random.PRNGKey(seed)
+    kp, kx = jax.random.split(key)
+    params = init_params(dims, kp)
+    b = dims.block
+    x = jax.random.normal(kx, (batch, dims.seq // b, dims.d_model // b, b, b), jnp.float32)
+
+    base = encoder_fn(dims, use_pallas=False)
+    fn = jax.vmap(base, in_axes=(0,) + (None,) * len(PARAM_ORDER))
+    args = [x] + flat_params(params)
+    specs = [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in args]
+    lowered = jax.jit(fn).lower(*specs)
+    hlo = to_hlo_text(lowered)
+    (outdir / f"{tag}.hlo.txt").write_text(hlo)
+
+    (out_blk,) = fn(*args)
+    gdir = outdir / "goldens" / tag
+    gdir.mkdir(parents=True, exist_ok=True)
+    manifest = ""
+    manifest += write_golden(gdir, "in_x", np.asarray(x))
+    for name, arr in zip(PARAM_ORDER, flat_params(params)):
+        manifest += write_golden(gdir, f"in_{name}", np.asarray(arr))
+    manifest += write_golden(gdir, "out", np.asarray(out_blk))
+    (gdir / "manifest.txt").write_text(manifest)
+    print(f"wrote {tag}: {len(hlo)} chars (batch {batch})")
+
+
+def emit_gemm(outdir: pathlib.Path, tag: str, mb: int, kb: int, nb: int, b: int, seed: int) -> None:
+    key = jax.random.PRNGKey(seed)
+    ka, kw = jax.random.split(key)
+    a = jax.random.normal(ka, (mb, kb, b, b), jnp.float32)
+    w = jax.random.normal(kw, (kb, nb, b, b), jnp.float32)
+
+    def fn(a, w):
+        return (bwma_gemm(a, w),)
+
+    specs = [jax.ShapeDtypeStruct(t.shape, t.dtype) for t in (a, w)]
+    lowered = jax.jit(fn).lower(*specs)
+    hlo = to_hlo_text(lowered)
+    (outdir / f"{tag}.hlo.txt").write_text(hlo)
+
+    (out,) = fn(a, w)
+    # Cross-check against the oracle before blessing the golden.
+    expect = ref.gemm_ref(a, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=1e-5, atol=1e-5)
+
+    gdir = outdir / "goldens" / tag
+    gdir.mkdir(parents=True, exist_ok=True)
+    manifest = ""
+    manifest += write_golden(gdir, "in_a", np.asarray(a))
+    manifest += write_golden(gdir, "in_b", np.asarray(w))
+    manifest += write_golden(gdir, "out", np.asarray(out))
+    (gdir / "manifest.txt").write_text(manifest)
+    print(f"wrote {tag}: {len(hlo)} chars")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--seed", type=int, default=20230916)
+    args = ap.parse_args()
+    outdir = pathlib.Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    # Serving artifact: BERT-base geometry at seq 128, fused-jnp path.
+    emit_encoder(
+        outdir,
+        "encoder_jnp_b16",
+        BertDims(seq=128, d_model=768, heads=12, d_head=64, d_ff=3072, block=16),
+        use_pallas=False,
+        seed=args.seed,
+    )
+    # Pallas-path artifact: tiny geometry, interpret-mode kernels.
+    emit_encoder(outdir, "encoder_pallas_b8", BertDims.tiny(block=8), use_pallas=True, seed=args.seed + 1)
+    # Standalone kernel artifact for the runtime microbench.
+    emit_gemm(outdir, "bwma_gemm_b16", mb=4, kb=4, nb=4, b=16, seed=args.seed + 2)
+    # Batch variants for the dynamic batcher (same params as the base
+    # serving artifact so one golden parameter set serves them all).
+    serving = BertDims(seq=128, d_model=768, heads=12, d_head=64, d_ff=3072, block=16)
+    for bsz in (1, 2, 4, 8):
+        emit_encoder_batched(outdir, f"encoder_jnp_b16_batch{bsz}", serving, bsz, args.seed)
+    print(f"artifacts in {outdir.resolve()}")
+
+
+if __name__ == "__main__":
+    main()

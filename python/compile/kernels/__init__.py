@@ -1,0 +1,7 @@
+"""Layer-1 Pallas kernels + pure-jnp oracles for the BWMA arrangement."""
+
+from .blocked_layernorm import blocked_layernorm
+from .blocked_softmax import blocked_softmax
+from .bwma_gemm import bwma_gemm
+
+__all__ = ["bwma_gemm", "blocked_softmax", "blocked_layernorm"]

@@ -1,0 +1,59 @@
+"""Layer-1 Pallas kernel: row LayerNorm over a block-wise matrix (§3.2).
+
+Same access structure as blocked_softmax (one grid step per block-row,
+reductions across (block-col, in-block-col)); gamma/beta arrive in their
+blocked vector image ``[Cb, b]`` so the whole parameter set lives in the
+same arrangement as the activations.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _layernorm_kernel(x_ref, g_ref, b_ref, o_ref, *, eps, cols):
+    x = x_ref[0].astype(jnp.float32)            # [Cb, b, b] = (bc, ir, ic)
+    n = float(cols)
+    mu = x.sum(axis=(0, 2), keepdims=True) / n  # per logical row
+    d = x - mu
+    var = (d * d).sum(axis=(0, 2), keepdims=True) / n
+    inv = jax.lax.rsqrt(var + eps)
+    g = g_ref[...][:, None, :]                  # [Cb, 1, b] broadcast over rows
+    beta = b_ref[...][:, None, :]
+    o_ref[0] = (d * inv * g + beta).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "interpret"))
+def blocked_layernorm(
+    xb: jnp.ndarray,
+    gamma_blk: jnp.ndarray,
+    beta_blk: jnp.ndarray,
+    *,
+    eps: float = 1e-5,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """LayerNorm along logical rows of ``[Rb, Cb, b, b]``.
+
+    ``gamma_blk``/``beta_blk`` are ``[Cb, b]`` (see ``ref.pack_vec``).
+    """
+    rb, cb, b, b2 = xb.shape
+    assert b == b2
+    assert gamma_blk.shape == (cb, b), f"gamma {gamma_blk.shape} != {(cb, b)}"
+    assert beta_blk.shape == (cb, b)
+    kernel = functools.partial(_layernorm_kernel, eps=eps, cols=cb * b)
+    return pl.pallas_call(
+        kernel,
+        grid=(rb,),
+        in_specs=[
+            pl.BlockSpec((1, cb, b, b), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((cb, b), lambda i: (0, 0)),
+            pl.BlockSpec((cb, b), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, cb, b, b), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(xb.shape, xb.dtype),
+        interpret=interpret,
+    )(xb, gamma_blk, beta_blk)

@@ -1,0 +1,40 @@
+"""Layer-1 Pallas kernel: row softmax over a block-wise matrix (§3.2).
+
+One grid step owns one *block-row* — all blocks holding the same ``b``
+logical rows. Within the step the logical row index is the in-block-row
+axis; columns are spread over (block-col, in-block-col), so reductions run
+over those two axes jointly. This is the kernel analogue of the paper's
+observation that softmax must gather a logical row from across blocks.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _softmax_kernel(x_ref, o_ref, *, scale):
+    x = x_ref[0].astype(jnp.float32) * scale  # [Cb, b, b] = (bc, ir, ic)
+    m = x.max(axis=(0, 2), keepdims=True)     # per logical row ir
+    e = jnp.exp(x - m)
+    s = e.sum(axis=(0, 2), keepdims=True)
+    o_ref[0] = (e / s).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def blocked_softmax(xb: jnp.ndarray, *, scale: float = 1.0, interpret: bool = True) -> jnp.ndarray:
+    """Softmax along logical rows of ``[Rb, Cb, b, b]``."""
+    rb, cb, b, b2 = xb.shape
+    assert b == b2
+    kernel = functools.partial(_softmax_kernel, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(rb,),
+        in_specs=[pl.BlockSpec((1, cb, b, b), lambda i: (i, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, cb, b, b), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(xb.shape, xb.dtype),
+        interpret=interpret,
+    )(xb)

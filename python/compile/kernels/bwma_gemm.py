@@ -1,0 +1,60 @@
+"""Layer-1 Pallas kernel: block-wise GEMM (the paper's hot spot, §3.1).
+
+The BWMA arrangement maps 1:1 onto a Pallas ``BlockSpec``: each grid step
+receives whole ``b×b`` blocks, which in the blocked 4-D array (and in the
+serialized memory image) are **contiguous** — the Pallas HBM→VMEM copy per
+grid step is exactly the paper's "one contiguous burst per accelerator
+load". The kernel is weight-stationary in spirit: for output block-row
+``i`` / block-col ``j`` it streams the K-dimension blocks and accumulates
+in f32, the MXU-friendly dataflow (DESIGN.md §Hardware-Adaptation).
+
+``interpret=True`` everywhere: real TPU lowering emits Mosaic custom-calls
+that the CPU PJRT plugin cannot execute; interpret mode lowers to plain
+HLO so the same computation runs from the Rust runtime.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gemm_kernel(a_ref, b_ref, o_ref, *, acc_dtype):
+    # a_ref: [1, Kb, b, b] — one block-row of A (contiguous blocks).
+    # b_ref: [Kb, 1, b, b] — one block-col of B.
+    # o_ref: [1, 1, b, b]  — the output block this grid step owns.
+    a = a_ref[0]          # [Kb, b, b]
+    w = b_ref[:, 0]       # [Kb, b, b]
+    # sum_k A_k @ W_k, accumulated at acc_dtype (f32 on MXU).
+    acc = jax.lax.dot_general(
+        a,
+        w,
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),  # batch k, contract inner
+        preferred_element_type=acc_dtype,
+    )  # [Kb, b, b]
+    o_ref[0, 0] = acc.sum(axis=0).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bwma_gemm(a_blk: jnp.ndarray, b_blk: jnp.ndarray, *, interpret: bool = True) -> jnp.ndarray:
+    """Blocked GEMM: ``[Mb,Kb,b,b] × [Kb,Nb,b,b] → [Mb,Nb,b,b]``."""
+    mb, kb, b, b2 = a_blk.shape
+    kb2, nb, b3, b4 = b_blk.shape
+    assert b == b2 == b3 == b4, "square blocks required"
+    assert kb == kb2, f"inner block dims differ: {kb} vs {kb2}"
+    out_shape = jax.ShapeDtypeStruct((mb, nb, b, b), a_blk.dtype)
+    kernel = functools.partial(_gemm_kernel, acc_dtype=jnp.float32)
+    return pl.pallas_call(
+        kernel,
+        grid=(mb, nb),
+        in_specs=[
+            pl.BlockSpec((1, kb, b, b), lambda i, j: (i, 0, 0, 0)),
+            pl.BlockSpec((kb, 1, b, b), lambda i, j: (0, j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, b, b), lambda i, j: (i, j, 0, 0)),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(a_blk, b_blk)

@@ -1,0 +1,80 @@
+"""Pure-jnp reference oracles for the BWMA kernels (Layer 1 ground truth).
+
+The block-wise arrangement (paper 3.1.2) is represented in JAX as a 4-D
+array ``[R/b, C/b, b, b]`` -- dimension order (block-row, block-col,
+in-block-row, in-block-col). Raveling that array in C order yields exactly
+the paper's 1-D BWMA memory image (block-grid row-major, each block
+row-major inside), which is also what the Rust side's
+``layout::rwma_to_bwma`` produces. ``test_layout.py`` pins this equivalence.
+
+Everything here is deliberately straightforward (unpack -> plain op ->
+repack): these are the oracles the Pallas kernels are tested against.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pack_bwma(x: jnp.ndarray, b: int) -> jnp.ndarray:
+    """[R, C] row-major -> [R/b, C/b, b, b] block-wise."""
+    r, c = x.shape
+    assert r % b == 0 and c % b == 0, f"{x.shape} not divisible by block {b}"
+    return x.reshape(r // b, b, c // b, b).transpose(0, 2, 1, 3)
+
+
+def unpack_bwma(xb: jnp.ndarray) -> jnp.ndarray:
+    """[R/b, C/b, b, b] block-wise -> [R, C] row-major."""
+    rb, cb, b, b2 = xb.shape
+    assert b == b2
+    return xb.transpose(0, 2, 1, 3).reshape(rb * b, cb * b)
+
+
+def gemm_ref(a_blk: jnp.ndarray, b_blk: jnp.ndarray) -> jnp.ndarray:
+    """Blocked GEMM oracle: unpack, matmul in f32, repack."""
+    b = a_blk.shape[-1]
+    a = unpack_bwma(a_blk)
+    w = unpack_bwma(b_blk)
+    c = jnp.matmul(a, w, preferred_element_type=jnp.float32).astype(a_blk.dtype)
+    return pack_bwma(c, b)
+
+
+def transpose_ref(xb: jnp.ndarray) -> jnp.ndarray:
+    """Blocked transpose oracle: swap block-grid indices and transpose
+    each block (what the Rust TransposeTile items simulate)."""
+    return xb.transpose(1, 0, 3, 2)
+
+
+def softmax_ref(xb: jnp.ndarray, scale: float = 1.0) -> jnp.ndarray:
+    """Row softmax oracle on a blocked matrix."""
+    x = unpack_bwma(xb).astype(jnp.float32) * scale
+    x = x - x.max(axis=-1, keepdims=True)
+    e = jnp.exp(x)
+    out = e / e.sum(axis=-1, keepdims=True)
+    return pack_bwma(out.astype(xb.dtype), xb.shape[-1])
+
+
+def layernorm_ref(
+    xb: jnp.ndarray, gamma: jnp.ndarray, beta: jnp.ndarray, eps: float = 1e-5
+) -> jnp.ndarray:
+    """Row LayerNorm oracle on a blocked matrix. gamma/beta are flat [C]."""
+    x = unpack_bwma(xb).astype(jnp.float32)
+    mu = x.mean(axis=-1, keepdims=True)
+    var = x.var(axis=-1, keepdims=True)
+    out = (x - mu) / jnp.sqrt(var + eps) * gamma + beta
+    return pack_bwma(out.astype(xb.dtype), xb.shape[-1])
+
+
+def gelu_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """tanh-approximation GELU (element-wise: layout-agnostic)."""
+    x32 = x.astype(jnp.float32)
+    c = jnp.sqrt(2.0 / jnp.pi).astype(jnp.float32)
+    out = 0.5 * x32 * (1.0 + jnp.tanh(c * (x32 + 0.044715 * x32**3)))
+    return out.astype(x.dtype)
+
+
+def pack_vec(v: jnp.ndarray, b: int) -> jnp.ndarray:
+    """Flat [C] vector -> [C/b, b] (the blocked image of a broadcast row)."""
+    (c,) = v.shape
+    assert c % b == 0
+    return v.reshape(c // b, b)

@@ -1,0 +1,160 @@
+"""Layer-2 JAX model: a BERT-base encoder layer over block-wise tensors.
+
+Every tensor (input, weights, intermediates, output) lives in the BWMA
+4-D blocked representation ``[R/b, C/b, b, b]`` end to end -- the paper's
+central point that only the model boundary ever converts (3.2).
+
+Two interchangeable compute paths:
+
+* ``use_pallas=True``  -- calls the Layer-1 Pallas kernels (interpret
+  mode). This is the correctness vehicle: pytest pins it against the
+  oracles and against the jnp path.
+* ``use_pallas=False`` -- the same math as fused jnp ops (what XLA:CPU
+  runs fastest). This is the deployment vehicle the serving artifacts
+  use; interpret-mode Pallas at BERT-base scale would put a Python-level
+  grid interpreter inside the artifact.
+
+Both paths produce identical HLO *interfaces* and (numerically) identical
+results, so the Rust runtime treats them as the same model.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import blocked_layernorm, blocked_softmax, bwma_gemm
+from .kernels import ref
+
+
+class BertDims(NamedTuple):
+    """Model dimensions (defaults: BERT-base, paper 4.1)."""
+
+    seq: int = 512
+    d_model: int = 768
+    heads: int = 12
+    d_head: int = 64
+    d_ff: int = 3072
+    block: int = 16
+
+    def validate(self) -> None:
+        b = self.block
+        assert self.heads * self.d_head == self.d_model
+        for v in (self.seq, self.d_model, self.d_head, self.d_ff):
+            assert v % b == 0, f"{v} not divisible by block {b}"
+
+    @staticmethod
+    def tiny(block: int = 8) -> "BertDims":
+        return BertDims(seq=32, d_model=64, heads=2, d_head=32, d_ff=128, block=block)
+
+
+def init_params(dims: BertDims, key) -> dict:
+    """Random encoder-layer parameters, already in blocked form."""
+    dims.validate()
+    b = dims.block
+    ks = jax.random.split(key, 8)
+    scale = 0.02
+
+    def w(k, r, c):
+        return ref.pack_bwma(jax.random.normal(k, (r, c), jnp.float32) * scale, b)
+
+    d, dh, h, ff = dims.d_model, dims.d_head, dims.heads, dims.d_ff
+    return {
+        # Per-head projections stacked on axis 0: [h, d/b, dh/b, b, b].
+        "wq": jnp.stack([w(k, d, dh) for k in jax.random.split(ks[0], h)]),
+        "wk": jnp.stack([w(k, d, dh) for k in jax.random.split(ks[1], h)]),
+        "wv": jnp.stack([w(k, d, dh) for k in jax.random.split(ks[2], h)]),
+        "wo": w(ks[3], d, d),
+        "w1": w(ks[4], d, ff),
+        "w2": w(ks[5], ff, d),
+        "ln1_g": ref.pack_vec(jnp.ones(d, jnp.float32), b),
+        "ln1_b": ref.pack_vec(jnp.zeros(d, jnp.float32), b),
+        "ln2_g": ref.pack_vec(jnp.ones(d, jnp.float32), b),
+        "ln2_b": ref.pack_vec(jnp.zeros(d, jnp.float32), b),
+    }
+
+
+def _gemm(a, w, *, use_pallas):
+    if use_pallas:
+        return bwma_gemm(a, w)
+    return ref.gemm_ref(a, w)
+
+
+def _softmax(x, scale, *, use_pallas):
+    if use_pallas:
+        return blocked_softmax(x, scale=scale)
+    return ref.softmax_ref(x, scale=scale)
+
+
+def _layernorm(x, g, bta, *, use_pallas):
+    if use_pallas:
+        return blocked_layernorm(x, g, bta)
+    gamma = g.reshape(-1)
+    beta = bta.reshape(-1)
+    return ref.layernorm_ref(x, gamma, beta)
+
+
+def encoder_layer(x_blk: jnp.ndarray, params: dict, dims: BertDims, *, use_pallas: bool = False) -> jnp.ndarray:
+    """One encoder layer over a blocked input ``[S/b, D/b, b, b]``."""
+    scale = 1.0 / (dims.d_head ** 0.5)
+    heads = []
+    for i in range(dims.heads):
+        q = _gemm(x_blk, params["wq"][i], use_pallas=use_pallas)
+        k = _gemm(x_blk, params["wk"][i], use_pallas=use_pallas)
+        v = _gemm(x_blk, params["wv"][i], use_pallas=use_pallas)
+        kt = ref.transpose_ref(k)  # pure permutation in the blocked form
+        scores = _gemm(q, kt, use_pallas=use_pallas)
+        probs = _softmax(scores, scale, use_pallas=use_pallas)
+        heads.append(_gemm(probs, v, use_pallas=use_pallas))
+    # Concatenating heads is a block-col concat: free in the blocked form.
+    h_cat = jnp.concatenate(heads, axis=1)
+    proj = _gemm(h_cat, params["wo"], use_pallas=use_pallas)
+    x1 = _layernorm(
+        proj + x_blk, params["ln1_g"], params["ln1_b"], use_pallas=use_pallas
+    )
+    f1 = ref.gelu_ref(_gemm(x1, params["w1"], use_pallas=use_pallas))
+    f2 = _gemm(f1, params["w2"], use_pallas=use_pallas)
+    return _layernorm(f2 + x1, params["ln2_g"], params["ln2_b"], use_pallas=use_pallas)
+
+
+def encoder_stack(x_blk, params_list, dims: BertDims, *, use_pallas: bool = False):
+    """A stack of encoder layers (the 12-layer model)."""
+    for p in params_list:
+        x_blk = encoder_layer(x_blk, p, dims, use_pallas=use_pallas)
+    return x_blk
+
+
+def reference_encoder_unblocked(x: jnp.ndarray, params: dict, dims: BertDims) -> jnp.ndarray:
+    """Completely independent row-major reference (no blocked code paths):
+    used by pytest to show the blocked encoder computes standard attention.
+    """
+    b = dims.block
+    d = dims.d_model
+    scale = 1.0 / (dims.d_head ** 0.5)
+
+    def unb(wblk):
+        return ref.unpack_bwma(wblk)
+
+    heads = []
+    for i in range(dims.heads):
+        q = x @ unb(params["wq"][i])
+        k = x @ unb(params["wk"][i])
+        v = x @ unb(params["wv"][i])
+        s = (q @ k.T) * scale
+        p = jax.nn.softmax(s, axis=-1)
+        heads.append(p @ v)
+    h_cat = jnp.concatenate(heads, axis=-1)
+    proj = h_cat @ unb(params["wo"])
+
+    def ln(y, g, bta):
+        mu = y.mean(-1, keepdims=True)
+        var = y.var(-1, keepdims=True)
+        return (y - mu) / jnp.sqrt(var + 1e-5) * g.reshape(-1) + bta.reshape(-1)
+
+    x1 = ln(proj + x, params["ln1_g"], params["ln1_b"])
+    f1 = ref.gelu_ref(x1 @ unb(params["w1"]))
+    f2 = f1 @ unb(params["w2"])
+    return ln(f2 + x1, params["ln2_g"], params["ln2_b"])

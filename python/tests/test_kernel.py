@@ -1,0 +1,143 @@
+"""Pallas kernels vs pure-jnp oracles -- the core L1 correctness signal.
+
+Hypothesis sweeps shapes, block sizes, and dtypes; every case asserts
+allclose against ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import blocked_layernorm, blocked_softmax, bwma_gemm, ref
+
+F32 = jnp.float32
+
+
+def rnd(rng, shape, dtype=F32):
+    return jnp.asarray(rng.standard_normal(shape), dtype)
+
+
+@given(
+    mb=st.integers(1, 4),
+    kb=st.integers(1, 4),
+    nb=st.integers(1, 4),
+    b=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=30, deadline=None)
+def test_gemm_matches_ref(mb, kb, nb, b, seed):
+    rng = np.random.default_rng(seed)
+    a = rnd(rng, (mb, kb, b, b))
+    w = rnd(rng, (kb, nb, b, b))
+    got = bwma_gemm(a, w)
+    want = ref.gemm_ref(a, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@given(b=st.sampled_from([8, 16]), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_gemm_bf16_inputs(b, seed):
+    # bf16 storage with f32 accumulation (the MXU configuration).
+    rng = np.random.default_rng(seed)
+    a = rnd(rng, (2, 3, b, b), jnp.bfloat16)
+    w = rnd(rng, (3, 2, b, b), jnp.bfloat16)
+    got = bwma_gemm(a, w)
+    want = ref.gemm_ref(a, w)
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=3e-2, atol=3e-2
+    )
+
+
+def test_gemm_identity():
+    b = 8
+    eye = ref.pack_bwma(jnp.eye(2 * b, dtype=F32), b)
+    rng = np.random.default_rng(1)
+    a = rnd(rng, (3, 2, b, b))
+    got = bwma_gemm(a, eye)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(a), rtol=1e-6, atol=1e-6)
+
+
+def test_gemm_against_unblocked_matmul():
+    # End-to-end: pack -> blocked gemm -> unpack == plain matmul.
+    rng = np.random.default_rng(7)
+    b = 16
+    A = rnd(rng, (64, 96))
+    B = rnd(rng, (96, 32))
+    got = ref.unpack_bwma(bwma_gemm(ref.pack_bwma(A, b), ref.pack_bwma(B, b)))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(A @ B), rtol=1e-4, atol=1e-4)
+
+
+@given(
+    rb=st.integers(1, 4),
+    cb=st.integers(1, 4),
+    b=st.sampled_from([4, 8, 16]),
+    scale=st.sampled_from([1.0, 0.125]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=30, deadline=None)
+def test_softmax_matches_ref(rb, cb, b, scale, seed):
+    rng = np.random.default_rng(seed)
+    x = rnd(rng, (rb, cb, b, b))
+    got = blocked_softmax(x, scale=scale)
+    want = ref.softmax_ref(x, scale=scale)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+def test_softmax_rows_sum_to_one():
+    rng = np.random.default_rng(3)
+    x = rnd(rng, (2, 3, 8, 8))
+    got = ref.unpack_bwma(blocked_softmax(x))
+    np.testing.assert_allclose(np.asarray(got).sum(-1), np.ones(16), rtol=1e-5)
+
+
+def test_softmax_shift_invariance():
+    # softmax(x + c) == softmax(x): exercises the max-subtraction path.
+    rng = np.random.default_rng(4)
+    x = rnd(rng, (1, 2, 8, 8))
+    np.testing.assert_allclose(
+        np.asarray(blocked_softmax(x + 100.0)), np.asarray(blocked_softmax(x)), rtol=1e-4, atol=1e-6
+    )
+
+
+@given(
+    rb=st.integers(1, 4),
+    cb=st.integers(1, 4),
+    b=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=30, deadline=None)
+def test_layernorm_matches_ref(rb, cb, b, seed):
+    rng = np.random.default_rng(seed)
+    x = rnd(rng, (rb, cb, b, b))
+    gamma = rnd(rng, (cb * b,))
+    beta = rnd(rng, (cb * b,))
+    got = blocked_layernorm(x, ref.pack_vec(gamma, b), ref.pack_vec(beta, b))
+    want = ref.layernorm_ref(x, gamma, beta)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-5)
+
+
+def test_layernorm_output_standardized():
+    rng = np.random.default_rng(5)
+    b = 8
+    x = rnd(rng, (2, 4, b, b))
+    ones = ref.pack_vec(jnp.ones(32), b)
+    zeros = ref.pack_vec(jnp.zeros(32), b)
+    out = ref.unpack_bwma(blocked_layernorm(x, ones, zeros))
+    np.testing.assert_allclose(np.asarray(out).mean(-1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(out).std(-1), 1.0, atol=1e-3)
+
+
+def test_kernels_jit_under_jit():
+    # The kernels must lower inside an enclosing jit (the AOT path).
+    rng = np.random.default_rng(6)
+    a = rnd(rng, (2, 2, 8, 8))
+    w = rnd(rng, (2, 2, 8, 8))
+
+    @jax.jit
+    def f(a, w):
+        return bwma_gemm(a, w)
+
+    np.testing.assert_allclose(np.asarray(f(a, w)), np.asarray(ref.gemm_ref(a, w)), rtol=1e-5, atol=1e-5)

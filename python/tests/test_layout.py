@@ -1,0 +1,64 @@
+"""Layout tests: the blocked 4-D representation must match the paper's
+1-D BWMA memory image (and therefore the Rust `layout` module)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import ref
+
+
+def bwma_index(r, c, R, C, b):
+    """The Rust AddressMap formula (layout/address.rs)."""
+    br, bc = r // b, c // b
+    ir, ic = r % b, c % b
+    return ((br * (C // b) + bc) * b + ir) * b + ic
+
+
+@given(
+    rb=st.integers(1, 4),
+    cb=st.integers(1, 4),
+    b=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=40, deadline=None)
+def test_pack_unpack_roundtrip(rb, cb, b, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((rb * b, cb * b)), jnp.float32)
+    back = ref.unpack_bwma(ref.pack_bwma(x, b))
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
+
+
+@given(rb=st.integers(1, 3), cb=st.integers(1, 3), b=st.sampled_from([4, 8]))
+@settings(max_examples=20, deadline=None)
+def test_ravel_matches_rust_address_map(rb, cb, b):
+    R, C = rb * b, cb * b
+    x = jnp.arange(R * C, dtype=jnp.float32).reshape(R, C)
+    flat = np.asarray(ref.pack_bwma(x, b)).ravel()
+    for r in range(R):
+        for c in range(C):
+            assert flat[bwma_index(r, c, R, C, b)] == r * C + c
+
+
+def test_pack_rejects_indivisible():
+    with pytest.raises(AssertionError):
+        ref.pack_bwma(jnp.zeros((10, 8)), 4)
+
+
+def test_transpose_ref_is_true_transpose():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((24, 16)), jnp.float32)
+    xb = ref.pack_bwma(x, 8)
+    tb = ref.transpose_ref(xb)
+    np.testing.assert_array_equal(np.asarray(ref.unpack_bwma(tb)), np.asarray(x).T)
+
+
+@given(b=st.sampled_from([4, 8, 16]), cb=st.integers(1, 6))
+@settings(max_examples=20, deadline=None)
+def test_pack_vec_roundtrip(b, cb):
+    v = jnp.arange(cb * b, dtype=jnp.float32)
+    pv = ref.pack_vec(v, b)
+    assert pv.shape == (cb, b)
+    np.testing.assert_array_equal(np.asarray(pv).ravel(), np.asarray(v))

@@ -1,0 +1,74 @@
+"""Layer-2 model tests: the blocked encoder is standard attention."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+from compile.model import (
+    BertDims,
+    encoder_layer,
+    encoder_stack,
+    init_params,
+    reference_encoder_unblocked,
+)
+
+DIMS = BertDims.tiny(block=8)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    key = jax.random.PRNGKey(0)
+    kp, kx = jax.random.split(key)
+    params = init_params(DIMS, kp)
+    x = jax.random.normal(kx, (DIMS.seq, DIMS.d_model), jnp.float32)
+    return params, x
+
+
+def test_jnp_path_matches_unblocked_reference(setup):
+    params, x = setup
+    out_blk = encoder_layer(ref.pack_bwma(x, DIMS.block), params, DIMS, use_pallas=False)
+    want = reference_encoder_unblocked(x, params, DIMS)
+    np.testing.assert_allclose(np.asarray(ref.unpack_bwma(out_blk)), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def test_pallas_path_matches_jnp_path(setup):
+    params, x = setup
+    xb = ref.pack_bwma(x, DIMS.block)
+    got = encoder_layer(xb, params, DIMS, use_pallas=True)
+    want = encoder_layer(xb, params, DIMS, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def test_block16_geometry(setup):
+    # Same model at block 16 (both paper kernel sizes divide the dims).
+    dims = BertDims(seq=32, d_model=64, heads=2, d_head=32, d_ff=128, block=16)
+    key = jax.random.PRNGKey(1)
+    params = init_params(dims, key)
+    x = jax.random.normal(key, (dims.seq, dims.d_model), jnp.float32)
+    out_blk = encoder_layer(ref.pack_bwma(x, 16), params, dims, use_pallas=False)
+    want = reference_encoder_unblocked(x, params, dims)
+    np.testing.assert_allclose(np.asarray(ref.unpack_bwma(out_blk)), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def test_stack_composes(setup):
+    params, x = setup
+    xb = ref.pack_bwma(x, DIMS.block)
+    two = encoder_stack(xb, [params, params], DIMS)
+    manual = encoder_layer(encoder_layer(xb, params, DIMS), params, DIMS)
+    np.testing.assert_allclose(np.asarray(two), np.asarray(manual), rtol=1e-6)
+
+
+def test_output_shape_and_finite(setup):
+    params, x = setup
+    out = encoder_layer(ref.pack_bwma(x, DIMS.block), params, DIMS)
+    assert out.shape == (DIMS.seq // DIMS.block, DIMS.d_model // DIMS.block, DIMS.block, DIMS.block)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_dims_validation():
+    with pytest.raises(AssertionError):
+        BertDims(seq=100, d_model=64, heads=2, d_head=32, d_ff=128, block=16).validate()
+    with pytest.raises(AssertionError):
+        BertDims(seq=32, d_model=64, heads=3, d_head=32, d_ff=128, block=8).validate()

@@ -1,0 +1,82 @@
+"""Oracle self-consistency (hypothesis): the pure-jnp references must
+satisfy the mathematical identities the kernels are later held to."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import ref
+
+
+def rnd(seed, shape):
+    return jnp.asarray(np.random.default_rng(seed).standard_normal(shape), jnp.float32)
+
+
+@given(
+    mb=st.integers(1, 3), kb=st.integers(1, 3), nb=st.integers(1, 3),
+    b=st.sampled_from([4, 8]), seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=25, deadline=None)
+def test_gemm_ref_equals_unblocked_matmul(mb, kb, nb, b, seed):
+    a = rnd(seed, (mb * b, kb * b))
+    w = rnd(seed + 1, (kb * b, nb * b))
+    got = ref.unpack_bwma(ref.gemm_ref(ref.pack_bwma(a, b), ref.pack_bwma(w, b)))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(a @ w), rtol=1e-4, atol=1e-4)
+
+
+@given(b=st.sampled_from([4, 8, 16]), rb=st.integers(1, 3), cb=st.integers(1, 3),
+       seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_transpose_ref_involution(b, rb, cb, seed):
+    x = ref.pack_bwma(rnd(seed, (rb * b, cb * b)), b)
+    np.testing.assert_array_equal(
+        np.asarray(ref.transpose_ref(ref.transpose_ref(x))), np.asarray(x)
+    )
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_gemm_ref_distributes_over_addition(seed):
+    b = 8
+    a1 = ref.pack_bwma(rnd(seed, (16, 24)), b)
+    a2 = ref.pack_bwma(rnd(seed + 1, (16, 24)), b)
+    w = ref.pack_bwma(rnd(seed + 2, (24, 16)), b)
+    lhs = ref.gemm_ref(a1 + a2, w)
+    rhs = ref.gemm_ref(a1, w) + ref.gemm_ref(a2, w)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs), rtol=1e-4, atol=1e-4)
+
+
+@given(seed=st.integers(0, 2**31 - 1), scale=st.sampled_from([1.0, 0.5, 0.125]))
+@settings(max_examples=20, deadline=None)
+def test_softmax_ref_is_a_distribution(seed, scale):
+    x = ref.pack_bwma(rnd(seed, (16, 32)), 8)
+    p = ref.unpack_bwma(ref.softmax_ref(x, scale=scale))
+    p = np.asarray(p)
+    assert (p >= 0).all()
+    np.testing.assert_allclose(p.sum(-1), 1.0, rtol=1e-5)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_layernorm_ref_affine_equivariance(seed):
+    # layernorm(a*x + c) == layernorm(x) for scalar a>0, c (row-wise).
+    b = 8
+    x = rnd(seed, (16, 32))
+    g = jnp.ones(32)
+    z = jnp.zeros(32)
+    base = ref.layernorm_ref(ref.pack_bwma(x, b), g, z)
+    shifted = ref.layernorm_ref(ref.pack_bwma(3.0 * x + 7.0, b), g, z)
+    np.testing.assert_allclose(np.asarray(shifted), np.asarray(base), rtol=1e-3, atol=1e-4)
+
+
+def test_gelu_ref_known_values():
+    x = jnp.asarray([0.0, 100.0, -100.0], jnp.float32)
+    y = np.asarray(ref.gelu_ref(x))
+    np.testing.assert_allclose(y, [0.0, 100.0, 0.0], atol=1e-4)
+
+
+def test_gelu_monotone_on_positive_axis():
+    x = jnp.linspace(0, 5, 100, dtype=jnp.float32)
+    y = np.asarray(ref.gelu_ref(x))
+    assert (np.diff(y) > 0).all()

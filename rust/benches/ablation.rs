@@ -1,0 +1,117 @@
+//! Ablation bench — the design-choice studies DESIGN.md calls out,
+//! beyond the paper's own figures (reduced geometry to keep the sweep
+//! fast; shapes, not absolute cycles, are the subject):
+//!
+//! * kernel-size sweep 4..32 (where does the BWMA advantage peak?)
+//! * hardware stream prefetcher on/off (does BWMA's win survive one?)
+//! * L2 capacity sweep (is the effect an L2-size artifact?)
+//! * element width 1/2/4 bytes (int8 vs fp16 vs fp32 tensors)
+//! * L1 set-index hashing on/off (power-of-two stride aliasing)
+//! * replacement policy LRU vs tree-PLRU
+//!
+//! Run: `cargo bench --bench ablation`
+
+use bwma::accel::AccelKind;
+use bwma::layout::Layout;
+use bwma::mem::replacement::Policy;
+use bwma::sim::{simulate, SimConfig};
+use bwma::util::table;
+
+fn speedup(mut mk: impl FnMut(Layout) -> SimConfig) -> (f64, u64, u64) {
+    let r = simulate(&mk(Layout::Rwma));
+    let b = simulate(&mk(Layout::Bwma));
+    (r.total_cycles as f64 / b.total_cycles as f64, r.total_cycles, b.total_cycles)
+}
+
+fn main() {
+    // --- kernel-size sweep ---
+    let mut rows = Vec::new();
+    for b in [4usize, 8, 16, 32] {
+        let (s, r, w) = speedup(|l| SimConfig::tiny(AccelKind::Sa { b }, l, 1));
+        rows.push(vec![format!("SA{b}x{b}"), table::cycles(r), table::cycles(w), format!("{s:.2}x")]);
+    }
+    println!("== ablation: kernel size (tiny geometry)");
+    print!("{}", table::render(&["accel", "RWMA", "BWMA", "speedup"], &rows));
+
+    // --- prefetcher on/off ---
+    let mut rows = Vec::new();
+    for pf in [false, true] {
+        let (s, r, w) = speedup(|l| {
+            let mut c = SimConfig::tiny(AccelKind::Sa { b: 16 }, l, 1);
+            c.mem.prefetch.enabled = pf;
+            c
+        });
+        rows.push(vec![
+            if pf { "stream prefetcher" } else { "no prefetcher (paper)" }.into(),
+            table::cycles(r),
+            table::cycles(w),
+            format!("{s:.2}x"),
+        ]);
+    }
+    println!("\n== ablation: hardware prefetcher");
+    print!("{}", table::render(&["config", "RWMA", "BWMA", "speedup"], &rows));
+
+    // --- L2 capacity ---
+    let mut rows = Vec::new();
+    for l2_kb in [256usize, 512, 1024, 4096] {
+        let (s, r, w) = speedup(|l| {
+            let mut c = SimConfig::tiny(AccelKind::Sa { b: 16 }, l, 1);
+            c.mem.l2.size = l2_kb * 1024;
+            c
+        });
+        rows.push(vec![format!("{l2_kb} KiB"), table::cycles(r), table::cycles(w), format!("{s:.2}x")]);
+    }
+    println!("\n== ablation: shared L2 capacity");
+    print!("{}", table::render(&["L2", "RWMA", "BWMA", "speedup"], &rows));
+
+    // --- element width ---
+    let mut rows = Vec::new();
+    for elem in [1usize, 2, 4] {
+        let (s, r, w) = speedup(|l| {
+            let mut c = SimConfig::tiny(AccelKind::Sa { b: 16 }, l, 1);
+            c.bert.elem = elem;
+            c
+        });
+        rows.push(vec![
+            format!("{} ({} B)", ["int8", "fp16", "fp32"][elem.trailing_zeros() as usize], elem),
+            table::cycles(r),
+            table::cycles(w),
+            format!("{s:.2}x"),
+        ]);
+    }
+    println!("\n== ablation: element width (an RWMA tile row = b·elem bytes of a 64 B line)");
+    print!("{}", table::render(&["dtype", "RWMA", "BWMA", "speedup"], &rows));
+
+    // --- L1 index hashing ---
+    let mut rows = Vec::new();
+    for hash in [true, false] {
+        let (s, r, w) = speedup(|l| {
+            let mut c = SimConfig::tiny(AccelKind::Sa { b: 16 }, l, 1);
+            c.mem.l1d.index_hash = hash;
+            c.mem.l2.index_hash = hash;
+            c
+        });
+        rows.push(vec![
+            if hash { "XOR-hashed sets" } else { "direct-indexed sets" }.into(),
+            table::cycles(r),
+            table::cycles(w),
+            format!("{s:.2}x"),
+        ]);
+    }
+    println!("\n== ablation: L1/L2 set-index hashing");
+    print!("{}", table::render(&["index", "RWMA", "BWMA", "speedup"], &rows));
+
+    // --- replacement policy ---
+    let mut rows = Vec::new();
+    for pol in [Policy::Lru, Policy::TreePlru] {
+        let (s, r, w) = speedup(|l| {
+            let mut c = SimConfig::tiny(AccelKind::Sa { b: 16 }, l, 1);
+            c.mem.l1d.policy = pol;
+            c.mem.l2.policy = pol;
+            c
+        });
+        rows.push(vec![format!("{pol:?}"), table::cycles(r), table::cycles(w), format!("{s:.2}x")]);
+    }
+    println!("\n== ablation: replacement policy");
+    print!("{}", table::render(&["policy", "RWMA", "BWMA", "speedup"], &rows));
+}

@@ -1,0 +1,26 @@
+//! Bench fig6a — regenerates paper Fig. 6a (execution time per
+//! accelerator, RWMA vs BWMA, single core) at paper scale, then times
+//! the simulator harness itself on the reduced config.
+//!
+//! Run: `cargo bench --bench fig6a`
+
+use bwma::accel::AccelKind;
+use bwma::coordinator::experiment::{fig6a, Scale};
+use bwma::layout::Layout;
+use bwma::sim::{simulate, SimConfig};
+use bwma::util::bench;
+
+fn main() {
+    // The paper series (full BERT-base geometry).
+    let (out, _) = bench::once("fig6a/paper-series", || fig6a(Scale::Paper));
+    out.print();
+
+    // Harness timing: simulator throughput on the reduced config.
+    for (label, accel, layout) in [
+        ("sim/tiny/sa16-rwma", AccelKind::Sa { b: 16 }, Layout::Rwma),
+        ("sim/tiny/sa16-bwma", AccelKind::Sa { b: 16 }, Layout::Bwma),
+        ("sim/tiny/sa8-bwma", AccelKind::Sa { b: 8 }, Layout::Bwma),
+    ] {
+        bench::bench(label, 1, 5, || simulate(&SimConfig::tiny(accel, layout, 1)).total_cycles);
+    }
+}

@@ -1,0 +1,22 @@
+//! Bench fig6b — regenerates paper Fig. 6b (execution time vs core
+//! count, SA16x16, both layouts) at paper scale, then times the
+//! multi-core engine on the reduced config.
+//!
+//! Run: `cargo bench --bench fig6b`
+
+use bwma::accel::AccelKind;
+use bwma::coordinator::experiment::{fig6b, Scale};
+use bwma::layout::Layout;
+use bwma::sim::{simulate, SimConfig};
+use bwma::util::bench;
+
+fn main() {
+    let (out, _) = bench::once("fig6b/paper-series", || fig6b(Scale::Paper));
+    out.print();
+
+    for cores in [1usize, 2, 4] {
+        bench::bench(&format!("sim/tiny/sa16-bwma-{cores}core"), 1, 5, || {
+            simulate(&SimConfig::tiny(AccelKind::Sa { b: 16 }, Layout::Bwma, cores)).total_cycles
+        });
+    }
+}

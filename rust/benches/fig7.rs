@@ -1,0 +1,14 @@
+//! Bench fig7 — regenerates paper Fig. 7 (per-component execution-time
+//! distribution, RWMA vs BWMA pies on SA16x16 single-core).
+//!
+//! Run: `cargo bench --bench fig7`
+
+use bwma::coordinator::experiment::{fig7, Scale};
+use bwma::util::bench;
+
+fn main() {
+    let (out, _) = bench::once("fig7/paper-series", || fig7(Scale::Paper));
+    out.print();
+
+    bench::bench("fig7/tiny", 1, 3, || fig7(Scale::Tiny).notes.len());
+}

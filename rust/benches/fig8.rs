@@ -1,0 +1,19 @@
+//! Bench fig8 — regenerates paper Fig. 8 (memory accesses and misses per
+//! hierarchy level, log-scale bars) plus the conversion-overhead check
+//! (§3.2) that shares its configuration.
+//!
+//! Run: `cargo bench --bench fig8`
+
+use bwma::coordinator::experiment::{convert_overhead, fig8, headline, Scale};
+use bwma::util::bench;
+
+fn main() {
+    let (out, _) = bench::once("fig8/paper-series", || fig8(Scale::Paper));
+    out.print();
+
+    let (out, _) = bench::once("convert-overhead/paper", || convert_overhead(Scale::Paper));
+    out.print();
+
+    let (out, _) = bench::once("headline/paper", || headline(Scale::Paper));
+    out.print();
+}

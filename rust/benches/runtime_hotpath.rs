@@ -1,0 +1,60 @@
+//! Runtime hot-path bench: the PJRT execution path the serving layer
+//! lives on — artifact compile time, per-inference latency of the
+//! blocked-GEMM kernel and of the batch-variant encoders, and the
+//! host-side layout pack/unpack throughput.
+//!
+//! Run: `cargo bench --bench runtime_hotpath` (needs `make artifacts`).
+
+use bwma::runtime::{artifacts_dir, GoldenSet, Runtime, Tensor};
+use bwma::util::{bench, XorShift64};
+
+fn main() {
+    let dir = artifacts_dir().expect("run `make artifacts` first");
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+
+    // Artifact compile cost (one-time, off the request path).
+    let (gemm, _) = bench::once("compile/bwma_gemm_b16", || {
+        rt.load_hlo(&dir.join("bwma_gemm_b16.hlo.txt")).unwrap()
+    });
+    let (enc1, _) = bench::once("compile/encoder_b16_batch1", || {
+        rt.load_hlo(&dir.join("encoder_jnp_b16_batch1.hlo.txt")).unwrap()
+    });
+    let (enc8, _) = bench::once("compile/encoder_b16_batch8", || {
+        rt.load_hlo(&dir.join("encoder_jnp_b16_batch8.hlo.txt")).unwrap()
+    });
+
+    // Kernel execution latency.
+    let g = GoldenSet::load(&dir, "bwma_gemm_b16").unwrap();
+    let inputs = g.inputs();
+    let out_shape = g.expected().shape.clone();
+    bench::bench("exec/bwma_gemm_b16 (64x64x64)", 2, 10, || {
+        gemm.run1(&inputs, out_shape.clone()).unwrap().data[0]
+    });
+
+    // Encoder execution latency per batch variant.
+    for (label, exe, tag) in [
+        ("exec/encoder_b16 batch1", &enc1, "encoder_jnp_b16_batch1"),
+        ("exec/encoder_b16 batch8", &enc8, "encoder_jnp_b16_batch8"),
+    ] {
+        let g = GoldenSet::load(&dir, tag).unwrap();
+        let inputs = g.inputs();
+        let out_shape = g.expected().shape.clone();
+        let s = bench::bench(label, 1, 5, || exe.run1(&inputs, out_shape.clone()).unwrap().data[0]);
+        let batch: usize = g.tensors["in_x"].shape[0];
+        println!(
+            "  → {:.1} seq/s at batch {batch}",
+            batch as f64 / s.median().as_secs_f64()
+        );
+    }
+
+    // Host-side layout pack/unpack (the only per-request host transform).
+    let mut rng = XorShift64::new(1);
+    let mut data = vec![0.0f32; 512 * 768];
+    rng.fill_f32(&mut data);
+    let t = Tensor::new(vec![512, 768], data);
+    let s = bench::bench("host/pack_blocked 512x768 f32", 3, 20, || t.pack_blocked(16).unwrap().data[0]);
+    let mb = (512.0 * 768.0 * 4.0) / 1e6;
+    println!("  → {:.0} MB/s pack throughput", mb / s.median().as_secs_f64());
+    let p = t.pack_blocked(16).unwrap();
+    bench::bench("host/unpack_blocked 512x768 f32", 3, 20, || p.unpack_blocked().unwrap().data[0]);
+}

@@ -1,0 +1,101 @@
+//! Accelerator timing models (paper §2.2, Fig. 2).
+//!
+//! Two classes, both parameterized by *kernel size* `b` — the quantity the
+//! BWMA block edge is matched to:
+//!
+//! * [`SystolicArray`] — a `b×b` weight-stationary systolic array,
+//!   tightly coupled to the core as a custom functional unit (the TiC-SAT
+//!   model the paper instantiates at 8×8 and 16×16);
+//! * [`SimdUnit`] — a NEON-like SIMD datapath with `b`-element lanes
+//!   performing dot products.
+//!
+//! The models answer one question: how many cycles does one `b×b×b` tile
+//! MAC take once its operands are at the accelerator's ports? Data
+//! movement to/from the ports is modelled by the memory system — it is
+//! exactly the traffic whose arrangement the paper optimizes.
+
+mod simd;
+mod systolic;
+
+pub use simd::SimdUnit;
+pub use systolic::SystolicArray;
+
+
+/// A GEMM tile engine with a fixed kernel size.
+pub trait TileEngine {
+    /// Kernel size `b` (PEs per row / lane width).
+    fn kernel_size(&self) -> usize;
+
+    /// Cycles to preload a `b×b` weight tile already at the ports.
+    fn weight_load_cycles(&self) -> u64;
+
+    /// Cycles to stream one `b×b` input tile through and accumulate the
+    /// `b×b` output (weights resident).
+    fn tile_mac_cycles(&self) -> u64;
+
+    /// Cycles to drain the accumulated `b×b` output tile to the ports.
+    fn drain_cycles(&self) -> u64;
+
+    fn name(&self) -> String;
+}
+
+/// Which accelerator a system config instantiates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AccelKind {
+    /// Systolic array with kernel size `b` (paper: SA8x8, SA16x16).
+    Sa { b: usize },
+    /// SIMD unit with `b` lanes (paper: NEON-like, b = 16).
+    Simd { b: usize },
+}
+
+impl AccelKind {
+    pub fn build(&self) -> Box<dyn TileEngine> {
+        match *self {
+            AccelKind::Sa { b } => Box::new(SystolicArray::new(b)),
+            AccelKind::Simd { b } => Box::new(SimdUnit::new(b)),
+        }
+    }
+
+    pub fn kernel_size(&self) -> usize {
+        match *self {
+            AccelKind::Sa { b } | AccelKind::Simd { b } => b,
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match *self {
+            AccelKind::Sa { b } => format!("SA{b}x{b}"),
+            AccelKind::Simd { b } => format!("SIMD{b}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kinds_build_matching_kernel() {
+        for (k, b) in [(AccelKind::Sa { b: 8 }, 8), (AccelKind::Sa { b: 16 }, 16), (AccelKind::Simd { b: 16 }, 16)]
+        {
+            assert_eq!(k.build().kernel_size(), b);
+            assert_eq!(k.kernel_size(), b);
+        }
+    }
+
+    #[test]
+    fn sa_beats_simd_per_tile_at_equal_kernel() {
+        // A b×b systolic array performs b^2 MACs/cycle in steady state;
+        // a b-lane SIMD unit does b MACs/cycle. The SA must take fewer
+        // cycles per tile op.
+        let sa = SystolicArray::new(16);
+        let simd = SimdUnit::new(16);
+        assert!(sa.tile_mac_cycles() < simd.tile_mac_cycles());
+    }
+
+    #[test]
+    fn labels() {
+        assert_eq!(AccelKind::Sa { b: 8 }.label(), "SA8x8");
+        assert_eq!(AccelKind::Simd { b: 16 }.label(), "SIMD16");
+    }
+}

@@ -1,0 +1,56 @@
+//! SIMD (NEON-like) tile engine timing (paper §2.2.1, Fig. 2b).
+
+use super::TileEngine;
+
+/// `b` lanes, each a multiply-accumulate; one instruction computes `b`
+/// MACs (e.g. NEON `SDOT`-style int8 dot products). Weights for a tile
+/// live in lane registers while the input tile streams through.
+#[derive(Debug, Clone, Copy)]
+pub struct SimdUnit {
+    b: usize,
+}
+
+impl SimdUnit {
+    pub fn new(b: usize) -> Self {
+        assert!(b >= 2 && b.is_power_of_two(), "lane count {b} unsupported");
+        Self { b }
+    }
+}
+
+impl TileEngine for SimdUnit {
+    fn kernel_size(&self) -> usize {
+        self.b
+    }
+
+    /// One register write per lane row.
+    fn weight_load_cycles(&self) -> u64 {
+        self.b as u64
+    }
+
+    /// `b×b×b` MACs at `b` MACs/cycle → `b²` cycles.
+    fn tile_mac_cycles(&self) -> u64 {
+        (self.b * self.b) as u64
+    }
+
+    /// Results already sit in ordinary vector registers.
+    fn drain_cycles(&self) -> u64 {
+        (self.b / 2) as u64
+    }
+
+    fn name(&self) -> String {
+        format!("SIMD{}", self.b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simd16_tile_cost() {
+        let s = SimdUnit::new(16);
+        assert_eq!(s.tile_mac_cycles(), 256);
+        assert_eq!(s.kernel_size(), 16);
+        assert_eq!(s.name(), "SIMD16");
+    }
+}

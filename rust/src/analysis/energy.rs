@@ -1,0 +1,92 @@
+//! Per-access energy model: turns the Fig. 8 counters into the energy
+//! story the paper's introduction motivates ("slow and energy-hungry
+//! off-chip memory"). Constants are CACTI-class estimates for a 22 nm
+//! node (order-of-magnitude correct; the RWMA/BWMA *ratio* is the
+//! result, not the absolute joules).
+
+use crate::mem::MemStats;
+
+#[derive(Debug, Clone, Copy)]
+pub struct EnergyModel {
+    /// Energy per L1 access (hit or fill), picojoules.
+    pub l1_pj: f64,
+    /// Energy per L2 access.
+    pub l2_pj: f64,
+    /// Energy per DRAM line fetch (activation + burst, amortized).
+    pub dram_pj: f64,
+    /// Core + accelerator dynamic energy per executed instruction.
+    pub instr_pj: f64,
+}
+
+impl Default for EnergyModel {
+    fn default() -> Self {
+        // ~22 nm: L1 ≈ 1 pJ/access, L2 ≈ 20 pJ, DRAM ≈ 640 pJ/64 B line
+        // (10 pJ/B), core ≈ 6 pJ/instruction.
+        Self { l1_pj: 1.0, l2_pj: 20.0, dram_pj: 640.0, instr_pj: 6.0 }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct EnergyReport {
+    pub l1_uj: f64,
+    pub l2_uj: f64,
+    pub dram_uj: f64,
+    pub core_uj: f64,
+}
+
+impl EnergyReport {
+    pub fn total_uj(&self) -> f64 {
+        self.l1_uj + self.l2_uj + self.dram_uj + self.core_uj
+    }
+}
+
+impl EnergyModel {
+    /// Fold simulator statistics into an energy estimate.
+    pub fn report(&self, mem: &MemStats, instructions: u64) -> EnergyReport {
+        let l1 = mem.l1d_total().accesses + mem.l1i_total().accesses;
+        EnergyReport {
+            l1_uj: l1 as f64 * self.l1_pj / 1e6,
+            l2_uj: mem.l2.accesses as f64 * self.l2_pj / 1e6,
+            dram_uj: mem.dram.accesses as f64 * self.dram_pj / 1e6,
+            core_uj: instructions as f64 * self.instr_pj / 1e6,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::LevelStats;
+
+    fn stats(l1d: u64, l1i: u64, l2: u64, dram: u64) -> MemStats {
+        let mut m = MemStats::new(1);
+        m.l1d[0] = LevelStats { accesses: l1d, ..Default::default() };
+        m.l1i[0] = LevelStats { accesses: l1i, ..Default::default() };
+        m.l2 = LevelStats { accesses: l2, ..Default::default() };
+        m.dram = LevelStats { accesses: dram, ..Default::default() };
+        m
+    }
+
+    #[test]
+    fn energy_adds_up() {
+        let e = EnergyModel::default();
+        let r = e.report(&stats(1_000_000, 0, 0, 0), 0);
+        assert!((r.l1_uj - 1.0).abs() < 1e-9);
+        assert_eq!(r.total_uj(), r.l1_uj);
+    }
+
+    #[test]
+    fn dram_dominates_per_access() {
+        // The premise of the paper: one DRAM access costs ~hundreds of L1s.
+        let e = EnergyModel::default();
+        assert!(e.dram_pj > 100.0 * e.l1_pj);
+    }
+
+    #[test]
+    fn fewer_l2_accesses_mean_less_energy() {
+        let e = EnergyModel::default();
+        let rwma = e.report(&stats(100, 300, 30, 3), 400);
+        let bwma = e.report(&stats(100, 100, 5, 3), 150);
+        assert!(bwma.total_uj() < rwma.total_uj());
+    }
+}

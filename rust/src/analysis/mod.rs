@@ -1,0 +1,22 @@
+//! Trace analysis: quantifies *why* BWMA wins, beyond end-to-end cycles.
+//!
+//! * [`reuse`] — cache-line reuse-distance histograms (the classic
+//!   locality metric: a reuse distance below the cache's line capacity is
+//!   a guaranteed LRU hit);
+//! * [`utilization`] — line-utilization: how many bytes of each fetched
+//!   64-byte line the workload actually touches before eviction (the
+//!   paper's §3.1 mechanism in one number: an RWMA tile row uses `b`
+//!   bytes of every line, BWMA uses all 64);
+//! * [`energy`] — a per-access energy model (pJ per L1/L2/DRAM access,
+//!   CACTI-class constants) turning the Fig. 8 counters into the energy
+//!   claim the paper's introduction motivates.
+
+pub mod energy;
+pub mod profile;
+pub mod reuse;
+pub mod utilization;
+
+pub use energy::{EnergyModel, EnergyReport};
+pub use profile::{profile_workload, AnalysisSink};
+pub use reuse::ReuseHistogram;
+pub use utilization::LineUtilization;

@@ -1,0 +1,123 @@
+//! Line utilization: of each 64-byte line fetched, how many bytes does
+//! the workload touch before moving on? This is the paper's §3.1
+//! mechanism reduced to a single number — an RWMA tile fetch touches `b`
+//! bytes per line (one tile row), BWMA touches all 64.
+
+use std::collections::HashMap;
+
+use crate::mem::{line_of, LINE_BYTES};
+
+/// Tracks a byte-touch bitmask per line across one *episode* (e.g. one
+/// phase); `finish()` folds the masks into the utilization statistic.
+#[derive(Debug, Default, Clone)]
+pub struct LineUtilization {
+    live: HashMap<u64, u64>,
+    /// Histogram over touched-byte counts (1..=64), index = bytes.
+    pub hist: Vec<u64>,
+}
+
+impl LineUtilization {
+    pub fn new() -> Self {
+        Self { live: HashMap::new(), hist: vec![0; LINE_BYTES as usize + 1] }
+    }
+
+    /// Record a touch of `len` bytes at `addr`.
+    pub fn touch(&mut self, addr: u64, len: u32) {
+        let mut a = addr;
+        let mut remaining = len as u64;
+        while remaining > 0 {
+            let line = line_of(a);
+            let off = a - line * LINE_BYTES;
+            let in_line = remaining.min(LINE_BYTES - off);
+            let mask = if in_line >= 64 { u64::MAX } else { ((1u64 << in_line) - 1) << off };
+            *self.live.entry(line).or_insert(0) |= mask;
+            a += in_line;
+            remaining -= in_line;
+        }
+    }
+
+    /// Close the episode: every live line contributes its touched-byte
+    /// count to the histogram.
+    pub fn finish(&mut self) {
+        for (_, mask) in self.live.drain() {
+            self.hist[mask.count_ones() as usize] += 1;
+        }
+    }
+
+    /// Mean bytes touched per fetched line.
+    pub fn mean_bytes(&self) -> f64 {
+        let (mut n, mut sum) = (0u64, 0u64);
+        for (bytes, &count) in self.hist.iter().enumerate() {
+            n += count;
+            sum += bytes as u64 * count;
+        }
+        if n == 0 {
+            0.0
+        } else {
+            sum as f64 / n as f64
+        }
+    }
+
+    /// Fraction of fetched bytes actually used.
+    pub fn efficiency(&self) -> f64 {
+        self.mean_bytes() / LINE_BYTES as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::layout::{tile_spans, Layout, MatrixDesc, TileRef};
+
+    #[test]
+    fn full_line_touch_counts_64() {
+        let mut u = LineUtilization::new();
+        u.touch(0, 64);
+        u.finish();
+        assert_eq!(u.hist[64], 1);
+        assert_eq!(u.mean_bytes(), 64.0);
+    }
+
+    #[test]
+    fn partial_touches_accumulate_within_episode() {
+        let mut u = LineUtilization::new();
+        u.touch(0, 8);
+        u.touch(8, 8);
+        u.touch(0, 4); // overlap doesn't double-count
+        u.finish();
+        assert_eq!(u.hist[16], 1);
+    }
+
+    #[test]
+    fn straddling_touch_splits_across_lines() {
+        let mut u = LineUtilization::new();
+        u.touch(60, 8); // 4 bytes in line 0, 4 in line 1
+        u.finish();
+        assert_eq!(u.hist[4], 2);
+    }
+
+    #[test]
+    fn tile_fetch_utilization_matches_paper_mechanism() {
+        // One 16x16 int8 tile: RWMA touches 16 B of each of 16 lines,
+        // BWMA touches 4 lines fully.
+        let measure = |layout| {
+            let m = MatrixDesc::new(0, 512, 768, 1, 16, layout);
+            let mut u = LineUtilization::new();
+            for (addr, len) in tile_spans(&m, TileRef { block_row: 3, block_col: 5 }).spans {
+                u.touch(addr, len);
+            }
+            u.finish();
+            u.efficiency()
+        };
+        let rwma = measure(Layout::Rwma);
+        let bwma = measure(Layout::Bwma);
+        assert!((rwma - 0.25).abs() < 1e-9, "RWMA: 16/64 bytes per line, got {rwma}");
+        assert!((bwma - 1.0).abs() < 1e-9, "BWMA: whole lines, got {bwma}");
+    }
+
+    #[test]
+    fn empty_is_zero() {
+        let u = LineUtilization::new();
+        assert_eq!(u.mean_bytes(), 0.0);
+    }
+}

@@ -1,0 +1,311 @@
+//! Configuration system: named presets for the paper's evaluated systems
+//! plus `key = value` config files (see [`crate::util::kv`]) that override
+//! any field of the paper-default [`SimConfig`].
+//!
+//! ```text
+//! # sa16-bwma.conf — start from paper defaults and override:
+//! accel = sa16          # sa8 | sa16 | simd16 | sa<N> | simd<N>
+//! layout = bwma         # rwma | bwma
+//! cores = 1
+//! sim_layers = 1
+//! convert_boundaries = false
+//! freq_ghz = 2.3
+//! [bert]
+//! seq = 512
+//! d_model = 768
+//! heads = 12
+//! d_head = 64
+//! d_ff = 3072
+//! layers = 12
+//! elem = 1
+//! [mem]
+//! l1d_size = 32768
+//! l1d_ways = 4
+//! l2_size = 1048576
+//! l2_ways = 8
+//! l1_hit_cycles = 2
+//! l2_hit_cycles = 20
+//! prefetch_enabled = true
+//! prefetch_degree = 2
+//! [costs]
+//! gemm_span_overhead = 6
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use crate::accel::AccelKind;
+use crate::layout::Layout;
+use crate::sim::SimConfig;
+use crate::util::kv::{self, KvMap};
+
+/// Named presets — the exact systems of the paper's evaluation.
+pub fn preset(name: &str) -> Option<SimConfig> {
+    let (accel, layout, cores) = match name {
+        "sa8-rwma-1core" => (AccelKind::Sa { b: 8 }, Layout::Rwma, 1),
+        "sa8-bwma-1core" => (AccelKind::Sa { b: 8 }, Layout::Bwma, 1),
+        "sa16-rwma-1core" => (AccelKind::Sa { b: 16 }, Layout::Rwma, 1),
+        "sa16-bwma-1core" => (AccelKind::Sa { b: 16 }, Layout::Bwma, 1),
+        "simd16-rwma-1core" => (AccelKind::Simd { b: 16 }, Layout::Rwma, 1),
+        "simd16-bwma-1core" => (AccelKind::Simd { b: 16 }, Layout::Bwma, 1),
+        "sa16-rwma-2core" => (AccelKind::Sa { b: 16 }, Layout::Rwma, 2),
+        "sa16-bwma-2core" => (AccelKind::Sa { b: 16 }, Layout::Bwma, 2),
+        "sa16-rwma-4core" => (AccelKind::Sa { b: 16 }, Layout::Rwma, 4),
+        "sa16-bwma-4core" => (AccelKind::Sa { b: 16 }, Layout::Bwma, 4),
+        _ => return None,
+    };
+    Some(SimConfig::paper(accel, layout, cores))
+}
+
+/// All preset names, in presentation order.
+pub fn preset_names() -> &'static [&'static str] {
+    &[
+        "sa8-rwma-1core",
+        "sa8-bwma-1core",
+        "sa16-rwma-1core",
+        "sa16-bwma-1core",
+        "simd16-rwma-1core",
+        "simd16-bwma-1core",
+        "sa16-rwma-2core",
+        "sa16-bwma-2core",
+        "sa16-rwma-4core",
+        "sa16-bwma-4core",
+    ]
+}
+
+pub fn parse_accel(s: &str) -> Result<AccelKind> {
+    let (kind, num) = if let Some(n) = s.strip_prefix("sa") {
+        ("sa", n)
+    } else if let Some(n) = s.strip_prefix("simd") {
+        ("simd", n)
+    } else {
+        bail!("unknown accelerator {s:?} (want sa<N> or simd<N>)");
+    };
+    // Accept both "sa16" and "sa16x16".
+    let num = num.split('x').next().unwrap_or(num);
+    let b: usize = num.parse().with_context(|| format!("accelerator size in {s:?}"))?;
+    Ok(match kind {
+        "sa" => AccelKind::Sa { b },
+        _ => AccelKind::Simd { b },
+    })
+}
+
+pub fn parse_layout(s: &str) -> Result<Layout> {
+    match s.to_ascii_lowercase().as_str() {
+        "rwma" => Ok(Layout::Rwma),
+        "bwma" => Ok(Layout::Bwma),
+        _ => bail!("unknown layout {s:?} (want rwma|bwma)"),
+    }
+}
+
+/// Apply a parsed kv map over a base config.
+pub fn apply(map: &KvMap, mut cfg: SimConfig) -> Result<SimConfig> {
+    if let Some(a) = map.get("accel") {
+        cfg.accel = parse_accel(a)?;
+    }
+    if let Some(l) = map.get("layout") {
+        cfg.layout = parse_layout(l)?;
+    }
+    if let Some(v) = kv::get_usize(map, "cores")? {
+        cfg.cores = v;
+        cfg.mem.cores = v;
+    }
+    if let Some(v) = kv::get_usize(map, "sim_layers")? {
+        cfg.sim_layers = v;
+    }
+    if let Some(v) = kv::get_bool(map, "convert_boundaries")? {
+        cfg.convert_boundaries = v;
+    }
+    if let Some(v) = kv::get_f64(map, "freq_ghz")? {
+        cfg.freq_ghz = v;
+    }
+
+    macro_rules! set {
+        ($getter:path, $($key:literal => $field:expr),+ $(,)?) => {
+            $(if let Some(v) = $getter(map, $key)? { $field = v; })+
+        };
+    }
+    set!(kv::get_usize,
+        "bert.seq" => cfg.bert.seq,
+        "bert.d_model" => cfg.bert.d_model,
+        "bert.heads" => cfg.bert.heads,
+        "bert.d_head" => cfg.bert.d_head,
+        "bert.d_ff" => cfg.bert.d_ff,
+        "bert.layers" => cfg.bert.layers,
+        "bert.elem" => cfg.bert.elem,
+        "mem.l1d_size" => cfg.mem.l1d.size,
+        "mem.l1d_ways" => cfg.mem.l1d.ways,
+        "mem.l1i_size" => cfg.mem.l1i.size,
+        "mem.l1i_ways" => cfg.mem.l1i.ways,
+        "mem.l2_size" => cfg.mem.l2.size,
+        "mem.l2_ways" => cfg.mem.l2.ways,
+        "mem.l2_banks" => cfg.mem.l2_banks,
+        "mem.prefetch_streams" => cfg.mem.prefetch.streams,
+        "mem.prefetch_degree" => cfg.mem.prefetch.degree,
+        "mem.dram_banks" => cfg.mem.dram.banks,
+        "costs.word_bytes" => cfg.costs.word_bytes,
+    );
+    set!(kv::get_u64,
+        "mem.l1_hit_cycles" => cfg.mem.l1_hit_cycles,
+        "mem.l2_hit_cycles" => cfg.mem.l2_hit_cycles,
+        "mem.l2_occupancy_cycles" => cfg.mem.l2_occupancy_cycles,
+        "mem.dram_row_hit_cycles" => cfg.mem.dram.row_hit_cycles,
+        "mem.dram_row_miss_cycles" => cfg.mem.dram.row_miss_cycles,
+        "mem.dram_burst_cycles" => cfg.mem.dram.burst_cycles,
+        "mem.dram_row_bytes" => cfg.mem.dram.row_bytes,
+        "costs.gemm_instr_per_word" => cfg.costs.gemm_instr_per_word,
+        "costs.gemm_span_overhead" => cfg.costs.gemm_span_overhead,
+        "costs.gemm_tile_overhead" => cfg.costs.gemm_tile_overhead,
+        "costs.rowop_instr_per_elem" => cfg.costs.rowop_instr_per_elem,
+        "costs.bwma_block_index_overhead" => cfg.costs.bwma_block_index_overhead,
+        "costs.transpose_instr_per_elem" => cfg.costs.transpose_instr_per_elem,
+        "costs.convert_instr_per_elem" => cfg.costs.convert_instr_per_elem,
+        "costs.act_instr_per_elem" => cfg.costs.act_instr_per_elem,
+    );
+
+    if let Some(v) = kv::get_bool(map, "mem.prefetch_enabled")? {
+        cfg.mem.prefetch.enabled = v;
+    }
+
+    cfg.bert.validate(cfg.block());
+    Ok(cfg)
+}
+
+/// Load a config: a preset name, or a path to a `key = value` file
+/// (optionally starting `base = <preset>` to pick the starting point).
+pub fn load(name_or_path: &str) -> Result<SimConfig> {
+    if let Some(cfg) = preset(name_or_path) {
+        return Ok(cfg);
+    }
+    let text = std::fs::read_to_string(name_or_path).with_context(|| {
+        format!("no preset or file named {name_or_path:?} (presets: {:?})", preset_names())
+    })?;
+    let map = kv::parse(&text)?;
+    let base = match map.get("base") {
+        Some(b) => preset(b).with_context(|| format!("unknown base preset {b:?}"))?,
+        None => SimConfig::paper(AccelKind::Sa { b: 16 }, Layout::Bwma, 1),
+    };
+    apply(&map, base)
+}
+
+/// Serialize a config to the `key = value` format (for `bwma config dump`).
+pub fn dump(cfg: &SimConfig) -> String {
+    let accel = match cfg.accel {
+        AccelKind::Sa { b } => format!("sa{b}"),
+        AccelKind::Simd { b } => format!("simd{b}"),
+    };
+    format!(
+        "accel = {accel}\nlayout = {}\ncores = {}\nsim_layers = {}\nconvert_boundaries = {}\nfreq_ghz = {}\n\
+         [bert]\nseq = {}\nd_model = {}\nheads = {}\nd_head = {}\nd_ff = {}\nlayers = {}\nelem = {}\n\
+         [mem]\nl1i_size = {}\nl1i_ways = {}\nl1d_size = {}\nl1d_ways = {}\nl2_size = {}\nl2_ways = {}\n\
+         l1_hit_cycles = {}\nl2_hit_cycles = {}\nl2_banks = {}\nl2_occupancy_cycles = {}\n\
+         prefetch_enabled = {}\nprefetch_streams = {}\nprefetch_degree = {}\n\
+         dram_banks = {}\ndram_row_bytes = {}\ndram_row_hit_cycles = {}\ndram_row_miss_cycles = {}\ndram_burst_cycles = {}\n\
+         [costs]\ngemm_instr_per_word = {}\ngemm_span_overhead = {}\ngemm_tile_overhead = {}\n\
+         rowop_instr_per_elem = {}\nbwma_block_index_overhead = {}\ntranspose_instr_per_elem = {}\n\
+         convert_instr_per_elem = {}\nact_instr_per_elem = {}\nword_bytes = {}\n",
+        cfg.layout.name().to_ascii_lowercase(),
+        cfg.cores,
+        cfg.sim_layers,
+        cfg.convert_boundaries,
+        cfg.freq_ghz,
+        cfg.bert.seq,
+        cfg.bert.d_model,
+        cfg.bert.heads,
+        cfg.bert.d_head,
+        cfg.bert.d_ff,
+        cfg.bert.layers,
+        cfg.bert.elem,
+        cfg.mem.l1i.size,
+        cfg.mem.l1i.ways,
+        cfg.mem.l1d.size,
+        cfg.mem.l1d.ways,
+        cfg.mem.l2.size,
+        cfg.mem.l2.ways,
+        cfg.mem.l1_hit_cycles,
+        cfg.mem.l2_hit_cycles,
+        cfg.mem.l2_banks,
+        cfg.mem.l2_occupancy_cycles,
+        cfg.mem.prefetch.enabled,
+        cfg.mem.prefetch.streams,
+        cfg.mem.prefetch.degree,
+        cfg.mem.dram.banks,
+        cfg.mem.dram.row_bytes,
+        cfg.mem.dram.row_hit_cycles,
+        cfg.mem.dram.row_miss_cycles,
+        cfg.mem.dram.burst_cycles,
+        cfg.costs.gemm_instr_per_word,
+        cfg.costs.gemm_span_overhead,
+        cfg.costs.gemm_tile_overhead,
+        cfg.costs.rowop_instr_per_elem,
+        cfg.costs.bwma_block_index_overhead,
+        cfg.costs.transpose_instr_per_elem,
+        cfg.costs.convert_instr_per_elem,
+        cfg.costs.act_instr_per_elem,
+        cfg.costs.word_bytes,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_presets_resolve_and_validate() {
+        for name in preset_names() {
+            let cfg = preset(name).unwrap();
+            cfg.bert.validate(cfg.block());
+            assert_eq!(cfg.mem.cores, cfg.cores);
+        }
+    }
+
+    #[test]
+    fn dump_load_roundtrip() {
+        let cfg = preset("sa8-bwma-1core").unwrap();
+        let text = dump(&cfg);
+        let map = kv::parse(&text).unwrap();
+        let base = preset("sa16-rwma-1core").unwrap();
+        let back = apply(&map, base).unwrap();
+        assert_eq!(back.accel, cfg.accel);
+        assert_eq!(back.layout, cfg.layout);
+        assert_eq!(back.cores, cfg.cores);
+        assert_eq!(back.bert.seq, cfg.bert.seq);
+        assert_eq!(back.mem.l2.size, cfg.mem.l2.size);
+        assert_eq!(back.costs.gemm_span_overhead, cfg.costs.gemm_span_overhead);
+    }
+
+    #[test]
+    fn accel_parse_variants() {
+        assert_eq!(parse_accel("sa16").unwrap(), AccelKind::Sa { b: 16 });
+        assert_eq!(parse_accel("sa16x16").unwrap(), AccelKind::Sa { b: 16 });
+        assert_eq!(parse_accel("simd8").unwrap(), AccelKind::Simd { b: 8 });
+        assert!(parse_accel("gpu").is_err());
+    }
+
+    #[test]
+    fn load_rejects_unknown() {
+        assert!(load("no-such-preset-or-file").is_err());
+    }
+
+    #[test]
+    fn load_from_file_with_base() {
+        let dir = std::env::temp_dir().join(format!("bwma-cfg-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("c.conf");
+        std::fs::write(&p, "base = sa16-rwma-1core\nlayout = bwma\ncores = 4\n[bert]\nseq = 128\n").unwrap();
+        let cfg = load(p.to_str().unwrap()).unwrap();
+        assert_eq!(cfg.layout, Layout::Bwma);
+        assert_eq!(cfg.cores, 4);
+        assert_eq!(cfg.mem.cores, 4);
+        assert_eq!(cfg.bert.seq, 128);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn invalid_combo_rejected() {
+        // seq not divisible by kernel size must fail validation.
+        let map = kv::parse("accel = sa16\n[bert]\nseq = 100\n").unwrap();
+        let base = preset("sa16-bwma-1core").unwrap();
+        let r = std::panic::catch_unwind(|| apply(&map, base));
+        assert!(r.is_err() || r.unwrap().is_err());
+    }
+}

@@ -1,0 +1,99 @@
+//! Serving metrics: latency percentiles, throughput, batch shapes.
+
+use std::time::Duration;
+
+/// Latency distribution computed from raw samples.
+#[derive(Debug, Clone)]
+pub struct LatencyStats {
+    sorted: Vec<Duration>,
+}
+
+impl LatencyStats {
+    pub fn from_samples(mut samples: Vec<Duration>) -> Self {
+        samples.sort();
+        Self { sorted: samples }
+    }
+
+    pub fn count(&self) -> usize {
+        self.sorted.len()
+    }
+
+    /// Percentile by nearest-rank (p in [0, 100]).
+    pub fn percentile(&self, p: f64) -> Duration {
+        assert!(!self.sorted.is_empty(), "no samples");
+        assert!((0.0..=100.0).contains(&p));
+        // Classic nearest-rank: ⌈p/100 · n⌉, clamped to [1, n].
+        let rank = ((p / 100.0) * self.sorted.len() as f64).ceil() as usize;
+        self.sorted[rank.clamp(1, self.sorted.len()) - 1]
+    }
+
+    pub fn p50(&self) -> Duration {
+        self.percentile(50.0)
+    }
+
+    pub fn p99(&self) -> Duration {
+        self.percentile(99.0)
+    }
+
+    pub fn mean(&self) -> Duration {
+        self.sorted.iter().sum::<Duration>() / self.sorted.len().max(1) as u32
+    }
+}
+
+/// Aggregate serving counters, filled by the batcher thread.
+#[derive(Debug, Clone, Default)]
+pub struct ServerMetrics {
+    pub requests: u64,
+    pub batches: u64,
+    /// Histogram over executed batch sizes (index = size).
+    pub batch_size_hist: Vec<u64>,
+    pub model_exec_time: Duration,
+}
+
+impl ServerMetrics {
+    pub fn record_batch(&mut self, size: usize, exec: Duration) {
+        self.requests += size as u64;
+        self.batches += 1;
+        if self.batch_size_hist.len() <= size {
+            self.batch_size_hist.resize(size + 1, 0);
+        }
+        self.batch_size_hist[size] += 1;
+        self.model_exec_time += exec;
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.requests as f64 / self.batches as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_nearest_rank() {
+        let s = LatencyStats::from_samples(
+            (1..=100).map(Duration::from_millis).collect(),
+        );
+        assert_eq!(s.p50(), Duration::from_millis(50));
+        assert_eq!(s.p99(), Duration::from_millis(99));
+        assert_eq!(s.percentile(0.0), Duration::from_millis(1));
+        assert_eq!(s.percentile(100.0), Duration::from_millis(100));
+    }
+
+    #[test]
+    fn batch_metrics_accumulate() {
+        let mut m = ServerMetrics::default();
+        m.record_batch(4, Duration::from_millis(10));
+        m.record_batch(2, Duration::from_millis(5));
+        m.record_batch(4, Duration::from_millis(10));
+        assert_eq!(m.requests, 10);
+        assert_eq!(m.batches, 3);
+        assert_eq!(m.batch_size_hist[4], 2);
+        assert!((m.mean_batch_size() - 10.0 / 3.0).abs() < 1e-12);
+    }
+}

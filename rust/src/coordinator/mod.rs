@@ -1,0 +1,17 @@
+//! Layer-3 coordinator: the paper's experiments as first-class drivers,
+//! plus a threaded inference server (router → dynamic batcher → PJRT
+//! executor) proving the compiled BWMA artifacts serve real traffic with
+//! Python nowhere on the request path.
+//!
+//! (The usual tokio stack is unavailable in this offline build; the
+//! server uses std threads + channels, which at this request scale is
+//! indistinguishable.)
+
+pub mod experiment;
+pub mod metrics;
+pub mod report;
+pub mod server;
+
+pub use experiment::{run_experiment, ExperimentOutput};
+pub use metrics::{LatencyStats, ServerMetrics};
+pub use server::{Server, ServerConfig};

@@ -1,0 +1,39 @@
+//! Markdown report rendering: `bwma experiment all --markdown` emits the
+//! section EXPERIMENTS.md embeds.
+
+use super::experiment::ExperimentOutput;
+
+/// Render experiment outputs as a markdown document section.
+pub fn markdown(outputs: &[ExperimentOutput]) -> String {
+    let mut out = String::new();
+    for o in outputs {
+        out.push_str(&format!("### {} — {}\n\n", o.id, o.title));
+        out.push_str("```text\n");
+        out.push_str(&o.table);
+        out.push_str("```\n\n");
+        for n in &o.notes {
+            out.push_str(&format!("- {n}\n"));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_contains_tables_and_notes() {
+        let o = ExperimentOutput {
+            id: "figX".into(),
+            title: "demo".into(),
+            table: "| a |\n|---|\n| 1 |\n".into(),
+            notes: vec!["note one".into()],
+        };
+        let md = markdown(&[o]);
+        assert!(md.contains("### figX"));
+        assert!(md.contains("```text"));
+        assert!(md.contains("note one"));
+    }
+}

@@ -1,0 +1,250 @@
+//! Threaded inference server: router → dynamic batcher → PJRT executor.
+//!
+//! Requests carry a blocked activation tensor (one sequence). The batcher
+//! greedily drains the queue up to `max_batch` (bounded by a short
+//! timeout, vLLM-style continuous batching at this scale), stacks the
+//! activations along a new leading axis, picks the largest compiled batch
+//! variant that fits, and splits the outputs back per request.
+//!
+//! PJRT handles are not `Send`, so the executor thread *owns* them: the
+//! caller passes a factory that loads/compiles artifacts inside the
+//! thread. Everything crossing threads is plain data.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::runtime::{Executable, Tensor};
+
+use super::metrics::ServerMetrics;
+
+/// One compiled batch variant the batcher can dispatch to. The blanket
+/// impl covers plain artifacts; [`WithParams`] closes over fixed model
+/// parameters so the request only carries the activation.
+pub trait BatchRunner {
+    fn run(&self, stacked: Tensor, out_shape: Vec<usize>) -> Result<Tensor>;
+}
+
+impl BatchRunner for Executable {
+    fn run(&self, stacked: Tensor, out_shape: Vec<usize>) -> Result<Tensor> {
+        self.run1(&[stacked], out_shape)
+    }
+}
+
+/// An executable whose trailing inputs (model parameters) are fixed at
+/// load time — the deployment shape: weights live with the model, the
+/// request path only moves activations.
+pub struct WithParams {
+    pub exe: Executable,
+    pub params: Vec<Tensor>,
+}
+
+impl BatchRunner for WithParams {
+    fn run(&self, stacked: Tensor, out_shape: Vec<usize>) -> Result<Tensor> {
+        let mut inputs = Vec::with_capacity(1 + self.params.len());
+        inputs.push(stacked);
+        inputs.extend(self.params.iter().cloned());
+        self.exe.run1(&inputs, out_shape)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Maximum requests fused into one model execution. Must be one of
+    /// the compiled batch variants.
+    pub max_batch: usize,
+    /// How long the batcher waits to fill a batch after the first request.
+    pub batch_timeout: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self { max_batch: 8, batch_timeout: Duration::from_millis(2) }
+    }
+}
+
+struct Request {
+    input: Tensor,
+    enqueued: Instant,
+    respond: mpsc::Sender<Result<Response>>,
+}
+
+/// Per-request response with serving telemetry.
+#[derive(Debug)]
+pub struct Response {
+    pub output: Tensor,
+    pub queue_time: Duration,
+    pub exec_time: Duration,
+    pub batch_size: usize,
+}
+
+enum Msg {
+    Req(Request),
+    Shutdown(mpsc::Sender<ServerMetrics>),
+}
+
+/// Handle to a running server (cloneable submitter + shutdown).
+pub struct Server {
+    tx: mpsc::Sender<Msg>,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Start the executor thread. `factory` runs inside the thread and
+    /// returns the batch-variant map (batch size → executable) plus the
+    /// per-sequence output shape.
+    pub fn start<F>(cfg: ServerConfig, factory: F) -> Result<Self>
+    where
+        F: FnOnce() -> Result<(BTreeMap<usize, Box<dyn BatchRunner>>, Vec<usize>)> + Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let worker = std::thread::Builder::new()
+            .name("bwma-executor".into())
+            .spawn(move || executor_loop(cfg, factory, rx, ready_tx))
+            .context("spawning executor")?;
+        ready_rx.recv().context("executor died during init")??;
+        Ok(Self { tx, worker: Some(worker) })
+    }
+
+    /// Submit one sequence; returns a receiver for the response.
+    pub fn submit(&self, input: Tensor) -> mpsc::Receiver<Result<Response>> {
+        let (rtx, rrx) = mpsc::channel();
+        let req = Request { input, enqueued: Instant::now(), respond: rtx };
+        if self.tx.send(Msg::Req(req)).is_err() {
+            // Executor gone: the receiver will observe a disconnect.
+        }
+        rrx
+    }
+
+    /// Stop the server and collect final metrics.
+    pub fn shutdown(mut self) -> Result<ServerMetrics> {
+        let (mtx, mrx) = mpsc::channel();
+        self.tx.send(Msg::Shutdown(mtx)).map_err(|_| anyhow!("executor already gone"))?;
+        let metrics = mrx.recv().context("collecting metrics")?;
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+        Ok(metrics)
+    }
+}
+
+fn executor_loop<F>(
+    cfg: ServerConfig,
+    factory: F,
+    rx: mpsc::Receiver<Msg>,
+    ready: mpsc::Sender<Result<()>>,
+) where
+    F: FnOnce() -> Result<(BTreeMap<usize, Box<dyn BatchRunner>>, Vec<usize>)>,
+{
+    let (variants, out_shape) = match factory() {
+        Ok(v) => {
+            let _ = ready.send(Ok(()));
+            v
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    assert!(!variants.is_empty(), "no batch variants");
+    let mut metrics = ServerMetrics::default();
+
+    loop {
+        // Block for the first request.
+        let first = match rx.recv() {
+            Ok(Msg::Req(r)) => r,
+            Ok(Msg::Shutdown(mtx)) => {
+                let _ = mtx.send(metrics);
+                return;
+            }
+            Err(_) => return,
+        };
+        let mut batch = vec![first];
+        let deadline = Instant::now() + cfg.batch_timeout;
+        // Greedily fill the batch until deadline or max size.
+        while batch.len() < cfg.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(Msg::Req(r)) => batch.push(r),
+                Ok(Msg::Shutdown(mtx)) => {
+                    run_batch(&variants, &out_shape, batch, &mut metrics);
+                    let _ = mtx.send(metrics);
+                    return;
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        run_batch(&variants, &out_shape, batch, &mut metrics);
+    }
+}
+
+/// Pick the largest variant ≤ queue depth; run leftovers in a second pass.
+fn run_batch(
+    variants: &BTreeMap<usize, Box<dyn BatchRunner>>,
+    out_shape: &[usize],
+    mut batch: Vec<Request>,
+    metrics: &mut ServerMetrics,
+) {
+    while !batch.is_empty() {
+        let size = variants
+            .keys()
+            .rev()
+            .find(|&&s| s <= batch.len())
+            .copied()
+            .unwrap_or_else(|| *variants.keys().next().unwrap());
+        let take = size.min(batch.len());
+        // If even the smallest variant is larger than what remains, pad by
+        // repeating the last request (outputs for pads are dropped).
+        let chunk: Vec<Request> = batch.drain(..take).collect();
+        let exe = &variants[&size];
+
+        let per_seq: usize = chunk[0].input.len();
+        let mut stacked = Vec::with_capacity(size * per_seq);
+        for r in &chunk {
+            stacked.extend_from_slice(&r.input.data);
+        }
+        while stacked.len() < size * per_seq {
+            stacked.extend_from_slice(&chunk.last().unwrap().input.data); // pad
+        }
+        let mut in_shape = vec![size];
+        in_shape.extend_from_slice(&chunk[0].input.shape);
+        let input = Tensor::new(in_shape, stacked);
+
+        let mut full_out_shape = vec![size];
+        full_out_shape.extend_from_slice(out_shape);
+
+        let t0 = Instant::now();
+        let result = exe.run(input, full_out_shape);
+        let exec = t0.elapsed();
+        metrics.record_batch(chunk.len(), exec);
+
+        match result {
+            Ok(out) => {
+                let per_out: usize = out_shape.iter().product();
+                for (i, r) in chunk.into_iter().enumerate() {
+                    let data = out.data[i * per_out..(i + 1) * per_out].to_vec();
+                    let resp = Response {
+                        output: Tensor::new(out_shape.to_vec(), data),
+                        queue_time: t0.duration_since(r.enqueued),
+                        exec_time: exec,
+                        batch_size: size,
+                    };
+                    let _ = r.respond.send(Ok(resp));
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for r in chunk {
+                    let _ = r.respond.send(Err(anyhow!("{msg}")));
+                }
+            }
+        }
+    }
+}

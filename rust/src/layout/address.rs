@@ -1,0 +1,187 @@
+//! Address maps: logical `(row, col)` ↔ linear element offset, for both
+//! arrangements. These maps are the single source of truth used by the
+//! access-stream generators in `workload` and by the host-side pack/unpack
+//! in `runtime::tensor`.
+
+
+/// Which linearization a matrix uses in (simulated or host) memory.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Layout {
+    /// Row-Wise Memory Arrangement — conventional row-major.
+    Rwma,
+    /// Block-Wise Memory Arrangement — contiguous `b×b` blocks, block-grid
+    /// row-major. `b` is carried by the matrix descriptor, not the enum,
+    /// because one system run uses a single accelerator kernel size.
+    Bwma,
+}
+
+impl Layout {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Layout::Rwma => "RWMA",
+            Layout::Bwma => "BWMA",
+        }
+    }
+}
+
+impl std::fmt::Display for Layout {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Shape + placement of one matrix (or a column-slice view of one) in the
+/// simulated address space.
+///
+/// `rows`, `cols`, `col0` must be multiples of `block` when
+/// `layout == Bwma` (BERT-base dimensions — 512, 768, 64, 3072 — are
+/// multiples of both 8 and 16, the paper's kernel sizes).
+///
+/// A *view* (`col0 > 0` or `pitch > cols`) addresses a column slice of a
+/// wider backing matrix — e.g. attention head `i` writing its output
+/// directly into columns `[i·d_head, (i+1)·d_head)` of the concatenated
+/// projection input, so no copy-concat phase exists (paper §3.2: all
+/// intermediates stay block-wise).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MatrixDesc {
+    /// Base byte address of the *backing* matrix.
+    pub base: u64,
+    pub rows: usize,
+    pub cols: usize,
+    /// Logical columns of the backing storage (== `cols` for plain).
+    pub pitch: usize,
+    /// First logical column of this view in the backing matrix.
+    pub col0: usize,
+    /// Element size in bytes (1 for the paper's int8 quantized model).
+    pub elem: usize,
+    /// Accelerator kernel size `b` (block edge). Meaningful for both
+    /// layouts: tiling granularity is always `b`, only the *storage* order
+    /// differs.
+    pub block: usize,
+    pub layout: Layout,
+}
+
+impl MatrixDesc {
+    pub fn new(base: u64, rows: usize, cols: usize, elem: usize, block: usize, layout: Layout) -> Self {
+        let d = Self { base, rows, cols, pitch: cols, col0: 0, elem, block, layout };
+        d.validate();
+        d
+    }
+
+    /// A column-slice view `[.., col0..col0+cols)` of this (plain) matrix.
+    pub fn col_view(&self, col0: usize, cols: usize) -> Self {
+        assert!(self.is_plain(), "views of views unsupported");
+        assert!(col0 + cols <= self.cols);
+        let v = Self { col0, cols, ..*self };
+        v.validate();
+        v
+    }
+
+    pub fn is_plain(&self) -> bool {
+        self.col0 == 0 && self.pitch == self.cols
+    }
+
+    pub fn validate(&self) {
+        assert!(self.rows > 0 && self.cols > 0, "degenerate matrix");
+        assert!(self.elem > 0 && self.block > 0);
+        assert!(self.col0 + self.cols <= self.pitch, "view exceeds backing");
+        assert!(
+            self.rows % self.block == 0
+                && self.cols % self.block == 0
+                && self.col0 % self.block == 0
+                && self.pitch % self.block == 0,
+            "matrix {}x{} (col0 {}, pitch {}) not divisible by block {}",
+            self.rows,
+            self.cols,
+            self.col0,
+            self.pitch,
+            self.block
+        );
+    }
+
+    /// Backing-storage size in bytes (identical for both layouts — BWMA is
+    /// a permutation, not padding).
+    pub fn bytes(&self) -> u64 {
+        (self.rows * self.pitch * self.elem) as u64
+    }
+
+    /// Number of `b×b` blocks along the row dimension.
+    pub fn block_rows(&self) -> usize {
+        self.rows / self.block
+    }
+
+    /// Number of `b×b` blocks along the column dimension (of the view).
+    pub fn block_cols(&self) -> usize {
+        self.cols / self.block
+    }
+
+    /// One past the last byte of the backing matrix.
+    pub fn end(&self) -> u64 {
+        self.base + self.bytes()
+    }
+
+    /// A descriptor for the same logical matrix under the other layout
+    /// (used by the conversion-overhead experiment).
+    pub fn with_layout(&self, layout: Layout) -> Self {
+        Self { layout, ..*self }
+    }
+
+    /// A descriptor for the transposed logical matrix at a new base.
+    pub fn transposed_at(&self, base: u64) -> Self {
+        assert!(self.is_plain(), "transpose of a view unsupported");
+        Self { base, rows: self.cols, cols: self.rows, pitch: self.rows, ..*self }
+    }
+}
+
+/// Logical-to-linear address mapping (paper Fig. 4).
+pub trait AddressMap {
+    /// Linear *element* index (within the backing matrix) of logical
+    /// `(row, col)` of the view.
+    fn elem_index(&self, row: usize, col: usize) -> usize;
+
+    /// Byte address of logical `(row, col)`.
+    fn addr(&self, row: usize, col: usize) -> u64;
+
+    /// Inverse map: logical `(row, col)` of linear element index `idx`.
+    /// Plain matrices only.
+    fn elem_coords(&self, idx: usize) -> (usize, usize);
+}
+
+impl AddressMap for MatrixDesc {
+    #[inline]
+    fn elem_index(&self, row: usize, col: usize) -> usize {
+        debug_assert!(row < self.rows && col < self.cols);
+        let gc = self.col0 + col;
+        match self.layout {
+            Layout::Rwma => row * self.pitch + gc,
+            Layout::Bwma => {
+                let b = self.block;
+                let (br, bc) = (row / b, gc / b);
+                let (ir, ic) = (row % b, gc % b);
+                ((br * (self.pitch / b) + bc) * b + ir) * b + ic
+            }
+        }
+    }
+
+    #[inline]
+    fn addr(&self, row: usize, col: usize) -> u64 {
+        self.base + (self.elem_index(row, col) * self.elem) as u64
+    }
+
+    #[inline]
+    fn elem_coords(&self, idx: usize) -> (usize, usize) {
+        debug_assert!(self.is_plain(), "elem_coords on a view");
+        debug_assert!(idx < self.rows * self.cols);
+        match self.layout {
+            Layout::Rwma => (idx / self.cols, idx % self.cols),
+            Layout::Bwma => {
+                let b = self.block;
+                let ic = idx % b;
+                let ir = (idx / b) % b;
+                let blk = idx / (b * b);
+                let (br, bc) = (blk / self.block_cols(), blk % self.block_cols());
+                (br * b + ir, bc * b + ic)
+            }
+        }
+    }
+}

@@ -1,0 +1,28 @@
+//! Memory data arrangements (paper §3.1).
+//!
+//! A two-dimensional matrix must be linearized to live in (one-dimensional)
+//! memory. The paper contrasts two arrangements:
+//!
+//! * **RWMA** — Row-Wise Memory Arrangement: the conventional row-major
+//!   order. Element `(r, c)` of an `R×C` matrix lands at linear offset
+//!   `r*C + c`.
+//! * **BWMA** — Block-Wise Memory Arrangement: the matrix is partitioned
+//!   into `b×b` blocks, `b` being the *accelerator kernel size* (rows of a
+//!   systolic array / lanes of a SIMD unit). Blocks are stored one after
+//!   another (block-grid row-major), each block row-major internally.
+//!   A whole accelerator tile is therefore one contiguous `b*b`-element
+//!   burst in memory.
+//!
+//! Everything downstream (trace generation, the cache simulator, the Pallas
+//! kernels, the PJRT host marshalling) is parameterized over [`Layout`].
+
+mod address;
+mod convert;
+mod tile;
+
+pub use address::{AddressMap, Layout, MatrixDesc};
+pub use convert::{bwma_to_rwma, rwma_to_bwma, conversion_access_count, ConvertStats};
+pub use tile::{tile_spans, TileIter, TileRef, TileWalk};
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,142 @@
+use super::*;
+use crate::layout::address::{AddressMap, Layout, MatrixDesc};
+use crate::layout::tile::{tile_spans, TileRef};
+
+fn desc(layout: Layout) -> MatrixDesc {
+    MatrixDesc::new(0x1000, 8, 8, 1, 4, layout)
+}
+
+#[test]
+fn rwma_matches_row_major() {
+    let m = desc(Layout::Rwma);
+    assert_eq!(m.elem_index(0, 0), 0);
+    assert_eq!(m.elem_index(0, 7), 7);
+    assert_eq!(m.elem_index(1, 0), 8);
+    assert_eq!(m.elem_index(7, 7), 63);
+    assert_eq!(m.addr(1, 0), 0x1000 + 8);
+}
+
+#[test]
+fn bwma_blocks_are_contiguous() {
+    // Fig. 4d: 8x8 matrix, 4x4 blocks — block (0,0) occupies indices 0..16,
+    // block (0,1) indices 16..32, block (1,0) indices 32..48, etc.
+    let m = desc(Layout::Bwma);
+    assert_eq!(m.elem_index(0, 0), 0);
+    assert_eq!(m.elem_index(0, 3), 3);
+    assert_eq!(m.elem_index(1, 0), 4); // second row of block (0,0)
+    assert_eq!(m.elem_index(3, 3), 15); // last elem of block (0,0)
+    assert_eq!(m.elem_index(0, 4), 16); // first elem of block (0,1)
+    assert_eq!(m.elem_index(4, 0), 32); // first elem of block (1,0)
+    assert_eq!(m.elem_index(7, 7), 63);
+}
+
+#[test]
+fn coords_roundtrip_both_layouts() {
+    for layout in [Layout::Rwma, Layout::Bwma] {
+        let m = MatrixDesc::new(0, 16, 24, 2, 8, layout);
+        for idx in 0..16 * 24 {
+            let (r, c) = m.elem_coords(idx);
+            assert_eq!(m.elem_index(r, c), idx, "{layout} idx {idx}");
+        }
+    }
+}
+
+#[test]
+fn layouts_are_permutations_of_each_other() {
+    // Every logical element maps to a unique linear slot in both layouts.
+    let r = MatrixDesc::new(0, 8, 12, 1, 4, Layout::Rwma);
+    let b = r.with_layout(Layout::Bwma);
+    let mut seen = vec![false; 8 * 12];
+    for row in 0..8 {
+        for col in 0..12 {
+            let i = b.elem_index(row, col);
+            assert!(!seen[i]);
+            seen[i] = true;
+            // Same total footprint.
+            assert!(i < 8 * 12);
+            let _ = r.elem_index(row, col);
+        }
+    }
+    assert!(seen.iter().all(|&s| s));
+}
+
+#[test]
+fn convert_roundtrip_identity() {
+    let (rows, cols, block) = (16usize, 32usize, 8usize);
+    let src: Vec<u32> = (0..(rows * cols) as u32).map(|i| i * 7 + 3).collect();
+    let blocked = rwma_to_bwma(&src, rows, cols, block);
+    assert_ne!(blocked, src, "conversion must actually permute");
+    let back = bwma_to_rwma(&blocked, rows, cols, block);
+    assert_eq!(back, src);
+}
+
+#[test]
+fn convert_matches_address_map() {
+    // rwma_to_bwma must place element (r,c) where the BWMA map says.
+    let (rows, cols, block) = (8, 8, 4);
+    let src: Vec<u16> = (0..64).collect();
+    let blocked = rwma_to_bwma(&src, rows, cols, block);
+    let m = MatrixDesc::new(0, rows, cols, 1, block, Layout::Bwma);
+    for r in 0..rows {
+        for c in 0..cols {
+            assert_eq!(blocked[m.elem_index(r, c)], src[r * cols + c]);
+        }
+    }
+}
+
+#[test]
+fn tile_spans_bwma_single_burst() {
+    let m = MatrixDesc::new(0x2000, 64, 64, 1, 16, Layout::Bwma);
+    let w = tile_spans(&m, TileRef { block_row: 1, block_col: 2 });
+    assert_eq!(w.spans.len(), 1);
+    // Block (1,2) is the (1*4+2)=6th block: offset 6*256.
+    assert_eq!(w.spans[0], (0x2000 + 6 * 256, 256));
+    assert_eq!(w.total_bytes(), 256);
+}
+
+#[test]
+fn tile_spans_rwma_one_span_per_row() {
+    let m = MatrixDesc::new(0, 64, 64, 1, 16, Layout::Rwma);
+    let w = tile_spans(&m, TileRef { block_row: 0, block_col: 1 });
+    assert_eq!(w.spans.len(), 16);
+    for (ir, &(addr, len)) in w.spans.iter().enumerate() {
+        assert_eq!(addr, (ir * 64 + 16) as u64);
+        assert_eq!(len, 16);
+    }
+    assert_eq!(w.total_bytes(), 256);
+}
+
+#[test]
+fn tile_bytes_equal_across_layouts() {
+    // The *amount* of data moved per tile is layout-invariant; only the
+    // span structure differs. This is why L1-D access counts match in
+    // Fig. 8.
+    for layout in [Layout::Rwma, Layout::Bwma] {
+        let m = MatrixDesc::new(0, 128, 256, 2, 8, layout);
+        for t in TileIter::new(&m) {
+            assert_eq!(tile_spans(&m, t).total_bytes(), (8 * 8 * 2) as u64);
+        }
+    }
+}
+
+#[test]
+fn tile_iter_covers_grid_once() {
+    let m = MatrixDesc::new(0, 32, 48, 1, 16, Layout::Bwma);
+    let tiles: Vec<_> = TileIter::new(&m).collect();
+    assert_eq!(tiles.len(), 2 * 3);
+    assert_eq!(tiles[0], TileRef { block_row: 0, block_col: 0 });
+    assert_eq!(tiles[5], TileRef { block_row: 1, block_col: 2 });
+}
+
+#[test]
+fn conversion_access_count_is_2n() {
+    let s = conversion_access_count(512, 768);
+    assert_eq!(s.loads, 512 * 768);
+    assert_eq!(s.stores, 512 * 768);
+}
+
+#[test]
+#[should_panic(expected = "not divisible")]
+fn indivisible_block_rejected() {
+    MatrixDesc::new(0, 10, 8, 1, 4, Layout::Bwma);
+}

@@ -1,0 +1,98 @@
+//! Tile enumeration for blocked GEMM (paper §2.2.2, Fig. 3).
+//!
+//! A tiled GEMM walks `b×b` tiles of its operands. `TileRef` names one tile
+//! by block coordinates; `TileWalk` produces the *byte spans* a core must
+//! touch to move that tile between memory and the accelerator — which is
+//! where RWMA and BWMA diverge:
+//!
+//! * under **BWMA** a tile is a single contiguous span of `b*b*elem` bytes;
+//! * under **RWMA** it is `b` spans of `b*elem` bytes, each a row of the
+//!   tile, strided `cols*elem` bytes apart.
+//!
+//! The simulator issues transfer-granule accesses over these spans; the
+//! span structure is also what the instruction-overhead model keys on
+//! (per-span address computation — paper §4.3's I-cache observation).
+
+use super::address::{AddressMap, Layout, MatrixDesc};
+
+/// One `b×b` tile of a matrix, by block-grid coordinates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TileRef {
+    pub block_row: usize,
+    pub block_col: usize,
+}
+
+/// Contiguous byte spans composing one tile in the matrix's arrangement.
+#[derive(Debug, Clone)]
+pub struct TileWalk {
+    /// `(start_addr, len_bytes)` spans, in the order the accelerator
+    /// consumes them (tile-row major).
+    pub spans: Vec<(u64, u32)>,
+}
+
+impl TileWalk {
+    pub fn total_bytes(&self) -> u64 {
+        self.spans.iter().map(|&(_, l)| l as u64).sum()
+    }
+}
+
+/// Compute the spans of `tile` within `m`.
+pub fn tile_spans(m: &MatrixDesc, tile: TileRef) -> TileWalk {
+    let b = m.block;
+    debug_assert!(tile.block_row < m.block_rows() && tile.block_col < m.block_cols());
+    let row0 = tile.block_row * b;
+    let col0 = tile.block_col * b;
+    match m.layout {
+        Layout::Bwma => {
+            // The whole tile is one burst.
+            let start = m.addr(row0, col0);
+            TileWalk { spans: vec![(start, (b * b * m.elem) as u32)] }
+        }
+        Layout::Rwma => {
+            // One span per tile row, strided by the full matrix pitch.
+            let spans = (0..b)
+                .map(|ir| (m.addr(row0 + ir, col0), (b * m.elem) as u32))
+                .collect();
+            TileWalk { spans }
+        }
+    }
+}
+
+impl TileRef {
+    /// Spans of this tile in matrix `m` (convenience wrapper).
+    pub fn spans(&self, m: &MatrixDesc) -> TileWalk {
+        tile_spans(m, *self)
+    }
+}
+
+/// Iterator over all tiles of a matrix in block-grid row-major order.
+pub struct TileIter {
+    block_rows: usize,
+    block_cols: usize,
+    next: usize,
+}
+
+impl TileIter {
+    pub fn new(m: &MatrixDesc) -> Self {
+        Self { block_rows: m.block_rows(), block_cols: m.block_cols(), next: 0 }
+    }
+}
+
+impl Iterator for TileIter {
+    type Item = TileRef;
+
+    fn next(&mut self) -> Option<TileRef> {
+        if self.next >= self.block_rows * self.block_cols {
+            return None;
+        }
+        let i = self.next;
+        self.next += 1;
+        Some(TileRef { block_row: i / self.block_cols, block_col: i % self.block_cols })
+    }
+}
+
+impl ExactSizeIterator for TileIter {
+    fn len(&self) -> usize {
+        self.block_rows * self.block_cols - self.next
+    }
+}

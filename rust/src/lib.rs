@@ -1,0 +1,34 @@
+//! # bwma — Accelerator-driven Data Arrangement for Transformers
+//!
+//! Full-system reproduction of *"Accelerator-driven Data Arrangement to
+//! Minimize Transformers Run-time on Multi-core Architectures"*
+//! (Amirshahi, Ansaloni, Atienza — EPFL, 2023).
+//!
+//! The paper's contribution — **BWMA**, a block-wise memory arrangement
+//! matched to the accelerator kernel size — is implemented three ways in
+//! this crate, mirroring the three layers of the repository:
+//!
+//! 1. **Timing** — an execution-driven multi-core architecture simulator
+//!    ([`mem`], [`accel`], [`workload`], [`sim`]) that replays the exact
+//!    address streams of an int8 BERT-base encoder under RWMA or BWMA and
+//!    reproduces the paper's Figures 6–8;
+//! 2. **Numerics** — AOT-compiled JAX/Pallas artifacts (built by
+//!    `python/compile/`, block-wise layouts expressed as Pallas
+//!    `BlockSpec`s) executed from Rust via PJRT ([`runtime`]);
+//! 3. **Serving** — a request router + dynamic batcher ([`coordinator`])
+//!    that runs the compiled encoder on the request path with Python
+//!    nowhere in sight.
+//!
+//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod accel;
+pub mod analysis;
+pub mod config;
+pub mod coordinator;
+pub mod layout;
+pub mod mem;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,257 @@
+//! `bwma` — the command-line launcher for the BWMA reproduction.
+//!
+//! Subcommands:
+//!   experiment <id>    regenerate a paper table/figure (fig6a, fig6b,
+//!                      fig7, fig8, convert-overhead, headline, all)
+//!   simulate <config>  run one simulation (preset name or config file)
+//!   serve              threaded batch-serving demo over PJRT artifacts
+//!   verify <tag>       run an artifact against its goldens
+//!   config <list|dump> inspect configuration presets
+//!
+//! (Arg parsing is hand-rolled: the offline crate cache has no clap.)
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use bwma::config;
+use bwma::coordinator::experiment::{run_experiment, Scale};
+use bwma::coordinator::server::{BatchRunner, WithParams};
+use bwma::coordinator::{report, Server, ServerConfig};
+use bwma::runtime::{artifacts_dir, GoldenSet, Runtime, Tensor};
+use bwma::sim::simulate;
+use bwma::util::{table, XorShift64};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn flag(args: &[String], name: &str) -> bool {
+    args.iter().any(|a| a == name)
+}
+
+fn opt<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).map(|s| s.as_str())
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    match args.first().map(|s| s.as_str()) {
+        Some("experiment") => cmd_experiment(&args[1..]),
+        Some("simulate") => cmd_simulate(&args[1..]),
+        Some("serve") => cmd_serve(&args[1..]),
+        Some("verify") => cmd_verify(&args[1..]),
+        Some("config") => cmd_config(&args[1..]),
+        Some("help") | None => {
+            print!("{HELP}");
+            Ok(())
+        }
+        Some(other) => bail!("unknown subcommand {other:?}; see `bwma help`"),
+    }
+}
+
+const HELP: &str = "\
+bwma — accelerator-driven data arrangement for transformers (full-system repro)
+
+USAGE:
+  bwma experiment <fig6a|fig6b|fig7|fig8|convert-overhead|headline|all>
+                  [--scale paper|tiny] [--markdown]
+  bwma simulate <preset|config-file> [--layers N] [--convert]
+  bwma serve [--requests N] [--max-batch B] [--tag encoder_jnp_b16]
+  bwma verify <artifact-tag|all>
+  bwma config <list|dump <preset>>
+";
+
+fn cmd_experiment(args: &[String]) -> Result<()> {
+    let id = args.first().context("experiment id required; see `bwma help`")?;
+    let scale = Scale::parse(opt(args, "--scale").unwrap_or("paper"))?;
+    let t0 = Instant::now();
+    let outs = run_experiment(id, scale)?;
+    if flag(args, "--markdown") {
+        print!("{}", report::markdown(&outs));
+    } else {
+        for o in &outs {
+            o.print();
+        }
+    }
+    eprintln!("[{} in {:?}]", id, t0.elapsed());
+    Ok(())
+}
+
+fn cmd_simulate(args: &[String]) -> Result<()> {
+    let name = args.first().context("config name required; see `bwma config list`")?;
+    let mut cfg = config::load(name)?;
+    if let Some(l) = opt(args, "--layers") {
+        cfg.sim_layers = l.parse().context("--layers")?;
+    }
+    if flag(args, "--convert") {
+        cfg.convert_boundaries = true;
+    }
+    let t0 = Instant::now();
+    let res = simulate(&cfg);
+    let wall = t0.elapsed();
+
+    println!("config  : {}", cfg.label());
+    println!(
+        "cycles  : {} ({:.2} ms @ {} GHz)",
+        table::cycles(res.total_cycles),
+        res.seconds() * 1e3,
+        cfg.freq_ghz
+    );
+    println!("instr   : {}", table::count(res.instructions));
+    println!("accel   : {} busy cycles", table::count(res.accel_busy_cycles));
+    println!("non-GEMM: {:.1}%", 100.0 * res.non_gemm_share());
+    let rows: Vec<Vec<String>> = res
+        .phases
+        .iter()
+        .map(|p| {
+            vec![
+                p.name.clone(),
+                p.class.label().to_string(),
+                table::cycles(p.cycles),
+                format!("{:.1}%", 100.0 * p.cycles as f64 / res.total_cycles as f64),
+            ]
+        })
+        .collect();
+    print!("{}", table::render(&["phase", "class", "cycles", "share"], &rows));
+    let l1d = res.mem.l1d_total();
+    println!(
+        "L1-D: {} accesses, {} misses ({:.2}%) | L2: {} accesses | DRAM: {} fetches",
+        table::count(l1d.accesses),
+        table::count(l1d.misses),
+        100.0 * l1d.miss_rate(),
+        table::count(res.mem.l2.accesses),
+        table::count(res.mem.dram.accesses),
+    );
+    eprintln!(
+        "[simulated {} data accesses in {wall:?} — {:.1} M access/s]",
+        table::count(res.data_accesses),
+        res.data_accesses as f64 / wall.as_secs_f64() / 1e6
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let n_requests: usize = opt(args, "--requests").unwrap_or("64").parse()?;
+    let max_batch: usize = opt(args, "--max-batch").unwrap_or("8").parse()?;
+    let tag = opt(args, "--tag").unwrap_or("encoder_jnp_b16").to_string();
+
+    let dir = artifacts_dir()?;
+    let golden = GoldenSet::load(&dir, &tag)?;
+    let in_shape = golden.tensors["in_x"].shape.clone();
+    let out_shape = golden.expected().shape.clone();
+    // Model parameters travel with the model: the executor closes over
+    // them (WithParams) so requests carry activations only.
+    let params: Vec<Tensor> = golden
+        .input_order
+        .iter()
+        .filter(|n| *n != "in_x")
+        .map(|n| golden.tensors[n].clone())
+        .collect();
+
+    let dir2 = dir.clone();
+    let tag2 = tag.clone();
+    let out_shape2 = out_shape.clone();
+    let server = Server::start(ServerConfig { max_batch, ..Default::default() }, move || {
+        let rt = Runtime::cpu()?;
+        let mut variants: BTreeMap<usize, Box<dyn BatchRunner>> = BTreeMap::new();
+        for bsz in [1usize, 2, 4, 8] {
+            let path = dir2.join(format!("{tag2}_batch{bsz}.hlo.txt"));
+            if path.exists() {
+                let exe = rt.load_hlo(&path)?;
+                variants.insert(bsz, Box::new(WithParams { exe, params: params.clone() }));
+            }
+        }
+        anyhow::ensure!(!variants.is_empty(), "no batch artifacts for {tag2}; run `make artifacts`");
+        Ok((variants, out_shape2))
+    })?;
+
+    println!("serving {n_requests} requests (max batch {max_batch}, artifact {tag})…");
+    let mut rng = XorShift64::new(0xC0FFEE);
+    let mut pending = Vec::new();
+    let n_in: usize = in_shape.iter().product();
+    let t0 = Instant::now();
+    for _ in 0..n_requests {
+        let mut data = vec![0.0f32; n_in];
+        rng.fill_f32(&mut data);
+        pending.push(server.submit(Tensor::new(in_shape.clone(), data)));
+    }
+    let mut latencies = Vec::new();
+    for rx in pending {
+        let resp = rx.recv().context("response channel")??;
+        latencies.push(resp.queue_time + resp.exec_time);
+    }
+    let wall = t0.elapsed();
+    let metrics = server.shutdown()?;
+    let stats = bwma::coordinator::LatencyStats::from_samples(latencies);
+    println!(
+        "done: {} requests in {wall:?} → {:.1} req/s | p50 {:?} p99 {:?} | {} batches, mean size {:.2}",
+        metrics.requests,
+        n_requests as f64 / wall.as_secs_f64(),
+        stats.p50(),
+        stats.p99(),
+        metrics.batches,
+        metrics.mean_batch_size(),
+    );
+    Ok(())
+}
+
+fn cmd_verify(args: &[String]) -> Result<()> {
+    let tag = args.first().context("artifact tag required (or `all`)")?;
+    let dir = artifacts_dir()?;
+    let tags: Vec<String> = if tag == "all" {
+        let mut v = Vec::new();
+        for e in std::fs::read_dir(&dir)? {
+            let p = e?.path();
+            if let Some(name) = p.file_name().and_then(|n| n.to_str()) {
+                if let Some(t) = name.strip_suffix(".hlo.txt") {
+                    if dir.join("goldens").join(t).is_dir() {
+                        v.push(t.to_string());
+                    }
+                }
+            }
+        }
+        v.sort();
+        v
+    } else {
+        vec![tag.clone()]
+    };
+    let rt = Runtime::cpu()?;
+    println!("platform: {} ({} devices)", rt.platform(), rt.device_count());
+    for t in &tags {
+        let golden = GoldenSet::load(&dir, t)?;
+        let exe = rt.load_hlo(&dir.join(format!("{t}.hlo.txt")))?;
+        let t0 = Instant::now();
+        let out = exe.run1(&golden.inputs(), golden.expected().shape.clone())?;
+        let dt = t0.elapsed();
+        let diff = out.max_abs_diff(golden.expected());
+        let ok = out.allclose(golden.expected(), 1e-4, 1e-4);
+        println!("{t:<24} max|Δ|={diff:.3e}  exec={dt:?}  {}", if ok { "OK" } else { "FAIL" });
+        if !ok {
+            bail!("artifact {t} does not reproduce its golden");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_config(args: &[String]) -> Result<()> {
+    match args.first().map(|s| s.as_str()) {
+        Some("list") => {
+            for n in config::preset_names() {
+                println!("{n}");
+            }
+            Ok(())
+        }
+        Some("dump") => {
+            let name = args.get(1).context("preset name required")?;
+            let cfg = config::load(name)?;
+            print!("{}", config::dump(&cfg));
+            Ok(())
+        }
+        _ => bail!("usage: bwma config <list|dump <preset>>"),
+    }
+}

@@ -1,0 +1,38 @@
+//! Memory-hierarchy timing model (paper §4.1 testbed).
+//!
+//! The paper's testbed is a gem5-X full-system simulation: per-core 32 KiB
+//! L1-I and 32 KiB L1-D, a 1 MiB L2 shared among cores, and 4 GiB of
+//! off-chip DRAM; L1 hits cost 2 cycles and L2 hits 20 (paper §4.3). This
+//! module reimplements that hierarchy as an execution-driven model:
+//!
+//! * [`cache`]    — set-associative cache with pluggable replacement;
+//! * [`replacement`] — LRU and tree-PLRU policies;
+//! * [`prefetch`] — per-core reference (stride/stream) prefetcher, the
+//!   component BWMA's contiguous bursts exploit;
+//! * [`dram`]    — bank + row-buffer main-memory model with a shared
+//!   bandwidth channel;
+//! * [`system`]  — the composed `MemorySystem`: N cores' L1s over one
+//!   shared, banked L2 over DRAM, returning a latency per access and
+//!   accumulating the per-level statistics Fig. 8 plots.
+
+pub mod cache;
+pub mod dram;
+pub mod prefetch;
+pub mod replacement;
+pub mod stats;
+pub mod system;
+
+pub use cache::{Cache, CacheConfig};
+pub use dram::{Dram, DramConfig};
+pub use prefetch::{Prefetcher, PrefetcherConfig};
+pub use stats::{AccessKind, LevelStats, MemStats};
+pub use system::{MemoryConfig, MemorySystem};
+
+/// Cache-line size in bytes, fixed across the hierarchy (gem5 default).
+pub const LINE_BYTES: u64 = 64;
+
+/// Line-align an address.
+#[inline]
+pub fn line_of(addr: u64) -> u64 {
+    addr >> LINE_BYTES.trailing_zeros()
+}

@@ -1,0 +1,177 @@
+//! Replacement policies for the set-associative caches.
+//!
+//! Two policies are provided: true LRU (what gem5's classic caches default
+//! to and what the paper's testbed uses) and tree-PLRU (cheaper, used by
+//! the ablation bench to show the BWMA advantage is policy-insensitive).
+
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    Lru,
+    TreePlru,
+}
+
+/// Per-set replacement state. Ways are dense indices `0..ways`.
+#[derive(Debug, Clone)]
+pub enum SetState {
+    /// Timestamp LRU: `stamp[w]` is the (set-local) time of way `w`'s
+    /// last touch; the victim is the minimum. Cheaper on the simulator's
+    /// hottest path than an ordered list (no element shifting — the
+    /// ordered-Vec variant showed up as 17% memmove in perf).
+    Lru { stamp: Vec<u32>, clock: u32 },
+    /// Classic binary-tree PLRU bits; `ways` must be a power of two.
+    TreePlru { bits: u32, ways: u8 },
+}
+
+impl SetState {
+    pub fn new(policy: Policy, ways: usize) -> Self {
+        match policy {
+            // Initial stamps 0..ways make cold fills prefer way order
+            // and keep untouched ways colder than any touched one.
+            Policy::Lru => SetState::Lru {
+                stamp: (0..ways as u32).collect(),
+                clock: ways as u32,
+            },
+            Policy::TreePlru => {
+                assert!(ways.is_power_of_two(), "tree-PLRU needs power-of-two ways");
+                SetState::TreePlru { bits: 0, ways: ways as u8 }
+            }
+        }
+    }
+
+    /// Record a touch (hit or fill) of `way`.
+    #[inline]
+    pub fn touch(&mut self, way: usize) {
+        match self {
+            SetState::Lru { stamp, clock } => {
+                *clock = clock.wrapping_add(1);
+                // Wrap handling: on overflow, renormalize stamps (rare).
+                if *clock == u32::MAX {
+                    let mut idx: Vec<usize> = (0..stamp.len()).collect();
+                    idx.sort_by_key(|&i| stamp[i]);
+                    for (rank, &i) in idx.iter().enumerate() {
+                        stamp[i] = rank as u32;
+                    }
+                    *clock = stamp.len() as u32;
+                }
+                stamp[way] = *clock;
+            }
+            SetState::TreePlru { bits, ways } => {
+                // Walk root→leaf toward `way`, pointing every node away
+                // from the path taken.
+                let mut node = 0usize; // root
+                let mut lo = 0usize;
+                let mut hi = *ways as usize;
+                while hi - lo > 1 {
+                    let mid = (lo + hi) / 2;
+                    if way < mid {
+                        *bits |= 1 << node; // point right (away)
+                        hi = mid;
+                        node = 2 * node + 1;
+                    } else {
+                        *bits &= !(1 << node); // point left (away)
+                        lo = mid;
+                        node = 2 * node + 2;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Pick the victim way for a fill (does not update state; caller calls
+    /// `touch` after installing).
+    #[inline]
+    pub fn victim(&self) -> usize {
+        match self {
+            SetState::Lru { stamp, .. } => {
+                let mut best = 0;
+                for w in 1..stamp.len() {
+                    if stamp[w] < stamp[best] {
+                        best = w;
+                    }
+                }
+                best
+            }
+            SetState::TreePlru { bits, ways } => {
+                let mut node = 0usize;
+                let mut lo = 0usize;
+                let mut hi = *ways as usize;
+                while hi - lo > 1 {
+                    let mid = (lo + hi) / 2;
+                    if bits & (1 << node) != 0 {
+                        lo = mid; // bit set → go right
+                        node = 2 * node + 2;
+                    } else {
+                        hi = mid; // go left
+                        node = 2 * node + 1;
+                    }
+                }
+                lo
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lru_victim_is_least_recent() {
+        let mut s = SetState::new(Policy::Lru, 4);
+        // Touch 0,1,2,3 → LRU is 0.
+        for w in 0..4 {
+            s.touch(w);
+        }
+        assert_eq!(s.victim(), 0);
+        s.touch(0);
+        assert_eq!(s.victim(), 1);
+    }
+
+    #[test]
+    fn lru_stack_property() {
+        // Victim order after a touch sequence follows recency exactly:
+        // repeatedly evict-and-touch must walk ways from least- to
+        // most-recently used.
+        let mut s = SetState::new(Policy::Lru, 8);
+        for w in [3usize, 1, 4, 1, 5, 2, 6, 5, 3] {
+            s.touch(w);
+        }
+        // Recency (LRU→MRU) of touched ways: 4, 1, 2, 6, 5, 3; untouched
+        // 0 and 7 are colder than all touched ways.
+        let mut evicted = Vec::new();
+        for _ in 0..8 {
+            let v = s.victim();
+            evicted.push(v);
+            s.touch(v); // make it MRU so the next victim is the next-coldest
+        }
+        assert_eq!(evicted, vec![0, 7, 4, 1, 2, 6, 5, 3]);
+    }
+
+    #[test]
+    fn plru_cycles_through_all_ways() {
+        // Filling an empty set repeatedly must victimize every way before
+        // repeating any (tree-PLRU fairness on a fill-only stream).
+        let mut s = SetState::new(Policy::TreePlru, 8);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..8 {
+            let v = s.victim();
+            assert!(seen.insert(v), "way {v} victimized twice early");
+            s.touch(v);
+        }
+        assert_eq!(seen.len(), 8);
+    }
+
+    #[test]
+    fn plru_protects_mru() {
+        let mut s = SetState::new(Policy::TreePlru, 4);
+        for w in 0..4 {
+            s.touch(w);
+        }
+        let hot = 2;
+        for _ in 0..16 {
+            s.touch(hot);
+            assert_ne!(s.victim(), hot, "MRU way must not be the victim");
+        }
+    }
+}

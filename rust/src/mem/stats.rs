@@ -1,0 +1,110 @@
+//! Per-level access statistics — the raw material of paper Fig. 8.
+
+
+/// What kind of reference an access is (Fig. 8 splits I- and D-side).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AccessKind {
+    InstrFetch,
+    Load,
+    Store,
+}
+
+impl AccessKind {
+    pub fn is_write(&self) -> bool {
+        matches!(self, AccessKind::Store)
+    }
+}
+
+/// Counters for one cache level (or DRAM, where `accesses` = line fetches).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LevelStats {
+    pub accesses: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub writebacks: u64,
+    pub prefetch_installed: u64,
+}
+
+impl LevelStats {
+    pub fn miss_rate(&self) -> f64 {
+        if self.accesses == 0 {
+            0.0
+        } else {
+            self.misses as f64 / self.accesses as f64
+        }
+    }
+
+    pub fn add(&mut self, other: &LevelStats) {
+        self.accesses += other.accesses;
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.writebacks += other.writebacks;
+        self.prefetch_installed += other.prefetch_installed;
+    }
+}
+
+/// Whole-hierarchy statistics, per core where applicable.
+#[derive(Debug, Clone, Default)]
+pub struct MemStats {
+    /// Per-core L1 instruction caches.
+    pub l1i: Vec<LevelStats>,
+    /// Per-core L1 data caches.
+    pub l1d: Vec<LevelStats>,
+    /// Shared L2.
+    pub l2: LevelStats,
+    /// Off-chip accesses (line fetches reaching DRAM).
+    pub dram: LevelStats,
+    pub dram_row_hits: u64,
+    pub dram_row_misses: u64,
+    pub prefetches_issued: u64,
+}
+
+impl MemStats {
+    pub fn new(cores: usize) -> Self {
+        Self {
+            l1i: vec![LevelStats::default(); cores],
+            l1d: vec![LevelStats::default(); cores],
+            ..Default::default()
+        }
+    }
+
+    /// Sum of per-core L1-D stats (Fig. 8 plots system totals).
+    pub fn l1d_total(&self) -> LevelStats {
+        let mut t = LevelStats::default();
+        for s in &self.l1d {
+            t.add(s);
+        }
+        t
+    }
+
+    pub fn l1i_total(&self) -> LevelStats {
+        let mut t = LevelStats::default();
+        for s in &self.l1i {
+            t.add(s);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn miss_rate_handles_zero() {
+        assert_eq!(LevelStats::default().miss_rate(), 0.0);
+    }
+
+    #[test]
+    fn totals_sum_cores() {
+        let mut m = MemStats::new(2);
+        m.l1d[0].accesses = 10;
+        m.l1d[0].misses = 2;
+        m.l1d[1].accesses = 5;
+        m.l1d[1].misses = 1;
+        let t = m.l1d_total();
+        assert_eq!(t.accesses, 15);
+        assert_eq!(t.misses, 3);
+        assert!((t.miss_rate() - 0.2).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,106 @@
+//! Artifact + golden discovery: `artifacts/*.hlo.txt` and
+//! `artifacts/goldens/<tag>/{manifest.txt, *.bin}` as written by
+//! `python/compile/aot.py`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::tensor::Tensor;
+
+/// Locate the artifacts directory: `$BWMA_ARTIFACTS`, else `./artifacts`
+/// relative to the workspace root (walking up from cwd).
+pub fn artifacts_dir() -> Result<PathBuf> {
+    if let Ok(p) = std::env::var("BWMA_ARTIFACTS") {
+        return Ok(PathBuf::from(p));
+    }
+    let mut dir = std::env::current_dir()?;
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.is_dir() {
+            return Ok(cand);
+        }
+        if !dir.pop() {
+            bail!("no artifacts/ directory found — run `make artifacts` first");
+        }
+    }
+}
+
+/// The goldens of one artifact: named tensors + the manifest order.
+#[derive(Debug, Clone)]
+pub struct GoldenSet {
+    pub tag: String,
+    pub tensors: BTreeMap<String, Tensor>,
+    /// Input names in artifact-parameter order (manifest order, `in_*`).
+    pub input_order: Vec<String>,
+}
+
+impl GoldenSet {
+    pub fn load(artifacts: &Path, tag: &str) -> Result<Self> {
+        let dir = artifacts.join("goldens").join(tag);
+        let manifest = std::fs::read_to_string(dir.join("manifest.txt"))
+            .with_context(|| format!("goldens manifest for {tag:?}"))?;
+        let mut tensors = BTreeMap::new();
+        let mut input_order = Vec::new();
+        for line in manifest.lines() {
+            let mut it = line.split_whitespace();
+            let name = it.next().context("manifest name")?.to_string();
+            let dtype = it.next().context("manifest dtype")?;
+            if dtype != "f32" {
+                bail!("golden {name}: unsupported dtype {dtype}");
+            }
+            let shape: Vec<usize> = it.map(|d| d.parse().context("manifest dim")).collect::<Result<_>>()?;
+            let t = Tensor::from_bin(&dir.join(format!("{name}.bin")), shape)?;
+            if name.starts_with("in_") {
+                input_order.push(name.clone());
+            }
+            tensors.insert(name, t);
+        }
+        if !tensors.contains_key("out") {
+            bail!("goldens for {tag:?} missing `out`");
+        }
+        Ok(Self { tag: tag.to_string(), tensors, input_order })
+    }
+
+    /// Inputs in artifact-parameter order.
+    pub fn inputs(&self) -> Vec<Tensor> {
+        self.input_order.iter().map(|n| self.tensors[n].clone()).collect()
+    }
+
+    pub fn expected(&self) -> &Tensor {
+        &self.tensors["out"]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn golden_set_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("bwma-goldens-{}", std::process::id()));
+        let gd = dir.join("goldens").join("toy");
+        std::fs::create_dir_all(&gd).unwrap();
+        let a = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let out = Tensor::new(vec![2], vec![5.0, 6.0]);
+        a.write_bin(&gd.join("in_a.bin")).unwrap();
+        out.write_bin(&gd.join("out.bin")).unwrap();
+        std::fs::write(gd.join("manifest.txt"), "in_a f32 2 2\nout f32 2\n").unwrap();
+        let g = GoldenSet::load(&dir, "toy").unwrap();
+        assert_eq!(g.inputs(), vec![a]);
+        assert_eq!(g.expected(), &out);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_out_rejected() {
+        let dir = std::env::temp_dir().join(format!("bwma-goldens2-{}", std::process::id()));
+        let gd = dir.join("goldens").join("toy");
+        std::fs::create_dir_all(&gd).unwrap();
+        Tensor::new(vec![1], vec![1.0]).write_bin(&gd.join("in_a.bin")).unwrap();
+        std::fs::write(gd.join("manifest.txt"), "in_a f32 1\n").unwrap();
+        assert!(GoldenSet::load(&dir, "toy").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

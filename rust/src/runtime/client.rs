@@ -1,0 +1,78 @@
+//! PJRT client wrapper: compile HLO-text artifacts once, execute many.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::tensor::Tensor;
+
+/// One PJRT client per process (CPU plugin). Cheap to clone handles out
+/// of; executables keep the client alive through `xla`'s internal Rc.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Load + compile an HLO-text artifact produced by `make artifacts`.
+    pub fn load_hlo(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().context("non-utf8 path")?)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path:?}"))?;
+        Ok(Executable { exe, name: path.file_stem().unwrap_or_default().to_string_lossy().into_owned() })
+    }
+}
+
+/// A compiled model variant, executable from the serving hot path.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with f32 tensors; returns the tuple elements as tensors
+    /// shaped per `out_shapes` (jax lowers with `return_tuple=True`, so
+    /// outputs always arrive as one tuple literal).
+    pub fn run(&self, inputs: &[Tensor], out_shapes: &[Vec<usize>]) -> Result<Vec<Tensor>> {
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let parts = result.to_tuple().context("decomposing result tuple")?;
+        anyhow::ensure!(
+            parts.len() == out_shapes.len(),
+            "artifact {} returned {} outputs, caller expected {}",
+            self.name,
+            parts.len(),
+            out_shapes.len()
+        );
+        parts
+            .iter()
+            .zip(out_shapes)
+            .map(|(lit, shape)| Tensor::from_literal(lit, shape.clone()))
+            .collect()
+    }
+
+    /// Single-output convenience wrapper.
+    pub fn run1(&self, inputs: &[Tensor], out_shape: Vec<usize>) -> Result<Tensor> {
+        let mut out = self.run(inputs, &[out_shape])?;
+        Ok(out.pop().expect("one output"))
+    }
+}

@@ -1,0 +1,20 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them on
+//! the request path — Python is build-time only.
+//!
+//! Flow (see /opt/xla-example/load_hlo for the reference wiring):
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `client.compile` → `execute`.
+//!
+//! HLO *text* is the interchange format: the published xla crate links
+//! xla_extension 0.5.1, which rejects the 64-bit instruction ids in
+//! jax ≥ 0.5's serialized protos; the text parser reassigns ids.
+
+mod artifacts;
+mod client;
+pub mod quant;
+mod tensor;
+
+pub use artifacts::{artifacts_dir, GoldenSet};
+pub use client::{Executable, Runtime};
+pub use quant::{qgemm, QTensor};
+pub use tensor::Tensor;

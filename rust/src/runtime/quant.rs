@@ -1,0 +1,167 @@
+//! Symmetric int8 quantization — the numeric format of the paper's
+//! accelerator (TiC-SAT is an 8-bit engine; our PJRT artifacts compute in
+//! f32). This module provides the host-side bridge: per-tensor symmetric
+//! scales, quantize/dequantize, and a quantized-GEMM reference used to
+//! bound the accuracy cost of running the paper's format.
+
+use anyhow::{bail, Result};
+
+use super::tensor::Tensor;
+
+/// A quantized tensor: int8 payload + per-tensor scale (symmetric,
+/// zero-point 0 — the accelerator-friendly choice).
+#[derive(Debug, Clone, PartialEq)]
+pub struct QTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<i8>,
+    pub scale: f32,
+}
+
+impl QTensor {
+    /// Quantize with the max-abs (per-tensor symmetric) calibration.
+    pub fn quantize(t: &Tensor) -> Result<Self> {
+        if t.is_empty() {
+            bail!("cannot quantize an empty tensor");
+        }
+        let amax = t.data.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        let scale = if amax == 0.0 { 1.0 } else { amax / 127.0 };
+        let data = t
+            .data
+            .iter()
+            .map(|&v| (v / scale).round().clamp(-127.0, 127.0) as i8)
+            .collect();
+        Ok(Self { shape: t.shape.clone(), data, scale })
+    }
+
+    pub fn dequantize(&self) -> Tensor {
+        Tensor::new(self.shape.clone(), self.data.iter().map(|&q| q as f32 * self.scale).collect())
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Bytes of payload (the quantity the simulator's `elem = 1` models).
+    pub fn bytes(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// Reference quantized GEMM: int8 × int8 → i32 accumulate → rescale.
+/// This is exactly the arithmetic the systolic array performs; used to
+/// measure the quantization error of the encoder's GEMMs.
+pub fn qgemm(a: &QTensor, b: &QTensor) -> Result<Tensor> {
+    let [m, k] = a.shape[..] else { bail!("qgemm wants 2-D A, got {:?}", a.shape) };
+    let [k2, n] = b.shape[..] else { bail!("qgemm wants 2-D B, got {:?}", b.shape) };
+    if k != k2 {
+        bail!("inner dims {k} vs {k2}");
+    }
+    let mut out = vec![0.0f32; m * n];
+    let rescale = a.scale * b.scale;
+    for i in 0..m {
+        for p in 0..k {
+            let av = a.data[i * k + p] as i32;
+            if av == 0 {
+                continue;
+            }
+            let row = &b.data[p * n..(p + 1) * n];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(row) {
+                *o += (av * bv as i32) as f32 * rescale;
+            }
+        }
+    }
+    Ok(Tensor::new(vec![m, n], out))
+}
+
+/// Relative Frobenius error ‖a − b‖ / ‖b‖.
+pub fn rel_error(a: &Tensor, b: &Tensor) -> f32 {
+    assert_eq!(a.shape, b.shape);
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (x, y) in a.data.iter().zip(&b.data) {
+        num += ((x - y) * (x - y)) as f64;
+        den += (y * y) as f64;
+    }
+    (num.sqrt() / den.sqrt().max(1e-30)) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShift64;
+
+    fn rand_tensor(seed: u64, shape: Vec<usize>) -> Tensor {
+        let mut rng = XorShift64::new(seed);
+        let n = shape.iter().product();
+        let mut data = vec![0.0f32; n];
+        rng.fill_f32(&mut data);
+        Tensor::new(shape, data)
+    }
+
+    #[test]
+    fn quantize_roundtrip_error_bounded() {
+        let t = rand_tensor(1, vec![64, 64]);
+        let q = QTensor::quantize(&t).unwrap();
+        let back = q.dequantize();
+        // Symmetric int8: error ≤ scale/2 per element.
+        let bound = q.scale / 2.0 + 1e-6;
+        assert!(t.max_abs_diff(&back) <= bound, "{} > {bound}", t.max_abs_diff(&back));
+    }
+
+    #[test]
+    fn values_span_the_int8_range() {
+        let t = Tensor::new(vec![3], vec![-2.0, 0.0, 2.0]);
+        let q = QTensor::quantize(&t).unwrap();
+        assert_eq!(q.data, vec![-127, 0, 127]);
+    }
+
+    #[test]
+    fn zero_tensor_is_stable() {
+        let t = Tensor::zeros(vec![4, 4]);
+        let q = QTensor::quantize(&t).unwrap();
+        assert!(q.dequantize().data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn qgemm_tracks_f32_gemm() {
+        // BERT-like magnitudes: int8 GEMM should stay within ~2% relative
+        // error of f32 — the premise of running the encoder quantized.
+        let a = rand_tensor(7, vec![32, 48]);
+        let b = rand_tensor(8, vec![48, 16]);
+        let qa = QTensor::quantize(&a).unwrap();
+        let qb = QTensor::quantize(&b).unwrap();
+        let got = qgemm(&qa, &qb).unwrap();
+        // f32 reference.
+        let mut expect = vec![0.0f32; 32 * 16];
+        for i in 0..32 {
+            for p in 0..48 {
+                for j in 0..16 {
+                    expect[i * 16 + j] += a.data[i * 48 + p] * b.data[p * 16 + j];
+                }
+            }
+        }
+        let expect = Tensor::new(vec![32, 16], expect);
+        let err = rel_error(&got, &expect);
+        assert!(err < 0.02, "int8 GEMM error too large: {err}");
+    }
+
+    #[test]
+    fn qgemm_dim_check() {
+        let a = QTensor::quantize(&rand_tensor(1, vec![4, 8])).unwrap();
+        let b = QTensor::quantize(&rand_tensor(2, vec![4, 8])).unwrap();
+        assert!(qgemm(&a, &b).is_err());
+    }
+
+    #[test]
+    fn payload_is_one_byte_per_element() {
+        // The simulator models elem = 1 byte; the quantized payload is
+        // exactly that.
+        let q = QTensor::quantize(&rand_tensor(3, vec![16, 16])).unwrap();
+        assert_eq!(q.bytes(), 256);
+    }
+}

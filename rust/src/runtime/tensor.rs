@@ -1,0 +1,166 @@
+//! Host-side f32 tensors: golden I/O, blocked pack/unpack, and conversion
+//! to/from PJRT literals.
+
+use anyhow::{bail, Context, Result};
+
+use crate::layout::{bwma_to_rwma, rwma_to_bwma};
+
+/// A dense little-endian f32 tensor with an explicit shape — the host
+/// currency between golden files, PJRT literals, and the layout packers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Self { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Self { shape, data: vec![0.0; n] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Load from a raw little-endian f32 `.bin` golden.
+    pub fn from_bin(path: &std::path::Path, shape: Vec<usize>) -> Result<Self> {
+        let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+        let n: usize = shape.iter().product();
+        if bytes.len() != n * 4 {
+            bail!("{path:?}: {} bytes but shape {shape:?} needs {}", bytes.len(), n * 4);
+        }
+        let data = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(Self { shape, data })
+    }
+
+    pub fn write_bin(&self, path: &std::path::Path) -> Result<()> {
+        let mut bytes = Vec::with_capacity(self.data.len() * 4);
+        for v in &self.data {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(path, bytes).with_context(|| format!("writing {path:?}"))
+    }
+
+    /// View a 2-D `[R, C]` tensor as its BWMA 4-D image `[R/b, C/b, b, b]`
+    /// (the data permutation `layout::rwma_to_bwma`; shapes updated).
+    pub fn pack_blocked(&self, b: usize) -> Result<Self> {
+        let [r, c] = self.shape[..] else { bail!("pack_blocked wants 2-D, got {:?}", self.shape) };
+        if r % b != 0 || c % b != 0 {
+            bail!("{r}x{c} not divisible by block {b}");
+        }
+        Ok(Self { shape: vec![r / b, c / b, b, b], data: rwma_to_bwma(&self.data, r, c, b) })
+    }
+
+    /// Inverse of [`Self::pack_blocked`].
+    pub fn unpack_blocked(&self) -> Result<Self> {
+        let [rb, cb, b, b2] = self.shape[..] else {
+            bail!("unpack_blocked wants 4-D, got {:?}", self.shape)
+        };
+        if b != b2 {
+            bail!("non-square blocks {b}x{b2}");
+        }
+        let (r, c) = (rb * b, cb * b);
+        Ok(Self { shape: vec![r, c], data: bwma_to_rwma(&self.data, r, c, b) })
+    }
+
+    /// Into a PJRT literal (C-order, matching numpy `tobytes()`).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(&self.data).reshape(&dims)?)
+    }
+
+    /// From a PJRT literal (f32 arrays only).
+    pub fn from_literal(lit: &xla::Literal, shape: Vec<usize>) -> Result<Self> {
+        let data = lit.to_vec::<f32>()?;
+        if data.len() != shape.iter().product::<usize>() {
+            bail!("literal has {} elems, shape {shape:?} wants {}", data.len(), shape.iter().product::<usize>());
+        }
+        Ok(Self { shape, data })
+    }
+
+    /// Max absolute difference against another tensor (golden checking).
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape, "shape mismatch in comparison");
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Relative allclose in the numpy sense: |a−b| ≤ atol + rtol·|b|.
+    pub fn allclose(&self, other: &Tensor, rtol: f32, atol: f32) -> bool {
+        self.shape == other.shape
+            && self
+                .data
+                .iter()
+                .zip(&other.data)
+                .all(|(a, b)| (a - b).abs() <= atol + rtol * b.abs())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let t = Tensor::new(vec![16, 24], (0..16 * 24).map(|i| i as f32).collect());
+        let p = t.pack_blocked(8).unwrap();
+        assert_eq!(p.shape, vec![2, 3, 8, 8]);
+        let back = p.unpack_blocked().unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn pack_matches_blocked_semantics() {
+        // Element (r, c) must land at ((br*Cb+bc)*b+ir)*b+ic.
+        let t = Tensor::new(vec![8, 8], (0..64).map(|i| i as f32).collect());
+        let p = t.pack_blocked(4).unwrap();
+        assert_eq!(p.data[0], 0.0); // (0,0)
+        assert_eq!(p.data[4], 8.0); // (1,0) -> second row of block 0
+        assert_eq!(p.data[16], 4.0); // (0,4) -> block (0,1)
+    }
+
+    #[test]
+    fn bin_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("bwma-tensor-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.bin");
+        let t = Tensor::new(vec![2, 3], vec![1.0, -2.5, 3.25, 0.0, 5.0, -0.125]);
+        t.write_bin(&p).unwrap();
+        let back = Tensor::from_bin(&p, vec![2, 3]).unwrap();
+        assert_eq!(back, t);
+        // Wrong shape is an error, not a silent misread.
+        assert!(Tensor::from_bin(&p, vec![7]).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn allclose_and_diff() {
+        let a = Tensor::new(vec![3], vec![1.0, 2.0, 3.0]);
+        let b = Tensor::new(vec![3], vec![1.0, 2.0, 3.001]);
+        assert!(a.allclose(&b, 1e-2, 1e-2));
+        assert!(!a.allclose(&b, 1e-6, 1e-6));
+        assert!((a.max_abs_diff(&b) - 0.001).abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn shape_checked() {
+        Tensor::new(vec![2, 2], vec![0.0; 5]);
+    }
+}

@@ -1,0 +1,166 @@
+//! The core execution engine.
+
+use std::collections::HashMap;
+
+use crate::accel::TileEngine;
+use crate::mem::{AccessKind, MemorySystem};
+use crate::workload::{InstrCost, LayerPhases, Phase, Sink, WorkItem};
+
+use super::result::{PhaseResult, SimResult};
+use super::SimConfig;
+
+/// Per-core sink binding a core id and its local clock to the shared
+/// memory system. All of `WorkItem::emit`'s activity funnels through here.
+pub struct CoreCtx<'a> {
+    pub core: usize,
+    pub now: u64,
+    mem: &'a mut MemorySystem,
+    pub instructions: u64,
+    pub accel_busy: u64,
+    pub data_accesses: u64,
+}
+
+impl<'a> Sink for CoreCtx<'a> {
+    #[inline]
+    fn instr(&mut self, pc: u64, code_bytes: u32, count: u64) {
+        self.instructions += count;
+        // 1 IPC base cost plus cold I-miss stalls.
+        self.now += count;
+        self.now += self.mem.ifetch_region(self.core, pc, code_bytes as u64, count, self.now);
+    }
+
+    #[inline]
+    fn load(&mut self, addr: u64) {
+        self.data_accesses += 1;
+        self.now += self.mem.access(self.core, AccessKind::Load, addr, self.now);
+    }
+
+    #[inline]
+    fn store(&mut self, addr: u64) {
+        self.data_accesses += 1;
+        self.now += self.mem.access(self.core, AccessKind::Store, addr, self.now);
+    }
+
+    #[inline]
+    fn compute(&mut self, cycles: u64) {
+        self.accel_busy += cycles;
+        self.now += cycles;
+    }
+}
+
+/// Engine state across phases: the memory system persists (warm caches
+/// between components, exactly like a real run), core clocks advance
+/// through barriers.
+pub struct Engine {
+    pub mem: MemorySystem,
+    tile_engine: Box<dyn TileEngine>,
+    costs: InstrCost,
+    core_time: Vec<u64>,
+    pub instructions: u64,
+    pub accel_busy: u64,
+    pub data_accesses: u64,
+}
+
+impl Engine {
+    pub fn new(cfg: &SimConfig) -> Self {
+        Self {
+            mem: MemorySystem::new(cfg.mem),
+            tile_engine: cfg.accel.build(),
+            costs: cfg.costs,
+            core_time: vec![0; cfg.cores],
+            instructions: 0,
+            accel_busy: 0,
+            data_accesses: 0,
+        }
+    }
+
+    /// Execute one barrier-delimited phase; returns its cost in cycles
+    /// (barrier-to-barrier, i.e. the slowest core).
+    pub fn run_phase(&mut self, phase: &Phase) -> u64 {
+        let cores = self.core_time.len();
+        assert_eq!(phase.items.len(), cores, "phase built for a different core count");
+        let start = *self.core_time.iter().max().unwrap();
+        // Barrier entry: all cores aligned.
+        for t in &mut self.core_time {
+            *t = start;
+        }
+
+        // Interleave cores in global-time order at item granularity.
+        let mut cursor = vec![0usize; cores];
+        loop {
+            // Pick the lagging core that still has work.
+            let mut pick: Option<usize> = None;
+            for c in 0..cores {
+                if cursor[c] < phase.items[c].len()
+                    && pick.map_or(true, |p| self.core_time[c] < self.core_time[p])
+                {
+                    pick = Some(c);
+                }
+            }
+            let Some(c) = pick else { break };
+            let item: &WorkItem = &phase.items[c][cursor[c]];
+            cursor[c] += 1;
+            let mut ctx = CoreCtx {
+                core: c,
+                now: self.core_time[c],
+                mem: &mut self.mem,
+                instructions: 0,
+                accel_busy: 0,
+                data_accesses: 0,
+            };
+            item.emit(self.tile_engine.as_ref(), &self.costs, &mut ctx);
+            self.core_time[c] = ctx.now;
+            self.instructions += ctx.instructions;
+            self.accel_busy += ctx.accel_busy;
+            self.data_accesses += ctx.data_accesses;
+        }
+
+        // Barrier exit.
+        let end = *self.core_time.iter().max().unwrap();
+        for t in &mut self.core_time {
+            *t = end;
+        }
+        end - start
+    }
+
+    pub fn now(&self) -> u64 {
+        *self.core_time.iter().max().unwrap()
+    }
+}
+
+/// Run the configured workload end to end and collect the paper's metrics.
+pub fn simulate(cfg: &SimConfig) -> SimResult {
+    let bert = crate::workload::BertConfig { layers: cfg.sim_layers, ..cfg.bert };
+    let phases = LayerPhases::full_model(&bert, cfg.block(), cfg.layout, cfg.cores, cfg.convert_boundaries);
+    simulate_phases(cfg, &phases)
+}
+
+/// Run an explicit phase list (used by the ablation benches and the
+/// conversion-overhead experiment).
+pub fn simulate_phases(cfg: &SimConfig, phases: &[Phase]) -> SimResult {
+    let mut eng = Engine::new(cfg);
+    // Aggregate by component name, preserving first-occurrence order.
+    let mut order: Vec<(String, crate::workload::PhaseClass)> = Vec::new();
+    let mut by_name: HashMap<String, u64> = HashMap::new();
+    for phase in phases {
+        let cycles = eng.run_phase(phase);
+        if !by_name.contains_key(phase.name) {
+            order.push((phase.name.to_string(), phase.class));
+        }
+        *by_name.entry(phase.name.to_string()).or_insert(0) += cycles;
+    }
+    let phases_out = order
+        .into_iter()
+        .map(|(name, class)| PhaseResult { cycles: by_name[&name], name, class })
+        .collect();
+    SimResult {
+        label: cfg.label(),
+        total_cycles: eng.now(),
+        phases: phases_out,
+        mem: eng.mem.stats.clone(),
+        instructions: eng.instructions,
+        accel_busy_cycles: eng.accel_busy,
+        data_accesses: eng.data_accesses,
+        freq_ghz: cfg.freq_ghz,
+    }
+}

@@ -1,0 +1,78 @@
+//! The execution-driven timing simulator (substrate for the paper's
+//! gem5-X full-system evaluation, §4).
+//!
+//! Cores are in-order and blocking: one cycle per instruction plus memory
+//! stall cycles plus accelerator-busy cycles. Work is organized in
+//! barrier-delimited [`Phase`]s; within a phase, the engine interleaves
+//! cores in global-time order at [`WorkItem`] granularity so shared-L2
+//! bank and DRAM channel contention is observed in (approximate)
+//! timestamp order.
+//!
+//! [`Phase`]: crate::workload::Phase
+//! [`WorkItem`]: crate::workload::WorkItem
+
+mod engine;
+mod result;
+
+pub use engine::{simulate, CoreCtx, Engine};
+pub use result::{PhaseResult, SimResult};
+
+
+use crate::accel::AccelKind;
+use crate::layout::Layout;
+use crate::mem::MemoryConfig;
+use crate::workload::{BertConfig, InstrCost};
+
+/// Everything that defines one simulated system + workload run.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub accel: AccelKind,
+    pub layout: Layout,
+    pub cores: usize,
+    pub bert: BertConfig,
+    /// Encoder layers to simulate (≤ `bert.layers`; 1 reproduces the
+    /// per-layer numbers of Figs. 6–8, `bert.layers` the end-to-end model).
+    pub sim_layers: usize,
+    /// Insert RWMA↔BWMA conversion phases at the model boundary.
+    pub convert_boundaries: bool,
+    pub mem: MemoryConfig,
+    pub costs: InstrCost,
+    /// Core clock, for reporting cycles as wall time (paper: 2.3 GHz).
+    pub freq_ghz: f64,
+}
+
+impl SimConfig {
+    /// The paper's testbed: `accel` + `layout` on `cores` cores, BERT-base.
+    pub fn paper(accel: AccelKind, layout: Layout, cores: usize) -> Self {
+        Self {
+            accel,
+            layout,
+            cores,
+            bert: BertConfig::base(),
+            sim_layers: 1,
+            convert_boundaries: false,
+            mem: MemoryConfig::paper(cores),
+            costs: InstrCost::default(),
+            freq_ghz: 2.3,
+        }
+    }
+
+    /// Small configuration for tests and criterion timing loops.
+    pub fn tiny(accel: AccelKind, layout: Layout, cores: usize) -> Self {
+        Self {
+            bert: BertConfig::tiny(),
+            ..Self::paper(accel, layout, cores)
+        }
+    }
+
+    pub fn block(&self) -> usize {
+        self.accel.kernel_size()
+    }
+
+    pub fn label(&self) -> String {
+        format!("{}-{}-{}core", self.accel.label(), self.layout, self.cores)
+    }
+}
+
+#[cfg(test)]
+mod tests;

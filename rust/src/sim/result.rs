@@ -1,0 +1,99 @@
+//! Simulation outputs: the quantities the paper's figures plot.
+
+
+use crate::mem::MemStats;
+use crate::workload::PhaseClass;
+
+/// Aggregated cycles of one component (phase name), summed across layers
+/// and barrier-to-barrier (i.e., the slowest core defines the cost).
+#[derive(Debug, Clone)]
+pub struct PhaseResult {
+    pub name: String,
+    pub class: PhaseClass,
+    pub cycles: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    pub label: String,
+    pub total_cycles: u64,
+    /// Per-component totals in first-occurrence order.
+    pub phases: Vec<PhaseResult>,
+    pub mem: MemStats,
+    /// Dynamic instruction count (all cores).
+    pub instructions: u64,
+    /// Cycles the accelerator(s) were busy (sum over cores).
+    pub accel_busy_cycles: u64,
+    /// Demand data accesses (loads + stores) issued by all cores.
+    pub data_accesses: u64,
+    pub freq_ghz: f64,
+}
+
+impl SimResult {
+    /// Wall-clock seconds at the configured core frequency.
+    pub fn seconds(&self) -> f64 {
+        self.total_cycles as f64 / (self.freq_ghz * 1e9)
+    }
+
+    /// Cycles spent in GEMM components.
+    pub fn gemm_cycles(&self) -> u64 {
+        self.phases.iter().filter(|p| p.class.is_gemm()).map(|p| p.cycles).sum()
+    }
+
+    /// Cycles spent in non-GEMM components (Fig. 7's complement).
+    pub fn non_gemm_cycles(&self) -> u64 {
+        self.phases.iter().filter(|p| !p.class.is_gemm()).map(|p| p.cycles).sum()
+    }
+
+    /// Fraction of time in non-GEMM components (paper: 4.2% RWMA → 13.5%
+    /// BWMA on SA16x16 single-core).
+    pub fn non_gemm_share(&self) -> f64 {
+        if self.total_cycles == 0 {
+            0.0
+        } else {
+            self.non_gemm_cycles() as f64 / self.total_cycles as f64
+        }
+    }
+
+    /// Speed-up of `self` relative to `baseline` (baseline/self).
+    pub fn speedup_over(&self, baseline: &SimResult) -> f64 {
+        baseline.total_cycles as f64 / self.total_cycles as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake(total: u64, gemm: u64) -> SimResult {
+        SimResult {
+            label: "t".into(),
+            total_cycles: total,
+            phases: vec![
+                PhaseResult { name: "G".into(), class: PhaseClass::Gemm, cycles: gemm },
+                PhaseResult { name: "S".into(), class: PhaseClass::Softmax, cycles: total - gemm },
+            ],
+            mem: MemStats::new(1),
+            instructions: 0,
+            accel_busy_cycles: 0,
+            data_accesses: 0,
+            freq_ghz: 2.3,
+        }
+    }
+
+    #[test]
+    fn shares_and_speedup() {
+        let a = fake(1000, 900);
+        let b = fake(400, 300);
+        assert!((a.non_gemm_share() - 0.1).abs() < 1e-12);
+        assert!((b.speedup_over(&a) - 2.5).abs() < 1e-12);
+        assert_eq!(a.gemm_cycles(), 900);
+        assert_eq!(a.non_gemm_cycles(), 100);
+    }
+
+    #[test]
+    fn seconds_at_frequency() {
+        let a = fake(2_300_000_000, 0);
+        assert!((a.seconds() - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,141 @@
+//! Integration tests of the full simulator — these assert the *shapes* of
+//! the paper's results on a reduced BERT configuration (structure
+//! identical, sizes scaled down so the suite stays fast).
+
+use crate::accel::AccelKind;
+use crate::layout::Layout;
+use crate::sim::{simulate, SimConfig};
+
+fn run(accel: AccelKind, layout: Layout, cores: usize) -> crate::sim::SimResult {
+    simulate(&SimConfig::tiny(accel, layout, cores))
+}
+
+#[test]
+fn bwma_faster_than_rwma_single_core() {
+    // The paper's headline direction (Fig. 6a): BWMA wins.
+    let r = run(AccelKind::Sa { b: 16 }, Layout::Rwma, 1);
+    let b = run(AccelKind::Sa { b: 16 }, Layout::Bwma, 1);
+    let speedup = b.speedup_over(&r);
+    assert!(speedup > 1.3, "BWMA speedup too small: {speedup:.2}");
+}
+
+#[test]
+fn l1d_accesses_layout_invariant_but_misses_not() {
+    // Fig. 8: D-cache accesses ~equal; misses an order of magnitude apart.
+    let r = run(AccelKind::Sa { b: 16 }, Layout::Rwma, 1);
+    let b = run(AccelKind::Sa { b: 16 }, Layout::Bwma, 1);
+    let (ra, ba) = (r.mem.l1d_total().accesses, b.mem.l1d_total().accesses);
+    let ratio = ra as f64 / ba as f64;
+    assert!((0.95..1.05).contains(&ratio), "L1-D access ratio {ratio}");
+    // On the reduced config the ratio is ~3x; the full BERT-base run
+    // (EXPERIMENTS.md Fig. 8) reaches the paper's order of magnitude.
+    let miss_ratio = r.mem.l1d_total().misses as f64 / b.mem.l1d_total().misses as f64;
+    assert!(miss_ratio > 2.5, "L1-D miss ratio too small: {miss_ratio:.1}");
+    // And consequently far fewer L2 accesses (Fig. 8's main bar).
+    assert!(r.mem.l2.accesses > 2 * b.mem.l2.accesses);
+}
+
+#[test]
+fn icache_accesses_higher_in_rwma_but_hit() {
+    let r = run(AccelKind::Sa { b: 16 }, Layout::Rwma, 1);
+    let b = run(AccelKind::Sa { b: 16 }, Layout::Bwma, 1);
+    assert!(r.mem.l1i_total().accesses > b.mem.l1i_total().accesses);
+    // "well served by the L1 I-cache, with comparatively few misses".
+    assert!(r.mem.l1i_total().miss_rate() < 1e-3);
+}
+
+#[test]
+fn non_gemm_share_rises_under_bwma_but_stays_minority() {
+    // Fig. 7: non-GEMM 4.2% → 13.5%, still far below half.
+    let r = run(AccelKind::Sa { b: 16 }, Layout::Rwma, 1);
+    let b = run(AccelKind::Sa { b: 16 }, Layout::Bwma, 1);
+    assert!(b.non_gemm_share() > r.non_gemm_share());
+    assert!(b.non_gemm_share() < 0.5, "GEMM must stay the majority");
+}
+
+#[test]
+fn multicore_scales_sublinearly() {
+    // Fig. 6b: more cores help, but shared L2 + DRAM channel keep scaling
+    // below ideal.
+    let c1 = run(AccelKind::Sa { b: 16 }, Layout::Rwma, 1);
+    let c2 = run(AccelKind::Sa { b: 16 }, Layout::Rwma, 2);
+    let c4 = run(AccelKind::Sa { b: 16 }, Layout::Rwma, 4);
+    assert!(c2.total_cycles < c1.total_cycles);
+    assert!(c4.total_cycles < c2.total_cycles);
+    let s2 = c1.total_cycles as f64 / c2.total_cycles as f64;
+    let s4 = c1.total_cycles as f64 / c4.total_cycles as f64;
+    assert!(s2 < 2.0, "2-core speedup must be sub-linear, got {s2:.2}");
+    assert!(s4 < 4.0, "4-core speedup must be sub-linear, got {s4:.2}");
+}
+
+#[test]
+#[cfg_attr(debug_assertions, ignore = "paper-scale simulation is release-only")]
+fn single_core_bwma_competitive_with_dual_core_rwma() {
+    // The paper's standout claim (Fig. 6b): optimizing the arrangement
+    // (zero hardware cost) beats doubling the cores. This one runs at
+    // paper scale — the claim is about the BERT-base working set (the
+    // tiny config's footprint fits caches too comfortably).
+    let b1 = simulate(&SimConfig::paper(AccelKind::Sa { b: 16 }, Layout::Bwma, 1));
+    let r2 = simulate(&SimConfig::paper(AccelKind::Sa { b: 16 }, Layout::Rwma, 2));
+    assert!(
+        b1.total_cycles < r2.total_cycles,
+        "1-core BWMA ({}) should beat 2-core RWMA ({})",
+        b1.total_cycles,
+        r2.total_cycles
+    );
+}
+
+#[test]
+fn sa8_benefits_at_least_as_much_as_sa16() {
+    // Fig. 6a: the smaller kernel is the most memory-bound, so the
+    // arrangement matters most there (2.7-2.8x vs 2.3x in the paper).
+    let speedup = |accel| {
+        let r = run(accel, Layout::Rwma, 1);
+        let b = run(accel, Layout::Bwma, 1);
+        b.speedup_over(&r)
+    };
+    let s8 = speedup(AccelKind::Sa { b: 8 });
+    let s16 = speedup(AccelKind::Sa { b: 16 });
+    assert!(s8 >= 0.9 * s16, "SA8x8 speedup {s8:.2} vs SA16x16 {s16:.2}");
+}
+
+#[test]
+fn simd_slower_than_sa_at_same_kernel() {
+    let sa = run(AccelKind::Sa { b: 16 }, Layout::Bwma, 1);
+    let simd = run(AccelKind::Simd { b: 16 }, Layout::Bwma, 1);
+    assert!(simd.total_cycles > sa.total_cycles);
+}
+
+#[test]
+fn phase_totals_sum_to_total() {
+    let r = run(AccelKind::Sa { b: 16 }, Layout::Bwma, 2);
+    let sum: u64 = r.phases.iter().map(|p| p.cycles).sum();
+    assert_eq!(sum, r.total_cycles);
+}
+
+#[test]
+fn conversion_overhead_is_negligible_end_to_end() {
+    // §3.2: RWMA↔BWMA conversion ≤ ~0.1% of a full-model run. Use the
+    // tiny model (2 layers) — the bound is per-layer-conservative.
+    let mut cfg = SimConfig::tiny(AccelKind::Sa { b: 16 }, Layout::Bwma, 1);
+    cfg.sim_layers = cfg.bert.layers;
+    cfg.convert_boundaries = true;
+    let res = simulate(&cfg);
+    let conv: u64 = res
+        .phases
+        .iter()
+        .filter(|p| p.class == crate::workload::PhaseClass::Convert)
+        .map(|p| p.cycles)
+        .sum();
+    let share = conv as f64 / res.total_cycles as f64;
+    assert!(share < 0.02, "conversion share {share:.4} too large");
+    assert!(conv > 0);
+}
+
+#[test]
+fn deterministic_across_runs() {
+    let a = run(AccelKind::Sa { b: 8 }, Layout::Bwma, 2);
+    let b = run(AccelKind::Sa { b: 8 }, Layout::Bwma, 2);
+    assert_eq!(a.total_cycles, b.total_cycles);
+    assert_eq!(a.mem.l1d_total(), b.mem.l1d_total());
+}

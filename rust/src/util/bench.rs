@@ -1,0 +1,89 @@
+//! Tiny bench harness (offline substitute for criterion): warm-up, N
+//! timed samples, median/mean/min/max, and a machine-greppable output
+//! line. The paper-figure benches use this for harness timing and print
+//! the reproduced figure series alongside.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub name: String,
+    pub samples: Vec<Duration>,
+}
+
+impl Sample {
+    pub fn median(&self) -> Duration {
+        let mut s = self.samples.clone();
+        s.sort();
+        s[s.len() / 2]
+    }
+
+    pub fn mean(&self) -> Duration {
+        self.samples.iter().sum::<Duration>() / self.samples.len() as u32
+    }
+
+    pub fn min(&self) -> Duration {
+        *self.samples.iter().min().unwrap()
+    }
+
+    pub fn max(&self) -> Duration {
+        *self.samples.iter().max().unwrap()
+    }
+
+    pub fn report(&self) {
+        println!(
+            "bench {:<40} median {:>12?} mean {:>12?} min {:>12?} max {:>12?} samples {}",
+            self.name,
+            self.median(),
+            self.mean(),
+            self.min(),
+            self.max(),
+            self.samples.len()
+        );
+    }
+}
+
+/// Time `f` for `samples` iterations after `warmup` unmeasured runs.
+pub fn bench<T, F: FnMut() -> T>(name: &str, warmup: usize, samples: usize, mut f: F) -> Sample {
+    assert!(samples > 0);
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut out = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        out.push(t0.elapsed());
+    }
+    let s = Sample { name: name.to_string(), samples: out };
+    s.report();
+    s
+}
+
+/// Quick single-shot measurement (for expensive full-size runs).
+pub fn once<T, F: FnOnce() -> T>(name: &str, f: F) -> (T, Duration) {
+    let t0 = Instant::now();
+    let v = f();
+    let dt = t0.elapsed();
+    println!("bench {name:<40} once   {dt:>12?}");
+    (v, dt)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let s = bench("noop", 1, 5, || 1 + 1);
+        assert_eq!(s.samples.len(), 5);
+        assert!(s.min() <= s.median() && s.median() <= s.max());
+    }
+
+    #[test]
+    fn once_returns_value() {
+        let (v, dt) = once("compute", || 21 * 2);
+        assert_eq!(v, 42);
+        assert!(dt.as_nanos() > 0);
+    }
+}

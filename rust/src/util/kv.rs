@@ -1,0 +1,114 @@
+//! Flat `key = value` config-file parser (offline substitute for toml).
+//!
+//! Grammar: one `dotted.key = value` pair per line; `#` starts a comment;
+//! blank lines ignored; values are bare words, numbers, or booleans.
+//! Section headers `[section]` prefix subsequent keys with `section.`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Ordered key→value map parsed from a config string.
+pub type KvMap = BTreeMap<String, String>;
+
+pub fn parse(text: &str) -> Result<KvMap> {
+    let mut map = KvMap::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let Some(name) = rest.strip_suffix(']') else {
+                bail!("line {}: malformed section header {raw:?}", lineno + 1);
+            };
+            section = name.trim().to_string();
+            continue;
+        }
+        let Some((k, v)) = line.split_once('=') else {
+            bail!("line {}: expected `key = value`, got {raw:?}", lineno + 1);
+        };
+        let key = if section.is_empty() {
+            k.trim().to_string()
+        } else {
+            format!("{section}.{}", k.trim())
+        };
+        let val = v.trim().trim_matches('"').to_string();
+        if map.insert(key.clone(), val).is_some() {
+            bail!("line {}: duplicate key {key:?}", lineno + 1);
+        }
+    }
+    Ok(map)
+}
+
+/// Typed getters with good error messages.
+pub fn get_usize(map: &KvMap, key: &str) -> Result<Option<usize>> {
+    parse_opt(map, key)
+}
+
+pub fn get_u64(map: &KvMap, key: &str) -> Result<Option<u64>> {
+    parse_opt(map, key)
+}
+
+pub fn get_f64(map: &KvMap, key: &str) -> Result<Option<f64>> {
+    parse_opt(map, key)
+}
+
+pub fn get_bool(map: &KvMap, key: &str) -> Result<Option<bool>> {
+    parse_opt(map, key)
+}
+
+fn parse_opt<T: std::str::FromStr>(map: &KvMap, key: &str) -> Result<Option<T>>
+where
+    T::Err: std::fmt::Display,
+{
+    match map.get(key) {
+        None => Ok(None),
+        Some(v) => match v.parse() {
+            Ok(t) => Ok(Some(t)),
+            Err(e) => bail!("key {key:?}: cannot parse {v:?}: {e}"),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_flat_and_sectioned() {
+        let m = parse(
+            "layout = bwma  # comment\n\
+             cores = 2\n\
+             [bert]\n\
+             seq = 512\n\
+             d_model = 768\n",
+        )
+        .unwrap();
+        assert_eq!(m["layout"], "bwma");
+        assert_eq!(get_usize(&m, "cores").unwrap(), Some(2));
+        assert_eq!(get_usize(&m, "bert.seq").unwrap(), Some(512));
+        assert_eq!(get_usize(&m, "missing").unwrap(), None);
+    }
+
+    #[test]
+    fn rejects_garbage_and_duplicates() {
+        assert!(parse("not a kv line").is_err());
+        assert!(parse("a = 1\na = 2").is_err());
+        assert!(parse("[unclosed\n").is_err());
+    }
+
+    #[test]
+    fn type_errors_name_the_key() {
+        let m = parse("cores = many").unwrap();
+        let err = get_usize(&m, "cores").unwrap_err().to_string();
+        assert!(err.contains("cores"), "{err}");
+    }
+
+    #[test]
+    fn quotes_and_comments_stripped() {
+        let m = parse("name = \"hello\" # trailing").unwrap();
+        assert_eq!(m["name"], "hello");
+    }
+}

@@ -1,0 +1,11 @@
+//! Small self-contained utilities (this build environment is offline, so
+//! the crate carries its own PRNG, property-test harness, bench timing,
+//! and table formatting instead of pulling rand/proptest/criterion).
+
+pub mod bench;
+pub mod kv;
+pub mod proptest;
+pub mod rng;
+pub mod table;
+
+pub use rng::XorShift64;

@@ -1,0 +1,58 @@
+//! Minimal property-based-testing harness (offline substitute for the
+//! proptest crate): run a property over many PRNG-generated cases and
+//! report the failing seed, so a failure reproduces deterministically.
+
+use super::rng::XorShift64;
+
+/// Number of cases per property (override with `BWMA_PROPTEST_CASES`).
+pub fn default_cases() -> u64 {
+    std::env::var("BWMA_PROPTEST_CASES").ok().and_then(|v| v.parse().ok()).unwrap_or(256)
+}
+
+/// Run `prop` over `cases` PRNG-seeded inputs. The property receives a
+/// fresh generator per case; panic messages include the case seed.
+pub fn check<F: Fn(&mut XorShift64)>(name: &str, cases: u64, prop: F) {
+    for case in 0..cases {
+        let seed = 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(case + 1) ^ 0xBAD_5EED;
+        let mut rng = XorShift64::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng)));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| e.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!("property {name:?} failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// `check` with the default case count.
+pub fn check_default<F: Fn(&mut XorShift64)>(name: &str, prop: F) {
+    check(name, default_cases(), prop);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add-commutes", 64, |r| {
+            let (a, b) = (r.below(1000), r.below(1000));
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let err = std::panic::catch_unwind(|| {
+            check("always-fails", 4, |_r| panic!("boom"));
+        })
+        .unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("always-fails"));
+        assert!(msg.contains("seed"));
+        assert!(msg.contains("boom"));
+    }
+}

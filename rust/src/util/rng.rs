@@ -1,0 +1,95 @@
+//! Deterministic xorshift64* PRNG — used by tests, the property harness,
+//! and the synthetic request generators. Not cryptographic; fast and
+//! reproducible, which is what a simulator wants.
+
+#[derive(Debug, Clone)]
+pub struct XorShift64 {
+    state: u64,
+}
+
+impl XorShift64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed.max(1) }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in `[0, n)`.
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        self.next_u64() % n
+    }
+
+    /// Uniform in `[lo, hi)`.
+    #[inline]
+    pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.below(hi - lo)
+    }
+
+    /// Uniform f32 in `[-1, 1)`.
+    #[inline]
+    pub fn f32_signed(&mut self) -> f32 {
+        (self.next_u64() >> 41) as f32 / (1u64 << 23) as f32 * 2.0 - 1.0
+    }
+
+    /// Fill a buffer with signed-unit floats.
+    pub fn fill_f32(&mut self, buf: &mut [f32]) {
+        for v in buf {
+            *v = self.f32_signed();
+        }
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len() as u64) as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = XorShift64::new(42);
+        let mut b = XorShift64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn below_in_range() {
+        let mut r = XorShift64::new(7);
+        for _ in 0..10_000 {
+            assert!(r.below(17) < 17);
+        }
+    }
+
+    #[test]
+    fn f32_in_unit_interval() {
+        let mut r = XorShift64::new(9);
+        let mut sum = 0.0f64;
+        for _ in 0..10_000 {
+            let v = r.f32_signed();
+            assert!((-1.0..1.0).contains(&v));
+            sum += v as f64;
+        }
+        // Mean close to 0 for a uniform source.
+        assert!(sum.abs() / 10_000.0 < 0.05);
+    }
+
+    #[test]
+    fn zero_seed_is_fixed_up() {
+        let mut r = XorShift64::new(0);
+        assert_ne!(r.next_u64(), 0);
+    }
+}

@@ -1,0 +1,88 @@
+//! Plain-text table formatting for experiment reports (`bwma experiment
+//! …` prints the same rows/series the paper's figures plot).
+
+/// Render rows as an aligned ASCII table with a header.
+pub fn render(header: &[&str], rows: &[Vec<String>]) -> String {
+    let cols = header.len();
+    let mut width: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        assert_eq!(row.len(), cols, "row arity mismatch");
+        for (i, cell) in row.iter().enumerate() {
+            width[i] = width[i].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let line = |out: &mut String, cells: &[String]| {
+        for (i, c) in cells.iter().enumerate() {
+            out.push_str("| ");
+            out.push_str(c);
+            out.push_str(&" ".repeat(width[i] - c.len() + 1));
+        }
+        out.push_str("|\n");
+    };
+    line(&mut out, &header.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    out.push_str("|");
+    for w in &width {
+        out.push_str(&"-".repeat(w + 2));
+        out.push('|');
+    }
+    out.push('\n');
+    for row in rows {
+        line(&mut out, row);
+    }
+    out
+}
+
+/// Humanize a cycle count (e.g. `1.23 Gcyc`).
+pub fn cycles(c: u64) -> String {
+    match c {
+        0..=9_999 => format!("{c} cyc"),
+        10_000..=999_999 => format!("{:.2} Kcyc", c as f64 / 1e3),
+        1_000_000..=999_999_999 => format!("{:.2} Mcyc", c as f64 / 1e6),
+        _ => format!("{:.2} Gcyc", c as f64 / 1e9),
+    }
+}
+
+/// Humanize a count (e.g. accesses).
+pub fn count(c: u64) -> String {
+    match c {
+        0..=9_999 => format!("{c}"),
+        10_000..=999_999 => format!("{:.2}K", c as f64 / 1e3),
+        1_000_000..=999_999_999 => format!("{:.2}M", c as f64 / 1e6),
+        _ => format!("{:.2}G", c as f64 / 1e9),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_aligns() {
+        let t = render(
+            &["config", "cycles"],
+            &[
+                vec!["sa16-rwma".into(), "100".into()],
+                vec!["sa16-bwma-long".into(), "42".into()],
+            ],
+        );
+        let lines: Vec<_> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines.iter().all(|l| l.len() == lines[0].len()), "{t}");
+        assert!(t.contains("sa16-bwma-long"));
+    }
+
+    #[test]
+    fn humanize() {
+        assert_eq!(cycles(900), "900 cyc");
+        assert_eq!(cycles(1_500_000), "1.50 Mcyc");
+        assert_eq!(cycles(2_300_000_000), "2.30 Gcyc");
+        assert_eq!(count(12_345_678), "12.35M");
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn arity_checked() {
+        render(&["a", "b"], &[vec!["x".into()]]);
+    }
+}

@@ -1,0 +1,336 @@
+//! BERT-base encoder as a phase list (paper §2.1 Fig. 1, §4.1 setup).
+//!
+//! Dimensions (paper §4.1): input 512×768, 12 heads with 768×64 Q/K/V
+//! weight matrices each, feed-forward width 3072, 12 layers. Activations
+//! and weights are 1-byte (int8) as in the TiC-SAT accelerator the paper
+//! instantiates.
+
+
+use crate::layout::{Layout, MatrixDesc};
+
+use super::gemm::GemmOp;
+use super::item::WorkItem;
+use super::rowops;
+
+#[derive(Debug, Clone, Copy)]
+pub struct BertConfig {
+    /// Sequence length (rows of the input matrix).
+    pub seq: usize,
+    /// Model dimension.
+    pub d_model: usize,
+    pub heads: usize,
+    /// Per-head Q/K/V dimension.
+    pub d_head: usize,
+    /// Feed-forward hidden dimension.
+    pub d_ff: usize,
+    pub layers: usize,
+    /// Element size in bytes (1 = int8 quantized, the paper's accelerator).
+    pub elem: usize,
+}
+
+impl BertConfig {
+    /// BERT-base as evaluated in the paper.
+    pub fn base() -> Self {
+        Self { seq: 512, d_model: 768, heads: 12, d_head: 64, d_ff: 3072, layers: 12, elem: 1 }
+    }
+
+    /// Reduced-size configuration for fast tests/benches (same structure).
+    pub fn tiny() -> Self {
+        Self { seq: 128, d_model: 192, heads: 3, d_head: 64, d_ff: 768, layers: 2, elem: 1 }
+    }
+
+    pub fn validate(&self, block: usize) {
+        for (name, v) in [
+            ("seq", self.seq),
+            ("d_model", self.d_model),
+            ("d_head", self.d_head),
+            ("d_ff", self.d_ff),
+        ] {
+            assert!(v % block == 0, "{name}={v} not divisible by kernel size {block}");
+        }
+        assert_eq!(self.heads * self.d_head, self.d_model, "heads*d_head must equal d_model");
+    }
+
+    /// MAC count of one encoder layer (for roofline/efficiency reporting).
+    pub fn layer_macs(&self) -> u64 {
+        let (s, d, h, dh, ff) = (
+            self.seq as u64,
+            self.d_model as u64,
+            self.heads as u64,
+            self.d_head as u64,
+            self.d_ff as u64,
+        );
+        let qkv = 3 * h * s * d * dh;
+        let scores = h * s * s * dh;
+        let av = h * s * s * dh;
+        let proj = s * d * d;
+        let ffn = 2 * s * d * ff;
+        qkv + scores + av + proj + ffn
+    }
+}
+
+/// Component class, used for the Fig. 7 time-distribution grouping.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PhaseClass {
+    Gemm,
+    Softmax,
+    Transpose,
+    AddNorm,
+    Convert,
+}
+
+impl PhaseClass {
+    pub fn is_gemm(&self) -> bool {
+        matches!(self, PhaseClass::Gemm)
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            PhaseClass::Gemm => "GEMM",
+            PhaseClass::Softmax => "Softmax",
+            PhaseClass::Transpose => "Transpose",
+            PhaseClass::AddNorm => "Add/Norm",
+            PhaseClass::Convert => "Convert",
+        }
+    }
+}
+
+/// One barrier-delimited component: cores execute their item lists in
+/// parallel, then synchronize.
+#[derive(Debug, Clone)]
+pub struct Phase {
+    pub name: &'static str,
+    pub class: PhaseClass,
+    /// `items[core]` = that core's work, in program order.
+    pub items: Vec<Vec<WorkItem>>,
+}
+
+impl Phase {
+    pub fn total_items(&self) -> usize {
+        self.items.iter().map(|v| v.len()).sum()
+    }
+}
+
+/// Bump allocator for the simulated flat address space. Nothing is backed
+/// by host memory — the simulator only needs addresses.
+#[derive(Debug, Clone)]
+pub struct Arena {
+    next: u64,
+}
+
+impl Arena {
+    pub fn new(base: u64) -> Self {
+        Self { next: base }
+    }
+
+    pub fn alloc(&mut self, rows: usize, cols: usize, elem: usize, block: usize, layout: Layout) -> MatrixDesc {
+        let m = MatrixDesc::new(self.next, rows, cols, elem, block, layout);
+        // 64-byte align every tensor (cache-line aligned, like any
+        // sensible allocator for accelerator buffers).
+        self.next = (m.end() + 63) & !63;
+        m
+    }
+
+    pub fn used(&self) -> u64 {
+        self.next
+    }
+}
+
+/// All tensors of one encoder layer.
+#[derive(Debug, Clone)]
+pub struct EncoderLayout {
+    pub x: MatrixDesc,
+    pub wq: Vec<MatrixDesc>,
+    pub wk: Vec<MatrixDesc>,
+    pub wv: Vec<MatrixDesc>,
+    pub q: Vec<MatrixDesc>,
+    pub k: Vec<MatrixDesc>,
+    pub v: Vec<MatrixDesc>,
+    pub kt: Vec<MatrixDesc>,
+    pub scores: Vec<MatrixDesc>,
+    /// Concatenated head outputs `[seq, d_model]`; heads write col-views.
+    pub h_concat: MatrixDesc,
+    pub wo: MatrixDesc,
+    pub proj: MatrixDesc,
+    pub w1: MatrixDesc,
+    pub ff1: MatrixDesc,
+    pub w2: MatrixDesc,
+    pub out: MatrixDesc,
+}
+
+impl EncoderLayout {
+    /// Allocate every tensor of one layer. `x` is the layer input
+    /// (previous layer's `out`, or the model input for layer 0).
+    pub fn alloc(cfg: &BertConfig, block: usize, layout: Layout, x: MatrixDesc, arena: &mut Arena) -> Self {
+        cfg.validate(block);
+        let e = cfg.elem;
+        let (s, d, dh, ff, h) = (cfg.seq, cfg.d_model, cfg.d_head, cfg.d_ff, cfg.heads);
+        let a = |arena: &mut Arena, r, c| arena.alloc(r, c, e, block, layout);
+        let wq = (0..h).map(|_| a(arena, d, dh)).collect();
+        let wk = (0..h).map(|_| a(arena, d, dh)).collect();
+        let wv = (0..h).map(|_| a(arena, d, dh)).collect();
+        let q = (0..h).map(|_| a(arena, s, dh)).collect();
+        let k = (0..h).map(|_| a(arena, s, dh)).collect();
+        let v = (0..h).map(|_| a(arena, s, dh)).collect();
+        let kt = (0..h).map(|_| a(arena, dh, s)).collect();
+        let scores = (0..h).map(|_| a(arena, s, s)).collect();
+        let h_concat = a(arena, s, d);
+        let wo = a(arena, d, d);
+        let proj = a(arena, s, d);
+        let w1 = a(arena, d, ff);
+        let ff1 = a(arena, s, ff);
+        let w2 = a(arena, ff, d);
+        let out = a(arena, s, d);
+        Self { x, wq, wk, wv, q, k, v, kt, scores, h_concat, wo, proj, w1, ff1, w2, out }
+    }
+
+    /// Bytes of weights in this layer (reporting).
+    pub fn weight_bytes(&self) -> u64 {
+        self.wq.iter().chain(&self.wk).chain(&self.wv).map(|m| m.bytes()).sum::<u64>()
+            + self.wo.bytes()
+            + self.w1.bytes()
+            + self.w2.bytes()
+    }
+}
+
+/// The ordered phase list of one encoder layer for `cores` cores.
+#[derive(Debug, Clone)]
+pub struct LayerPhases {
+    pub phases: Vec<Phase>,
+    pub tensors: EncoderLayout,
+}
+
+impl LayerPhases {
+    pub fn build(cfg: &BertConfig, block: usize, layout: Layout, cores: usize, x: MatrixDesc, arena: &mut Arena) -> Self {
+        let t = EncoderLayout::alloc(cfg, block, layout, x, arena);
+        let h = cfg.heads;
+
+        // Heads are distributed across cores for the attention phases
+        // (paper §4.1: per-core dedicated SAs); matrix-level phases are
+        // partitioned by output block-row.
+        let by_head = |per_head: Vec<Vec<Vec<WorkItem>>>| -> Vec<Vec<WorkItem>> {
+            let mut per_core = vec![Vec::new(); cores];
+            for (hi, items1) in per_head.into_iter().enumerate() {
+                // items1 was built with cores=1.
+                per_core[hi % cores].extend(items1.into_iter().next().unwrap());
+            }
+            per_core
+        };
+
+        let mut phases = Vec::new();
+
+        // 1. Q/K/V projections, per head.
+        let mut qkv = Vec::new();
+        for i in 0..h {
+            qkv.push(GemmOp::new(t.x, t.wq[i], t.q[i]).items(1));
+            qkv.push(GemmOp::new(t.x, t.wk[i], t.k[i]).items(1));
+            qkv.push(GemmOp::new(t.x, t.wv[i], t.v[i]).items(1));
+        }
+        phases.push(Phase { name: "QKV GEMM", class: PhaseClass::Gemm, items: by_head(qkv) });
+
+        // 2. K transpose (non-GEMM).
+        let kts = (0..h).map(|i| rowops::transpose_items(t.k[i], t.kt[i], 1)).collect();
+        phases.push(Phase { name: "K Transpose", class: PhaseClass::Transpose, items: by_head(kts) });
+
+        // 3. Attention scores Q×Kᵀ.
+        let qk = (0..h).map(|i| GemmOp::new(t.q[i], t.kt[i], t.scores[i]).items(1)).collect();
+        phases.push(Phase { name: "QK^T GEMM", class: PhaseClass::Gemm, items: by_head(qk) });
+
+        // 4. Softmax over score rows (the 1/√d_q scale folds into the
+        // exp pass — no extra memory traffic).
+        let sm = (0..h).map(|i| rowops::softmax_items(t.scores[i], 1)).collect();
+        phases.push(Phase { name: "Softmax", class: PhaseClass::Softmax, items: by_head(sm) });
+
+        // 5. Attention × V, each head writing its column slice of the
+        // concatenated output (no copy-concat — §3.2).
+        let av = (0..h)
+            .map(|i| {
+                let out_view = t.h_concat.col_view(i * cfg.d_head, cfg.d_head);
+                GemmOp::new(t.scores[i], t.v[i], out_view).items(1)
+            })
+            .collect();
+        phases.push(Phase { name: "AV GEMM", class: PhaseClass::Gemm, items: by_head(av) });
+
+        // 6. Output projection.
+        phases.push(Phase {
+            name: "Projection GEMM",
+            class: PhaseClass::Gemm,
+            items: GemmOp::new(t.h_concat, t.wo, t.proj).items(cores),
+        });
+
+        // 7. Residual + LayerNorm.
+        let mut an1 = rowops::residual_items(t.proj, t.x, cores);
+        for (c, extra) in rowops::layernorm_items(t.proj, cores).into_iter().enumerate() {
+            an1[c].extend(extra);
+        }
+        phases.push(Phase { name: "Add/Norm 1", class: PhaseClass::AddNorm, items: an1 });
+
+        // 8. Feed-forward 1 with fused GELU on the store path (§3.2
+        // Activation: element-wise, integrated into the layer).
+        phases.push(Phase {
+            name: "FF1 GEMM (+GELU)",
+            class: PhaseClass::Gemm,
+            items: GemmOp::new(t.proj, t.w1, t.ff1).with_fused_act().items(cores),
+        });
+
+        // 9. Feed-forward 2.
+        phases.push(Phase {
+            name: "FF2 GEMM",
+            class: PhaseClass::Gemm,
+            items: GemmOp::new(t.ff1, t.w2, t.out).items(cores),
+        });
+
+        // 10. Residual + LayerNorm.
+        let mut an2 = rowops::residual_items(t.out, t.proj, cores);
+        for (c, extra) in rowops::layernorm_items(t.out, cores).into_iter().enumerate() {
+            an2[c].extend(extra);
+        }
+        phases.push(Phase { name: "Add/Norm 2", class: PhaseClass::AddNorm, items: an2 });
+
+        Self { phases, tensors: t }
+    }
+
+    /// Phase list for the full model: `layers` encoder layers chained
+    /// (layer i+1 reads layer i's `out`), plus optional RWMA↔BWMA
+    /// conversion phases at the model boundary (§3.2 overhead experiment).
+    pub fn full_model(
+        cfg: &BertConfig,
+        block: usize,
+        layout: Layout,
+        cores: usize,
+        convert_boundaries: bool,
+    ) -> Vec<Phase> {
+        let mut arena = Arena::new(0x1000_0000);
+        let mut phases = Vec::new();
+
+        // Model input arrives row-major from the host.
+        let x_rwma = arena.alloc(cfg.seq, cfg.d_model, cfg.elem, block, Layout::Rwma);
+        let mut x = if layout == Layout::Bwma && convert_boundaries {
+            let x_b = arena.alloc(cfg.seq, cfg.d_model, cfg.elem, block, Layout::Bwma);
+            phases.push(Phase {
+                name: "Convert In",
+                class: PhaseClass::Convert,
+                items: rowops::convert_items(x_rwma, x_b, cores),
+            });
+            x_b
+        } else {
+            x_rwma.with_layout(layout)
+        };
+
+        for _ in 0..cfg.layers {
+            let lp = Self::build(cfg, block, layout, cores, x, &mut arena);
+            x = lp.tensors.out;
+            phases.extend(lp.phases);
+        }
+
+        if layout == Layout::Bwma && convert_boundaries {
+            let out_r = arena.alloc(cfg.seq, cfg.d_model, cfg.elem, block, Layout::Rwma);
+            phases.push(Phase {
+                name: "Convert Out",
+                class: PhaseClass::Convert,
+                items: rowops::convert_items(x, out_r, cores),
+            });
+        }
+        phases
+    }
+}

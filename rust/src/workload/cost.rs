@@ -1,0 +1,84 @@
+//! Instruction-overhead model (calibration knobs).
+//!
+//! The simulator charges 1 cycle per instruction (in-order, IPC ≤ 1) plus
+//! memory stalls. How many instructions each unit of work costs is set
+//! here. The asymmetry that matters for the paper (Fig. 8: "I-cache
+//! accesses are higher in the case of RWMA, because the data in each tile
+//! have to be explicitly indexed") comes from `gemm_span_overhead`: every
+//! *span* of a tile transfer pays address-generation instructions, and an
+//! RWMA tile is `b` spans while a BWMA tile is one.
+
+
+#[derive(Debug, Clone, Copy)]
+pub struct InstrCost {
+    /// Instructions per 8-byte word moved core↔accelerator (load/store +
+    /// the custom push/pop instruction of the tightly-coupled SA).
+    pub gemm_instr_per_word: u64,
+    /// Address-generation + loop instructions per contiguous span.
+    pub gemm_span_overhead: u64,
+    /// Control instructions per tile-pair iteration (loop bookkeeping,
+    /// accelerator start).
+    pub gemm_tile_overhead: u64,
+    /// Scalar instructions per element for row-wise non-GEMM ops
+    /// (softmax exp/acc, norm mean/var — identical in both layouts).
+    pub rowop_instr_per_elem: u64,
+    /// Extra indexing instructions per *block-boundary crossing* when a
+    /// row-wise op walks a BWMA row (paper §3.2 softmax/norm overhead).
+    pub bwma_block_index_overhead: u64,
+    /// Instructions per element for transpose (byte load + byte store +
+    /// index update).
+    pub transpose_instr_per_elem: u64,
+    /// Instructions per element for layout conversion (gathered load,
+    /// sequential store).
+    pub convert_instr_per_elem: u64,
+    /// Fused-activation (GELU LUT) instructions per element on the FF1
+    /// store path.
+    pub act_instr_per_elem: u64,
+    /// Transfer granule between core and accelerator, bytes (64-bit moves).
+    pub word_bytes: usize,
+}
+
+impl Default for InstrCost {
+    fn default() -> Self {
+        Self {
+            gemm_instr_per_word: 1,
+            gemm_span_overhead: 6,
+            gemm_tile_overhead: 8,
+            rowop_instr_per_elem: 18,
+            bwma_block_index_overhead: 8,
+            transpose_instr_per_elem: 5,
+            convert_instr_per_elem: 4,
+            act_instr_per_elem: 3,
+            word_bytes: 8,
+        }
+    }
+}
+
+/// Synthetic PC regions per op class — distinct loop bodies so the L1-I
+/// model sees a realistic (small) code footprint per phase. RWMA bodies
+/// are larger: explicit per-row index arithmetic is real code.
+pub mod pc {
+    pub const GEMM_RWMA: (u64, u32) = (0x0040_0000, 448);
+    pub const GEMM_BWMA: (u64, u32) = (0x0040_2000, 256);
+    pub const SOFTMAX: (u64, u32) = (0x0041_0000, 512);
+    pub const NORM: (u64, u32) = (0x0041_2000, 448);
+    pub const TRANSPOSE: (u64, u32) = (0x0041_4000, 192);
+    pub const RESIDUAL: (u64, u32) = (0x0041_6000, 128);
+    pub const CONVERT: (u64, u32) = (0x0041_8000, 256);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rwma_tile_issues_more_instructions_than_bwma() {
+        // One 16x16 int8 tile: RWMA = 16 spans x 16 B, BWMA = 1 span x 256 B.
+        let c = InstrCost::default();
+        let words = 256 / c.word_bytes as u64;
+        let rwma = 16 * c.gemm_span_overhead + words * c.gemm_instr_per_word;
+        let bwma = c.gemm_span_overhead + words * c.gemm_instr_per_word;
+        assert!(rwma > bwma);
+        assert_eq!(rwma - bwma, 15 * c.gemm_span_overhead);
+    }
+}

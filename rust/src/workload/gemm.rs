@@ -1,0 +1,142 @@
+//! Tiled-GEMM phase builder (paper §2.2.2, Fig. 3).
+//!
+//! The schedule is the TiC-SAT one — **weight-stationary**: a `b×b`
+//! weight tile `B(p, j)` is preloaded into the accelerator once, then all
+//! input tiles `A(i, p)` stream through it; partial results accumulate in
+//! the output matrix by element-wise addition ("sliding the tiles and
+//! accumulating these partial results", §2.2.2). The output tile
+//! `C(i, j)` is therefore *re-read and re-written* on every K step after
+//! the first — the traffic component where the data arrangement matters
+//! most (a BWMA output-tile column stays L1-resident; RWMA's strided tile
+//! rows thrash).
+
+use crate::layout::MatrixDesc;
+
+use super::item::WorkItem;
+
+/// A full GEMM `c = a × b` executed weight-tile by weight-tile,
+/// partitioned across `cores` by output block-row (each core owns the
+/// rows `i ≡ core (mod cores)`, so no inter-core accumulation races).
+#[derive(Debug, Clone)]
+pub struct GemmOp {
+    pub a: MatrixDesc,
+    pub b: MatrixDesc,
+    pub c: MatrixDesc,
+    pub fused_act: bool,
+}
+
+impl GemmOp {
+    pub fn new(a: MatrixDesc, b: MatrixDesc, c: MatrixDesc) -> Self {
+        assert_eq!(a.cols, b.rows, "GEMM inner dimension");
+        assert_eq!(a.rows, c.rows);
+        assert_eq!(b.cols, c.cols);
+        assert_eq!(a.block, b.block);
+        assert_eq!(a.block, c.block);
+        assert_eq!(a.layout, b.layout, "mixed-layout GEMM unsupported");
+        assert_eq!(a.layout, c.layout);
+        Self { a, b, c, fused_act: false }
+    }
+
+    pub fn with_fused_act(mut self) -> Self {
+        self.fused_act = true;
+        self
+    }
+
+    /// Number of tile-pair MACs this GEMM performs.
+    pub fn tile_pairs(&self) -> u64 {
+        (self.c.block_rows() * self.c.block_cols() * self.a.block_cols()) as u64
+    }
+
+    /// One item per weight tile `(j, p)` per core; the item's inner loop
+    /// covers the core's output block-rows. K (`p`) is the *outer* loop so
+    /// consecutive items at the same `j` revisit the same output column —
+    /// the accumulation locality the arrangement acts on.
+    pub fn items(&self, cores: usize) -> Vec<Vec<WorkItem>> {
+        let mut per_core = vec![Vec::new(); cores];
+        let kb = self.a.block_cols();
+        for core in 0..cores {
+            if core >= self.c.block_rows() {
+                continue; // fewer row-blocks than cores: core idles
+            }
+            let list = &mut per_core[core];
+            for j in 0..self.c.block_cols() {
+                for p in 0..kb {
+                    list.push(WorkItem::GemmWeightTile {
+                        a: self.a,
+                        b_mat: self.b,
+                        c: self.c,
+                        j,
+                        p,
+                        i0: core,
+                        i_step: cores,
+                        fused_act: self.fused_act && p == kb - 1,
+                    });
+                }
+            }
+        }
+        per_core
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::layout::Layout;
+
+    fn m(base: u64, r: usize, c: usize) -> MatrixDesc {
+        MatrixDesc::new(base, r, c, 1, 16, Layout::Bwma)
+    }
+
+    #[test]
+    fn item_count_covers_weight_grid() {
+        let op = GemmOp::new(m(0, 64, 128), m(0x10000, 128, 32), m(0x20000, 64, 32));
+        let items = op.items(1);
+        // One item per (j, p): 2 output block-cols x 8 K blocks.
+        assert_eq!(items[0].len(), 2 * 8);
+        assert_eq!(op.tile_pairs(), 4 * 2 * 8);
+    }
+
+    #[test]
+    fn multicore_splits_rows_not_weights() {
+        let op = GemmOp::new(m(0, 96, 64), m(0x10000, 64, 64), m(0x20000, 96, 64));
+        let items = op.items(4);
+        // Every core walks the full (j, p) grid over its own rows.
+        for core in 0..4 {
+            assert_eq!(items[core].len(), 4 * 4, "core {core}");
+        }
+        // Row coverage: 6 block-rows round-robin over 4 cores.
+        if let WorkItem::GemmWeightTile { i0, i_step, .. } = items[3][0] {
+            assert_eq!((i0, i_step), (3, 4));
+        } else {
+            panic!("wrong item kind");
+        }
+    }
+
+    #[test]
+    fn more_cores_than_rows_idles_extras() {
+        let op = GemmOp::new(m(0, 16, 32), m(0x10000, 32, 16), m(0x20000, 16, 16));
+        let items = op.items(4);
+        assert!(!items[0].is_empty());
+        for core in 1..4 {
+            assert!(items[core].is_empty(), "core {core} has no rows");
+        }
+    }
+
+    #[test]
+    fn fused_act_only_on_last_k_step() {
+        let op = GemmOp::new(m(0, 32, 64), m(0x10000, 64, 32), m(0x20000, 32, 32)).with_fused_act();
+        let items = op.items(1);
+        let kb = 4;
+        for item in &items[0] {
+            if let WorkItem::GemmWeightTile { p, fused_act, .. } = item {
+                assert_eq!(*fused_act, *p == kb - 1, "GELU applies once, on the final partial");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "inner dimension")]
+    fn dim_mismatch_rejected() {
+        GemmOp::new(m(0, 64, 128), m(0, 64, 32), m(0, 64, 32));
+    }
+}

@@ -1,0 +1,329 @@
+//! Work items: tile-granular units a simulated core executes, and the
+//! [`Sink`] interface through which they emit their instruction/memory/
+//! compute activity into a simulator (or a counting harness in tests).
+
+use crate::accel::TileEngine;
+use crate::layout::{tile_spans, AddressMap, Layout, MatrixDesc, TileRef};
+
+use super::cost::{pc, InstrCost};
+
+/// Receiver of the activity stream. The simulator cores implement this;
+/// tests implement cheap counting sinks.
+pub trait Sink {
+    /// `count` instruction fetches from the loop body at (`pc`, `code_bytes`).
+    fn instr(&mut self, pc: u64, code_bytes: u32, count: u64);
+    /// One data load of ≤ one transfer granule at `addr`.
+    fn load(&mut self, addr: u64);
+    /// One data store at `addr`.
+    fn store(&mut self, addr: u64);
+    /// Accelerator-busy cycles (core blocked on the functional unit).
+    fn compute(&mut self, cycles: u64);
+}
+
+/// One schedulable unit of work. Granularity: one weight tile of a GEMM
+/// (with its pass over the core's output rows), a logical row of a
+/// row-wise op, a tile of a transpose, a row of a layout conversion.
+/// Items are grouped into per-core lists by the phase builder.
+#[derive(Debug, Clone)]
+pub enum WorkItem {
+    /// Weight-stationary GEMM step (TiC-SAT dataflow): preload weight
+    /// tile `B(p, j)`, stream input tiles `A(i, p)` for the core's rows
+    /// `i = i0, i0+i_step, …`, accumulating partials into `C(i, j)` by
+    /// element-wise addition (read-modify-write for `p > 0`).
+    GemmWeightTile {
+        a: MatrixDesc,
+        b_mat: MatrixDesc,
+        c: MatrixDesc,
+        j: usize,
+        p: usize,
+        i0: usize,
+        i_step: usize,
+        /// Fused element-wise activation applied on the final-partial
+        /// store path (FF1's GELU — extra instructions, no extra memory
+        /// traffic, §3.2).
+        fused_act: bool,
+    },
+    /// Row-wise scan of logical row `row`: `read_passes` full-row reads
+    /// followed by one read+write pass (softmax = 2+1, norm = 2+1).
+    RowScan {
+        m: MatrixDesc,
+        row: usize,
+        read_passes: u32,
+        is_norm: bool,
+    },
+    /// Element-wise residual add: `dst[row, :] += src[row, :]` walked in
+    /// arrangement order (layout-neutral).
+    ResidualRow { dst: MatrixDesc, src: MatrixDesc, row: usize },
+    /// Transpose tile: `dst(i, j) = src(j, i)ᵀ`, one `b×b` tile.
+    TransposeTile { src: MatrixDesc, dst: MatrixDesc, i: usize, j: usize },
+    /// Layout conversion of logical row `row` (gathered loads from `src`,
+    /// sequential stores to `dst`). Used only at model entry/exit (§3.2).
+    ConvertRow { src: MatrixDesc, dst: MatrixDesc, row: usize },
+}
+
+impl WorkItem {
+    /// Emit this item's activity into `sink`.
+    pub fn emit<S: Sink>(&self, eng: &dyn TileEngine, costs: &InstrCost, sink: &mut S) {
+        match self {
+            WorkItem::GemmWeightTile { a, b_mat, c, j, p, i0, i_step, fused_act } => {
+                emit_gemm_weight_tile(a, b_mat, c, *j, *p, *i0, *i_step, *fused_act, eng, costs, sink)
+            }
+            WorkItem::RowScan { m, row, read_passes, is_norm } => {
+                emit_row_scan(m, *row, *read_passes, *is_norm, costs, sink)
+            }
+            WorkItem::ResidualRow { dst, src, row } => emit_residual(dst, src, *row, costs, sink),
+            WorkItem::TransposeTile { src, dst, i, j } => {
+                emit_transpose_tile(src, dst, *i, *j, costs, sink)
+            }
+            WorkItem::ConvertRow { src, dst, row } => emit_convert_row(src, dst, *row, costs, sink),
+        }
+    }
+}
+
+/// Stream one tile through the sink as loads, span by span.
+fn load_tile<S: Sink>(m: &MatrixDesc, t: TileRef, costs: &InstrCost, sink: &mut S) -> u64 {
+    let walk = tile_spans(m, t);
+    let mut instr = 0;
+    for &(addr, len) in &walk.spans {
+        instr += costs.gemm_span_overhead;
+        let mut off = 0u32;
+        while off < len {
+            sink.load(addr + off as u64);
+            instr += costs.gemm_instr_per_word;
+            off += costs.word_bytes as u32;
+        }
+    }
+    instr
+}
+
+fn store_tile<S: Sink>(m: &MatrixDesc, t: TileRef, costs: &InstrCost, sink: &mut S) -> u64 {
+    let walk = tile_spans(m, t);
+    let mut instr = 0;
+    for &(addr, len) in &walk.spans {
+        instr += costs.gemm_span_overhead;
+        let mut off = 0u32;
+        while off < len {
+            sink.store(addr + off as u64);
+            instr += costs.gemm_instr_per_word;
+            off += costs.word_bytes as u32;
+        }
+    }
+    instr
+}
+
+fn gemm_pc(layout: Layout) -> (u64, u32) {
+    match layout {
+        Layout::Rwma => pc::GEMM_RWMA,
+        Layout::Bwma => pc::GEMM_BWMA,
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn emit_gemm_weight_tile<S: Sink>(
+    a: &MatrixDesc,
+    b_mat: &MatrixDesc,
+    c: &MatrixDesc,
+    j: usize,
+    p: usize,
+    i0: usize,
+    i_step: usize,
+    fused_act: bool,
+    eng: &dyn TileEngine,
+    costs: &InstrCost,
+    sink: &mut S,
+) {
+    debug_assert_eq!(a.cols, b_mat.rows, "GEMM inner dims");
+    debug_assert_eq!(a.block, b_mat.block);
+    let (pcb, pcn) = gemm_pc(a.layout);
+
+    // Preload the stationary weight tile.
+    let mut instr = costs.gemm_tile_overhead;
+    instr += load_tile(b_mat, TileRef { block_row: p, block_col: j }, costs, sink);
+    sink.compute(eng.weight_load_cycles());
+    sink.instr(pcb, pcn, instr);
+
+    // Stream this core's input rows through it, accumulating partials in
+    // the output matrix (element-wise addition, paper §2.2.2).
+    let mut i = i0;
+    while i < c.block_rows() {
+        let mut instr = costs.gemm_tile_overhead;
+        instr += load_tile(a, TileRef { block_row: i, block_col: p }, costs, sink);
+        sink.compute(eng.tile_mac_cycles());
+        sink.compute(eng.drain_cycles());
+        let out = TileRef { block_row: i, block_col: j };
+        if p > 0 {
+            // Read the running partial, add, write back.
+            instr += load_tile(c, out, costs, sink);
+            instr += (c.block * c.block) as u64 / costs.word_bytes as u64; // vector adds
+        }
+        instr += store_tile(c, out, costs, sink);
+        if fused_act {
+            instr += costs.act_instr_per_elem * (c.block * c.block) as u64;
+        }
+        sink.instr(pcb, pcn, instr);
+        i += i_step;
+    }
+}
+
+/// Walk logical row `row` of `m` emitting one access per element-granule,
+/// merging contiguous bytes into `word_bytes` granules. Returns
+/// (accesses_emitted, block_boundary_crossings).
+fn walk_row<S: Sink, F: FnMut(&mut S, u64)>(
+    m: &MatrixDesc,
+    row: usize,
+    costs: &InstrCost,
+    sink: &mut S,
+    mut f: F,
+) -> (u64, u64) {
+    let mut accesses = 0u64;
+    let mut crossings = 0u64;
+    let mut run_start = m.addr(row, 0);
+    let mut run_len = m.elem as u64;
+    for col in 1..m.cols {
+        let addr = m.addr(row, col);
+        if addr == run_start + run_len {
+            run_len += m.elem as u64;
+        } else {
+            accesses += flush_run(run_start, run_len, costs, sink, &mut f);
+            crossings += 1;
+            run_start = addr;
+            run_len = m.elem as u64;
+        }
+    }
+    accesses += flush_run(run_start, run_len, costs, sink, &mut f);
+    (accesses, crossings)
+}
+
+fn flush_run<S: Sink, F: FnMut(&mut S, u64)>(
+    start: u64,
+    len: u64,
+    costs: &InstrCost,
+    sink: &mut S,
+    f: &mut F,
+) -> u64 {
+    let g = costs.word_bytes as u64;
+    let mut n = 0;
+    let mut off = 0;
+    while off < len {
+        f(sink, start + off);
+        n += 1;
+        off += g.min(len - off);
+    }
+    n
+}
+
+fn emit_row_scan<S: Sink>(
+    m: &MatrixDesc,
+    row: usize,
+    read_passes: u32,
+    is_norm: bool,
+    costs: &InstrCost,
+    sink: &mut S,
+) {
+    let (pcb, pcn) = if is_norm { pc::NORM } else { pc::SOFTMAX };
+    let mut total_instr = 0u64;
+    for _ in 0..read_passes {
+        let (n, cross) = walk_row(m, row, costs, sink, |s, a| s.load(a));
+        total_instr += n * costs.rowop_instr_per_elem + cross * costs.bwma_block_index_overhead;
+    }
+    // Final pass: read-modify-write back to the same positions (§3.2:
+    // "The processed data is written back to the same matrix position").
+    let (n, cross) = walk_row(m, row, costs, sink, |s, a| {
+        s.load(a);
+        s.store(a);
+    });
+    total_instr += n * (costs.rowop_instr_per_elem + 1) + cross * costs.bwma_block_index_overhead;
+    sink.instr(pcb, pcn, total_instr);
+}
+
+fn emit_residual<S: Sink>(
+    dst: &MatrixDesc,
+    src: &MatrixDesc,
+    row: usize,
+    costs: &InstrCost,
+    sink: &mut S,
+) {
+    let (pcb, pcn) = pc::RESIDUAL;
+    let (n1, _) = walk_row(src, row, costs, sink, |s, a| s.load(a));
+    let (n2, _) = walk_row(dst, row, costs, sink, |s, a| {
+        s.load(a);
+        s.store(a);
+    });
+    sink.instr(pcb, pcn, (n1 + n2) * 2);
+}
+
+fn emit_transpose_tile<S: Sink>(
+    src: &MatrixDesc,
+    dst: &MatrixDesc,
+    i: usize,
+    j: usize,
+    costs: &InstrCost,
+    sink: &mut S,
+) {
+    // dst tile (i, j) = transpose of src tile (j, i). Scalar code: one
+    // byte-granule load + store per element in both arrangements (counts
+    // are layout-invariant; locality is not — §3.2, Fig. 5b).
+    let b = src.block;
+    let (pcb, pcn) = pc::TRANSPOSE;
+    let r0 = i * b;
+    let c0 = j * b;
+    // Read source in *destination* order: element (r, c) of dst reads
+    // src (c0 + c, r0 + r)… i.e., column-wise over src.
+    for r in 0..b {
+        for c in 0..b {
+            sink.load(src.addr(j * b + c, i * b + r));
+        }
+        // Writes of one dst row are sequential in both layouts.
+        for c in 0..b {
+            sink.store(dst.addr(r0 + r, c0 + c));
+        }
+    }
+    sink.instr(pcb, pcn, costs.transpose_instr_per_elem * (b * b) as u64);
+}
+
+fn emit_convert_row<S: Sink>(
+    src: &MatrixDesc,
+    dst: &MatrixDesc,
+    row: usize,
+    costs: &InstrCost,
+    sink: &mut S,
+) {
+    debug_assert_eq!(src.rows, dst.rows);
+    debug_assert_eq!(src.cols, dst.cols);
+    let (pcb, pcn) = pc::CONVERT;
+    // Gather from src in dst-linear order restricted to this logical row;
+    // at byte granularity both directions are 1 load + 1 store per element,
+    // merged into granules where contiguous.
+    let (nl, _) = walk_row(src, row, costs, sink, |s, a| s.load(a));
+    let (ns, _) = walk_row(dst, row, costs, sink, |s, a| s.store(a));
+    sink.instr(pcb, pcn, (nl + ns) * costs.convert_instr_per_elem);
+}
+
+#[cfg(test)]
+pub(crate) mod test_sink {
+    use super::Sink;
+
+    /// Counting sink for unit tests.
+    #[derive(Debug, Default, Clone)]
+    pub struct Counter {
+        pub instr: u64,
+        pub loads: Vec<u64>,
+        pub stores: Vec<u64>,
+        pub compute: u64,
+    }
+
+    impl Sink for Counter {
+        fn instr(&mut self, _pc: u64, _cb: u32, count: u64) {
+            self.instr += count;
+        }
+        fn load(&mut self, addr: u64) {
+            self.loads.push(addr);
+        }
+        fn store(&mut self, addr: u64) {
+            self.stores.push(addr);
+        }
+        fn compute(&mut self, cycles: u64) {
+            self.compute += cycles;
+        }
+    }
+}

@@ -1,0 +1,27 @@
+//! Transformer workload → memory-access-stream generators (paper §2.1, §3.2).
+//!
+//! A BERT encoder layer is decomposed into *phases* (the components of
+//! Fig. 1/Fig. 7: QKV projections, K-transpose, QKᵀ, softmax, attention×V,
+//! output projection, Add/Norm, feed-forward 1 (+GELU), feed-forward 2,
+//! Add/Norm). Each phase expands into [`WorkItem`]s — tile-granular units
+//! of work that *emit* the exact instruction-fetch / load / store /
+//! accelerator-compute sequence a core would execute, parameterized by the
+//! memory [`Layout`] of every tensor involved.
+//!
+//! The same generators serve single- and multi-core runs: a phase carries
+//! per-core item lists (heads or output block-rows partitioned across
+//! cores, paper §4.2).
+
+pub mod bert;
+pub mod cost;
+pub mod gemm;
+pub mod item;
+pub mod rowops;
+
+pub use bert::{BertConfig, EncoderLayout, LayerPhases, Phase, PhaseClass};
+pub use cost::InstrCost;
+pub use gemm::GemmOp;
+pub use item::{Sink, WorkItem};
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,93 @@
+//! Builders for the non-GEMM phases (paper §3.2): softmax, normalization,
+//! transpose, residual add, and the model-boundary layout conversions.
+
+use crate::layout::MatrixDesc;
+
+use super::item::WorkItem;
+
+/// Softmax over every logical row of `m` (attention scores): two read
+/// passes (running max, exp+sum) and one read+write pass (normalize).
+pub fn softmax_items(m: MatrixDesc, cores: usize) -> Vec<Vec<WorkItem>> {
+    rows_round_robin(m.rows, cores, |row| WorkItem::RowScan { m, row, read_passes: 2, is_norm: false })
+}
+
+/// LayerNorm over every logical row: mean pass, variance pass, then the
+/// normalize read+write pass.
+pub fn layernorm_items(m: MatrixDesc, cores: usize) -> Vec<Vec<WorkItem>> {
+    rows_round_robin(m.rows, cores, |row| WorkItem::RowScan { m, row, read_passes: 2, is_norm: true })
+}
+
+/// Residual add `dst += src`, row-partitioned.
+pub fn residual_items(dst: MatrixDesc, src: MatrixDesc, cores: usize) -> Vec<Vec<WorkItem>> {
+    assert_eq!(dst.rows, src.rows);
+    assert_eq!(dst.cols, src.cols);
+    rows_round_robin(dst.rows, cores, |row| WorkItem::ResidualRow { dst, src, row })
+}
+
+/// Transpose `dst = srcᵀ`, partitioned by destination tile rows.
+pub fn transpose_items(src: MatrixDesc, dst: MatrixDesc, cores: usize) -> Vec<Vec<WorkItem>> {
+    assert_eq!(src.rows, dst.cols);
+    assert_eq!(src.cols, dst.rows);
+    assert_eq!(src.block, dst.block);
+    let mut per_core = vec![Vec::new(); cores];
+    for i in 0..dst.block_rows() {
+        let core = i % cores;
+        for j in 0..dst.block_cols() {
+            per_core[core].push(WorkItem::TransposeTile { src, dst, i, j });
+        }
+    }
+    per_core
+}
+
+/// Layout conversion at the model boundary (§3.2 — only the first input
+/// and final output ever need this).
+pub fn convert_items(src: MatrixDesc, dst: MatrixDesc, cores: usize) -> Vec<Vec<WorkItem>> {
+    assert_eq!(src.rows, dst.rows);
+    assert_eq!(src.cols, dst.cols);
+    assert_ne!(src.layout, dst.layout, "conversion between identical layouts");
+    rows_round_robin(src.rows, cores, |row| WorkItem::ConvertRow { src, dst, row })
+}
+
+fn rows_round_robin<F: Fn(usize) -> WorkItem>(
+    rows: usize,
+    cores: usize,
+    f: F,
+) -> Vec<Vec<WorkItem>> {
+    let mut per_core = vec![Vec::new(); cores];
+    for row in 0..rows {
+        per_core[row % cores].push(f(row));
+    }
+    per_core
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::layout::Layout;
+
+    fn m(r: usize, c: usize, layout: Layout) -> MatrixDesc {
+        MatrixDesc::new(0x1000, r, c, 1, 16, layout)
+    }
+
+    #[test]
+    fn softmax_one_item_per_row_balanced() {
+        let items = softmax_items(m(512, 512, Layout::Bwma), 4);
+        assert!(items.iter().all(|v| v.len() == 128));
+    }
+
+    #[test]
+    fn transpose_covers_dst_grid() {
+        let src = m(64, 512, Layout::Rwma);
+        let dst = MatrixDesc::new(0x80000, 512, 64, 1, 16, Layout::Rwma);
+        let items = transpose_items(src, dst, 2);
+        let total: usize = items.iter().map(|v| v.len()).sum();
+        assert_eq!(total, 32 * 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "identical layouts")]
+    fn convert_same_layout_rejected() {
+        let a = m(32, 32, Layout::Rwma);
+        convert_items(a, a, 1);
+    }
+}

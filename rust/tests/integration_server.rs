@@ -1,0 +1,136 @@
+//! Coordinator integration: the dynamic batcher against a fake runner
+//! (no PJRT needed — the batching, padding, splitting, and metrics logic
+//! is what's under test), plus failure injection.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use bwma::coordinator::server::{BatchRunner, Server, ServerConfig};
+use bwma::coordinator::LatencyStats;
+use bwma::runtime::Tensor;
+
+/// Doubles every element; counts invocations per batch size.
+struct FakeModel {
+    batch: usize,
+    calls: Arc<AtomicU64>,
+    fail: bool,
+}
+
+impl BatchRunner for FakeModel {
+    fn run(&self, stacked: Tensor, out_shape: Vec<usize>) -> Result<Tensor> {
+        self.calls.fetch_add(1, Ordering::SeqCst);
+        if self.fail {
+            bail!("injected model failure");
+        }
+        assert_eq!(stacked.shape[0], self.batch, "dispatched to wrong variant");
+        assert_eq!(out_shape[0], self.batch);
+        Ok(Tensor::new(out_shape, stacked.data.iter().map(|v| v * 2.0).collect()))
+    }
+}
+
+fn start_fake(
+    sizes: &[usize],
+    max_batch: usize,
+    fail: bool,
+) -> (Server, Arc<AtomicU64>) {
+    let calls = Arc::new(AtomicU64::new(0));
+    let calls2 = calls.clone();
+    let sizes = sizes.to_vec();
+    let server = Server::start(
+        ServerConfig { max_batch, batch_timeout: Duration::from_millis(5) },
+        move || {
+            let mut m: BTreeMap<usize, Box<dyn BatchRunner>> = BTreeMap::new();
+            for &s in &sizes {
+                m.insert(s, Box::new(FakeModel { batch: s, calls: calls2.clone(), fail }));
+            }
+            Ok((m, vec![4]))
+        },
+    )
+    .unwrap();
+    (server, calls)
+}
+
+fn req(v: f32) -> Tensor {
+    Tensor::new(vec![4], vec![v; 4])
+}
+
+#[test]
+fn responses_match_requests_one_to_one() {
+    let (server, _) = start_fake(&[1, 2, 4], 4, false);
+    let rxs: Vec<_> = (0..10).map(|i| server.submit(req(i as f32))).collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv().unwrap().unwrap();
+        assert_eq!(resp.output.data, vec![2.0 * i as f32; 4], "request {i} got wrong output");
+    }
+    let metrics = server.shutdown().unwrap();
+    assert_eq!(metrics.requests, 10);
+}
+
+#[test]
+fn batcher_fuses_bursts() {
+    let (server, calls) = start_fake(&[1, 2, 4, 8], 8, false);
+    // Submit a burst of 8 before any can complete (timeout 5ms).
+    let rxs: Vec<_> = (0..8).map(|i| server.submit(req(i as f32))).collect();
+    for rx in rxs {
+        rx.recv().unwrap().unwrap();
+    }
+    let metrics = server.shutdown().unwrap();
+    assert_eq!(metrics.requests, 8);
+    // The burst should need far fewer model calls than requests.
+    assert!(
+        calls.load(Ordering::SeqCst) <= 4,
+        "expected fusion, got {} calls",
+        calls.load(Ordering::SeqCst)
+    );
+    assert!(metrics.mean_batch_size() >= 2.0);
+}
+
+#[test]
+fn odd_remainders_use_smaller_variants_or_padding() {
+    // Variants {2, 4} only: 5 requests → e.g. 4 + pad(2); every request
+    // must still get its own correct answer.
+    let (server, _) = start_fake(&[2, 4], 4, false);
+    let rxs: Vec<_> = (0..5).map(|i| server.submit(req(10.0 + i as f32))).collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv().unwrap().unwrap();
+        assert_eq!(resp.output.data[0], 2.0 * (10.0 + i as f32), "request {i}");
+    }
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn model_failure_propagates_to_every_request_in_batch() {
+    let (server, _) = start_fake(&[1, 4], 4, true);
+    let rxs: Vec<_> = (0..4).map(|i| server.submit(req(i as f32))).collect();
+    for rx in rxs {
+        let resp = rx.recv().unwrap();
+        assert!(resp.is_err(), "injected failure must surface");
+        assert!(format!("{:#}", resp.unwrap_err()).contains("injected"));
+    }
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn factory_failure_fails_start() {
+    let r = Server::start(ServerConfig::default(), || bail!("no artifacts here"));
+    assert!(r.is_err());
+}
+
+#[test]
+fn latency_stats_from_server_shapes() {
+    let (server, _) = start_fake(&[1, 2, 4, 8], 8, false);
+    let rxs: Vec<_> = (0..20).map(|i| server.submit(req(i as f32))).collect();
+    let mut lat = Vec::new();
+    for rx in rxs {
+        let resp = rx.recv().unwrap().unwrap();
+        lat.push(resp.queue_time + resp.exec_time);
+    }
+    let stats = LatencyStats::from_samples(lat);
+    assert!(stats.p99() >= stats.p50());
+    assert_eq!(stats.count(), 20);
+    server.shutdown().unwrap();
+}

@@ -1,0 +1,94 @@
+//! Cross-module integration: config system → workload → simulator →
+//! experiment drivers, at the reduced geometry.
+
+use bwma::accel::AccelKind;
+use bwma::config;
+use bwma::coordinator::experiment::{run_experiment, Scale};
+use bwma::coordinator::report;
+use bwma::layout::Layout;
+use bwma::sim::{simulate, SimConfig};
+use bwma::workload::PhaseClass;
+
+#[test]
+fn presets_drive_the_simulator() {
+    for name in config::preset_names() {
+        let mut cfg = config::load(name).unwrap();
+        // Shrink to the tiny geometry so the full preset matrix stays fast.
+        cfg.bert = bwma::workload::BertConfig::tiny();
+        let res = simulate(&cfg);
+        assert!(res.total_cycles > 0, "{name}");
+        assert_eq!(res.phases.len(), 10, "{name}: one entry per component");
+    }
+}
+
+#[test]
+fn config_file_overrides_flow_through() {
+    let dir = std::env::temp_dir().join(format!("bwma-int-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join("cfg.conf");
+    std::fs::write(
+        &p,
+        "base = sa16-bwma-1core\ncores = 2\n[bert]\nseq = 128\nd_model = 192\nheads = 3\nd_ff = 768\nlayers = 2\n",
+    )
+    .unwrap();
+    let cfg = config::load(p.to_str().unwrap()).unwrap();
+    let res = simulate(&cfg);
+    assert_eq!(res.mem.l1d.len(), 2, "per-core L1 stats");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn experiments_emit_markdown() {
+    let outs = run_experiment("fig7", Scale::Tiny).unwrap();
+    let md = report::markdown(&outs);
+    assert!(md.contains("### fig7"));
+    assert!(md.contains("GEMM"));
+}
+
+#[test]
+fn deeper_model_scales_linearly_in_layers() {
+    let mut one = SimConfig::tiny(AccelKind::Sa { b: 16 }, Layout::Bwma, 1);
+    one.sim_layers = 1;
+    let mut two = one.clone();
+    two.sim_layers = 2;
+    let r1 = simulate(&one);
+    let r2 = simulate(&two);
+    let ratio = r2.total_cycles as f64 / r1.total_cycles as f64;
+    assert!(
+        (1.7..=2.3).contains(&ratio),
+        "2 layers should cost ~2x one layer (warm caches make it slightly sub-linear): {ratio:.2}"
+    );
+}
+
+#[test]
+fn convert_phases_only_when_bwma_and_requested() {
+    let mut cfg = SimConfig::tiny(AccelKind::Sa { b: 16 }, Layout::Bwma, 1);
+    cfg.convert_boundaries = true;
+    let with = simulate(&cfg);
+    assert!(with.phases.iter().any(|p| p.class == PhaseClass::Convert));
+
+    cfg.convert_boundaries = false;
+    let without = simulate(&cfg);
+    assert!(without.phases.iter().all(|p| p.class != PhaseClass::Convert));
+    assert!(with.total_cycles > without.total_cycles);
+}
+
+#[test]
+fn accel_kind_changes_compute_not_traffic() {
+    let sa = simulate(&SimConfig::tiny(AccelKind::Sa { b: 16 }, Layout::Bwma, 1));
+    let simd = simulate(&SimConfig::tiny(AccelKind::Simd { b: 16 }, Layout::Bwma, 1));
+    // Same kernel size → identical address streams → identical cache stats.
+    assert_eq!(sa.mem.l1d_total().accesses, simd.mem.l1d_total().accesses);
+    assert_eq!(sa.mem.l1d_total().misses, simd.mem.l1d_total().misses);
+    // But different accelerator-busy time.
+    assert!(simd.accel_busy_cycles > sa.accel_busy_cycles);
+}
+
+#[test]
+fn instruction_side_invariants() {
+    let r = simulate(&SimConfig::tiny(AccelKind::Sa { b: 16 }, Layout::Rwma, 1));
+    // I-fetch count equals the engine's dynamic instruction count.
+    assert_eq!(r.instructions, r.mem.l1i_total().accesses);
+    // Total cycles exceed instructions (IPC ≤ 1 by construction).
+    assert!(r.total_cycles >= r.instructions);
+}

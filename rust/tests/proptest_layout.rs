@@ -1,0 +1,140 @@
+//! Property tests on the layout invariants (the paper's correctness
+//! core: BWMA is a pure permutation, tiles are bursts, access counts are
+//! layout-invariant).
+
+use bwma::layout::{
+    bwma_to_rwma, rwma_to_bwma, tile_spans, AddressMap, Layout, MatrixDesc, TileIter, TileRef,
+};
+use bwma::util::proptest::check_default;
+use bwma::util::XorShift64;
+
+fn random_dims(rng: &mut XorShift64) -> (usize, usize, usize) {
+    let b = *rng.pick(&[4usize, 8, 16]);
+    let rows = b * rng.range(1, 9) as usize;
+    let cols = b * rng.range(1, 9) as usize;
+    (rows, cols, b)
+}
+
+#[test]
+fn prop_conversion_roundtrip_is_identity() {
+    check_default("convert-roundtrip", |rng| {
+        let (rows, cols, b) = random_dims(rng);
+        let src: Vec<u32> = (0..(rows * cols) as u32).map(|i| i ^ 0xA5A5).collect();
+        let back = bwma_to_rwma(&rwma_to_bwma(&src, rows, cols, b), rows, cols, b);
+        assert_eq!(back, src);
+    });
+}
+
+#[test]
+fn prop_bwma_map_is_a_bijection() {
+    check_default("bwma-bijection", |rng| {
+        let (rows, cols, b) = random_dims(rng);
+        let m = MatrixDesc::new(0, rows, cols, 1, b, Layout::Bwma);
+        let mut seen = vec![false; rows * cols];
+        for r in 0..rows {
+            for c in 0..cols {
+                let i = m.elem_index(r, c);
+                assert!(!seen[i], "collision at ({r},{c})");
+                seen[i] = true;
+                assert_eq!(m.elem_coords(i), (r, c), "inverse mismatch");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_conversion_agrees_with_address_map() {
+    check_default("convert-vs-map", |rng| {
+        let (rows, cols, b) = random_dims(rng);
+        let src: Vec<u16> = (0..(rows * cols) as u16).collect();
+        let blocked = rwma_to_bwma(&src, rows, cols, b);
+        let m = MatrixDesc::new(0, rows, cols, 1, b, Layout::Bwma);
+        // Spot-check a handful of random coordinates per case.
+        for _ in 0..16 {
+            let r = rng.below(rows as u64) as usize;
+            let c = rng.below(cols as u64) as usize;
+            assert_eq!(blocked[m.elem_index(r, c)], src[r * cols + c]);
+        }
+    });
+}
+
+#[test]
+fn prop_tile_spans_partition_the_tile() {
+    // The spans of a tile cover exactly b*b*elem bytes, are disjoint, and
+    // under BWMA form a single burst.
+    check_default("tile-spans", |rng| {
+        let (rows, cols, b) = random_dims(rng);
+        let elem = *rng.pick(&[1usize, 2, 4]);
+        for layout in [Layout::Rwma, Layout::Bwma] {
+            let m = MatrixDesc::new(0x10_000, rows, cols, elem, b, layout);
+            let t = TileRef {
+                block_row: rng.below(m.block_rows() as u64) as usize,
+                block_col: rng.below(m.block_cols() as u64) as usize,
+            };
+            let w = tile_spans(&m, t);
+            assert_eq!(w.total_bytes(), (b * b * elem) as u64);
+            // Disjointness: spans sorted by address must not overlap.
+            let mut spans = w.spans.clone();
+            spans.sort();
+            for pair in spans.windows(2) {
+                assert!(pair[0].0 + pair[0].1 as u64 <= pair[1].0, "overlap");
+            }
+            if layout == Layout::Bwma {
+                assert_eq!(w.spans.len(), 1, "BWMA tile must be one burst");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_tiles_tile_the_matrix() {
+    // Every byte of the matrix belongs to exactly one tile.
+    check_default("tiles-partition-matrix", |rng| {
+        let (rows, cols, b) = random_dims(rng);
+        for layout in [Layout::Rwma, Layout::Bwma] {
+            let m = MatrixDesc::new(0, rows, cols, 1, b, layout);
+            let mut covered = vec![0u8; (rows * cols) as usize];
+            for t in TileIter::new(&m) {
+                for (addr, len) in tile_spans(&m, t).spans {
+                    for off in 0..len as u64 {
+                        covered[(addr + off) as usize] += 1;
+                    }
+                }
+            }
+            assert!(covered.iter().all(|&c| c == 1), "{layout}: not a partition");
+        }
+    });
+}
+
+#[test]
+fn prop_col_views_agree_with_backing() {
+    check_default("col-view", |rng| {
+        let (rows, cols, b) = random_dims(rng);
+        if cols < 2 * b {
+            return;
+        }
+        for layout in [Layout::Rwma, Layout::Bwma] {
+            let m = MatrixDesc::new(0x4000, rows, cols, 1, b, layout);
+            let nviews = cols / b;
+            let v_idx = rng.below(nviews as u64) as usize;
+            let view = m.col_view(v_idx * b, b);
+            for r in 0..rows {
+                for c in 0..b {
+                    assert_eq!(view.addr(r, c), m.addr(r, v_idx * b + c), "{layout}");
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_layout_preserves_total_footprint() {
+    check_default("footprint", |rng| {
+        let (rows, cols, b) = random_dims(rng);
+        let elem = *rng.pick(&[1usize, 2, 4]);
+        let r = MatrixDesc::new(0, rows, cols, elem, b, Layout::Rwma);
+        let w = r.with_layout(Layout::Bwma);
+        assert_eq!(r.bytes(), w.bytes());
+        assert_eq!(r.end(), w.end());
+    });
+}

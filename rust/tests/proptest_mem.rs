@@ -1,0 +1,113 @@
+//! Property tests on the memory-hierarchy model.
+
+use bwma::mem::{AccessKind, Cache, CacheConfig, MemoryConfig, MemorySystem};
+use bwma::util::proptest::check_default;
+use bwma::util::XorShift64;
+
+fn random_trace(rng: &mut XorShift64, n: usize, span: u64) -> Vec<u64> {
+    (0..n).map(|_| rng.below(span) * 64).collect()
+}
+
+#[test]
+fn prop_occupancy_never_exceeds_capacity() {
+    check_default("occupancy-bound", |rng| {
+        let size = *rng.pick(&[1024usize, 4096, 32768]);
+        let ways = *rng.pick(&[2usize, 4, 8]);
+        let mut c = Cache::new(CacheConfig::new(size, ways));
+        for line in random_trace(rng, 500, 4096) {
+            c.access(line / 64, rng.below(2) == 0);
+        }
+        assert!(c.occupancy() <= size / 64);
+    });
+}
+
+#[test]
+fn prop_second_access_to_resident_line_hits() {
+    check_default("hit-after-fill", |rng| {
+        let mut c = Cache::new(CacheConfig::new(4096, 4));
+        let line = rng.below(1 << 20);
+        c.access(line, false);
+        assert!(c.access(line, false).is_hit());
+    });
+}
+
+#[test]
+fn prop_bigger_cache_never_misses_more_lru() {
+    // Inclusion property of LRU: a larger (same-ways-scaled) cache misses
+    // a subset of what the smaller one misses on any trace.
+    check_default("lru-inclusion", |rng| {
+        let trace = random_trace(rng, 800, 512);
+        let mut misses = Vec::new();
+        for size in [2048usize, 8192] {
+            let mut c = Cache::new(CacheConfig::new(size, 4));
+            let mut m = 0u64;
+            for &a in &trace {
+                if !c.access(a / 64, false).is_hit() {
+                    m += 1;
+                }
+            }
+            misses.push(m);
+        }
+        assert!(misses[1] <= misses[0], "8K misses {} > 2K misses {}", misses[1], misses[0]);
+    });
+}
+
+#[test]
+fn prop_memsystem_hits_plus_misses_equal_accesses() {
+    check_default("stats-conservation", |rng| {
+        let cores = *rng.pick(&[1usize, 2, 4]);
+        let mut m = MemorySystem::new(MemoryConfig::paper(cores));
+        let mut now = 0u64;
+        for _ in 0..400 {
+            let core = rng.below(cores as u64) as usize;
+            let kind = if rng.below(4) == 0 { AccessKind::Store } else { AccessKind::Load };
+            now += m.access(core, kind, rng.below(1 << 22), now);
+        }
+        for st in &m.stats.l1d {
+            assert_eq!(st.hits + st.misses, st.accesses);
+        }
+        assert_eq!(m.stats.l2.hits + m.stats.l2.misses, m.stats.l2.accesses);
+        // Demand path: every L1 miss reaches L2.
+        let l1_misses: u64 = m.stats.l1d.iter().map(|s| s.misses).sum();
+        assert_eq!(m.stats.l2.accesses, l1_misses);
+    });
+}
+
+#[test]
+fn prop_latency_monotone_in_hierarchy_params() {
+    // Raising the L2 hit latency can never make a trace faster.
+    check_default("latency-monotone", |rng| {
+        let trace = random_trace(rng, 300, 4096);
+        let run = |l2_hit: u64| {
+            let mut cfg = MemoryConfig::paper(1);
+            cfg.l2_hit_cycles = l2_hit;
+            let mut m = MemorySystem::new(cfg);
+            let mut now = 0u64;
+            for &a in &trace {
+                now += m.access(0, AccessKind::Load, a, now);
+            }
+            now
+        };
+        assert!(run(40) >= run(20));
+    });
+}
+
+#[test]
+fn prop_deterministic_replay() {
+    check_default("replay-determinism", |rng| {
+        let trace = random_trace(rng, 300, 2048);
+        let run = || {
+            let mut m = MemorySystem::new(MemoryConfig::paper(2));
+            let mut now = 0u64;
+            for (i, &a) in trace.iter().enumerate() {
+                now += m.access(i % 2, AccessKind::Load, a, now);
+            }
+            (now, m.stats.l1d[0], m.stats.l2)
+        };
+        let (t1, l1a, l2a) = run();
+        let (t2, l1b, l2b) = run();
+        assert_eq!(t1, t2);
+        assert_eq!(l1a, l1b);
+        assert_eq!(l2a, l2b);
+    });
+}
