@@ -3,19 +3,20 @@
 //! 1. **Timing** — simulate one BERT-base encoder layer on a single-core
 //!    SA16x16 system under RWMA and BWMA and print the speed-up (the
 //!    paper's Fig. 6a data point).
-//! 2. **Numerics** — load the AOT-compiled encoder artifact via PJRT, run
-//!    a real forward pass from Rust, and round-trip the block-wise layout
-//!    packing on the host side.
+//! 2. **Numerics** — run a real forward pass on the native blocked
+//!    backend: pack the activation block-wise, execute the f32 blocked
+//!    kernels directly on the packed buffers, unpack, and cross-check
+//!    against the row-major reference kernels. No Python, no artifacts.
 //!
-//! Run: `cargo run --release --example quickstart` (after `make artifacts`).
+//! Run: `cargo run --release --example quickstart`
 
 use anyhow::Result;
 
 use bwma::accel::AccelKind;
 use bwma::layout::Layout;
-use bwma::runtime::{artifacts_dir, GoldenSet, Runtime, Tensor};
+use bwma::runtime::{NativeModel, Tensor};
 use bwma::sim::{simulate, SimConfig};
-use bwma::util::table;
+use bwma::util::{table, XorShift64};
 
 fn main() -> Result<()> {
     // ---- 1. Timing: RWMA vs BWMA on the simulated testbed ----
@@ -37,19 +38,21 @@ fn main() -> Result<()> {
         rwma.mem.l1d_total().misses as f64 / bwma.mem.l1d_total().misses as f64
     );
 
-    // ---- 2. Numerics: run the compiled encoder from Rust via PJRT ----
-    println!("# loading AOT artifact and running a real forward pass…");
-    let dir = artifacts_dir()?;
-    let rt = Runtime::cpu()?;
-    let golden = GoldenSet::load(&dir, "encoder_jnp_b16")?;
-    let exe = rt.load_hlo(&dir.join("encoder_jnp_b16.hlo.txt"))?;
-    let out = exe.run1(&golden.inputs(), golden.expected().shape.clone())?;
+    // ---- 2. Numerics: a real forward pass on the native backend ----
+    println!("# running an FFN block on the native blocked backend…");
+    let model = NativeModel::new(128, 768, 3072, 16, 0x9EED)?;
+    let mut rng = XorShift64::new(0xF00D);
+    let mut data = vec![0.0f32; 128 * 768];
+    rng.fill_f32(&mut data);
+    let x = Tensor::new(model.in_shape(), data);
+    let out = model.forward(&x)?;
+    let golden = model.forward_reference(&x)?;
     println!(
-        "encoder output: shape {:?}, max|Δ| vs python golden = {:.2e}",
+        "FFN output: shape {:?}, max|Δ| vs row-major reference = {:.2e}",
         out.shape,
-        out.max_abs_diff(golden.expected())
+        out.max_abs_diff(&golden)
     );
-    assert!(out.allclose(golden.expected(), 1e-4, 1e-4), "numerics must match");
+    assert!(out.allclose(&golden, 1e-3, 1e-3), "numerics must match");
 
     // ---- 3. Host-side layout round-trip (the BWMA pack itself) ----
     let x = Tensor::new(vec![64, 96], (0..64 * 96).map(|i| (i % 251) as f32).collect());

@@ -6,7 +6,7 @@ serialized memory image) are **contiguous** — the Pallas HBM→VMEM copy per
 grid step is exactly the paper's "one contiguous burst per accelerator
 load". The kernel is weight-stationary in spirit: for output block-row
 ``i`` / block-col ``j`` it streams the K-dimension blocks and accumulates
-in f32, the MXU-friendly dataflow (DESIGN.md §Hardware-Adaptation).
+in f32, the MXU-friendly dataflow (see rust/README.md for the layout map).
 
 ``interpret=True`` everywhere: real TPU lowering emits Mosaic custom-calls
 that the CPU PJRT plugin cannot execute; interpret mode lowers to plain

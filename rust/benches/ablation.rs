@@ -1,6 +1,6 @@
-//! Ablation bench — the design-choice studies DESIGN.md calls out,
-//! beyond the paper's own figures (reduced geometry to keep the sweep
-//! fast; shapes, not absolute cycles, are the subject):
+//! Ablation bench — design-choice studies beyond the paper's own figures
+//! (see rust/README.md for the experiment index; reduced geometry keeps
+//! the sweep fast — shapes, not absolute cycles, are the subject):
 //!
 //! * kernel-size sweep 4..32 (where does the BWMA advantage peak?)
 //! * hardware stream prefetcher on/off (does BWMA's win survive one?)

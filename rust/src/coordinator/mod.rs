@@ -1,7 +1,9 @@
 //! Layer-3 coordinator: the paper's experiments as first-class drivers,
-//! plus a threaded inference server (router → dynamic batcher → PJRT
-//! executor) proving the compiled BWMA artifacts serve real traffic with
-//! Python nowhere on the request path.
+//! plus a threaded inference server (router → dynamic batcher →
+//! executor) proving the BWMA execution path serves real traffic with
+//! Python nowhere in sight. The executor is any [`server::BatchRunner`]:
+//! the native blocked-kernel model by default, compiled PJRT artifacts
+//! with `--features pjrt`.
 //!
 //! (The usual tokio stack is unavailable in this offline build; the
 //! server uses std threads + channels, which at this request scale is

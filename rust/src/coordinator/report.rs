@@ -1,5 +1,5 @@
-//! Markdown report rendering: `bwma experiment all --markdown` emits the
-//! section EXPERIMENTS.md embeds.
+//! Markdown report rendering: `bwma experiment all --markdown` emits a
+//! paste-ready results section (see rust/README.md's experiment index).
 
 use super::experiment::ExperimentOutput;
 

@@ -1,4 +1,5 @@
-//! Threaded inference server: router → dynamic batcher → PJRT executor.
+//! Threaded inference server: router → dynamic batcher → executor
+//! (native blocked kernels by default; PJRT with `--features pjrt`).
 //!
 //! Requests carry a blocked activation tensor (one sequence). The batcher
 //! greedily drains the queue up to `max_batch` (bounded by a short
@@ -6,9 +7,9 @@
 //! activations along a new leading axis, picks the largest compiled batch
 //! variant that fits, and splits the outputs back per request.
 //!
-//! PJRT handles are not `Send`, so the executor thread *owns* them: the
-//! caller passes a factory that loads/compiles artifacts inside the
-//! thread. Everything crossing threads is plain data.
+//! Executor handles may not be `Send` (PJRT's aren't), so the executor
+//! thread *owns* them: the caller passes a factory that loads/builds the
+//! model inside the thread. Everything crossing threads is plain data.
 
 use std::collections::BTreeMap;
 use std::sync::mpsc;
@@ -16,17 +17,62 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::runtime::{Executable, Tensor};
+#[cfg(feature = "pjrt")]
+use crate::runtime::Executable;
+use crate::runtime::{NativeModel, Tensor};
 
 use super::metrics::ServerMetrics;
 
-/// One compiled batch variant the batcher can dispatch to. The blanket
-/// impl covers plain artifacts; [`WithParams`] closes over fixed model
-/// parameters so the request only carries the activation.
+/// One model variant the batcher can dispatch a stacked batch to. The
+/// native backend's [`NativeModel`] implements it out of the box; with
+/// the `pjrt` feature, compiled artifacts ([`Executable`]/[`WithParams`])
+/// do too.
 pub trait BatchRunner {
     fn run(&self, stacked: Tensor, out_shape: Vec<usize>) -> Result<Tensor>;
 }
 
+/// The default executor: run each sequence of the stacked batch through
+/// the blocked-kernel forward pass. Shape errors are returned as `Err`
+/// (never panicked): a malformed request must fail itself, not kill the
+/// executor thread for everyone else.
+impl BatchRunner for NativeModel {
+    fn run(&self, stacked: Tensor, out_shape: Vec<usize>) -> Result<Tensor> {
+        anyhow::ensure!(stacked.shape.len() == 3, "stacked batch must be [batch, seq, d]");
+        let bsz = stacked.shape[0];
+        let per_seq: usize = stacked.shape[1..].iter().product();
+        anyhow::ensure!(
+            stacked.shape[1..] == self.in_shape()[..],
+            "request shape {:?} does not match model input {:?}",
+            &stacked.shape[1..],
+            self.in_shape()
+        );
+        let mut out = Vec::with_capacity(bsz * per_seq);
+        for s in 0..bsz {
+            let x = Tensor::new(
+                self.in_shape(),
+                stacked.data[s * per_seq..(s + 1) * per_seq].to_vec(),
+            );
+            out.extend_from_slice(&self.forward(&x)?.data);
+        }
+        anyhow::ensure!(
+            out.len() == out_shape.iter().product::<usize>(),
+            "forward produced {} elements, caller expected shape {out_shape:?}",
+            out.len()
+        );
+        Ok(Tensor::new(out_shape, out))
+    }
+}
+
+/// Share one set of weights across all batch-variant slots: the native
+/// model handles any batch size, so the variant map can hold `Arc`
+/// clones instead of duplicating the packed weights per slot.
+impl BatchRunner for std::sync::Arc<NativeModel> {
+    fn run(&self, stacked: Tensor, out_shape: Vec<usize>) -> Result<Tensor> {
+        BatchRunner::run(self.as_ref(), stacked, out_shape)
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl BatchRunner for Executable {
     fn run(&self, stacked: Tensor, out_shape: Vec<usize>) -> Result<Tensor> {
         self.run1(&[stacked], out_shape)
@@ -36,11 +82,13 @@ impl BatchRunner for Executable {
 /// An executable whose trailing inputs (model parameters) are fixed at
 /// load time — the deployment shape: weights live with the model, the
 /// request path only moves activations.
+#[cfg(feature = "pjrt")]
 pub struct WithParams {
     pub exe: Executable,
     pub params: Vec<Tensor>,
 }
 
+#[cfg(feature = "pjrt")]
 impl BatchRunner for WithParams {
     fn run(&self, stacked: Tensor, out_shape: Vec<usize>) -> Result<Tensor> {
         let mut inputs = Vec::with_capacity(1 + self.params.len());

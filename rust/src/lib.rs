@@ -12,15 +12,18 @@
 //!    ([`mem`], [`accel`], [`workload`], [`sim`]) that replays the exact
 //!    address streams of an int8 BERT-base encoder under RWMA or BWMA and
 //!    reproduces the paper's Figures 6–8;
-//! 2. **Numerics** — AOT-compiled JAX/Pallas artifacts (built by
-//!    `python/compile/`, block-wise layouts expressed as Pallas
-//!    `BlockSpec`s) executed from Rust via PJRT ([`runtime`]);
+//! 2. **Numerics** — a native blocked-execution backend
+//!    ([`runtime::native`]): f32 and int8 GEMM, bias+GELU, layernorm, and
+//!    softmax kernels operating directly on BWMA-packed buffers (the
+//!    default). With `--features pjrt`, AOT-compiled JAX/Pallas artifacts
+//!    (built by `python/compile/`) execute through PJRT instead;
 //! 3. **Serving** — a request router + dynamic batcher ([`coordinator`])
-//!    that runs the compiled encoder on the request path with Python
-//!    nowhere in sight.
+//!    that runs either backend on the request path with Python nowhere
+//!    in sight.
 //!
-//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
-//! paper-vs-measured results.
+//! See `rust/README.md` for build instructions, the feature matrix, and
+//! the experiment index (`bwma experiment …` regenerates every paper
+//! figure; `bwma verify all` checks backend numerics against references).
 
 pub mod accel;
 pub mod analysis;

@@ -4,8 +4,12 @@
 //!   experiment <id>    regenerate a paper table/figure (fig6a, fig6b,
 //!                      fig7, fig8, convert-overhead, headline, all)
 //!   simulate <config>  run one simulation (preset name or config file)
-//!   serve              threaded batch-serving demo over PJRT artifacts
-//!   verify <tag>       run an artifact against its goldens
+//!   serve              threaded batch-serving demo (native blocked
+//!                      kernels by default; PJRT with --backend pjrt on a
+//!                      `--features pjrt` build)
+//!   verify <tag>       check backend numerics against references
+//!                      (native suite by default; PJRT goldens with
+//!                      --backend pjrt)
 //!   config <list|dump> inspect configuration presets
 //!
 //! (Arg parsing is hand-rolled: the offline crate cache has no clap.)
@@ -17,9 +21,13 @@ use anyhow::{bail, Context, Result};
 
 use bwma::config;
 use bwma::coordinator::experiment::{run_experiment, Scale};
-use bwma::coordinator::server::{BatchRunner, WithParams};
+use bwma::coordinator::server::BatchRunner;
+#[cfg(feature = "pjrt")]
+use bwma::coordinator::server::WithParams;
 use bwma::coordinator::{report, Server, ServerConfig};
-use bwma::runtime::{artifacts_dir, GoldenSet, Runtime, Tensor};
+#[cfg(feature = "pjrt")]
+use bwma::runtime::{artifacts_dir, GoldenSet, Runtime};
+use bwma::runtime::{native_tags, run_native_check, NativeModel, Tensor};
 use bwma::sim::simulate;
 use bwma::util::{table, XorShift64};
 
@@ -61,9 +69,15 @@ USAGE:
   bwma experiment <fig6a|fig6b|fig7|fig8|convert-overhead|headline|all>
                   [--scale paper|tiny] [--markdown]
   bwma simulate <preset|config-file> [--layers N] [--convert]
-  bwma serve [--requests N] [--max-batch B] [--tag encoder_jnp_b16]
-  bwma verify <artifact-tag|all>
+  bwma serve [--requests N] [--max-batch B] [--backend native|pjrt]
+             [--tag encoder_jnp_b16]
+  bwma verify <check-tag|all> [--backend native|pjrt]
   bwma config <list|dump <preset>>
+
+The default backend is `native`: blocked CPU kernels executing directly on
+BWMA-packed buffers, no artifacts or Python required. The `pjrt` backend
+needs a build with `--features pjrt` (and real xla bindings) plus
+artifacts from `python/compile/aot.py`.
 ";
 
 fn cmd_experiment(args: &[String]) -> Result<()> {
@@ -138,8 +152,78 @@ fn cmd_simulate(args: &[String]) -> Result<()> {
 fn cmd_serve(args: &[String]) -> Result<()> {
     let n_requests: usize = opt(args, "--requests").unwrap_or("64").parse()?;
     let max_batch: usize = opt(args, "--max-batch").unwrap_or("8").parse()?;
-    let tag = opt(args, "--tag").unwrap_or("encoder_jnp_b16").to_string();
+    match opt(args, "--backend").unwrap_or("native") {
+        "native" => serve_native(n_requests, max_batch),
+        #[cfg(feature = "pjrt")]
+        "pjrt" => serve_pjrt(args, n_requests, max_batch),
+        #[cfg(not(feature = "pjrt"))]
+        "pjrt" => bail!("this build has no PJRT support (rebuild with --features pjrt)"),
+        other => bail!("unknown backend {other:?} (native|pjrt)"),
+    }
+}
 
+/// Drive the batcher with synthetic traffic and report serving metrics.
+fn drive_server(
+    server: Server,
+    n_requests: usize,
+    in_shape: &[usize],
+    label: &str,
+) -> Result<()> {
+    let mut rng = XorShift64::new(0xC0FFEE);
+    let mut pending = Vec::new();
+    let n_in: usize = in_shape.iter().product();
+    let t0 = Instant::now();
+    for _ in 0..n_requests {
+        let mut data = vec![0.0f32; n_in];
+        rng.fill_f32(&mut data);
+        pending.push(server.submit(Tensor::new(in_shape.to_vec(), data)));
+    }
+    let mut latencies = Vec::new();
+    for rx in pending {
+        let resp = rx.recv().context("response channel")??;
+        latencies.push(resp.queue_time + resp.exec_time);
+    }
+    let wall = t0.elapsed();
+    let metrics = server.shutdown()?;
+    let stats = bwma::coordinator::LatencyStats::from_samples(latencies);
+    println!(
+        "done ({label}): {} requests in {wall:?} → {:.1} req/s | p50 {:?} p99 {:?} | {} batches, mean size {:.2}",
+        metrics.requests,
+        n_requests as f64 / wall.as_secs_f64(),
+        stats.p50(),
+        stats.p99(),
+        metrics.batches,
+        metrics.mean_batch_size(),
+    );
+    Ok(())
+}
+
+/// Serve on the native blocked-execution backend: a packed-weights FFN
+/// block, batch variants 1/2/4/8, nothing loaded from disk.
+fn serve_native(n_requests: usize, max_batch: usize) -> Result<()> {
+    let (seq, d_model, d_ff, block) = (64usize, 96usize, 192usize, 16usize);
+    let model = NativeModel::new(seq, d_model, d_ff, block, 0xB3D)?;
+    let in_shape = model.in_shape();
+    let out_shape = model.out_shape();
+    let server = Server::start(ServerConfig { max_batch, ..Default::default() }, move || {
+        // One set of weights, shared by every batch-variant slot.
+        let model = std::sync::Arc::new(model);
+        let mut variants: BTreeMap<usize, Box<dyn BatchRunner>> = BTreeMap::new();
+        for bsz in [1usize, 2, 4, 8] {
+            variants.insert(bsz, Box::new(model.clone()));
+        }
+        Ok((variants, out_shape))
+    })?;
+    println!(
+        "serving {n_requests} requests (max batch {max_batch}, native FFN {seq}x{d_model}→{d_ff}, block {block})…"
+    );
+    drive_server(server, n_requests, &in_shape, "native")
+}
+
+/// Serve compiled PJRT artifacts (requires `make artifacts`).
+#[cfg(feature = "pjrt")]
+fn serve_pjrt(args: &[String], n_requests: usize, max_batch: usize) -> Result<()> {
+    let tag = opt(args, "--tag").unwrap_or("encoder_jnp_b16").to_string();
     let dir = artifacts_dir()?;
     let golden = GoldenSet::load(&dir, &tag)?;
     let in_shape = golden.tensors["in_x"].shape.clone();
@@ -169,39 +253,52 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         anyhow::ensure!(!variants.is_empty(), "no batch artifacts for {tag2}; run `make artifacts`");
         Ok((variants, out_shape2))
     })?;
-
     println!("serving {n_requests} requests (max batch {max_batch}, artifact {tag})…");
-    let mut rng = XorShift64::new(0xC0FFEE);
-    let mut pending = Vec::new();
-    let n_in: usize = in_shape.iter().product();
-    let t0 = Instant::now();
-    for _ in 0..n_requests {
-        let mut data = vec![0.0f32; n_in];
-        rng.fill_f32(&mut data);
-        pending.push(server.submit(Tensor::new(in_shape.clone(), data)));
-    }
-    let mut latencies = Vec::new();
-    for rx in pending {
-        let resp = rx.recv().context("response channel")??;
-        latencies.push(resp.queue_time + resp.exec_time);
-    }
-    let wall = t0.elapsed();
-    let metrics = server.shutdown()?;
-    let stats = bwma::coordinator::LatencyStats::from_samples(latencies);
-    println!(
-        "done: {} requests in {wall:?} → {:.1} req/s | p50 {:?} p99 {:?} | {} batches, mean size {:.2}",
-        metrics.requests,
-        n_requests as f64 / wall.as_secs_f64(),
-        stats.p50(),
-        stats.p99(),
-        metrics.batches,
-        metrics.mean_batch_size(),
-    );
-    Ok(())
+    drive_server(server, n_requests, &in_shape, "pjrt")
 }
 
 fn cmd_verify(args: &[String]) -> Result<()> {
-    let tag = args.first().context("artifact tag required (or `all`)")?;
+    let tag = args.first().context("check tag required (or `all`)")?;
+    match opt(args, "--backend").unwrap_or("native") {
+        "native" => verify_native(tag),
+        #[cfg(feature = "pjrt")]
+        "pjrt" => verify_pjrt(tag),
+        #[cfg(not(feature = "pjrt"))]
+        "pjrt" => bail!("this build has no PJRT support (rebuild with --features pjrt)"),
+        other => bail!("unknown backend {other:?} (native|pjrt)"),
+    }
+}
+
+/// Verify the native blocked kernels: pack inputs block-wise, execute on
+/// packed buffers, unpack, and compare against the row-major references.
+fn verify_native(tag: &str) -> Result<()> {
+    let tags: Vec<&str> = if tag == "all" {
+        native_tags().to_vec()
+    } else {
+        vec![tag]
+    };
+    println!("backend: native (blocked CPU kernels on BWMA-packed buffers)");
+    let mut failed = false;
+    for t in &tags {
+        let t0 = Instant::now();
+        let check = run_native_check(t)?;
+        let dt = t0.elapsed();
+        println!(
+            "{t:<24} max|Δ|={:.3e}  exec={dt:?}  {}",
+            check.max_diff,
+            if check.ok { "OK" } else { "FAIL" }
+        );
+        failed |= !check.ok;
+    }
+    if failed {
+        bail!("native backend does not reproduce its references");
+    }
+    Ok(())
+}
+
+/// Verify compiled PJRT artifacts against their Python goldens.
+#[cfg(feature = "pjrt")]
+fn verify_pjrt(tag: &str) -> Result<()> {
     let dir = artifacts_dir()?;
     let tags: Vec<String> = if tag == "all" {
         let mut v = Vec::new();
@@ -218,7 +315,7 @@ fn cmd_verify(args: &[String]) -> Result<()> {
         v.sort();
         v
     } else {
-        vec![tag.clone()]
+        vec![tag.to_string()]
     };
     let rt = Runtime::cpu()?;
     println!("platform: {} ({} devices)", rt.platform(), rt.device_count());

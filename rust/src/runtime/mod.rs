@@ -1,20 +1,32 @@
-//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them on
-//! the request path — Python is build-time only.
+//! Execution runtime. Two backends share the host-side [`Tensor`]
+//! currency and the blocked pack/unpack boundary:
 //!
-//! Flow (see /opt/xla-example/load_hlo for the reference wiring):
-//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
-//! `XlaComputation::from_proto` → `client.compile` → `execute`.
-//!
-//! HLO *text* is the interchange format: the published xla crate links
-//! xla_extension 0.5.1, which rejects the 64-bit instruction ids in
-//! jax ≥ 0.5's serialized protos; the text parser reassigns ids.
+//! * **native** (default, always built) — pure-Rust blocked kernels
+//!   ([`native`]) executing f32/int8 GEMM, bias+GELU, layernorm, and
+//!   softmax directly on BWMA-packed buffers. `bwma serve` and
+//!   `bwma verify` run on this backend out of the box, no Python, no
+//!   artifacts, no external dependencies.
+//! * **PJRT** (`--features pjrt`) — load AOT-compiled HLO-text artifacts
+//!   (built by `python/compile/aot.py`) and execute them through the
+//!   `xla` crate's PJRT client: `PjRtClient::cpu()` →
+//!   `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//!   `client.compile` → `execute`. HLO *text* is the interchange format:
+//!   the published xla crate links xla_extension 0.5.1, which rejects the
+//!   64-bit instruction ids in jax ≥ 0.5's serialized protos; the text
+//!   parser reassigns ids. (The offline workspace vendors an `xla` API
+//!   stub so this feature still type-checks without the real bindings —
+//!   see `rust/vendor/xla`.)
 
 mod artifacts;
+#[cfg(feature = "pjrt")]
 mod client;
+pub mod native;
 pub mod quant;
 mod tensor;
 
 pub use artifacts::{artifacts_dir, GoldenSet};
+#[cfg(feature = "pjrt")]
 pub use client::{Executable, Runtime};
+pub use native::{native_tags, run_native_check, NativeCheck, NativeModel};
 pub use quant::{qgemm, QTensor};
 pub use tensor::Tensor;

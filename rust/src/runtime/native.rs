@@ -1,0 +1,692 @@
+//! Native blocked-execution backend — the crate's **default** way to run
+//! real numerics, with Python and PJRT nowhere in sight.
+//!
+//! Every kernel operates *directly on BWMA-packed buffers* (the 4-D
+//! `[R/b, C/b, b, b]` image of a `R×C` matrix): tile operands are located
+//! through [`layout::tile_spans`] — under BWMA a tile is one contiguous
+//! `b·b` burst, so the hot loops run over plain slices — and element-wise
+//! / row-wise kernels resolve logical coordinates through the
+//! [`layout::AddressMap`]. This is the §3.1–3.2 discipline executed for
+//! real: the same address arithmetic the simulator replays for timing,
+//! here producing numbers.
+//!
+//! Contents:
+//! * [`gemm_f32`] / [`gemm_i8`] — weight-stationary blocked GEMM (the
+//!   TiC-SAT schedule: `B(p, j)` stationary, `A(i, p)` streaming,
+//!   partials accumulated in `C(i, j)`), in f32 and in the accelerator's
+//!   int8×int8→i32 arithmetic;
+//! * [`bias_add`] / [`bias_gelu`] — fused bias (+ tanh-GELU) on the
+//!   store path;
+//! * [`layernorm`] / [`softmax`] — row-wise ops walking logical rows of
+//!   packed buffers;
+//! * [`reference`] — straightforward row-major implementations (f64
+//!   accumulation for GEMM) the blocked kernels are verified against;
+//! * [`NativeModel`] — a packed-weights FFN block serving as the
+//!   dynamic batcher's executor (`bwma serve`, default backend);
+//! * [`native_tags`] / [`run_native_check`] — the `bwma verify` suite:
+//!   pack → blocked kernel → unpack, compared against [`reference`].
+//!
+//! [`layout::tile_spans`]: crate::layout::tile_spans
+//! [`layout::AddressMap`]: crate::layout::AddressMap
+
+use anyhow::{bail, ensure, Result};
+
+use crate::layout::{tile_spans, AddressMap, Layout, MatrixDesc, TileRef};
+use crate::util::XorShift64;
+
+use super::quant::{qgemm, rel_error, QTensor};
+use super::tensor::Tensor;
+
+/// Descriptor of a packed `rows×cols` BWMA matrix in *element* units:
+/// with `base = 0` and `elem = 1`, [`AddressMap::addr`] and
+/// [`tile_spans`] yield element offsets straight into the packed slice.
+fn packed_desc(rows: usize, cols: usize, block: usize) -> MatrixDesc {
+    MatrixDesc::new(0, rows, cols, 1, block, Layout::Bwma)
+}
+
+/// Element range of tile `(block_row, block_col)` in a packed buffer —
+/// one contiguous burst under BWMA.
+fn tile_range(m: &MatrixDesc, block_row: usize, block_col: usize) -> std::ops::Range<usize> {
+    let walk = tile_spans(m, TileRef { block_row, block_col });
+    debug_assert_eq!(walk.spans.len(), 1, "a BWMA tile is one contiguous burst");
+    let (start, len) = walk.spans[0];
+    start as usize..start as usize + len as usize
+}
+
+fn check_gemm_dims(m: usize, k: usize, n: usize, block: usize, a: usize, b: usize) -> Result<()> {
+    ensure!(block > 0, "zero block");
+    ensure!(
+        m % block == 0 && k % block == 0 && n % block == 0,
+        "GEMM dims {m}x{k}x{n} not divisible by block {block}"
+    );
+    ensure!(a == m * k, "A buffer has {a} elements, {m}x{k} needs {}", m * k);
+    ensure!(b == k * n, "B buffer has {b} elements, {k}x{n} needs {}", k * n);
+    Ok(())
+}
+
+/// One `b×b` tile MAC: `c += a × b`, all three tiles row-major within
+/// the tile (the contiguous burst layout of a packed block).
+#[inline]
+fn tile_mac_f32(at: &[f32], bt: &[f32], ct: &mut [f32], b: usize) {
+    for r in 0..b {
+        let arow = &at[r * b..(r + 1) * b];
+        let crow = &mut ct[r * b..(r + 1) * b];
+        for (q, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &bt[q * b..(q + 1) * b];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+/// Blocked f32 GEMM over packed buffers: `C[m,n] = A[m,k] × B[k,n]`,
+/// returned packed. Weight-stationary schedule: for each output column
+/// `j`, each weight tile `B(p, j)` is fixed while the input tiles
+/// `A(i, p)` stream through, accumulating partials into `C(i, j)`.
+pub fn gemm_f32(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    block: usize,
+) -> Result<Vec<f32>> {
+    check_gemm_dims(m, k, n, block, a.len(), b.len())?;
+    let da = packed_desc(m, k, block);
+    let db = packed_desc(k, n, block);
+    let dc = packed_desc(m, n, block);
+    let mut c = vec![0.0f32; m * n];
+    for j in 0..dc.block_cols() {
+        for p in 0..da.block_cols() {
+            let bt = &b[tile_range(&db, p, j)];
+            for i in 0..dc.block_rows() {
+                let at = &a[tile_range(&da, i, p)];
+                let ct = &mut c[tile_range(&dc, i, j)];
+                tile_mac_f32(at, bt, ct, block);
+            }
+        }
+    }
+    Ok(c)
+}
+
+/// Blocked int8 GEMM over packed buffers in the systolic array's
+/// arithmetic: int8 × int8 → exact i32 accumulation across the full K
+/// reduction (the paper's TiC-SAT engine is an 8-bit MAC grid with wide
+/// accumulators). Returns the packed i32 accumulators; rescale with the
+/// operand scales (`QTensor::scale` product) to recover f32.
+pub fn gemm_i8(
+    a: &[i8],
+    b: &[i8],
+    m: usize,
+    k: usize,
+    n: usize,
+    block: usize,
+) -> Result<Vec<i32>> {
+    check_gemm_dims(m, k, n, block, a.len(), b.len())?;
+    let da = packed_desc(m, k, block);
+    let db = packed_desc(k, n, block);
+    let dc = packed_desc(m, n, block);
+    let mut c = vec![0i32; m * n];
+    for j in 0..dc.block_cols() {
+        for p in 0..da.block_cols() {
+            let bt = &b[tile_range(&db, p, j)];
+            for i in 0..dc.block_rows() {
+                let at = &a[tile_range(&da, i, p)];
+                let ct = &mut c[tile_range(&dc, i, j)];
+                for r in 0..block {
+                    let arow = &at[r * block..(r + 1) * block];
+                    let crow = &mut ct[r * block..(r + 1) * block];
+                    for (q, &av) in arow.iter().enumerate() {
+                        if av == 0 {
+                            continue;
+                        }
+                        let av = av as i32;
+                        let brow = &bt[q * block..(q + 1) * block];
+                        for (cv, &bv) in crow.iter_mut().zip(brow) {
+                            *cv += av * bv as i32;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok(c)
+}
+
+/// tanh-approximation GELU — the form an accelerator LUT implements, and
+/// the default in BERT codebases. Used by both the blocked kernel and
+/// the row-major reference so they agree bit-for-bit in structure.
+#[inline]
+pub fn gelu(x: f32) -> f32 {
+    const SQRT_2_OVER_PI: f32 = 0.797_884_56;
+    0.5 * x * (1.0 + (SQRT_2_OVER_PI * (x + 0.044_715 * x * x * x)).tanh())
+}
+
+fn check_rowwise(len: usize, rows: usize, cols: usize, block: usize) -> Result<()> {
+    ensure!(block > 0 && rows % block == 0 && cols % block == 0, "{rows}x{cols} not divisible by block {block}");
+    ensure!(len == rows * cols, "buffer has {len} elements, {rows}x{cols} needs {}", rows * cols);
+    Ok(())
+}
+
+/// `x[r, c] += bias[c]` over a packed buffer: the per-column bias is
+/// located through the AddressMap inverse (`elem_coords`), so the buffer
+/// is walked linearly — one pass over contiguous memory.
+pub fn bias_add(x: &mut [f32], bias: &[f32], rows: usize, cols: usize, block: usize) -> Result<()> {
+    check_rowwise(x.len(), rows, cols, block)?;
+    ensure!(bias.len() == cols, "bias has {} elements, want {cols}", bias.len());
+    let d = packed_desc(rows, cols, block);
+    for (idx, v) in x.iter_mut().enumerate() {
+        let (_r, c) = d.elem_coords(idx);
+        *v += bias[c];
+    }
+    Ok(())
+}
+
+/// Fused `x = GELU(x + bias)` over a packed buffer (FF1's store path —
+/// §3.2: element-wise activation integrated into the layer, no extra
+/// memory traffic).
+pub fn bias_gelu(x: &mut [f32], bias: &[f32], rows: usize, cols: usize, block: usize) -> Result<()> {
+    check_rowwise(x.len(), rows, cols, block)?;
+    ensure!(bias.len() == cols, "bias has {} elements, want {cols}", bias.len());
+    let d = packed_desc(rows, cols, block);
+    for (idx, v) in x.iter_mut().enumerate() {
+        let (_r, c) = d.elem_coords(idx);
+        *v = gelu(*v + bias[c]);
+    }
+    Ok(())
+}
+
+/// LayerNorm over each logical row of a packed buffer, with affine
+/// parameters: mean pass, variance pass, then normalize + γ/β writeback
+/// — the same 2+1-pass structure the simulator's `RowScan` models.
+pub fn layernorm(
+    x: &mut [f32],
+    gamma: &[f32],
+    beta: &[f32],
+    rows: usize,
+    cols: usize,
+    block: usize,
+    eps: f32,
+) -> Result<()> {
+    check_rowwise(x.len(), rows, cols, block)?;
+    ensure!(gamma.len() == cols && beta.len() == cols, "affine params must have {cols} elements");
+    let d = packed_desc(rows, cols, block);
+    let inv_n = 1.0 / cols as f32;
+    for r in 0..rows {
+        let mut mean = 0.0f32;
+        for c in 0..cols {
+            mean += x[d.elem_index(r, c)];
+        }
+        mean *= inv_n;
+        let mut var = 0.0f32;
+        for c in 0..cols {
+            let dv = x[d.elem_index(r, c)] - mean;
+            var += dv * dv;
+        }
+        var *= inv_n;
+        let inv_std = 1.0 / (var + eps).sqrt();
+        for c in 0..cols {
+            let i = d.elem_index(r, c);
+            x[i] = (x[i] - mean) * inv_std * gamma[c] + beta[c];
+        }
+    }
+    Ok(())
+}
+
+/// Numerically-stable softmax over each logical row of a packed buffer:
+/// running-max pass, exp+sum pass, normalize pass (the simulator's
+/// softmax `RowScan` is exactly 2 read passes + 1 read/write pass).
+pub fn softmax(x: &mut [f32], rows: usize, cols: usize, block: usize) -> Result<()> {
+    check_rowwise(x.len(), rows, cols, block)?;
+    let d = packed_desc(rows, cols, block);
+    for r in 0..rows {
+        let mut max = f32::NEG_INFINITY;
+        for c in 0..cols {
+            max = max.max(x[d.elem_index(r, c)]);
+        }
+        let mut sum = 0.0f32;
+        for c in 0..cols {
+            let i = d.elem_index(r, c);
+            let e = (x[i] - max).exp();
+            x[i] = e;
+            sum += e;
+        }
+        let inv = 1.0 / sum;
+        for c in 0..cols {
+            x[d.elem_index(r, c)] *= inv;
+        }
+    }
+    Ok(())
+}
+
+/// Row-major reference kernels the blocked implementations are verified
+/// against (`bwma verify`, tests). GEMM accumulates in f64.
+pub mod reference {
+    use super::gelu;
+
+    pub fn gemm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        assert_eq!(a.len(), m * k);
+        assert_eq!(b.len(), k * n);
+        let mut c = vec![0.0f64; m * n];
+        for i in 0..m {
+            for p in 0..k {
+                let av = a[i * k + p] as f64;
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b[p * n..(p + 1) * n];
+                let crow = &mut c[i * n..(i + 1) * n];
+                for (cv, &bv) in crow.iter_mut().zip(brow) {
+                    *cv += av * bv as f64;
+                }
+            }
+        }
+        c.into_iter().map(|v| v as f32).collect()
+    }
+
+    pub fn bias_add(x: &mut [f32], bias: &[f32], rows: usize, cols: usize) {
+        assert_eq!(x.len(), rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                x[r * cols + c] += bias[c];
+            }
+        }
+    }
+
+    pub fn bias_gelu(x: &mut [f32], bias: &[f32], rows: usize, cols: usize) {
+        assert_eq!(x.len(), rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                let i = r * cols + c;
+                x[i] = gelu(x[i] + bias[c]);
+            }
+        }
+    }
+
+    pub fn layernorm(x: &mut [f32], gamma: &[f32], beta: &[f32], rows: usize, cols: usize, eps: f32) {
+        assert_eq!(x.len(), rows * cols);
+        let inv_n = 1.0 / cols as f32;
+        for r in 0..rows {
+            let row = &mut x[r * cols..(r + 1) * cols];
+            let mean: f32 = row.iter().sum::<f32>() * inv_n;
+            let var: f32 = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() * inv_n;
+            let inv_std = 1.0 / (var + eps).sqrt();
+            for (c, v) in row.iter_mut().enumerate() {
+                *v = (*v - mean) * inv_std * gamma[c] + beta[c];
+            }
+        }
+    }
+
+    pub fn softmax(x: &mut [f32], rows: usize, cols: usize) {
+        assert_eq!(x.len(), rows * cols);
+        for r in 0..rows {
+            let row = &mut x[r * cols..(r + 1) * cols];
+            let max = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+            let mut sum = 0.0f32;
+            for v in row.iter_mut() {
+                *v = (*v - max).exp();
+                sum += *v;
+            }
+            let inv = 1.0 / sum;
+            for v in row.iter_mut() {
+                *v *= inv;
+            }
+        }
+    }
+}
+
+/// A feed-forward block with packed weights — the native serving model:
+///
+/// ```text
+/// out = LayerNorm( GELU(x·W1 + b1) · W2 + b2 )
+/// ```
+///
+/// Requests carry a row-major `[seq, d_model]` activation; `forward`
+/// packs it block-wise at the door, runs every kernel on packed buffers,
+/// and unpacks the result — the per-request host transform is exactly
+/// the `pack_blocked`/`unpack_blocked` boundary conversion of §3.2.
+#[derive(Debug, Clone)]
+pub struct NativeModel {
+    pub seq: usize,
+    pub d_model: usize,
+    pub d_ff: usize,
+    pub block: usize,
+    /// Packed (BWMA) weights, as they would live in accelerator memory.
+    w1: Vec<f32>,
+    w2: Vec<f32>,
+    /// Row-major copies, for the reference path.
+    w1_rm: Vec<f32>,
+    w2_rm: Vec<f32>,
+    b1: Vec<f32>,
+    b2: Vec<f32>,
+    gamma: Vec<f32>,
+    beta: Vec<f32>,
+}
+
+impl NativeModel {
+    pub const EPS: f32 = 1e-5;
+
+    /// Deterministically-initialized model (weights ~ U(-1,1)/√fan_in so
+    /// activations stay O(1) through both GEMMs).
+    pub fn new(seq: usize, d_model: usize, d_ff: usize, block: usize, seed: u64) -> Result<Self> {
+        ensure!(
+            block > 0 && seq % block == 0 && d_model % block == 0 && d_ff % block == 0,
+            "model dims {seq}/{d_model}/{d_ff} not divisible by block {block}"
+        );
+        let mut rng = XorShift64::new(seed);
+        let mut fill = |n: usize, scale: f32| -> Vec<f32> {
+            let mut v = vec![0.0f32; n];
+            rng.fill_f32(&mut v);
+            for x in &mut v {
+                *x *= scale;
+            }
+            v
+        };
+        let w1_rm = fill(d_model * d_ff, 1.0 / (d_model as f32).sqrt());
+        let w2_rm = fill(d_ff * d_model, 1.0 / (d_ff as f32).sqrt());
+        let b1 = fill(d_ff, 0.1);
+        let b2 = fill(d_model, 0.1);
+        let mut gamma = fill(d_model, 0.2);
+        for g in &mut gamma {
+            *g += 1.0; // γ ≈ 1
+        }
+        let beta = fill(d_model, 0.1);
+        let w1 = crate::layout::rwma_to_bwma(&w1_rm, d_model, d_ff, block);
+        let w2 = crate::layout::rwma_to_bwma(&w2_rm, d_ff, d_model, block);
+        Ok(Self { seq, d_model, d_ff, block, w1, w2, w1_rm, w2_rm, b1, b2, gamma, beta })
+    }
+
+    /// Per-sequence input shape (row-major host tensor).
+    pub fn in_shape(&self) -> Vec<usize> {
+        vec![self.seq, self.d_model]
+    }
+
+    /// Per-sequence output shape.
+    pub fn out_shape(&self) -> Vec<usize> {
+        vec![self.seq, self.d_model]
+    }
+
+    /// Forward one `[seq, d_model]` sequence through the blocked kernels.
+    pub fn forward(&self, x: &Tensor) -> Result<Tensor> {
+        ensure!(
+            x.shape == self.in_shape(),
+            "input shape {:?}, model wants {:?}",
+            x.shape,
+            self.in_shape()
+        );
+        let (s, d, f, b) = (self.seq, self.d_model, self.d_ff, self.block);
+        let xp = x.pack_blocked(b)?;
+        let mut h = gemm_f32(&xp.data, &self.w1, s, d, f, b)?;
+        bias_gelu(&mut h, &self.b1, s, f, b)?;
+        let mut y = gemm_f32(&h, &self.w2, s, f, d, b)?;
+        bias_add(&mut y, &self.b2, s, d, b)?;
+        layernorm(&mut y, &self.gamma, &self.beta, s, d, b, Self::EPS)?;
+        Tensor::new(vec![s / b, d / b, b, b], y).unpack_blocked()
+    }
+
+    /// The same function on the row-major reference kernels (golden path
+    /// for `verify`, tests, and the serving cross-check).
+    pub fn forward_reference(&self, x: &Tensor) -> Result<Tensor> {
+        ensure!(x.shape == self.in_shape(), "input shape {:?}", x.shape);
+        let (s, d, f) = (self.seq, self.d_model, self.d_ff);
+        let mut h = reference::gemm(&x.data, &self.w1_rm, s, d, f);
+        reference::bias_gelu(&mut h, &self.b1, s, f);
+        let mut y = reference::gemm(&h, &self.w2_rm, s, f, d);
+        reference::bias_add(&mut y, &self.b2, s, d);
+        reference::layernorm(&mut y, &self.gamma, &self.beta, s, d, Self::EPS);
+        Ok(Tensor::new(vec![s, d], y))
+    }
+}
+
+/// Result of one native-backend verification check.
+#[derive(Debug, Clone)]
+pub struct NativeCheck {
+    pub tag: &'static str,
+    /// Max |Δ| against the reference (relative Frobenius error for int8).
+    pub max_diff: f32,
+    pub ok: bool,
+}
+
+/// The native verification suite's artifact tags (`bwma verify all`).
+pub fn native_tags() -> &'static [&'static str] {
+    &[
+        "native_gemm_f32_b8",
+        "native_gemm_f32_b16",
+        "native_gemm_i8_b16",
+        "native_bias_gelu_b16",
+        "native_layernorm_b16",
+        "native_softmax_b16",
+        "native_ffn_b16",
+    ]
+}
+
+fn rand_vec(rng: &mut XorShift64, n: usize) -> Vec<f32> {
+    let mut v = vec![0.0f32; n];
+    rng.fill_f32(&mut v);
+    v
+}
+
+/// Verify the packed round-trip is the identity before trusting any
+/// kernel output that flowed through it.
+fn roundtrip_check(t: &Tensor, block: usize) -> Result<()> {
+    let packed = t.pack_blocked(block)?;
+    let back = packed.unpack_blocked()?;
+    ensure!(back == *t, "pack/unpack round-trip is not the identity");
+    Ok(())
+}
+
+fn check_gemm_f32(tag: &'static str, block: usize) -> Result<NativeCheck> {
+    let (m, k, n) = (4 * block, 6 * block, 3 * block);
+    let mut rng = XorShift64::new(0x5EED ^ block as u64);
+    let a = Tensor::new(vec![m, k], rand_vec(&mut rng, m * k));
+    let b = Tensor::new(vec![k, n], rand_vec(&mut rng, k * n));
+    roundtrip_check(&a, block)?;
+    let ap = a.pack_blocked(block)?;
+    let bp = b.pack_blocked(block)?;
+    let cp = gemm_f32(&ap.data, &bp.data, m, k, n, block)?;
+    let c = Tensor::new(vec![m / block, n / block, block, block], cp).unpack_blocked()?;
+    let expect = Tensor::new(vec![m, n], reference::gemm(&a.data, &b.data, m, k, n));
+    let diff = c.max_abs_diff(&expect);
+    Ok(NativeCheck { tag, max_diff: diff, ok: c.allclose(&expect, 1e-4, 1e-4) })
+}
+
+fn check_gemm_i8(tag: &'static str, block: usize) -> Result<NativeCheck> {
+    let (m, k, n) = (4 * block, 6 * block, 3 * block);
+    let mut rng = XorShift64::new(0x17E8);
+    let a = Tensor::new(vec![m, k], rand_vec(&mut rng, m * k));
+    let b = Tensor::new(vec![k, n], rand_vec(&mut rng, k * n));
+    let qa = QTensor::quantize(&a)?;
+    let qb = QTensor::quantize(&b)?;
+    // Pack the int8 payloads block-wise and run the blocked kernel...
+    let qa_p = crate::layout::rwma_to_bwma(&qa.data, m, k, block);
+    let qb_p = crate::layout::rwma_to_bwma(&qb.data, k, n, block);
+    let acc = gemm_i8(&qa_p, &qb_p, m, k, n, block)?;
+    let rescale = qa.scale * qb.scale;
+    let cp: Vec<f32> = acc.into_iter().map(|v| v as f32 * rescale).collect();
+    let c = Tensor::new(vec![m / block, n / block, block, block], cp).unpack_blocked()?;
+    // ...and compare against the row-major quantized reference.
+    let expect = qgemm(&qa, &qb)?;
+    let err = rel_error(&c, &expect);
+    Ok(NativeCheck { tag, max_diff: err, ok: err < 1e-3 })
+}
+
+fn check_elementwise(tag: &'static str, block: usize) -> Result<NativeCheck> {
+    let (rows, cols) = (4 * block, 5 * block);
+    let mut rng = XorShift64::new(0xE1E);
+    let x = Tensor::new(vec![rows, cols], rand_vec(&mut rng, rows * cols));
+    let bias = rand_vec(&mut rng, cols);
+    roundtrip_check(&x, block)?;
+    let mut packed = x.pack_blocked(block)?.data;
+    bias_gelu(&mut packed, &bias, rows, cols, block)?;
+    let got =
+        Tensor::new(vec![rows / block, cols / block, block, block], packed).unpack_blocked()?;
+    let mut expect = x.data.clone();
+    reference::bias_gelu(&mut expect, &bias, rows, cols);
+    let expect = Tensor::new(vec![rows, cols], expect);
+    let diff = got.max_abs_diff(&expect);
+    Ok(NativeCheck { tag, max_diff: diff, ok: got.allclose(&expect, 1e-5, 1e-5) })
+}
+
+fn check_layernorm(tag: &'static str, block: usize) -> Result<NativeCheck> {
+    let (rows, cols) = (4 * block, 5 * block);
+    let mut rng = XorShift64::new(0x10A);
+    let x = Tensor::new(vec![rows, cols], rand_vec(&mut rng, rows * cols));
+    let gamma = rand_vec(&mut rng, cols);
+    let beta = rand_vec(&mut rng, cols);
+    let mut packed = x.pack_blocked(block)?.data;
+    layernorm(&mut packed, &gamma, &beta, rows, cols, block, NativeModel::EPS)?;
+    let got =
+        Tensor::new(vec![rows / block, cols / block, block, block], packed).unpack_blocked()?;
+    let mut expect = x.data.clone();
+    reference::layernorm(&mut expect, &gamma, &beta, rows, cols, NativeModel::EPS);
+    let expect = Tensor::new(vec![rows, cols], expect);
+    let diff = got.max_abs_diff(&expect);
+    Ok(NativeCheck { tag, max_diff: diff, ok: got.allclose(&expect, 1e-4, 1e-4) })
+}
+
+fn check_softmax(tag: &'static str, block: usize) -> Result<NativeCheck> {
+    let (rows, cols) = (4 * block, 5 * block);
+    let mut rng = XorShift64::new(0x50F);
+    let x = Tensor::new(vec![rows, cols], rand_vec(&mut rng, rows * cols));
+    let mut packed = x.pack_blocked(block)?.data;
+    softmax(&mut packed, rows, cols, block)?;
+    let got =
+        Tensor::new(vec![rows / block, cols / block, block, block], packed).unpack_blocked()?;
+    let mut expect = x.data.clone();
+    reference::softmax(&mut expect, rows, cols);
+    let expect = Tensor::new(vec![rows, cols], expect);
+    let diff = got.max_abs_diff(&expect);
+    // Rows must also sum to 1.
+    let mut ok = got.allclose(&expect, 1e-5, 1e-5);
+    for r in 0..rows {
+        let s: f32 = got.data[r * cols..(r + 1) * cols].iter().sum();
+        ok &= (s - 1.0).abs() < 1e-4;
+    }
+    Ok(NativeCheck { tag, max_diff: diff, ok })
+}
+
+fn check_ffn(tag: &'static str, block: usize) -> Result<NativeCheck> {
+    let model = NativeModel::new(4 * block, 6 * block, 8 * block, block, 0xFF1)?;
+    let mut rng = XorShift64::new(0xFF2);
+    let x = Tensor::new(model.in_shape(), rand_vec(&mut rng, model.seq * model.d_model));
+    let got = model.forward(&x)?;
+    let expect = model.forward_reference(&x)?;
+    let diff = got.max_abs_diff(&expect);
+    Ok(NativeCheck { tag, max_diff: diff, ok: got.allclose(&expect, 1e-3, 1e-3) })
+}
+
+/// Run one named check of the native suite.
+pub fn run_native_check(tag: &str) -> Result<NativeCheck> {
+    match tag {
+        "native_gemm_f32_b8" => check_gemm_f32("native_gemm_f32_b8", 8),
+        "native_gemm_f32_b16" => check_gemm_f32("native_gemm_f32_b16", 16),
+        "native_gemm_i8_b16" => check_gemm_i8("native_gemm_i8_b16", 16),
+        "native_bias_gelu_b16" => check_elementwise("native_bias_gelu_b16", 16),
+        "native_layernorm_b16" => check_layernorm("native_layernorm_b16", 16),
+        "native_softmax_b16" => check_softmax("native_softmax_b16", 16),
+        "native_ffn_b16" => check_ffn("native_ffn_b16", 16),
+        _ => bail!("unknown native check {tag:?} (see `bwma verify all`)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The full suite runs once, from the public API, in
+    // tests/integration_native.rs (`verify_suite_is_green`).
+
+    #[test]
+    fn unknown_check_rejected() {
+        assert!(run_native_check("native_nope").is_err());
+    }
+
+    #[test]
+    fn gemm_dim_mismatch_rejected() {
+        let a = vec![0.0f32; 16 * 16];
+        let b = vec![0.0f32; 16 * 16];
+        assert!(gemm_f32(&a, &b, 16, 16, 16, 16).is_ok());
+        assert!(gemm_f32(&a, &b, 16, 32, 16, 16).is_err(), "bad buffer sizes");
+        assert!(gemm_f32(&a, &b, 12, 16, 16, 16).is_err(), "indivisible dims");
+    }
+
+    #[test]
+    fn gemm_identity_acts_as_copy() {
+        // x · I = x, exercised through packed buffers with rectangular x.
+        let (m, k, b) = (16, 24, 8);
+        let mut rng = XorShift64::new(3);
+        let x = Tensor::new(vec![m, k], rand_vec(&mut rng, m * k));
+        let mut eye = vec![0.0f32; k * k];
+        for i in 0..k {
+            eye[i * k + i] = 1.0;
+        }
+        let eye_p = crate::layout::rwma_to_bwma(&eye, k, k, b);
+        let xp = x.pack_blocked(b).unwrap();
+        let yp = gemm_f32(&xp.data, &eye_p, m, k, k, b).unwrap();
+        let y = Tensor::new(vec![m / b, k / b, b, b], yp).unpack_blocked().unwrap();
+        assert_eq!(y, x);
+    }
+
+    #[test]
+    fn i8_matches_f32_within_quantization_error() {
+        let (m, k, n, b) = (32, 48, 16, 16);
+        let mut rng = XorShift64::new(11);
+        let a = Tensor::new(vec![m, k], rand_vec(&mut rng, m * k));
+        let w = Tensor::new(vec![k, n], rand_vec(&mut rng, k * n));
+        let qa = QTensor::quantize(&a).unwrap();
+        let qb = QTensor::quantize(&w).unwrap();
+        let acc = gemm_i8(
+            &crate::layout::rwma_to_bwma(&qa.data, m, k, b),
+            &crate::layout::rwma_to_bwma(&qb.data, k, n, b),
+            m,
+            k,
+            n,
+            b,
+        )
+        .unwrap();
+        let rescale = qa.scale * qb.scale;
+        let got = Tensor::new(
+            vec![m / b, n / b, b, b],
+            acc.into_iter().map(|v| v as f32 * rescale).collect::<Vec<_>>(),
+        )
+        .unpack_blocked()
+        .unwrap();
+        let expect = Tensor::new(vec![m, n], reference::gemm(&a.data, &w.data, m, k, n));
+        let err = rel_error(&got, &expect);
+        assert!(err < 0.02, "int8 vs f32 error {err}");
+    }
+
+    #[test]
+    fn model_forward_matches_reference() {
+        let model = NativeModel::new(32, 48, 64, 16, 42).unwrap();
+        let mut rng = XorShift64::new(43);
+        let x = Tensor::new(model.in_shape(), rand_vec(&mut rng, 32 * 48));
+        let got = model.forward(&x).unwrap();
+        let expect = model.forward_reference(&x).unwrap();
+        assert_eq!(got.shape, model.out_shape());
+        assert!(
+            got.allclose(&expect, 1e-3, 1e-3),
+            "max|Δ| = {:.3e}",
+            got.max_abs_diff(&expect)
+        );
+    }
+
+    #[test]
+    fn model_rejects_wrong_input_shape() {
+        let model = NativeModel::new(32, 48, 64, 16, 1).unwrap();
+        let bad = Tensor::zeros(vec![16, 48]);
+        assert!(model.forward(&bad).is_err());
+    }
+
+    #[test]
+    fn model_is_deterministic_per_seed() {
+        let m1 = NativeModel::new(16, 32, 32, 16, 7).unwrap();
+        let m2 = NativeModel::new(16, 32, 32, 16, 7).unwrap();
+        let x = Tensor::zeros(vec![16, 32]);
+        assert_eq!(m1.forward(&x).unwrap(), m2.forward(&x).unwrap());
+    }
+}

@@ -1,5 +1,5 @@
-//! Host-side f32 tensors: golden I/O, blocked pack/unpack, and conversion
-//! to/from PJRT literals.
+//! Host-side f32 tensors: golden I/O, blocked pack/unpack, and (with the
+//! `pjrt` feature) conversion to/from PJRT literals.
 
 use anyhow::{bail, Context, Result};
 
@@ -77,12 +77,14 @@ impl Tensor {
     }
 
     /// Into a PJRT literal (C-order, matching numpy `tobytes()`).
+    #[cfg(feature = "pjrt")]
     pub fn to_literal(&self) -> Result<xla::Literal> {
         let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
         Ok(xla::Literal::vec1(&self.data).reshape(&dims)?)
     }
 
     /// From a PJRT literal (f32 arrays only).
+    #[cfg(feature = "pjrt")]
     pub fn from_literal(lit: &xla::Literal, shape: Vec<usize>) -> Result<Self> {
         let data = lit.to_vec::<f32>()?;
         if data.len() != shape.iter().product::<usize>() {
@@ -92,13 +94,15 @@ impl Tensor {
     }
 
     /// Max absolute difference against another tensor (golden checking).
+    /// NaN anywhere in the comparison yields NaN — `f32::max` would
+    /// silently drop it and let a corrupted golden compare as equal.
     pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
         assert_eq!(self.shape, other.shape, "shape mismatch in comparison");
         self.data
             .iter()
             .zip(&other.data)
             .map(|(a, b)| (a - b).abs())
-            .fold(0.0, f32::max)
+            .fold(0.0, |m, d| if m.is_nan() || d.is_nan() { f32::NAN } else { m.max(d) })
     }
 
     /// Relative allclose in the numpy sense: |a−b| ≤ atol + rtol·|b|.
@@ -162,5 +166,19 @@ mod tests {
     #[should_panic(expected = "shape/data mismatch")]
     fn shape_checked() {
         Tensor::new(vec![2, 2], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn nan_differences_propagate() {
+        let good = Tensor::new(vec![3], vec![1.0, 2.0, 3.0]);
+        let corrupt = Tensor::new(vec![3], vec![1.0, f32::NAN, 3.0]);
+        // A corrupted tensor must never compare clean, whichever side the
+        // NaN is on and whatever follows it in the fold.
+        assert!(good.max_abs_diff(&corrupt).is_nan());
+        assert!(corrupt.max_abs_diff(&good).is_nan());
+        assert!(corrupt.max_abs_diff(&corrupt).is_nan(), "NaN != NaN numerically");
+        assert!(!good.allclose(&corrupt, 1.0, 1.0));
+        let trailing = Tensor::new(vec![3], vec![1.0, 2.0, f32::NAN]);
+        assert!(good.max_abs_diff(&trailing).is_nan(), "NaN in the last element survives");
     }
 }

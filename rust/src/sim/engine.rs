@@ -139,19 +139,28 @@ pub fn simulate(cfg: &SimConfig) -> SimResult {
 /// conversion-overhead experiment).
 pub fn simulate_phases(cfg: &SimConfig, phases: &[Phase]) -> SimResult {
     let mut eng = Engine::new(cfg);
-    // Aggregate by component name, preserving first-occurrence order.
+    // Aggregate by component name, preserving first-occurrence order. Two
+    // phases may share a name only if they are the same component class —
+    // otherwise cycles of one class would silently launder into another's
+    // Fig. 7 bucket.
     let mut order: Vec<(String, crate::workload::PhaseClass)> = Vec::new();
-    let mut by_name: HashMap<String, u64> = HashMap::new();
+    let mut by_name: HashMap<String, (u64, crate::workload::PhaseClass)> = HashMap::new();
     for phase in phases {
         let cycles = eng.run_phase(phase);
-        if !by_name.contains_key(phase.name) {
+        let entry = by_name.entry(phase.name.to_string()).or_insert_with(|| {
             order.push((phase.name.to_string(), phase.class));
-        }
-        *by_name.entry(phase.name.to_string()).or_insert(0) += cycles;
+            (0, phase.class)
+        });
+        debug_assert_eq!(
+            entry.1, phase.class,
+            "phase {:?} aggregated across mismatched classes",
+            phase.name
+        );
+        entry.0 += cycles;
     }
     let phases_out = order
         .into_iter()
-        .map(|(name, class)| PhaseResult { cycles: by_name[&name], name, class })
+        .map(|(name, class)| PhaseResult { cycles: by_name[&name].0, name, class })
         .collect();
     SimResult {
         label: cfg.label(),

@@ -14,7 +14,7 @@
 mod engine;
 mod result;
 
-pub use engine::{simulate, CoreCtx, Engine};
+pub use engine::{simulate, simulate_phases, CoreCtx, Engine};
 pub use result::{PhaseResult, SimResult};
 
 

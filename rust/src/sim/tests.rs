@@ -28,7 +28,7 @@ fn l1d_accesses_layout_invariant_but_misses_not() {
     let ratio = ra as f64 / ba as f64;
     assert!((0.95..1.05).contains(&ratio), "L1-D access ratio {ratio}");
     // On the reduced config the ratio is ~3x; the full BERT-base run
-    // (EXPERIMENTS.md Fig. 8) reaches the paper's order of magnitude.
+    // (`bwma experiment fig8`) reaches the paper's order of magnitude.
     let miss_ratio = r.mem.l1d_total().misses as f64 / b.mem.l1d_total().misses as f64;
     assert!(miss_ratio > 2.5, "L1-D miss ratio too small: {miss_ratio:.1}");
     // And consequently far fewer L2 accesses (Fig. 8's main bar).
@@ -130,6 +130,36 @@ fn conversion_overhead_is_negligible_end_to_end() {
     let share = conv as f64 / res.total_cycles as f64;
     assert!(share < 0.02, "conversion share {share:.4} too large");
     assert!(conv > 0);
+}
+
+#[test]
+fn same_name_same_class_aggregates_into_one_entry() {
+    use crate::sim::simulate_phases;
+    use crate::workload::{Phase, PhaseClass};
+    let cfg = SimConfig::tiny(AccelKind::Sa { b: 16 }, Layout::Bwma, 1);
+    let phases = vec![
+        Phase { name: "Repeated", class: PhaseClass::Gemm, items: vec![vec![]] },
+        Phase { name: "Repeated", class: PhaseClass::Gemm, items: vec![vec![]] },
+    ];
+    let res = simulate_phases(&cfg, &phases);
+    assert_eq!(res.phases.len(), 1, "same (name, class) pairs merge");
+    assert_eq!(res.phases[0].class, PhaseClass::Gemm);
+}
+
+#[test]
+#[cfg(debug_assertions)]
+#[should_panic(expected = "mismatched classes")]
+fn same_name_different_class_is_rejected() {
+    // Regression: two phases sharing a name but differing in class used
+    // to be silently merged under the first class.
+    use crate::sim::simulate_phases;
+    use crate::workload::{Phase, PhaseClass};
+    let cfg = SimConfig::tiny(AccelKind::Sa { b: 16 }, Layout::Bwma, 1);
+    let phases = vec![
+        Phase { name: "Ambiguous", class: PhaseClass::Gemm, items: vec![vec![]] },
+        Phase { name: "Ambiguous", class: PhaseClass::Softmax, items: vec![vec![]] },
+    ];
+    let _ = simulate_phases(&cfg, &phases);
 }
 
 #[test]

@@ -48,9 +48,11 @@ impl GemmOp {
     }
 
     /// One item per weight tile `(j, p)` per core; the item's inner loop
-    /// covers the core's output block-rows. K (`p`) is the *outer* loop so
-    /// consecutive items at the same `j` revisit the same output column —
-    /// the accumulation locality the arrangement acts on.
+    /// covers the core's output block-rows. The output column `j` is the
+    /// *outer* loop and K (`p`) the *inner* one, so consecutive items
+    /// revisit the same output column — `C(·, j)` tiles stay cache-hot
+    /// across the whole K sweep, the accumulation locality the
+    /// arrangement acts on (asserted by `item_order_is_k_innermost`).
     pub fn items(&self, cores: usize) -> Vec<Vec<WorkItem>> {
         let mut per_core = vec![Vec::new(); cores];
         let kb = self.a.block_cols();
@@ -130,6 +132,33 @@ mod tests {
         for item in &items[0] {
             if let WorkItem::GemmWeightTile { p, fused_act, .. } = item {
                 assert_eq!(*fused_act, *p == kb - 1, "GELU applies once, on the final partial");
+            }
+        }
+    }
+
+    #[test]
+    fn item_order_is_k_innermost() {
+        // The weight-stationary reuse claim, pinned to the exact emitted
+        // schedule: `j` outer, `p` inner — one output column is revisited
+        // across consecutive items for the full K sweep before moving on.
+        let op = GemmOp::new(m(0, 32, 64), m(0x10000, 64, 48), m(0x20000, 32, 48));
+        let items = op.items(1);
+        let emitted: Vec<(usize, usize)> = items[0]
+            .iter()
+            .map(|it| match it {
+                WorkItem::GemmWeightTile { j, p, .. } => (*j, *p),
+                other => panic!("unexpected item {other:?}"),
+            })
+            .collect();
+        let (jb, kb) = (48 / 16, 64 / 16);
+        let expect: Vec<(usize, usize)> =
+            (0..jb).flat_map(|j| (0..kb).map(move |p| (j, p))).collect();
+        assert_eq!(emitted, expect, "schedule must be j-outer / p-inner");
+        // Consequence spelled out: every adjacent pair within a column
+        // shares `j` (the C(·, j) tiles are revisited back-to-back).
+        for pair in emitted.windows(2) {
+            if pair[0].1 + 1 < kb {
+                assert_eq!(pair[0].0, pair[1].0, "K sweep must not change the output column");
             }
         }
     }

@@ -3,7 +3,9 @@
 //! These tests are the proof that Layer 1/2 (JAX/Pallas) and Layer 3
 //! (Rust/PJRT) compute the same function.
 //!
-//! Requires `make artifacts` (skipped with a clear message otherwise).
+//! Requires a `--features pjrt` build with real xla bindings, plus
+//! `make artifacts` (skipped with a clear message otherwise).
+#![cfg(feature = "pjrt")]
 
 use bwma::layout::{bwma_to_rwma, rwma_to_bwma};
 use bwma::runtime::{artifacts_dir, GoldenSet, Runtime, Tensor};

@@ -26,6 +26,34 @@ fn prop_conversion_roundtrip_is_identity() {
 }
 
 #[test]
+fn prop_packed_roundtrip_is_identity_nonsquare() {
+    // The inverse composition of `prop_conversion_roundtrip_is_identity`:
+    // rwma_to_bwma ∘ bwma_to_rwma must also be the identity permutation,
+    // pinned to non-square shapes (where a block-grid transposition bug
+    // would hide on square matrices).
+    check_default("packed-roundtrip-nonsquare", |rng| {
+        let b = *rng.pick(&[4usize, 8, 16]);
+        let rows = b * rng.range(1, 9) as usize;
+        let mut cols = b * rng.range(1, 9) as usize;
+        if cols == rows {
+            cols += b; // force rows != cols
+        }
+        let src: Vec<u32> =
+            (0..(rows * cols) as u32).map(|i| i.wrapping_mul(2_654_435_761)).collect();
+        let unpacked = bwma_to_rwma(&src, rows, cols, b);
+        let repacked = rwma_to_bwma(&unpacked, rows, cols, b);
+        assert_eq!(repacked, src, "{rows}x{cols} block {b}");
+        // The Tensor-level pack/unpack pair rides the same permutation.
+        let t = bwma::runtime::Tensor::new(
+            vec![rows, cols],
+            (0..rows * cols).map(|i| i as f32).collect(),
+        );
+        let back = t.pack_blocked(b).unwrap().unpack_blocked().unwrap();
+        assert_eq!(back, t);
+    });
+}
+
+#[test]
 fn prop_bwma_map_is_a_bijection() {
     check_default("bwma-bijection", |rng| {
         let (rows, cols, b) = random_dims(rng);
