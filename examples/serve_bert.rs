@@ -33,24 +33,31 @@ fn arg(name: &str, default: usize) -> usize {
 fn main() -> Result<()> {
     let n_requests = arg("--requests", 64);
     let max_batch = arg("--max-batch", 8);
+    let cores = arg("--cores", bwma::runtime::available_cores());
 
     // BERT-base-shaped FFN block (seq 128, d_model 768, d_ff 3072,
-    // block 16) with deterministic weights. One `Arc` shares the weights
-    // between the serving thread's batch-variant slots and the golden
-    // cross-check below.
-    let model = std::sync::Arc::new(NativeModel::new(128, 768, 3072, 16, 0xBEEF)?);
+    // block 16) with deterministic weights, kernels fanned over the
+    // host's cores (bitwise identical to serial — see runtime::parallel).
+    // One `Arc` shares the weights between the serving thread's
+    // batch-variant slots and the golden cross-check below.
+    let model =
+        std::sync::Arc::new(NativeModel::new(128, 768, 3072, 16, 0xBEEF)?.with_cores(cores));
     let in_shape = model.in_shape();
     let out_shape = model.out_shape();
 
-    println!("# serve_bert: FFN block (seq 128, d 768, ff 3072, block 16) on the native backend");
+    println!(
+        "# serve_bert: FFN block (seq 128, d 768, ff 3072, block 16) on the native backend, \
+         {cores} cores"
+    );
     let model2 = model.clone();
+    let in_shape2 = in_shape.clone();
     let t_load = Instant::now();
     let server = Server::start(ServerConfig { max_batch, ..Default::default() }, move || {
         let mut variants: BTreeMap<usize, Box<dyn BatchRunner>> = BTreeMap::new();
         for bsz in [1usize, 2, 4, 8] {
             variants.insert(bsz, Box::new(model2.clone()));
         }
-        Ok((variants, out_shape))
+        Ok((variants, in_shape2, out_shape))
     })?;
     println!("# ready in {:?}\n", t_load.elapsed());
 

@@ -1,0 +1,76 @@
+//! Bench multicore — measured speedup curve of the tile-parallel native
+//! kernels over the serial ones, on the BERT-tiny FFN workload
+//! (seq 128, d_model 128, d_ff 512, block 16). The execution-side
+//! counterpart of the simulator's Fig. 7 multi-core scaling: future PRs
+//! track the measured curve against the paper's.
+//!
+//! Also asserts the determinism contract while it measures: every
+//! parallel forward is bitwise identical to the serial one.
+//!
+//! Run: `cargo bench --bench multicore [-- --cores N]`
+//! (`--cores N` measures just N workers against the serial baseline;
+//! the default sweeps 2/4/8 plus the host's available parallelism.)
+//! Greppable summary: lines starting `multicore-speedup`.
+
+use bwma::runtime::{available_cores, NativeModel, Tensor};
+use bwma::util::{bench, XorShift64};
+
+fn core_counts() -> Vec<usize> {
+    let args: Vec<String> = std::env::args().collect();
+    if let Some(n) = args
+        .iter()
+        .position(|a| a == "--cores")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+    {
+        return vec![n];
+    }
+    let mut counts = vec![2usize, 4, 8];
+    let host = available_cores();
+    if !counts.contains(&host) && host > 1 {
+        counts.push(host);
+        counts.sort_unstable();
+    }
+    counts
+}
+
+fn main() {
+    // BERT-tiny FFN block.
+    let (seq, d_model, d_ff, block) = (128usize, 128usize, 512usize, 16usize);
+    let model = NativeModel::new(seq, d_model, d_ff, block, 0xB117).unwrap();
+    let mut rng = XorShift64::new(0xB112);
+    let mut data = vec![0.0f32; seq * d_model];
+    rng.fill_f32(&mut data);
+    let x = Tensor::new(vec![seq, d_model], data);
+
+    println!(
+        "# multicore: BERT-tiny FFN (seq {seq}, d_model {d_model}, d_ff {d_ff}, block {block}); \
+         host parallelism {}",
+        available_cores()
+    );
+
+    let serial = bench::bench("multicore/ffn-forward-1core", 2, 7, || {
+        model.forward_with_cores(&x, 1).unwrap()
+    });
+    let baseline = serial.median();
+    let expect = model.forward_with_cores(&x, 1).unwrap();
+
+    println!("multicore-speedup cores=1 median={baseline:?} speedup=1.00");
+    for cores in core_counts() {
+        let got = model.forward_with_cores(&x, cores).unwrap();
+        let bitwise = expect
+            .data
+            .iter()
+            .zip(&got.data)
+            .all(|(a, b)| a.to_bits() == b.to_bits());
+        assert!(bitwise, "parallel forward at {cores} cores diverged from serial");
+        let s = bench::bench(&format!("multicore/ffn-forward-{cores}core"), 2, 7, || {
+            model.forward_with_cores(&x, cores).unwrap()
+        });
+        let speedup = baseline.as_secs_f64() / s.median().as_secs_f64();
+        println!(
+            "multicore-speedup cores={cores} median={:?} speedup={speedup:.2}",
+            s.median()
+        );
+    }
+}

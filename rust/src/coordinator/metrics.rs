@@ -40,14 +40,25 @@ impl LatencyStats {
     }
 }
 
-/// Aggregate serving counters, filled by the batcher thread.
+/// Aggregate serving counters, filled by the batcher thread and handed
+/// back at [`shutdown`](crate::coordinator::Server::shutdown) — the
+/// per-request queue/exec samples turn into [`LatencyStats`] via
+/// [`Self::queue_latency`]/[`Self::exec_latency`].
 #[derive(Debug, Clone, Default)]
 pub struct ServerMetrics {
     pub requests: u64,
     pub batches: u64,
+    /// Requests rejected at batch-assembly time (shape mismatch) —
+    /// failed individually, never fused with well-formed requests.
+    pub rejected: u64,
     /// Histogram over executed batch sizes (index = size).
     pub batch_size_hist: Vec<u64>,
     pub model_exec_time: Duration,
+    /// Per-request time spent queued before its batch executed.
+    pub queue_samples: Vec<Duration>,
+    /// Per-request model execution time (the batch's, attributed to each
+    /// request fused into it).
+    pub exec_samples: Vec<Duration>,
 }
 
 impl ServerMetrics {
@@ -59,6 +70,26 @@ impl ServerMetrics {
         }
         self.batch_size_hist[size] += 1;
         self.model_exec_time += exec;
+    }
+
+    /// Record one request's latency breakdown (executor loop, at batch
+    /// completion).
+    pub fn record_request(&mut self, queue: Duration, exec: Duration) {
+        self.queue_samples.push(queue);
+        self.exec_samples.push(exec);
+    }
+
+    /// Queue-time distribution over every recorded request (`None`
+    /// before any request completed).
+    pub fn queue_latency(&self) -> Option<LatencyStats> {
+        (!self.queue_samples.is_empty())
+            .then(|| LatencyStats::from_samples(self.queue_samples.clone()))
+    }
+
+    /// Execution-time distribution over every recorded request.
+    pub fn exec_latency(&self) -> Option<LatencyStats> {
+        (!self.exec_samples.is_empty())
+            .then(|| LatencyStats::from_samples(self.exec_samples.clone()))
     }
 
     pub fn mean_batch_size(&self) -> f64 {
@@ -95,5 +126,26 @@ mod tests {
         assert_eq!(m.batches, 3);
         assert_eq!(m.batch_size_hist[4], 2);
         assert!((m.mean_batch_size() - 10.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn request_latency_aggregation() {
+        let mut m = ServerMetrics::default();
+        assert!(m.queue_latency().is_none(), "no samples yet");
+        assert!(m.exec_latency().is_none());
+        // Queue times 1..=100 ms (shuffled order must not matter), exec
+        // pinned at 7 ms.
+        for q in (1..=50).rev().chain(51..=100) {
+            m.record_request(Duration::from_millis(q), Duration::from_millis(7));
+        }
+        let queue = m.queue_latency().unwrap();
+        assert_eq!(queue.count(), 100);
+        assert_eq!(queue.p50(), Duration::from_millis(50));
+        assert_eq!(queue.p99(), Duration::from_millis(99));
+        assert_eq!(queue.mean(), Duration::from_micros(50_500));
+        let exec = m.exec_latency().unwrap();
+        assert_eq!(exec.p50(), Duration::from_millis(7));
+        assert_eq!(exec.p99(), Duration::from_millis(7));
+        assert_eq!(exec.mean(), Duration::from_millis(7));
     }
 }

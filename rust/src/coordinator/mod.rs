@@ -16,4 +16,4 @@ pub mod server;
 
 pub use experiment::{run_experiment, ExperimentOutput};
 pub use metrics::{LatencyStats, ServerMetrics};
-pub use server::{Server, ServerConfig};
+pub use server::{Server, ServerConfig, ServerHandle};

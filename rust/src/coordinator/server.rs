@@ -3,9 +3,13 @@
 //!
 //! Requests carry a blocked activation tensor (one sequence). The batcher
 //! greedily drains the queue up to `max_batch` (bounded by a short
-//! timeout, vLLM-style continuous batching at this scale), stacks the
-//! activations along a new leading axis, picks the largest compiled batch
-//! variant that fits, and splits the outputs back per request.
+//! timeout, vLLM-style continuous batching at this scale), validates each
+//! request's shape against the server's input contract (offenders fail
+//! alone), stacks the well-formed activations along a new leading axis,
+//! picks the largest compiled batch variant that fits, and splits the
+//! outputs back per request. The native executor dispatches the batch's
+//! sequences across the model's multi-core worker pool
+//! ([`crate::runtime::parallel`]) with bitwise-deterministic results.
 //!
 //! Executor handles may not be `Send` (PJRT's aren't), so the executor
 //! thread *owns* them: the caller passes a factory that loads/builds the
@@ -31,10 +35,20 @@ pub trait BatchRunner {
     fn run(&self, stacked: Tensor, out_shape: Vec<usize>) -> Result<Tensor>;
 }
 
-/// The default executor: run each sequence of the stacked batch through
-/// the blocked-kernel forward pass. Shape errors are returned as `Err`
-/// (never panicked): a malformed request must fail itself, not kill the
-/// executor thread for everyone else.
+/// The default executor: run the sequences of the stacked batch through
+/// the blocked-kernel forward pass — dispatched across the model's
+/// scoped worker pool when it has more than one core. Shape errors are
+/// returned as `Err` (never panicked): a malformed request must fail
+/// itself, not kill the executor thread for everyone else.
+///
+/// Parallel policy: a single sequence fans its *kernels* out over all
+/// cores ([`NativeModel::forward`]); a multi-sequence batch is split
+/// into contiguous per-worker chunks of sequences, and each worker fans
+/// its own kernels over the pool's leftover share (`cores / workers`),
+/// so the full core count stays busy even when the batch is small.
+/// Either way the output is bitwise identical to the serial walk —
+/// sequences are independent, each is computed by exactly one worker,
+/// and the kernels' accumulation order is core-count-invariant.
 impl BatchRunner for NativeModel {
     fn run(&self, stacked: Tensor, out_shape: Vec<usize>) -> Result<Tensor> {
         anyhow::ensure!(stacked.shape.len() == 3, "stacked batch must be [batch, seq, d]");
@@ -46,14 +60,48 @@ impl BatchRunner for NativeModel {
             &stacked.shape[1..],
             self.in_shape()
         );
-        let mut out = Vec::with_capacity(bsz * per_seq);
-        for s in 0..bsz {
-            let x = Tensor::new(
-                self.in_shape(),
-                stacked.data[s * per_seq..(s + 1) * per_seq].to_vec(),
-            );
-            out.extend_from_slice(&self.forward(&x)?.data);
-        }
+        let workers = self.cores().min(bsz);
+        let out = if workers <= 1 {
+            let mut out = Vec::with_capacity(bsz * per_seq);
+            for s in 0..bsz {
+                let x = Tensor::new(
+                    self.in_shape(),
+                    stacked.data[s * per_seq..(s + 1) * per_seq].to_vec(),
+                );
+                out.extend_from_slice(&self.forward(&x)?.data);
+            }
+            out
+        } else {
+            let inner_cores = (self.cores() / workers).max(1);
+            let ranges = crate::runtime::parallel::split_even(bsz, workers);
+            std::thread::scope(|sc| -> Result<Vec<f32>> {
+                let stacked = &stacked;
+                let handles: Vec<_> = ranges
+                    .iter()
+                    .filter(|r| !r.is_empty())
+                    .map(|r| {
+                        sc.spawn(move || -> Result<Vec<f32>> {
+                            let mut local = Vec::with_capacity(r.len() * per_seq);
+                            for s in r.clone() {
+                                let x = Tensor::new(
+                                    self.in_shape(),
+                                    stacked.data[s * per_seq..(s + 1) * per_seq].to_vec(),
+                                );
+                                local.extend_from_slice(
+                                    &self.forward_with_cores(&x, inner_cores)?.data,
+                                );
+                            }
+                            Ok(local)
+                        })
+                    })
+                    .collect();
+                let mut out = Vec::with_capacity(bsz * per_seq);
+                for h in handles {
+                    out.extend_from_slice(&h.join().expect("batch worker panicked")?);
+                }
+                Ok(out)
+            })?
+        };
         anyhow::ensure!(
             out.len() == out_shape.iter().product::<usize>(),
             "forward produced {} elements, caller expected shape {out_shape:?}",
@@ -139,13 +187,38 @@ pub struct Server {
     worker: Option<std::thread::JoinHandle<()>>,
 }
 
+/// Cloneable submitter detached from the [`Server`]'s lifetime: client
+/// threads submit through handles while the owner keeps the right to
+/// [`Server::shutdown`]. A submit that races past shutdown observes a
+/// disconnected response channel — never a hang.
+#[derive(Clone)]
+pub struct ServerHandle {
+    tx: mpsc::Sender<Msg>,
+}
+
+impl ServerHandle {
+    /// Submit one sequence; returns a receiver for the response.
+    pub fn submit(&self, input: Tensor) -> mpsc::Receiver<Result<Response>> {
+        let (rtx, rrx) = mpsc::channel();
+        let req = Request { input, enqueued: Instant::now(), respond: rtx };
+        if self.tx.send(Msg::Req(req)).is_err() {
+            // Executor gone: the receiver will observe a disconnect.
+        }
+        rrx
+    }
+}
+
 impl Server {
     /// Start the executor thread. `factory` runs inside the thread and
     /// returns the batch-variant map (batch size → executable) plus the
-    /// per-sequence output shape.
+    /// per-sequence input and output shapes. The input shape is the
+    /// server's admission contract: requests with any other shape are
+    /// rejected individually at batch-assembly time.
     pub fn start<F>(cfg: ServerConfig, factory: F) -> Result<Self>
     where
-        F: FnOnce() -> Result<(BTreeMap<usize, Box<dyn BatchRunner>>, Vec<usize>)> + Send + 'static,
+        F: FnOnce() -> Result<(BTreeMap<usize, Box<dyn BatchRunner>>, Vec<usize>, Vec<usize>)>
+            + Send
+            + 'static,
     {
         let (tx, rx) = mpsc::channel::<Msg>();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
@@ -157,14 +230,14 @@ impl Server {
         Ok(Self { tx, worker: Some(worker) })
     }
 
+    /// A cloneable submitter for concurrent client threads.
+    pub fn handle(&self) -> ServerHandle {
+        ServerHandle { tx: self.tx.clone() }
+    }
+
     /// Submit one sequence; returns a receiver for the response.
     pub fn submit(&self, input: Tensor) -> mpsc::Receiver<Result<Response>> {
-        let (rtx, rrx) = mpsc::channel();
-        let req = Request { input, enqueued: Instant::now(), respond: rtx };
-        if self.tx.send(Msg::Req(req)).is_err() {
-            // Executor gone: the receiver will observe a disconnect.
-        }
-        rrx
+        self.handle().submit(input)
     }
 
     /// Stop the server and collect final metrics.
@@ -185,9 +258,9 @@ fn executor_loop<F>(
     rx: mpsc::Receiver<Msg>,
     ready: mpsc::Sender<Result<()>>,
 ) where
-    F: FnOnce() -> Result<(BTreeMap<usize, Box<dyn BatchRunner>>, Vec<usize>)>,
+    F: FnOnce() -> Result<(BTreeMap<usize, Box<dyn BatchRunner>>, Vec<usize>, Vec<usize>)>,
 {
-    let (variants, out_shape) = match factory() {
+    let (variants, in_shape, out_shape) = match factory() {
         Ok(v) => {
             let _ = ready.send(Ok(()));
             v
@@ -221,7 +294,7 @@ fn executor_loop<F>(
             match rx.recv_timeout(deadline - now) {
                 Ok(Msg::Req(r)) => batch.push(r),
                 Ok(Msg::Shutdown(mtx)) => {
-                    run_batch(&variants, &out_shape, batch, &mut metrics);
+                    run_batch(&variants, &in_shape, &out_shape, batch, &mut metrics);
                     let _ = mtx.send(metrics);
                     return;
                 }
@@ -229,17 +302,37 @@ fn executor_loop<F>(
                 Err(mpsc::RecvTimeoutError::Disconnected) => break,
             }
         }
-        run_batch(&variants, &out_shape, batch, &mut metrics);
+        run_batch(&variants, &in_shape, &out_shape, batch, &mut metrics);
     }
 }
 
 /// Pick the largest variant ≤ queue depth; run leftovers in a second pass.
 fn run_batch(
     variants: &BTreeMap<usize, Box<dyn BatchRunner>>,
+    in_shape: &[usize],
     out_shape: &[usize],
-    mut batch: Vec<Request>,
+    batch: Vec<Request>,
     metrics: &mut ServerMetrics,
 ) {
+    // Batch-assembly validation: requests are blindly concatenated below
+    // (and the last one is reused as padding), so one malformed request
+    // would poison or mis-pad everyone fused with it. Reject offenders
+    // individually; everyone else proceeds.
+    let mut batch: Vec<Request> = batch
+        .into_iter()
+        .filter_map(|r| {
+            if r.input.shape == in_shape {
+                Some(r)
+            } else {
+                metrics.rejected += 1;
+                let _ = r.respond.send(Err(anyhow!(
+                    "request shape {:?} does not match server input shape {in_shape:?}",
+                    r.input.shape
+                )));
+                None
+            }
+        })
+        .collect();
     while !batch.is_empty() {
         let size = variants
             .keys()
@@ -261,9 +354,9 @@ fn run_batch(
         while stacked.len() < size * per_seq {
             stacked.extend_from_slice(&chunk.last().unwrap().input.data); // pad
         }
-        let mut in_shape = vec![size];
-        in_shape.extend_from_slice(&chunk[0].input.shape);
-        let input = Tensor::new(in_shape, stacked);
+        let mut full_in_shape = vec![size];
+        full_in_shape.extend_from_slice(in_shape);
+        let input = Tensor::new(full_in_shape, stacked);
 
         let mut full_out_shape = vec![size];
         full_out_shape.extend_from_slice(out_shape);
@@ -278,9 +371,11 @@ fn run_batch(
                 let per_out: usize = out_shape.iter().product();
                 for (i, r) in chunk.into_iter().enumerate() {
                     let data = out.data[i * per_out..(i + 1) * per_out].to_vec();
+                    let queue = t0.duration_since(r.enqueued);
+                    metrics.record_request(queue, exec);
                     let resp = Response {
                         output: Tensor::new(out_shape.to_vec(), data),
-                        queue_time: t0.duration_since(r.enqueued),
+                        queue_time: queue,
                         exec_time: exec,
                         batch_size: size,
                     };
@@ -290,6 +385,7 @@ fn run_batch(
             Err(e) => {
                 let msg = format!("{e:#}");
                 for r in chunk {
+                    metrics.record_request(t0.duration_since(r.enqueued), exec);
                     let _ = r.respond.send(Err(anyhow!("{msg}")));
                 }
             }

@@ -15,10 +15,14 @@
 //! 2. **Numerics** — a native blocked-execution backend
 //!    ([`runtime::native`]): f32 and int8 GEMM, bias+GELU, layernorm, and
 //!    softmax kernels operating directly on BWMA-packed buffers (the
-//!    default). With `--features pjrt`, AOT-compiled JAX/Pallas artifacts
-//!    (built by `python/compile/`) execute through PJRT instead;
+//!    default), with a multi-core execution layer ([`runtime::parallel`])
+//!    that fans the same kernels over a scoped worker pool with
+//!    bitwise-identical results for any core count. With
+//!    `--features pjrt`, AOT-compiled JAX/Pallas artifacts (built by
+//!    `python/compile/`) execute through PJRT instead;
 //! 3. **Serving** — a request router + dynamic batcher ([`coordinator`])
-//!    that runs either backend on the request path with Python nowhere
+//!    that runs either backend on the request path — batch sequences
+//!    dispatched across the native worker pool — with Python nowhere
 //!    in sight.
 //!
 //! See `rust/README.md` for build instructions, the feature matrix, and

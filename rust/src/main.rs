@@ -27,7 +27,7 @@ use bwma::coordinator::server::WithParams;
 use bwma::coordinator::{report, Server, ServerConfig};
 #[cfg(feature = "pjrt")]
 use bwma::runtime::{artifacts_dir, GoldenSet, Runtime};
-use bwma::runtime::{native_tags, run_native_check, NativeModel, Tensor};
+use bwma::runtime::{available_cores, native_tags, run_native_check_with_cores, NativeModel, Tensor};
 use bwma::sim::simulate;
 use bwma::util::{table, XorShift64};
 
@@ -68,16 +68,19 @@ bwma — accelerator-driven data arrangement for transformers (full-system repro
 USAGE:
   bwma experiment <fig6a|fig6b|fig7|fig8|convert-overhead|headline|all>
                   [--scale paper|tiny] [--markdown]
-  bwma simulate <preset|config-file> [--layers N] [--convert]
-  bwma serve [--requests N] [--max-batch B] [--backend native|pjrt]
-             [--tag encoder_jnp_b16]
-  bwma verify <check-tag|all> [--backend native|pjrt]
+  bwma simulate <preset|config-file> [--layers N] [--convert] [--cores N]
+  bwma serve [--requests N] [--max-batch B] [--cores N]
+             [--backend native|pjrt] [--tag encoder_jnp_b16]
+  bwma verify <check-tag|all> [--cores N] [--backend native|pjrt]
   bwma config <list|dump <preset>>
 
 The default backend is `native`: blocked CPU kernels executing directly on
-BWMA-packed buffers, no artifacts or Python required. The `pjrt` backend
-needs a build with `--features pjrt` (and real xla bindings) plus
-artifacts from `python/compile/aot.py`.
+BWMA-packed buffers, no artifacts or Python required. `--cores` fans the
+native kernels over a scoped worker pool (default: the host's available
+parallelism; results are bitwise identical for any value — the same
+`cores` knob the simulator configs use). The `pjrt` backend needs a build
+with `--features pjrt` (and real xla bindings) plus artifacts from
+`python/compile/aot.py`.
 ";
 
 fn cmd_experiment(args: &[String]) -> Result<()> {
@@ -104,6 +107,12 @@ fn cmd_simulate(args: &[String]) -> Result<()> {
     }
     if flag(args, "--convert") {
         cfg.convert_boundaries = true;
+    }
+    if let Some(c) = opt(args, "--cores") {
+        // Same key as the config files' `cores =` (kept mirrored in the
+        // memory model, as config::apply does).
+        cfg.cores = c.parse().context("--cores")?;
+        cfg.mem.cores = cfg.cores;
     }
     let t0 = Instant::now();
     let res = simulate(&cfg);
@@ -152,8 +161,12 @@ fn cmd_simulate(args: &[String]) -> Result<()> {
 fn cmd_serve(args: &[String]) -> Result<()> {
     let n_requests: usize = opt(args, "--requests").unwrap_or("64").parse()?;
     let max_batch: usize = opt(args, "--max-batch").unwrap_or("8").parse()?;
+    let cores: usize = match opt(args, "--cores") {
+        Some(c) => c.parse().context("--cores")?,
+        None => available_cores(),
+    };
     match opt(args, "--backend").unwrap_or("native") {
-        "native" => serve_native(n_requests, max_batch),
+        "native" => serve_native(n_requests, max_batch, cores),
         #[cfg(feature = "pjrt")]
         "pjrt" => serve_pjrt(args, n_requests, max_batch),
         #[cfg(not(feature = "pjrt"))]
@@ -195,16 +208,30 @@ fn drive_server(
         metrics.batches,
         metrics.mean_batch_size(),
     );
+    // Server-side latency aggregation (executor-recorded samples).
+    if let (Some(q), Some(e)) = (metrics.queue_latency(), metrics.exec_latency()) {
+        println!(
+            "server-side: queue p50 {:?} p99 {:?} mean {:?} | exec p50 {:?} p99 {:?} mean {:?}",
+            q.p50(),
+            q.p99(),
+            q.mean(),
+            e.p50(),
+            e.p99(),
+            e.mean(),
+        );
+    }
     Ok(())
 }
 
 /// Serve on the native blocked-execution backend: a packed-weights FFN
-/// block, batch variants 1/2/4/8, nothing loaded from disk.
-fn serve_native(n_requests: usize, max_batch: usize) -> Result<()> {
+/// block, batch variants 1/2/4/8, nothing loaded from disk, kernels
+/// fanned over `cores` workers.
+fn serve_native(n_requests: usize, max_batch: usize, cores: usize) -> Result<()> {
     let (seq, d_model, d_ff, block) = (64usize, 96usize, 192usize, 16usize);
-    let model = NativeModel::new(seq, d_model, d_ff, block, 0xB3D)?;
+    let model = NativeModel::new(seq, d_model, d_ff, block, 0xB3D)?.with_cores(cores);
     let in_shape = model.in_shape();
     let out_shape = model.out_shape();
+    let in_shape2 = in_shape.clone();
     let server = Server::start(ServerConfig { max_batch, ..Default::default() }, move || {
         // One set of weights, shared by every batch-variant slot.
         let model = std::sync::Arc::new(model);
@@ -212,10 +239,11 @@ fn serve_native(n_requests: usize, max_batch: usize) -> Result<()> {
         for bsz in [1usize, 2, 4, 8] {
             variants.insert(bsz, Box::new(model.clone()));
         }
-        Ok((variants, out_shape))
+        Ok((variants, in_shape2, out_shape))
     })?;
     println!(
-        "serving {n_requests} requests (max batch {max_batch}, native FFN {seq}x{d_model}→{d_ff}, block {block})…"
+        "serving {n_requests} requests (max batch {max_batch}, {cores} cores, \
+         native FFN {seq}x{d_model}→{d_ff}, block {block})…"
     );
     drive_server(server, n_requests, &in_shape, "native")
 }
@@ -239,6 +267,7 @@ fn serve_pjrt(args: &[String], n_requests: usize, max_batch: usize) -> Result<()
 
     let dir2 = dir.clone();
     let tag2 = tag.clone();
+    let in_shape2 = in_shape.clone();
     let out_shape2 = out_shape.clone();
     let server = Server::start(ServerConfig { max_batch, ..Default::default() }, move || {
         let rt = Runtime::cpu()?;
@@ -251,7 +280,7 @@ fn serve_pjrt(args: &[String], n_requests: usize, max_batch: usize) -> Result<()
             }
         }
         anyhow::ensure!(!variants.is_empty(), "no batch artifacts for {tag2}; run `make artifacts`");
-        Ok((variants, out_shape2))
+        Ok((variants, in_shape2, out_shape2))
     })?;
     println!("serving {n_requests} requests (max batch {max_batch}, artifact {tag})…");
     drive_server(server, n_requests, &in_shape, "pjrt")
@@ -259,8 +288,12 @@ fn serve_pjrt(args: &[String], n_requests: usize, max_batch: usize) -> Result<()
 
 fn cmd_verify(args: &[String]) -> Result<()> {
     let tag = args.first().context("check tag required (or `all`)")?;
+    let cores: usize = match opt(args, "--cores") {
+        Some(c) => c.parse().context("--cores")?,
+        None => available_cores(),
+    };
     match opt(args, "--backend").unwrap_or("native") {
-        "native" => verify_native(tag),
+        "native" => verify_native(tag, cores),
         #[cfg(feature = "pjrt")]
         "pjrt" => verify_pjrt(tag),
         #[cfg(not(feature = "pjrt"))]
@@ -270,18 +303,19 @@ fn cmd_verify(args: &[String]) -> Result<()> {
 }
 
 /// Verify the native blocked kernels: pack inputs block-wise, execute on
-/// packed buffers, unpack, and compare against the row-major references.
-fn verify_native(tag: &str) -> Result<()> {
+/// packed buffers (fanned over `cores` workers), unpack, and compare
+/// against the serial row-major references.
+fn verify_native(tag: &str, cores: usize) -> Result<()> {
     let tags: Vec<&str> = if tag == "all" {
         native_tags().to_vec()
     } else {
         vec![tag]
     };
-    println!("backend: native (blocked CPU kernels on BWMA-packed buffers)");
+    println!("backend: native (blocked CPU kernels on BWMA-packed buffers, {cores} cores)");
     let mut failed = false;
     for t in &tags {
         let t0 = Instant::now();
-        let check = run_native_check(t)?;
+        let check = run_native_check_with_cores(t, cores)?;
         let dt = t0.elapsed();
         println!(
             "{t:<24} max|Δ|={:.3e}  exec={dt:?}  {}",

@@ -5,7 +5,9 @@
 //!   ([`native`]) executing f32/int8 GEMM, bias+GELU, layernorm, and
 //!   softmax directly on BWMA-packed buffers. `bwma serve` and
 //!   `bwma verify` run on this backend out of the box, no Python, no
-//!   artifacts, no external dependencies.
+//!   artifacts, no external dependencies. [`parallel`] fans the same
+//!   kernels over a scoped multi-core worker pool with bitwise-identical
+//!   results (`--cores`).
 //! * **PJRT** (`--features pjrt`) — load AOT-compiled HLO-text artifacts
 //!   (built by `python/compile/aot.py`) and execute them through the
 //!   `xla` crate's PJRT client: `PjRtClient::cpu()` →
@@ -21,12 +23,16 @@ mod artifacts;
 #[cfg(feature = "pjrt")]
 mod client;
 pub mod native;
+pub mod parallel;
 pub mod quant;
 mod tensor;
 
 pub use artifacts::{artifacts_dir, GoldenSet};
 #[cfg(feature = "pjrt")]
 pub use client::{Executable, Runtime};
-pub use native::{native_tags, run_native_check, NativeCheck, NativeModel};
+pub use native::{
+    native_tags, run_native_check, run_native_check_with_cores, NativeCheck, NativeModel,
+};
+pub use parallel::available_cores;
 pub use quant::{qgemm, QTensor};
 pub use tensor::Tensor;

@@ -40,20 +40,31 @@ use super::tensor::Tensor;
 /// Descriptor of a packed `rows×cols` BWMA matrix in *element* units:
 /// with `base = 0` and `elem = 1`, [`AddressMap::addr`] and
 /// [`tile_spans`] yield element offsets straight into the packed slice.
-fn packed_desc(rows: usize, cols: usize, block: usize) -> MatrixDesc {
+pub(crate) fn packed_desc(rows: usize, cols: usize, block: usize) -> MatrixDesc {
     MatrixDesc::new(0, rows, cols, 1, block, Layout::Bwma)
 }
 
 /// Element range of tile `(block_row, block_col)` in a packed buffer —
 /// one contiguous burst under BWMA.
-fn tile_range(m: &MatrixDesc, block_row: usize, block_col: usize) -> std::ops::Range<usize> {
+pub(crate) fn tile_range(
+    m: &MatrixDesc,
+    block_row: usize,
+    block_col: usize,
+) -> std::ops::Range<usize> {
     let walk = tile_spans(m, TileRef { block_row, block_col });
     debug_assert_eq!(walk.spans.len(), 1, "a BWMA tile is one contiguous burst");
     let (start, len) = walk.spans[0];
     start as usize..start as usize + len as usize
 }
 
-fn check_gemm_dims(m: usize, k: usize, n: usize, block: usize, a: usize, b: usize) -> Result<()> {
+pub(crate) fn check_gemm_dims(
+    m: usize,
+    k: usize,
+    n: usize,
+    block: usize,
+    a: usize,
+    b: usize,
+) -> Result<()> {
     ensure!(block > 0, "zero block");
     ensure!(
         m % block == 0 && k % block == 0 && n % block == 0,
@@ -67,7 +78,7 @@ fn check_gemm_dims(m: usize, k: usize, n: usize, block: usize, a: usize, b: usiz
 /// One `b×b` tile MAC: `c += a × b`, all three tiles row-major within
 /// the tile (the contiguous burst layout of a packed block).
 #[inline]
-fn tile_mac_f32(at: &[f32], bt: &[f32], ct: &mut [f32], b: usize) {
+pub(crate) fn tile_mac_f32(at: &[f32], bt: &[f32], ct: &mut [f32], b: usize) {
     for r in 0..b {
         let arow = &at[r * b..(r + 1) * b];
         let crow = &mut ct[r * b..(r + 1) * b];
@@ -137,24 +148,31 @@ pub fn gemm_i8(
             for i in 0..dc.block_rows() {
                 let at = &a[tile_range(&da, i, p)];
                 let ct = &mut c[tile_range(&dc, i, j)];
-                for r in 0..block {
-                    let arow = &at[r * block..(r + 1) * block];
-                    let crow = &mut ct[r * block..(r + 1) * block];
-                    for (q, &av) in arow.iter().enumerate() {
-                        if av == 0 {
-                            continue;
-                        }
-                        let av = av as i32;
-                        let brow = &bt[q * block..(q + 1) * block];
-                        for (cv, &bv) in crow.iter_mut().zip(brow) {
-                            *cv += av * bv as i32;
-                        }
-                    }
-                }
+                tile_mac_i8(at, bt, ct, block);
             }
         }
     }
     Ok(c)
+}
+
+/// One `b×b` int8 tile MAC into i32 accumulators — the inner loop shared
+/// by the serial and tile-parallel ([`super::parallel`]) int8 GEMMs.
+#[inline]
+pub(crate) fn tile_mac_i8(at: &[i8], bt: &[i8], ct: &mut [i32], b: usize) {
+    for r in 0..b {
+        let arow = &at[r * b..(r + 1) * b];
+        let crow = &mut ct[r * b..(r + 1) * b];
+        for (q, &av) in arow.iter().enumerate() {
+            if av == 0 {
+                continue;
+            }
+            let av = av as i32;
+            let brow = &bt[q * b..(q + 1) * b];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv as i32;
+            }
+        }
+    }
 }
 
 /// tanh-approximation GELU — the form an accelerator LUT implements, and
@@ -166,7 +184,7 @@ pub fn gelu(x: f32) -> f32 {
     0.5 * x * (1.0 + (SQRT_2_OVER_PI * (x + 0.044_715 * x * x * x)).tanh())
 }
 
-fn check_rowwise(len: usize, rows: usize, cols: usize, block: usize) -> Result<()> {
+pub(crate) fn check_rowwise(len: usize, rows: usize, cols: usize, block: usize) -> Result<()> {
     ensure!(block > 0 && rows % block == 0 && cols % block == 0, "{rows}x{cols} not divisible by block {block}");
     ensure!(len == rows * cols, "buffer has {len} elements, {rows}x{cols} needs {}", rows * cols);
     Ok(())
@@ -355,6 +373,10 @@ pub struct NativeModel {
     pub d_model: usize,
     pub d_ff: usize,
     pub block: usize,
+    /// Worker threads the blocked kernels fan out over (1 = serial; the
+    /// results are bitwise identical either way — see
+    /// [`super::parallel`]).
+    cores: usize,
     /// Packed (BWMA) weights, as they would live in accelerator memory.
     w1: Vec<f32>,
     w2: Vec<f32>,
@@ -397,7 +419,20 @@ impl NativeModel {
         let beta = fill(d_model, 0.1);
         let w1 = crate::layout::rwma_to_bwma(&w1_rm, d_model, d_ff, block);
         let w2 = crate::layout::rwma_to_bwma(&w2_rm, d_ff, d_model, block);
-        Ok(Self { seq, d_model, d_ff, block, w1, w2, w1_rm, w2_rm, b1, b2, gamma, beta })
+        Ok(Self { seq, d_model, d_ff, block, cores: 1, w1, w2, w1_rm, w2_rm, b1, b2, gamma, beta })
+    }
+
+    /// Set the worker count the model's kernels (and the batcher's
+    /// per-sequence dispatch) fan out over. Clamped to ≥ 1; numerics are
+    /// bitwise independent of the choice.
+    pub fn with_cores(mut self, cores: usize) -> Self {
+        self.cores = cores.max(1);
+        self
+    }
+
+    /// Worker threads this model executes with.
+    pub fn cores(&self) -> usize {
+        self.cores
     }
 
     /// Per-sequence input shape (row-major host tensor).
@@ -410,8 +445,17 @@ impl NativeModel {
         vec![self.seq, self.d_model]
     }
 
-    /// Forward one `[seq, d_model]` sequence through the blocked kernels.
+    /// Forward one `[seq, d_model]` sequence through the blocked kernels
+    /// on the model's configured core count ([`Self::with_cores`]).
     pub fn forward(&self, x: &Tensor) -> Result<Tensor> {
+        self.forward_with_cores(x, self.cores)
+    }
+
+    /// Forward on an explicit core count: `cores <= 1` runs the serial
+    /// kernels; more fans each GEMM's output tile-grid and the row-wise
+    /// ops over a scoped worker pool ([`super::parallel`]). The result
+    /// is bitwise identical for every `cores` value.
+    pub fn forward_with_cores(&self, x: &Tensor, cores: usize) -> Result<Tensor> {
         ensure!(
             x.shape == self.in_shape(),
             "input shape {:?}, model wants {:?}",
@@ -420,11 +464,11 @@ impl NativeModel {
         );
         let (s, d, f, b) = (self.seq, self.d_model, self.d_ff, self.block);
         let xp = x.pack_blocked(b)?;
-        let mut h = gemm_f32(&xp.data, &self.w1, s, d, f, b)?;
+        let mut h = super::parallel::gemm_f32(&xp.data, &self.w1, s, d, f, b, cores)?;
         bias_gelu(&mut h, &self.b1, s, f, b)?;
-        let mut y = gemm_f32(&h, &self.w2, s, f, d, b)?;
+        let mut y = super::parallel::gemm_f32(&h, &self.w2, s, f, d, b, cores)?;
         bias_add(&mut y, &self.b2, s, d, b)?;
-        layernorm(&mut y, &self.gamma, &self.beta, s, d, b, Self::EPS)?;
+        super::parallel::layernorm(&mut y, &self.gamma, &self.beta, s, d, b, Self::EPS, cores)?;
         Tensor::new(vec![s / b, d / b, b, b], y).unpack_blocked()
     }
 
@@ -461,6 +505,7 @@ pub fn native_tags() -> &'static [&'static str] {
         "native_layernorm_b16",
         "native_softmax_b16",
         "native_ffn_b16",
+        "native_parallel_equiv_b16",
     ]
 }
 
@@ -479,7 +524,7 @@ fn roundtrip_check(t: &Tensor, block: usize) -> Result<()> {
     Ok(())
 }
 
-fn check_gemm_f32(tag: &'static str, block: usize) -> Result<NativeCheck> {
+fn check_gemm_f32(tag: &'static str, block: usize, cores: usize) -> Result<NativeCheck> {
     let (m, k, n) = (4 * block, 6 * block, 3 * block);
     let mut rng = XorShift64::new(0x5EED ^ block as u64);
     let a = Tensor::new(vec![m, k], rand_vec(&mut rng, m * k));
@@ -487,14 +532,14 @@ fn check_gemm_f32(tag: &'static str, block: usize) -> Result<NativeCheck> {
     roundtrip_check(&a, block)?;
     let ap = a.pack_blocked(block)?;
     let bp = b.pack_blocked(block)?;
-    let cp = gemm_f32(&ap.data, &bp.data, m, k, n, block)?;
+    let cp = super::parallel::gemm_f32(&ap.data, &bp.data, m, k, n, block, cores)?;
     let c = Tensor::new(vec![m / block, n / block, block, block], cp).unpack_blocked()?;
     let expect = Tensor::new(vec![m, n], reference::gemm(&a.data, &b.data, m, k, n));
     let diff = c.max_abs_diff(&expect);
     Ok(NativeCheck { tag, max_diff: diff, ok: c.allclose(&expect, 1e-4, 1e-4) })
 }
 
-fn check_gemm_i8(tag: &'static str, block: usize) -> Result<NativeCheck> {
+fn check_gemm_i8(tag: &'static str, block: usize, cores: usize) -> Result<NativeCheck> {
     let (m, k, n) = (4 * block, 6 * block, 3 * block);
     let mut rng = XorShift64::new(0x17E8);
     let a = Tensor::new(vec![m, k], rand_vec(&mut rng, m * k));
@@ -504,7 +549,7 @@ fn check_gemm_i8(tag: &'static str, block: usize) -> Result<NativeCheck> {
     // Pack the int8 payloads block-wise and run the blocked kernel...
     let qa_p = crate::layout::rwma_to_bwma(&qa.data, m, k, block);
     let qb_p = crate::layout::rwma_to_bwma(&qb.data, k, n, block);
-    let acc = gemm_i8(&qa_p, &qb_p, m, k, n, block)?;
+    let acc = super::parallel::gemm_i8(&qa_p, &qb_p, m, k, n, block, cores)?;
     let rescale = qa.scale * qb.scale;
     let cp: Vec<f32> = acc.into_iter().map(|v| v as f32 * rescale).collect();
     let c = Tensor::new(vec![m / block, n / block, block, block], cp).unpack_blocked()?;
@@ -531,14 +576,23 @@ fn check_elementwise(tag: &'static str, block: usize) -> Result<NativeCheck> {
     Ok(NativeCheck { tag, max_diff: diff, ok: got.allclose(&expect, 1e-5, 1e-5) })
 }
 
-fn check_layernorm(tag: &'static str, block: usize) -> Result<NativeCheck> {
+fn check_layernorm(tag: &'static str, block: usize, cores: usize) -> Result<NativeCheck> {
     let (rows, cols) = (4 * block, 5 * block);
     let mut rng = XorShift64::new(0x10A);
     let x = Tensor::new(vec![rows, cols], rand_vec(&mut rng, rows * cols));
     let gamma = rand_vec(&mut rng, cols);
     let beta = rand_vec(&mut rng, cols);
     let mut packed = x.pack_blocked(block)?.data;
-    layernorm(&mut packed, &gamma, &beta, rows, cols, block, NativeModel::EPS)?;
+    super::parallel::layernorm(
+        &mut packed,
+        &gamma,
+        &beta,
+        rows,
+        cols,
+        block,
+        NativeModel::EPS,
+        cores,
+    )?;
     let got =
         Tensor::new(vec![rows / block, cols / block, block, block], packed).unpack_blocked()?;
     let mut expect = x.data.clone();
@@ -548,12 +602,12 @@ fn check_layernorm(tag: &'static str, block: usize) -> Result<NativeCheck> {
     Ok(NativeCheck { tag, max_diff: diff, ok: got.allclose(&expect, 1e-4, 1e-4) })
 }
 
-fn check_softmax(tag: &'static str, block: usize) -> Result<NativeCheck> {
+fn check_softmax(tag: &'static str, block: usize, cores: usize) -> Result<NativeCheck> {
     let (rows, cols) = (4 * block, 5 * block);
     let mut rng = XorShift64::new(0x50F);
     let x = Tensor::new(vec![rows, cols], rand_vec(&mut rng, rows * cols));
     let mut packed = x.pack_blocked(block)?.data;
-    softmax(&mut packed, rows, cols, block)?;
+    super::parallel::softmax(&mut packed, rows, cols, block, cores)?;
     let got =
         Tensor::new(vec![rows / block, cols / block, block, block], packed).unpack_blocked()?;
     let mut expect = x.data.clone();
@@ -569,26 +623,74 @@ fn check_softmax(tag: &'static str, block: usize) -> Result<NativeCheck> {
     Ok(NativeCheck { tag, max_diff: diff, ok })
 }
 
-fn check_ffn(tag: &'static str, block: usize) -> Result<NativeCheck> {
+fn check_ffn(tag: &'static str, block: usize, cores: usize) -> Result<NativeCheck> {
     let model = NativeModel::new(4 * block, 6 * block, 8 * block, block, 0xFF1)?;
     let mut rng = XorShift64::new(0xFF2);
     let x = Tensor::new(model.in_shape(), rand_vec(&mut rng, model.seq * model.d_model));
-    let got = model.forward(&x)?;
+    let got = model.forward_with_cores(&x, cores)?;
     let expect = model.forward_reference(&x)?;
     let diff = got.max_abs_diff(&expect);
     Ok(NativeCheck { tag, max_diff: diff, ok: got.allclose(&expect, 1e-3, 1e-3) })
 }
 
-/// Run one named check of the native suite.
+/// The determinism guarantee, as a verify tag: the tile-parallel kernels
+/// and the parallel FFN forward must be **bitwise identical** to their
+/// serial runs at several awkward core counts (including more cores than
+/// tiles). `max_diff` is the max |Δ| over every comparison — the check
+/// passes only when it is exactly 0.
+fn check_parallel_equiv(tag: &'static str, block: usize) -> Result<NativeCheck> {
+    let (m, k, n) = (4 * block, 6 * block, 3 * block);
+    let mut rng = XorShift64::new(0x9A11E1);
+    let a = Tensor::new(vec![m, k], rand_vec(&mut rng, m * k)).pack_blocked(block)?;
+    let b = Tensor::new(vec![k, n], rand_vec(&mut rng, k * n)).pack_blocked(block)?;
+    let serial = gemm_f32(&a.data, &b.data, m, k, n, block)?;
+    let model = NativeModel::new(4 * block, 3 * block, 8 * block, block, 0xE9)?;
+    let x = Tensor::new(model.in_shape(), rand_vec(&mut rng, model.seq * model.d_model));
+    let fwd_serial = model.forward_with_cores(&x, 1)?;
+    let mut max_diff = 0.0f32;
+    let mut ok = true;
+    for cores in [2usize, 3, 8, 64] {
+        let par = super::parallel::gemm_f32(&a.data, &b.data, m, k, n, block, cores)?;
+        let bitwise =
+            serial.iter().zip(&par).all(|(s, p)| s.to_bits() == p.to_bits());
+        let diff: f32 = serial
+            .iter()
+            .zip(&par)
+            .map(|(s, p)| (s - p).abs())
+            .fold(0.0, f32::max);
+        max_diff = max_diff.max(diff);
+        ok &= bitwise;
+        let fwd_par = model.forward_with_cores(&x, cores)?;
+        max_diff = max_diff.max(fwd_serial.max_abs_diff(&fwd_par));
+        ok &= fwd_serial
+            .data
+            .iter()
+            .zip(&fwd_par.data)
+            .all(|(s, p)| s.to_bits() == p.to_bits());
+    }
+    Ok(NativeCheck { tag, max_diff, ok })
+}
+
+/// Run one named check of the native suite on the serial kernels.
 pub fn run_native_check(tag: &str) -> Result<NativeCheck> {
+    run_native_check_with_cores(tag, 1)
+}
+
+/// Run one named check of the native suite with the blocked kernels
+/// fanned out over `cores` workers (`bwma verify --cores N`). The
+/// references stay serial, so this doubles as an end-to-end exercise of
+/// the parallel path; `native_parallel_equiv_b16` additionally pins the
+/// parallel/serial *bitwise* equality regardless of the flag.
+pub fn run_native_check_with_cores(tag: &str, cores: usize) -> Result<NativeCheck> {
     match tag {
-        "native_gemm_f32_b8" => check_gemm_f32("native_gemm_f32_b8", 8),
-        "native_gemm_f32_b16" => check_gemm_f32("native_gemm_f32_b16", 16),
-        "native_gemm_i8_b16" => check_gemm_i8("native_gemm_i8_b16", 16),
+        "native_gemm_f32_b8" => check_gemm_f32("native_gemm_f32_b8", 8, cores),
+        "native_gemm_f32_b16" => check_gemm_f32("native_gemm_f32_b16", 16, cores),
+        "native_gemm_i8_b16" => check_gemm_i8("native_gemm_i8_b16", 16, cores),
         "native_bias_gelu_b16" => check_elementwise("native_bias_gelu_b16", 16),
-        "native_layernorm_b16" => check_layernorm("native_layernorm_b16", 16),
-        "native_softmax_b16" => check_softmax("native_softmax_b16", 16),
-        "native_ffn_b16" => check_ffn("native_ffn_b16", 16),
+        "native_layernorm_b16" => check_layernorm("native_layernorm_b16", 16, cores),
+        "native_softmax_b16" => check_softmax("native_softmax_b16", 16, cores),
+        "native_ffn_b16" => check_ffn("native_ffn_b16", 16, cores),
+        "native_parallel_equiv_b16" => check_parallel_equiv("native_parallel_equiv_b16", 16),
         _ => bail!("unknown native check {tag:?} (see `bwma verify all`)"),
     }
 }

@@ -1,0 +1,353 @@
+//! Multi-core native execution: deterministic tile-parallel BWMA kernels.
+//!
+//! The simulator models per-core L1s over a shared banked L2
+//! ([`crate::mem::system`]); this module is the execution-side
+//! counterpart — the same §3 per-core data arrangement, run for real on
+//! host threads. Zero dependencies: the pool is [`std::thread::scope`],
+//! so workers borrow the operand slices directly and every join happens
+//! before the kernel returns.
+//!
+//! **Partitioning.** [`GridPartition`] splits the *output block-grid* of
+//! a BWMA GEMM across workers along block-columns: tiles are enumerated
+//! in block-column-major order (the serial kernel's `j`-outer order) and
+//! cut into `cores` contiguous chunks whose sizes differ by at most one.
+//! A worker therefore owns (nearly) whole block-columns, so under the
+//! weight-stationary TiC-SAT schedule each worker keeps its `B(p, j)`
+//! slice hot — the per-core arrangement the simulator assigns. Row-wise
+//! kernels ([`layernorm`]/[`softmax`]) split along *block-rows* instead,
+//! because under BWMA a block-row of tiles is one contiguous memory
+//! range: workers get disjoint `&mut` chunks with no copying at all.
+//!
+//! **Determinism.** Every output tile (and every logical row) is produced
+//! by exactly one worker, which reduces over `p` (or over the row) in
+//! exactly the serial kernel's order. Floating-point accumulation order
+//! per output element is therefore identical to the serial kernels, and
+//! results are **bitwise identical for any core count** — proven by the
+//! equivalence suite (`tests/parallel_equivalence.rs`) and the
+//! `native_parallel_equiv_b16` tag of `bwma verify`.
+
+use std::ops::Range;
+
+use anyhow::Result;
+
+use crate::layout::TileRef;
+
+use super::native;
+
+/// Number of cores to use when the caller does not say: the host's
+/// available parallelism (the `--cores` default for `bwma serve`,
+/// `bwma verify`, and the benches), 1 if it cannot be determined.
+pub fn available_cores() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Split `0..n` into `workers` contiguous chunks whose lengths differ by
+/// at most one (the first `n % workers` chunks get the extra item).
+/// `workers` is clamped to at least 1; chunks beyond `n` are empty.
+pub fn split_even(n: usize, workers: usize) -> Vec<Range<usize>> {
+    let workers = workers.max(1);
+    let base = n / workers;
+    let extra = n % workers;
+    let mut out = Vec::with_capacity(workers);
+    let mut start = 0;
+    for w in 0..workers {
+        let len = base + usize::from(w < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+/// Static assignment of a `block_rows × block_cols` output tile grid to
+/// `cores` workers: the grid is flattened in block-column-major order
+/// (column `j` outer, row `i` inner — the serial kernel's schedule) and
+/// split into contiguous chunks via [`split_even`].
+///
+/// Invariants (property-tested in `tests/proptest_parallel.rs`):
+/// * every tile is assigned to exactly one worker;
+/// * per-worker tile counts differ by at most one (workers may own zero
+///   tiles when `cores > block_rows · block_cols`);
+/// * within a worker, tiles ascend in the serial enumeration order.
+#[derive(Debug, Clone)]
+pub struct GridPartition {
+    pub block_rows: usize,
+    pub block_cols: usize,
+    ranges: Vec<Range<usize>>,
+}
+
+impl GridPartition {
+    pub fn new(block_rows: usize, block_cols: usize, cores: usize) -> Self {
+        let ranges = split_even(block_rows * block_cols, cores);
+        Self { block_rows, block_cols, ranges }
+    }
+
+    /// Number of workers (== the `cores` the partition was built for,
+    /// clamped to ≥ 1).
+    pub fn workers(&self) -> usize {
+        self.ranges.len()
+    }
+
+    /// Number of tiles worker `w` owns.
+    pub fn tile_count(&self, w: usize) -> usize {
+        self.ranges[w].len()
+    }
+
+    /// Tiles of worker `w`, in the serial kernel's block-column-major
+    /// order (`block_col` outer, `block_row` inner).
+    pub fn tiles(&self, w: usize) -> impl Iterator<Item = TileRef> + '_ {
+        let rows = self.block_rows;
+        self.ranges[w]
+            .clone()
+            .map(move |t| TileRef { block_row: t % rows, block_col: t / rows })
+    }
+}
+
+/// Tile-parallel blocked f32 GEMM: bitwise identical to
+/// [`native::gemm_f32`] for any `cores` (each output tile is reduced
+/// over `p` in the serial order by exactly one worker). `cores <= 1`
+/// runs the serial kernel directly.
+pub fn gemm_f32(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    block: usize,
+    cores: usize,
+) -> Result<Vec<f32>> {
+    if cores <= 1 {
+        return native::gemm_f32(a, b, m, k, n, block);
+    }
+    native::check_gemm_dims(m, k, n, block, a.len(), b.len())?;
+    let da = native::packed_desc(m, k, block);
+    let db = native::packed_desc(k, n, block);
+    let dc = native::packed_desc(m, n, block);
+    let part = GridPartition::new(dc.block_rows(), dc.block_cols(), cores);
+    let kb = da.block_cols();
+    let mut c = vec![0.0f32; m * n];
+    std::thread::scope(|s| {
+        // Each worker accumulates its tiles into a local buffer (tiles in
+        // its enumeration order); the scatter below writes each finished
+        // tile to its packed burst. The copy is O(m·n) against the
+        // kernel's O(m·k·n) — noise, and it keeps the code unsafe-free.
+        let handles: Vec<_> = (0..part.workers())
+            .filter(|&w| part.tile_count(w) > 0)
+            .map(|w| {
+                let part = &part;
+                let (da, db) = (&da, &db);
+                let handle = s.spawn(move || {
+                    let mut local = vec![0.0f32; part.tile_count(w) * block * block];
+                    for (t, ct) in part.tiles(w).zip(local.chunks_exact_mut(block * block)) {
+                        for p in 0..kb {
+                            let at = &a[native::tile_range(da, t.block_row, p)];
+                            let bt = &b[native::tile_range(db, p, t.block_col)];
+                            native::tile_mac_f32(at, bt, ct, block);
+                        }
+                    }
+                    local
+                });
+                (w, handle)
+            })
+            .collect();
+        for (w, h) in handles {
+            let local = h.join().expect("gemm_f32 worker panicked");
+            for (t, tile) in part.tiles(w).zip(local.chunks_exact(block * block)) {
+                c[native::tile_range(&dc, t.block_row, t.block_col)].copy_from_slice(tile);
+            }
+        }
+    });
+    Ok(c)
+}
+
+/// Tile-parallel blocked int8 GEMM (int8 × int8 → exact i32): identical
+/// to [`native::gemm_i8`] for any `cores` — integer accumulation is
+/// exact, and the tile ownership/order discipline matches anyway.
+pub fn gemm_i8(
+    a: &[i8],
+    b: &[i8],
+    m: usize,
+    k: usize,
+    n: usize,
+    block: usize,
+    cores: usize,
+) -> Result<Vec<i32>> {
+    if cores <= 1 {
+        return native::gemm_i8(a, b, m, k, n, block);
+    }
+    native::check_gemm_dims(m, k, n, block, a.len(), b.len())?;
+    let da = native::packed_desc(m, k, block);
+    let db = native::packed_desc(k, n, block);
+    let dc = native::packed_desc(m, n, block);
+    let part = GridPartition::new(dc.block_rows(), dc.block_cols(), cores);
+    let kb = da.block_cols();
+    let mut c = vec![0i32; m * n];
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..part.workers())
+            .filter(|&w| part.tile_count(w) > 0)
+            .map(|w| {
+                let part = &part;
+                let (da, db) = (&da, &db);
+                let handle = s.spawn(move || {
+                    let mut local = vec![0i32; part.tile_count(w) * block * block];
+                    for (t, ct) in part.tiles(w).zip(local.chunks_exact_mut(block * block)) {
+                        for p in 0..kb {
+                            let at = &a[native::tile_range(da, t.block_row, p)];
+                            let bt = &b[native::tile_range(db, p, t.block_col)];
+                            native::tile_mac_i8(at, bt, ct, block);
+                        }
+                    }
+                    local
+                });
+                (w, handle)
+            })
+            .collect();
+        for (w, h) in handles {
+            let local = h.join().expect("gemm_i8 worker panicked");
+            for (t, tile) in part.tiles(w).zip(local.chunks_exact(block * block)) {
+                c[native::tile_range(&dc, t.block_row, t.block_col)].copy_from_slice(tile);
+            }
+        }
+    });
+    Ok(c)
+}
+
+/// Split a packed `rows × cols` buffer along block-row boundaries (under
+/// BWMA a block-row of tiles is one contiguous range of `block · cols`
+/// elements) and hand each worker a contiguous group of block-rows to
+/// run `f` over, one scoped thread per non-empty group. Rows are never
+/// split across workers, so any independent row-wise kernel stays
+/// bitwise identical to its serial run.
+fn rowwise_parallel<F>(x: &mut [f32], rows: usize, cols: usize, block: usize, cores: usize, f: F)
+where
+    F: Fn(&mut [f32], usize) -> Result<()> + Sync,
+{
+    let chunk_elems = block * cols;
+    let ranges = split_even(rows / block, cores);
+    std::thread::scope(|s| {
+        let f = &f;
+        let mut chunks = x.chunks_mut(chunk_elems);
+        let mut handles = Vec::with_capacity(ranges.len());
+        for r in &ranges {
+            let group: Vec<&mut [f32]> = chunks.by_ref().take(r.len()).collect();
+            if group.is_empty() {
+                continue;
+            }
+            handles.push(s.spawn(move || {
+                for chunk in group {
+                    f(chunk, block)?;
+                }
+                Ok::<(), anyhow::Error>(())
+            }));
+        }
+        for h in handles {
+            // The closures below only re-run the serial kernel on
+            // pre-validated sub-shapes, so failure here is a logic bug.
+            h.join().expect("row-wise worker panicked").expect("row-wise sub-kernel failed");
+        }
+    });
+}
+
+/// Row-parallel LayerNorm over a packed buffer: bitwise identical to
+/// [`native::layernorm`] for any `cores` (each logical row is normalized
+/// entirely by one worker, in the serial pass structure).
+#[allow(clippy::too_many_arguments)]
+pub fn layernorm(
+    x: &mut [f32],
+    gamma: &[f32],
+    beta: &[f32],
+    rows: usize,
+    cols: usize,
+    block: usize,
+    eps: f32,
+    cores: usize,
+) -> Result<()> {
+    if cores <= 1 {
+        return native::layernorm(x, gamma, beta, rows, cols, block, eps);
+    }
+    native::check_rowwise(x.len(), rows, cols, block)?;
+    anyhow::ensure!(
+        gamma.len() == cols && beta.len() == cols,
+        "affine params must have {cols} elements"
+    );
+    rowwise_parallel(x, rows, cols, block, cores, |chunk, nrows| {
+        native::layernorm(chunk, gamma, beta, nrows, cols, block, eps)
+    });
+    Ok(())
+}
+
+/// Row-parallel numerically-stable softmax over a packed buffer: bitwise
+/// identical to [`native::softmax`] for any `cores`.
+pub fn softmax(x: &mut [f32], rows: usize, cols: usize, block: usize, cores: usize) -> Result<()> {
+    if cores <= 1 {
+        return native::softmax(x, rows, cols, block);
+    }
+    native::check_rowwise(x.len(), rows, cols, block)?;
+    rowwise_parallel(x, rows, cols, block, cores, |chunk, nrows| {
+        native::softmax(chunk, nrows, cols, block)
+    });
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_even_covers_and_balances() {
+        for (n, w) in [(0usize, 3usize), (1, 1), (7, 3), (12, 4), (3, 8)] {
+            let ranges = split_even(n, w);
+            assert_eq!(ranges.len(), w);
+            assert_eq!(ranges.first().unwrap().start, 0);
+            assert_eq!(ranges.last().unwrap().end, n);
+            for pair in ranges.windows(2) {
+                assert_eq!(pair[0].end, pair[1].start, "contiguous");
+            }
+            let max = ranges.iter().map(|r| r.len()).max().unwrap();
+            let min = ranges.iter().map(|r| r.len()).min().unwrap();
+            assert!(max - min <= 1, "imbalance for n={n} w={w}");
+        }
+    }
+
+    #[test]
+    fn split_even_clamps_zero_workers() {
+        let ranges = split_even(5, 0);
+        assert_eq!(ranges.len(), 1);
+        assert_eq!(ranges[0], 0..5);
+    }
+
+    #[test]
+    fn grid_partition_is_column_major() {
+        // 3 block-rows × 2 block-cols over 2 workers: worker 0 gets the
+        // first column (3 tiles), worker 1 the second (3 tiles).
+        let p = GridPartition::new(3, 2, 2);
+        let w0: Vec<(usize, usize)> =
+            p.tiles(0).map(|t| (t.block_row, t.block_col)).collect();
+        let w1: Vec<(usize, usize)> =
+            p.tiles(1).map(|t| (t.block_row, t.block_col)).collect();
+        assert_eq!(w0, vec![(0, 0), (1, 0), (2, 0)]);
+        assert_eq!(w1, vec![(0, 1), (1, 1), (2, 1)]);
+    }
+
+    #[test]
+    fn more_cores_than_tiles_leaves_spare_workers_empty() {
+        let p = GridPartition::new(1, 2, 5);
+        assert_eq!(p.workers(), 5);
+        let total: usize = (0..p.workers()).map(|w| p.tile_count(w)).sum();
+        assert_eq!(total, 2);
+        assert!((0..p.workers()).all(|w| p.tile_count(w) <= 1));
+    }
+
+    #[test]
+    fn parallel_gemm_rejects_bad_dims_like_serial() {
+        let a = vec![0.0f32; 16 * 16];
+        let b = vec![0.0f32; 16 * 16];
+        assert!(gemm_f32(&a, &b, 16, 16, 16, 16, 4).is_ok());
+        assert!(gemm_f32(&a, &b, 16, 32, 16, 16, 4).is_err(), "bad buffer sizes");
+        assert!(gemm_f32(&a, &b, 12, 16, 16, 16, 4).is_err(), "indivisible dims");
+    }
+
+    #[test]
+    fn available_cores_is_at_least_one() {
+        assert!(available_cores() >= 1);
+    }
+}

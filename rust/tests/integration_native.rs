@@ -118,13 +118,14 @@ fn native_model_serves_correct_numerics_through_the_batcher() {
     let in_shape = model.in_shape();
     let out_shape = model.out_shape();
     let model2 = model.clone();
+    let in_shape2 = in_shape.clone();
     let server = Server::start(ServerConfig { max_batch: 4, ..Default::default() }, move || {
         let mut variants: BTreeMap<usize, Box<dyn BatchRunner>> = BTreeMap::new();
         for bsz in [1usize, 2, 4] {
             // Arc clones: one set of weights across all variant slots.
             variants.insert(bsz, Box::new(model2.clone()));
         }
-        Ok((variants, out_shape))
+        Ok((variants, in_shape2, out_shape))
     })
     .unwrap();
 

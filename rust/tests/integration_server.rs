@@ -47,7 +47,7 @@ fn start_fake(
             for &s in &sizes {
                 m.insert(s, Box::new(FakeModel { batch: s, calls: calls2.clone(), fail }));
             }
-            Ok((m, vec![4]))
+            Ok((m, vec![4], vec![4]))
         },
     )
     .unwrap();
@@ -118,6 +118,36 @@ fn model_failure_propagates_to_every_request_in_batch() {
 fn factory_failure_fails_start() {
     let r = Server::start(ServerConfig::default(), || bail!("no artifacts here"));
     assert!(r.is_err());
+}
+
+#[test]
+fn malformed_request_fails_alone_not_the_batch() {
+    // Regression: `run_batch` used to take the per-sequence length from
+    // the first request and blindly concatenate the rest, so one
+    // wrong-shaped request poisoned (or mis-padded) everyone fused with
+    // it. Now the offender is rejected at batch-assembly time and the
+    // well-formed requests ride on unharmed.
+    let (server, _) = start_fake(&[1, 2, 4], 4, false);
+    let good_before = server.submit(req(1.0));
+    let bad_long = server.submit(Tensor::new(vec![8], vec![9.0; 8]));
+    let bad_shape = server.submit(Tensor::new(vec![2, 2], vec![9.0; 4]));
+    let good_after = server.submit(req(2.0));
+
+    let resp = good_before.recv().unwrap().unwrap();
+    assert_eq!(resp.output.data, vec![2.0; 4], "good request before the offender");
+    let resp = good_after.recv().unwrap().unwrap();
+    assert_eq!(resp.output.data, vec![4.0; 4], "good request after the offender");
+
+    for (name, rx) in [("oversized", bad_long), ("right-size wrong-shape", bad_shape)] {
+        let err = rx.recv().unwrap();
+        assert!(err.is_err(), "{name} request must fail");
+        let msg = format!("{:#}", err.unwrap_err());
+        assert!(msg.contains("does not match server input shape"), "{name}: {msg}");
+    }
+
+    let metrics = server.shutdown().unwrap();
+    assert_eq!(metrics.requests, 2, "only the well-formed requests execute");
+    assert_eq!(metrics.rejected, 2);
 }
 
 #[test]

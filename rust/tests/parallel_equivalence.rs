@@ -1,0 +1,273 @@
+//! The determinism proof for the multi-core execution layer: every
+//! parallel kernel must produce **byte-identical** buffers to its serial
+//! counterpart — for any core count — and the batch server must preserve
+//! that equality under concurrent load and mid-flood shutdown.
+//!
+//! `BWMA_TEST_CORES` (CI matrix: 1 and 4) picks the pool width for the
+//! multi-core model under test, so the suite exercises both the
+//! degenerate serial pool and a genuinely parallel one on every push.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use bwma::coordinator::server::BatchRunner;
+use bwma::coordinator::{Server, ServerConfig};
+use bwma::runtime::{native, parallel, NativeModel, QTensor, Tensor};
+use bwma::util::proptest::check;
+use bwma::util::XorShift64;
+
+/// Pool width for the multi-core model under test (CI matrix runs 1 and 4).
+fn test_cores() -> usize {
+    std::env::var("BWMA_TEST_CORES").ok().and_then(|v| v.parse().ok()).unwrap_or(4)
+}
+
+fn rand_vec(rng: &mut XorShift64, n: usize) -> Vec<f32> {
+    let mut v = vec![0.0f32; n];
+    rng.fill_f32(&mut v);
+    v
+}
+
+fn assert_bits_eq(serial: &[f32], parallel: &[f32], what: &str) {
+    assert_eq!(serial.len(), parallel.len(), "{what}: length");
+    for (i, (s, p)) in serial.iter().zip(parallel).enumerate() {
+        assert_eq!(
+            s.to_bits(),
+            p.to_bits(),
+            "{what}: byte divergence at element {i} ({s:?} vs {p:?})"
+        );
+    }
+}
+
+const CORE_COUNTS: [usize; 3] = [2, 3, 8];
+
+#[test]
+fn prop_parallel_gemm_f32_is_bitwise_serial() {
+    check("parallel-gemm-f32-bitwise", 24, |rng| {
+        let b = *rng.pick(&[4usize, 8, 16]);
+        let m = b * rng.range(1, 6) as usize;
+        let k = b * rng.range(1, 6) as usize;
+        let n = b * rng.range(1, 6) as usize;
+        let a = rand_vec(rng, m * k);
+        let w = rand_vec(rng, k * n);
+        let ap = bwma::layout::rwma_to_bwma(&a, m, k, b);
+        let wp = bwma::layout::rwma_to_bwma(&w, k, n, b);
+        let serial = native::gemm_f32(&ap, &wp, m, k, n, b).unwrap();
+        for cores in CORE_COUNTS {
+            let par = parallel::gemm_f32(&ap, &wp, m, k, n, b, cores).unwrap();
+            assert_bits_eq(&serial, &par, &format!("gemm_f32 {m}x{k}x{n} b{b} cores{cores}"));
+        }
+    });
+}
+
+#[test]
+fn prop_parallel_gemm_i8_is_identical_to_serial() {
+    check("parallel-gemm-i8-identical", 24, |rng| {
+        let b = *rng.pick(&[4usize, 8, 16]);
+        let m = b * rng.range(1, 6) as usize;
+        let k = b * rng.range(1, 6) as usize;
+        let n = b * rng.range(1, 6) as usize;
+        let qa = QTensor::quantize(&Tensor::new(vec![m, k], rand_vec(rng, m * k))).unwrap();
+        let qb = QTensor::quantize(&Tensor::new(vec![k, n], rand_vec(rng, k * n))).unwrap();
+        let ap = bwma::layout::rwma_to_bwma(&qa.data, m, k, b);
+        let wp = bwma::layout::rwma_to_bwma(&qb.data, k, n, b);
+        let serial = native::gemm_i8(&ap, &wp, m, k, n, b).unwrap();
+        for cores in CORE_COUNTS {
+            let par = parallel::gemm_i8(&ap, &wp, m, k, n, b, cores).unwrap();
+            assert_eq!(serial, par, "gemm_i8 {m}x{k}x{n} b{b} cores{cores}");
+        }
+    });
+}
+
+#[test]
+fn prop_parallel_rowops_are_bitwise_serial() {
+    check("parallel-rowops-bitwise", 24, |rng| {
+        let b = *rng.pick(&[4usize, 8, 16]);
+        let rows = b * rng.range(1, 8) as usize;
+        let cols = b * rng.range(1, 8) as usize;
+        let x = rand_vec(rng, rows * cols);
+        let packed = bwma::layout::rwma_to_bwma(&x, rows, cols, b);
+        let gamma = rand_vec(rng, cols);
+        let beta = rand_vec(rng, cols);
+
+        let mut ln_serial = packed.clone();
+        native::layernorm(&mut ln_serial, &gamma, &beta, rows, cols, b, 1e-5).unwrap();
+        let mut sm_serial = packed.clone();
+        native::softmax(&mut sm_serial, rows, cols, b).unwrap();
+
+        for cores in CORE_COUNTS {
+            let mut ln = packed.clone();
+            parallel::layernorm(&mut ln, &gamma, &beta, rows, cols, b, 1e-5, cores).unwrap();
+            assert_bits_eq(&ln_serial, &ln, &format!("layernorm {rows}x{cols} b{b} cores{cores}"));
+            let mut sm = packed.clone();
+            parallel::softmax(&mut sm, rows, cols, b, cores).unwrap();
+            assert_bits_eq(&sm_serial, &sm, &format!("softmax {rows}x{cols} b{b} cores{cores}"));
+        }
+    });
+}
+
+#[test]
+fn model_forward_is_bitwise_identical_across_core_counts() {
+    let model = NativeModel::new(64, 48, 128, 16, 0xD37).unwrap();
+    let mut rng = XorShift64::new(0xD38);
+    for case in 0..4 {
+        let x = Tensor::new(model.in_shape(), rand_vec(&mut rng, 64 * 48));
+        let serial = model.forward_with_cores(&x, 1).unwrap();
+        for cores in CORE_COUNTS {
+            let par = model.forward_with_cores(&x, cores).unwrap();
+            assert_eq!(serial.shape, par.shape);
+            assert_bits_eq(&serial.data, &par.data, &format!("forward case {case} cores{cores}"));
+        }
+    }
+}
+
+#[test]
+fn verify_tag_pins_parallel_equivalence() {
+    let c = bwma::runtime::run_native_check("native_parallel_equiv_b16").unwrap();
+    assert!(c.ok, "parallel/serial bitwise equivalence broken (max|Δ| = {})", c.max_diff);
+    assert_eq!(c.max_diff, 0.0, "equivalence must be exact, not approximate");
+}
+
+fn start_model_server(model: Arc<NativeModel>, max_batch: usize) -> Server {
+    let in_shape = model.in_shape();
+    let out_shape = model.out_shape();
+    Server::start(
+        ServerConfig { max_batch, batch_timeout: Duration::from_millis(1) },
+        move || {
+            let mut variants: BTreeMap<usize, Box<dyn BatchRunner>> = BTreeMap::new();
+            for bsz in [1usize, 2, 4, 8] {
+                variants.insert(bsz, Box::new(model.clone()));
+            }
+            Ok((variants, in_shape, out_shape))
+        },
+    )
+    .unwrap()
+}
+
+/// 8 client threads × 50 submits against a multi-core model: every
+/// response must be bitwise identical to the serial forward of its own
+/// input (no cross-contamination, no nondeterminism under load).
+#[test]
+fn stress_concurrent_clients_get_bitwise_serial_answers() {
+    let model =
+        Arc::new(NativeModel::new(32, 32, 64, 16, 0x57E5).unwrap().with_cores(test_cores()));
+    let server = start_model_server(model.clone(), 8);
+    const CLIENTS: u64 = 8;
+    const PER_CLIENT: usize = 50;
+
+    std::thread::scope(|s| {
+        for t in 0..CLIENTS {
+            let handle = server.handle();
+            let model = model.clone();
+            s.spawn(move || {
+                let mut rng = XorShift64::new(0x1000 + t);
+                let inputs: Vec<Tensor> = (0..PER_CLIENT)
+                    .map(|_| {
+                        let mut data = vec![0.0f32; 32 * 32];
+                        rng.fill_f32(&mut data);
+                        Tensor::new(vec![32, 32], data)
+                    })
+                    .collect();
+                let rxs: Vec<_> = inputs.iter().map(|x| handle.submit(x.clone())).collect();
+                for (i, (x, rx)) in inputs.iter().zip(rxs).enumerate() {
+                    let resp = rx.recv().expect("no response").expect("request failed");
+                    let expect = model.forward_with_cores(x, 1).unwrap();
+                    assert_eq!(resp.output.shape, expect.shape, "client {t} req {i}");
+                    for (j, (a, b)) in
+                        expect.data.iter().zip(&resp.output.data).enumerate()
+                    {
+                        assert_eq!(
+                            a.to_bits(),
+                            b.to_bits(),
+                            "client {t} req {i}: served output diverges at element {j}"
+                        );
+                    }
+                }
+            });
+        }
+    });
+
+    let metrics = server.shutdown().unwrap();
+    assert_eq!(metrics.requests, CLIENTS * PER_CLIENT as u64);
+    assert_eq!(metrics.rejected, 0);
+    // Latency aggregation saw every request.
+    assert_eq!(metrics.queue_latency().unwrap().count(), (CLIENTS * PER_CLIENT as u64) as usize);
+}
+
+/// Shutdown mid-flood: clients keep submitting while the owner shuts the
+/// server down. Nothing may deadlock; every response the executor
+/// produced must reach its client (processed count == client-received
+/// count), and any submit that raced past shutdown must observe a
+/// disconnect, never a hang.
+#[test]
+fn shutdown_mid_flood_neither_deadlocks_nor_drops_responses() {
+    // Big enough that one forward is ~a millisecond, so the flood is
+    // still in flight when the plug is pulled at ~20 ms.
+    let model =
+        Arc::new(NativeModel::new(64, 64, 128, 16, 0x57E6).unwrap().with_cores(test_cores()));
+    let server = start_model_server(model.clone(), 4);
+    const CLIENTS: u64 = 8;
+    const PER_CLIENT: usize = 50;
+    let received = Arc::new(AtomicU64::new(0));
+    let disconnected = Arc::new(AtomicU64::new(0));
+
+    let metrics = std::thread::scope(|s| {
+        for t in 0..CLIENTS {
+            let handle = server.handle();
+            let model = model.clone();
+            let received = received.clone();
+            let disconnected = disconnected.clone();
+            s.spawn(move || {
+                let mut rng = XorShift64::new(0x2000 + t);
+                for _ in 0..PER_CLIENT {
+                    let mut data = vec![0.0f32; 64 * 64];
+                    rng.fill_f32(&mut data);
+                    let x = Tensor::new(vec![64, 64], data);
+                    let rx = handle.submit(x.clone());
+                    match rx.recv() {
+                        Ok(Ok(resp)) => {
+                            let expect = model.forward_with_cores(&x, 1).unwrap();
+                            assert_eq!(resp.output.shape, expect.shape);
+                            assert!(
+                                expect
+                                    .data
+                                    .iter()
+                                    .zip(&resp.output.data)
+                                    .all(|(a, b)| a.to_bits() == b.to_bits()),
+                                "served output diverges from serial forward"
+                            );
+                            received.fetch_add(1, Ordering::SeqCst);
+                        }
+                        Ok(Err(e)) => panic!("unexpected request error: {e:#}"),
+                        // Submit raced past shutdown: channel disconnected.
+                        Err(_) => {
+                            disconnected.fetch_add(1, Ordering::SeqCst);
+                        }
+                    }
+                }
+            });
+        }
+        // Let the flood get going, then pull the plug while requests are
+        // still in flight. (The scope guarantees the clients all finish —
+        // a deadlock would hang the test here.)
+        std::thread::sleep(Duration::from_millis(20));
+        server.shutdown().unwrap()
+    });
+
+    let received = received.load(Ordering::SeqCst);
+    let disconnected = disconnected.load(Ordering::SeqCst);
+    assert_eq!(
+        received + disconnected,
+        CLIENTS * PER_CLIENT as u64,
+        "every submit must resolve (response or disconnect), never hang"
+    );
+    // No response the executor produced may be dropped: everything the
+    // server counts as processed arrived at a client.
+    assert_eq!(
+        metrics.requests, received,
+        "server processed {} requests but clients received {received}",
+        metrics.requests
+    );
+    assert_eq!(metrics.rejected, 0);
+}

@@ -1,0 +1,93 @@
+//! Property tests on the multi-core partitioner (the parallel kernels'
+//! correctness core, alongside `proptest_layout.rs` for the layout):
+//! the static tile assignment must be a partition — every output tile
+//! produced by exactly one worker — balanced to within one tile, and
+//! enumerated per worker in the serial kernel's order (the determinism
+//! contract).
+
+use bwma::runtime::parallel::{split_even, GridPartition};
+use bwma::util::proptest::check_default;
+
+#[test]
+fn prop_every_tile_assigned_exactly_once_and_balanced() {
+    check_default("grid-partition", |rng| {
+        // Randomized block grids and core counts, including the edges the
+        // issue calls out: cores = 1 and cores > tiles.
+        let block_rows = rng.range(1, 17) as usize;
+        let block_cols = rng.range(1, 17) as usize;
+        let cores = *rng.pick(&[1usize, 2, 3, 4, 5, 7, 8, 16, 64, 1000]);
+        let p = GridPartition::new(block_rows, block_cols, cores);
+        assert_eq!(p.workers(), cores, "one worker slot per core");
+
+        // Exactly-once coverage.
+        let mut owners = vec![0u32; block_rows * block_cols];
+        for w in 0..p.workers() {
+            let mut count = 0;
+            for t in p.tiles(w) {
+                assert!(t.block_row < block_rows && t.block_col < block_cols);
+                owners[t.block_col * block_rows + t.block_row] += 1;
+                count += 1;
+            }
+            assert_eq!(count, p.tile_count(w), "tile_count agrees with the iterator");
+        }
+        assert!(
+            owners.iter().all(|&c| c == 1),
+            "{block_rows}x{block_cols} over {cores} cores is not a partition"
+        );
+
+        // Balance: max/min per-worker tile count differ by at most 1.
+        let counts: Vec<usize> = (0..p.workers()).map(|w| p.tile_count(w)).collect();
+        let max = *counts.iter().max().unwrap();
+        let min = *counts.iter().min().unwrap();
+        assert!(
+            max - min <= 1,
+            "imbalance {max}-{min} for {block_rows}x{block_cols} over {cores} cores"
+        );
+
+        // Determinism contract: within a worker, tiles ascend in the
+        // serial kernel's block-column-major enumeration.
+        for w in 0..p.workers() {
+            let flat: Vec<usize> =
+                p.tiles(w).map(|t| t.block_col * block_rows + t.block_row).collect();
+            assert!(flat.windows(2).all(|win| win[0] + 1 == win[1]), "worker {w} not contiguous");
+        }
+    });
+}
+
+#[test]
+fn prop_split_even_is_a_balanced_cover() {
+    check_default("split-even", |rng| {
+        let n = rng.below(200) as usize;
+        let workers = rng.range(1, 40) as usize;
+        let ranges = split_even(n, workers);
+        assert_eq!(ranges.len(), workers);
+        assert_eq!(ranges.first().unwrap().start, 0);
+        assert_eq!(ranges.last().unwrap().end, n);
+        for pair in ranges.windows(2) {
+            assert_eq!(pair[0].end, pair[1].start, "gap or overlap");
+        }
+        let max = ranges.iter().map(|r| r.len()).max().unwrap();
+        let min = ranges.iter().map(|r| r.len()).min().unwrap();
+        assert!(max - min <= 1, "imbalance for n={n} workers={workers}");
+    });
+}
+
+#[test]
+fn single_core_partition_is_the_whole_grid_in_serial_order() {
+    let p = GridPartition::new(4, 3, 1);
+    assert_eq!(p.workers(), 1);
+    assert_eq!(p.tile_count(0), 12);
+    let flat: Vec<(usize, usize)> = p.tiles(0).map(|t| (t.block_col, t.block_row)).collect();
+    let expect: Vec<(usize, usize)> =
+        (0..3).flat_map(|j| (0..4).map(move |i| (j, i))).collect();
+    assert_eq!(flat, expect, "column-major, j outer — the serial schedule");
+}
+
+#[test]
+fn more_cores_than_tiles_is_still_exactly_once() {
+    let p = GridPartition::new(2, 2, 64);
+    assert_eq!(p.workers(), 64);
+    let total: usize = (0..p.workers()).map(|w| p.tile_count(w)).sum();
+    assert_eq!(total, 4);
+    assert!((0..p.workers()).all(|w| p.tile_count(w) <= 1));
+}
