@@ -41,7 +41,7 @@ fn main() -> Result<()> {
     // One `Arc` shares the weights between the serving thread's
     // batch-variant slots and the golden cross-check below.
     let model =
-        std::sync::Arc::new(NativeModel::new(128, 768, 3072, 16, 0xBEEF)?.with_cores(cores));
+        std::sync::Arc::new(NativeModel::new(128, 768, 3072, 16, 0xBEEF)?.with_cores(cores)?);
     let in_shape = model.in_shape();
     let out_shape = model.out_shape();
 

@@ -1,0 +1,100 @@
+//! Bench encoder_phases — per-phase wall time of the **native** encoder
+//! layer (QKV, Kᵀ, QKᵀ, softmax, AV, projection, Add/Norm, FFN) at
+//! 1/2/4/8 cores, printed next to the **simulator's** phase breakdown
+//! for the same dimensions — the execution-side counterpart of the
+//! paper's Fig. 7 per-component split, now measurable phase-by-phase
+//! because `NativeModel::new_encoder` runs the same ten phases the
+//! simulator's `LayerPhases` models.
+//!
+//! Also asserts the determinism contract while it measures: every
+//! parallel forward is bitwise identical to the serial one.
+//!
+//! Run: `cargo bench --bench encoder_phases`
+//! Greppable summary: lines starting `encoder-phase` / `encoder-speedup`.
+
+use bwma::accel::AccelKind;
+use bwma::layout::Layout;
+use bwma::runtime::{available_cores, NativeModel, Tensor};
+use bwma::sim::{simulate, SimConfig};
+use bwma::util::XorShift64;
+use bwma::workload::BertConfig;
+
+fn main() {
+    // A scaled-down encoder layer (same structure as BERT-base): the
+    // native model and the simulator run identical dimensions.
+    let (seq, d_model, heads, d_ff, block, layers) = (128usize, 128usize, 2usize, 512usize, 16usize, 1usize);
+    let d_head = d_model / heads;
+    let model = NativeModel::new_encoder(seq, d_model, heads, d_ff, layers, block, 0xE4C).unwrap();
+    let mut rng = XorShift64::new(0xE4D);
+    let mut data = vec![0.0f32; seq * d_model];
+    rng.fill_f32(&mut data);
+    let x = Tensor::new(vec![seq, d_model], data);
+
+    println!(
+        "# encoder_phases: seq {seq}, d_model {d_model}, {heads} heads (d_head {d_head}), \
+         d_ff {d_ff}, block {block}, {layers} layer(s); host parallelism {}",
+        available_cores()
+    );
+
+    // Simulator breakdown for the same dimensions (1 core, BWMA, SA16).
+    let mut cfg = SimConfig::tiny(AccelKind::Sa { b: block }, Layout::Bwma, 1);
+    cfg.bert = BertConfig { seq, d_model, heads, d_head, d_ff, layers, elem: 1 };
+    cfg.sim_layers = layers;
+    let sim = simulate(&cfg);
+    let sim_share = |name: &str| -> f64 {
+        sim.phases
+            .iter()
+            .find(|p| p.name == name)
+            .map(|p| p.cycles as f64 / sim.total_cycles as f64)
+            .unwrap_or(0.0)
+    };
+
+    let (expect, _) = model.forward_timed(&x, 1).unwrap();
+    let mut baseline = f64::NAN;
+    for cores in [1usize, 2, 4, 8] {
+        // Warm-up + accumulate phase times over a few runs.
+        let _ = model.forward_timed(&x, cores).unwrap();
+        const RUNS: usize = 5;
+        let mut acc: Option<bwma::runtime::PhaseTimings> = None;
+        for _ in 0..RUNS {
+            let (out, timings) = model.forward_timed(&x, cores).unwrap();
+            let bitwise =
+                expect.data.iter().zip(&out.data).all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(bitwise, "parallel encoder at {cores} cores diverged from serial");
+            acc = Some(match acc {
+                None => timings,
+                Some(prev) => {
+                    // Keep the run with the smaller total (min-of-N, the
+                    // usual bench noise reduction).
+                    if timings.total() < prev.total() {
+                        timings
+                    } else {
+                        prev
+                    }
+                }
+            });
+        }
+        let timings = acc.unwrap();
+        let total = timings.total();
+        if cores == 1 {
+            baseline = total.as_secs_f64();
+        }
+        println!(
+            "encoder-speedup cores={cores} total={total:?} speedup={:.2}",
+            baseline / total.as_secs_f64()
+        );
+        for (name, dt) in timings.entries() {
+            let native_share = dt.as_secs_f64() / total.as_secs_f64();
+            println!(
+                "encoder-phase cores={cores} phase={name:?} native={dt:?} \
+                 native_share={native_share:.3} sim_share={:.3}",
+                sim_share(name)
+            );
+        }
+    }
+    println!(
+        "# sim total: {} cycles, non-GEMM share {:.1}% (native shares above are wall-clock)",
+        sim.total_cycles,
+        100.0 * sim.non_gemm_share()
+    );
+}

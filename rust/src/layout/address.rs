@@ -127,9 +127,17 @@ impl MatrixDesc {
     }
 
     /// A descriptor for the transposed logical matrix at a new base.
+    ///
+    /// Works for plain matrices *and* column-slice views: in both cases
+    /// the result describes the **materialized** transpose of the viewed
+    /// region — a plain `cols×rows` matrix at `base`. (The transpose of a
+    /// column-slice view would be a *row*-slice view of the transposed
+    /// backing, which `MatrixDesc` cannot express; materializing is
+    /// exactly what the blocked transpose kernel does anyway.)
     pub fn transposed_at(&self, base: u64) -> Self {
-        assert!(self.is_plain(), "transpose of a view unsupported");
-        Self { base, rows: self.cols, cols: self.rows, pitch: self.rows, ..*self }
+        let t = Self { base, rows: self.cols, cols: self.rows, pitch: self.rows, col0: 0, ..*self };
+        t.validate();
+        t
     }
 }
 

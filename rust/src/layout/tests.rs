@@ -140,3 +140,38 @@ fn conversion_access_count_is_2n() {
 fn indivisible_block_rejected() {
     MatrixDesc::new(0, 10, 8, 1, 4, Layout::Bwma);
 }
+
+#[test]
+fn transposed_at_plain_swaps_dims() {
+    let m = MatrixDesc::new(0x1000, 32, 64, 1, 16, Layout::Bwma);
+    let t = m.transposed_at(0x9000);
+    assert_eq!((t.rows, t.cols), (64, 32));
+    assert_eq!(t.base, 0x9000);
+    assert!(t.is_plain());
+    assert_eq!(t.layout, Layout::Bwma);
+}
+
+#[test]
+fn transposed_at_views_describes_the_materialized_transpose() {
+    // A column-slice view (e.g. one attention head's slice of the
+    // concatenated output) transposes to a plain matrix at the new base —
+    // the descriptor the packed-transpose kernel writes.
+    let m = MatrixDesc::new(0x1000, 32, 64, 1, 16, Layout::Bwma);
+    let v = m.col_view(16, 32);
+    let t = v.transposed_at(0x9000);
+    assert_eq!((t.rows, t.cols), (32, 32));
+    assert!(t.is_plain(), "materialized transpose is plain");
+    assert_eq!(t.block, 16);
+    // The address map of the transposed descriptor round-trips.
+    for idx in 0..t.rows * t.cols {
+        let (r, c) = t.elem_coords(idx);
+        assert_eq!(t.elem_index(r, c), idx);
+    }
+}
+
+#[test]
+fn transpose_roundtrip_is_identity_on_descriptors() {
+    let m = MatrixDesc::new(0x2000, 48, 96, 1, 16, Layout::Bwma);
+    let tt = m.transposed_at(0x3000).transposed_at(0x2000);
+    assert_eq!(tt, m);
+}

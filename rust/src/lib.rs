@@ -13,13 +13,19 @@
 //!    address streams of an int8 BERT-base encoder under RWMA or BWMA and
 //!    reproduces the paper's Figures 6–8;
 //! 2. **Numerics** — a native blocked-execution backend
-//!    ([`runtime::native`]): f32 and int8 GEMM, bias+GELU, layernorm, and
-//!    softmax kernels operating directly on BWMA-packed buffers (the
-//!    default), with a multi-core execution layer ([`runtime::parallel`])
-//!    that fans the same kernels over a scoped worker pool with
-//!    bitwise-identical results for any core count. With
-//!    `--features pjrt`, AOT-compiled JAX/Pallas artifacts (built by
-//!    `python/compile/`) execute through PJRT instead;
+//!    ([`runtime::native`]): f32 and int8 GEMM, bias+GELU, layernorm,
+//!    (masked) softmax, packed→packed transpose, and fused residual
+//!    add+norm kernels operating directly on BWMA-packed buffers (the
+//!    default) — enough to execute a full multi-head BERT encoder stack
+//!    end-to-end in the packed domain
+//!    ([`runtime::NativeModel::new_encoder`]), phase-for-phase the same
+//!    pipeline the simulator times. A multi-core execution layer
+//!    ([`runtime::parallel`]) fans the same kernels over a scoped worker
+//!    pool with bitwise-identical results for any core count. The masked
+//!    softmax defines fully-masked rows (all `-inf`) as all-zero — the
+//!    convention shared by blocked, parallel, and reference kernels.
+//!    With `--features pjrt`, AOT-compiled JAX/Pallas artifacts (built
+//!    by `python/compile/`) execute through PJRT instead;
 //! 3. **Serving** — a request router + dynamic batcher ([`coordinator`])
 //!    that runs either backend on the request path — batch sequences
 //!    dispatched across the native worker pool — with Python nowhere

@@ -17,7 +17,7 @@
 use std::collections::BTreeMap;
 use std::time::Instant;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use bwma::config;
 use bwma::coordinator::experiment::{run_experiment, Scale};
@@ -70,18 +70,33 @@ USAGE:
                   [--scale paper|tiny] [--markdown]
   bwma simulate <preset|config-file> [--layers N] [--convert] [--cores N]
   bwma serve [--requests N] [--max-batch B] [--cores N]
+             [--model ffn|encoder] [--layers N]
              [--backend native|pjrt] [--tag encoder_jnp_b16]
   bwma verify <check-tag|all> [--cores N] [--backend native|pjrt]
   bwma config <list|dump <preset>>
 
 The default backend is `native`: blocked CPU kernels executing directly on
-BWMA-packed buffers, no artifacts or Python required. `--cores` fans the
-native kernels over a scoped worker pool (default: the host's available
-parallelism; results are bitwise identical for any value — the same
-`cores` knob the simulator configs use). The `pjrt` backend needs a build
-with `--features pjrt` (and real xla bindings) plus artifacts from
-`python/compile/aot.py`.
+BWMA-packed buffers, no artifacts or Python required. `--cores N` (N >= 1)
+fans the native kernels over a scoped worker pool (default: the host's
+available parallelism; results are bitwise identical for any value — the
+same `cores` knob the simulator configs use). `serve --model encoder`
+serves a full multi-head BERT encoder stack (`--layers` deep) instead of
+the FFN-only block — the same ten phases per layer as `simulate`. The
+`pjrt` backend needs a build with `--features pjrt` (and real xla
+bindings) plus artifacts from `python/compile/aot.py`.
 ";
+
+/// Parse `--cores` (defaulting to the host's available parallelism) and
+/// reject `0` at the CLI boundary — zero workers is always a user error,
+/// better caught here than surfacing from the pool.
+fn parse_cores(args: &[String]) -> Result<usize> {
+    let cores: usize = match opt(args, "--cores") {
+        Some(c) => c.parse().context("--cores")?,
+        None => available_cores(),
+    };
+    ensure!(cores >= 1, "--cores must be >= 1 (got {cores})");
+    Ok(cores)
+}
 
 fn cmd_experiment(args: &[String]) -> Result<()> {
     let id = args.first().context("experiment id required; see `bwma help`")?;
@@ -114,6 +129,8 @@ fn cmd_simulate(args: &[String]) -> Result<()> {
         cfg.cores = c.parse().context("--cores")?;
         cfg.mem.cores = cfg.cores;
     }
+    // Validate the *final* core count, whichever source set it.
+    ensure!(cfg.cores >= 1, "cores must be >= 1 (got {})", cfg.cores);
     let t0 = Instant::now();
     let res = simulate(&cfg);
     let wall = t0.elapsed();
@@ -161,12 +178,9 @@ fn cmd_simulate(args: &[String]) -> Result<()> {
 fn cmd_serve(args: &[String]) -> Result<()> {
     let n_requests: usize = opt(args, "--requests").unwrap_or("64").parse()?;
     let max_batch: usize = opt(args, "--max-batch").unwrap_or("8").parse()?;
-    let cores: usize = match opt(args, "--cores") {
-        Some(c) => c.parse().context("--cores")?,
-        None => available_cores(),
-    };
+    let cores = parse_cores(args)?;
     match opt(args, "--backend").unwrap_or("native") {
-        "native" => serve_native(n_requests, max_batch, cores),
+        "native" => serve_native(args, n_requests, max_batch, cores),
         #[cfg(feature = "pjrt")]
         "pjrt" => serve_pjrt(args, n_requests, max_batch),
         #[cfg(not(feature = "pjrt"))]
@@ -223,12 +237,29 @@ fn drive_server(
     Ok(())
 }
 
-/// Serve on the native blocked-execution backend: a packed-weights FFN
-/// block, batch variants 1/2/4/8, nothing loaded from disk, kernels
-/// fanned over `cores` workers.
-fn serve_native(n_requests: usize, max_batch: usize, cores: usize) -> Result<()> {
+/// Serve on the native blocked-execution backend: a packed-weights model
+/// (`--model ffn` — the default FFN block — or `--model encoder`, a full
+/// multi-head BERT encoder stack `--layers` deep), batch variants
+/// 1/2/4/8, nothing loaded from disk, kernels fanned over `cores`
+/// workers.
+fn serve_native(args: &[String], n_requests: usize, max_batch: usize, cores: usize) -> Result<()> {
     let (seq, d_model, d_ff, block) = (64usize, 96usize, 192usize, 16usize);
-    let model = NativeModel::new(seq, d_model, d_ff, block, 0xB3D)?.with_cores(cores);
+    let (model, label) = match opt(args, "--model").unwrap_or("ffn") {
+        "ffn" => (
+            NativeModel::new(seq, d_model, d_ff, block, 0xB3D)?,
+            format!("native FFN {seq}x{d_model}→{d_ff}"),
+        ),
+        "encoder" => {
+            let layers: usize = opt(args, "--layers").unwrap_or("2").parse().context("--layers")?;
+            let heads = 3usize; // d_head = 96/3 = 32, a multiple of the block
+            (
+                NativeModel::new_encoder(seq, d_model, heads, d_ff, layers, block, 0xB3D)?,
+                format!("native encoder {layers}x[{seq}x{d_model}, {heads} heads, ff {d_ff}]"),
+            )
+        }
+        other => bail!("unknown --model {other:?} (ffn|encoder)"),
+    };
+    let model = model.with_cores(cores)?;
     let in_shape = model.in_shape();
     let out_shape = model.out_shape();
     let in_shape2 = in_shape.clone();
@@ -243,7 +274,7 @@ fn serve_native(n_requests: usize, max_batch: usize, cores: usize) -> Result<()>
     })?;
     println!(
         "serving {n_requests} requests (max batch {max_batch}, {cores} cores, \
-         native FFN {seq}x{d_model}→{d_ff}, block {block})…"
+         {label}, block {block})…"
     );
     drive_server(server, n_requests, &in_shape, "native")
 }
@@ -288,10 +319,7 @@ fn serve_pjrt(args: &[String], n_requests: usize, max_batch: usize) -> Result<()
 
 fn cmd_verify(args: &[String]) -> Result<()> {
     let tag = args.first().context("check tag required (or `all`)")?;
-    let cores: usize = match opt(args, "--cores") {
-        Some(c) => c.parse().context("--cores")?,
-        None => available_cores(),
-    };
+    let cores = parse_cores(args)?;
     match opt(args, "--backend").unwrap_or("native") {
         "native" => verify_native(tag, cores),
         #[cfg(feature = "pjrt")]

@@ -2,12 +2,14 @@
 //! currency and the blocked pack/unpack boundary:
 //!
 //! * **native** (default, always built) — pure-Rust blocked kernels
-//!   ([`native`]) executing f32/int8 GEMM, bias+GELU, layernorm, and
-//!   softmax directly on BWMA-packed buffers. `bwma serve` and
-//!   `bwma verify` run on this backend out of the box, no Python, no
-//!   artifacts, no external dependencies. [`parallel`] fans the same
-//!   kernels over a scoped multi-core worker pool with bitwise-identical
-//!   results (`--cores`).
+//!   ([`native`]) executing f32/int8 GEMM, bias+GELU, layernorm,
+//!   (masked) softmax, packed transpose, and fused residual add+norm
+//!   directly on BWMA-packed buffers — enough to run a full multi-head
+//!   BERT encoder stack ([`NativeModel::new_encoder`]) end-to-end in the
+//!   packed domain. `bwma serve` and `bwma verify` run on this backend
+//!   out of the box, no Python, no artifacts, no external dependencies.
+//!   [`parallel`] fans the same kernels over a scoped multi-core worker
+//!   pool with bitwise-identical results (`--cores`).
 //! * **PJRT** (`--features pjrt`) — load AOT-compiled HLO-text artifacts
 //!   (built by `python/compile/aot.py`) and execute them through the
 //!   `xla` crate's PJRT client: `PjRtClient::cpu()` →
@@ -32,6 +34,7 @@ pub use artifacts::{artifacts_dir, GoldenSet};
 pub use client::{Executable, Runtime};
 pub use native::{
     native_tags, run_native_check, run_native_check_with_cores, NativeCheck, NativeModel,
+    PhaseTimings,
 };
 pub use parallel::available_cores;
 pub use quant::{qgemm, QTensor};

@@ -14,20 +14,31 @@
 //! * [`gemm_f32`] / [`gemm_i8`] — weight-stationary blocked GEMM (the
 //!   TiC-SAT schedule: `B(p, j)` stationary, `A(i, p)` streaming,
 //!   partials accumulated in `C(i, j)`), in f32 and in the accelerator's
-//!   int8×int8→i32 arithmetic;
+//!   int8×int8→i32 arithmetic; [`gemm_f32_into`] writes through a
+//!   destination descriptor, so attention heads can target their column
+//!   slice of a wider packed buffer directly (no copy-concat);
 //! * [`bias_add`] / [`bias_gelu`] — fused bias (+ tanh-GELU) on the
 //!   store path;
-//! * [`layernorm`] / [`softmax`] — row-wise ops walking logical rows of
-//!   packed buffers;
+//! * [`layernorm`] / [`softmax`] / [`masked_softmax`] / [`add_norm`] —
+//!   row-wise ops walking logical rows of packed buffers (masked softmax
+//!   folds the attention scale and additive key mask into the exp pass;
+//!   a fully-masked row becomes all zeros — see [`masked_softmax`]);
+//! * [`transpose_packed`] — blocked packed→packed transpose (Kᵀ), no
+//!   round-trip through row-major;
 //! * [`reference`] — straightforward row-major implementations (f64
 //!   accumulation for GEMM) the blocked kernels are verified against;
-//! * [`NativeModel`] — a packed-weights FFN block serving as the
-//!   dynamic batcher's executor (`bwma serve`, default backend);
+//! * [`NativeModel`] — packed-weights models serving as the dynamic
+//!   batcher's executor (`bwma serve`, default backend): the legacy FFN
+//!   block ([`NativeModel::new`]) or a full multi-head BERT encoder
+//!   stack ([`NativeModel::new_encoder`]) whose per-layer phase list
+//!   matches the simulator's `LayerPhases` one-for-one;
 //! * [`native_tags`] / [`run_native_check`] — the `bwma verify` suite:
 //!   pack → blocked kernel → unpack, compared against [`reference`].
 //!
 //! [`layout::tile_spans`]: crate::layout::tile_spans
 //! [`layout::AddressMap`]: crate::layout::AddressMap
+
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, ensure, Result};
 
@@ -106,22 +117,107 @@ pub fn gemm_f32(
     n: usize,
     block: usize,
 ) -> Result<Vec<f32>> {
+    // Validate before building the descriptor: `MatrixDesc` asserts its
+    // invariants, but bad caller dims must surface as an `Err`.
     check_gemm_dims(m, k, n, block, a.len(), b.len())?;
-    let da = packed_desc(m, k, block);
-    let db = packed_desc(k, n, block);
     let dc = packed_desc(m, n, block);
     let mut c = vec![0.0f32; m * n];
+    // The buffer is freshly zeroed — skip gemm_f32_into's clear pass.
+    gemm_f32_into_inner(a, b, &mut c, &dc, m, k, n, block, false)?;
+    Ok(c)
+}
+
+/// Validate a GEMM destination descriptor + backing buffer: `dc` must
+/// describe a BWMA-packed `m×n` output in element units (`base == 0`,
+/// `elem == 1`) — plain, or a column-slice view of a wider packed
+/// backing buffer of `rows × pitch` elements.
+pub(crate) fn check_gemm_dst(
+    c_len: usize,
+    dc: &MatrixDesc,
+    m: usize,
+    n: usize,
+    block: usize,
+) -> Result<()> {
+    ensure!(
+        dc.rows == m && dc.cols == n && dc.block == block,
+        "destination descriptor is {}x{} block {}, output is {m}x{n} block {block}",
+        dc.rows,
+        dc.cols,
+        dc.block
+    );
+    ensure!(dc.layout == Layout::Bwma, "destination must be BWMA-packed");
+    ensure!(
+        dc.base == 0 && dc.elem == 1,
+        "destination descriptor must be in element units (base 0, elem 1)"
+    );
+    ensure!(
+        c_len == dc.rows * dc.pitch,
+        "destination backing has {c_len} elements, {}x{} needs {}",
+        dc.rows,
+        dc.pitch,
+        dc.rows * dc.pitch
+    );
+    Ok(())
+}
+
+/// Blocked f32 GEMM writing through a destination descriptor: the output
+/// tiles land wherever `dc` says — a plain packed matrix, or a
+/// column-slice view of a wider packed buffer (attention heads writing
+/// their slice of the concatenated output directly, no copy-concat).
+/// Destination tiles are **overwritten**, not accumulated; elements of
+/// the backing buffer outside the view are untouched. Same
+/// weight-stationary schedule (and bit-exact results) as [`gemm_f32`].
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_f32_into(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    dc: &MatrixDesc,
+    m: usize,
+    k: usize,
+    n: usize,
+    block: usize,
+) -> Result<()> {
+    gemm_f32_into_inner(a, b, c, dc, m, k, n, block, true)
+}
+
+/// `zero_dst: false` skips the destination-clear pass — only for callers
+/// that hand over a freshly zeroed buffer ([`gemm_f32`]); the public
+/// entry point always clears so reused buffers get overwrite semantics.
+#[allow(clippy::too_many_arguments)]
+fn gemm_f32_into_inner(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    dc: &MatrixDesc,
+    m: usize,
+    k: usize,
+    n: usize,
+    block: usize,
+    zero_dst: bool,
+) -> Result<()> {
+    check_gemm_dims(m, k, n, block, a.len(), b.len())?;
+    check_gemm_dst(c.len(), dc, m, n, block)?;
+    let da = packed_desc(m, k, block);
+    let db = packed_desc(k, n, block);
+    if zero_dst {
+        for j in 0..dc.block_cols() {
+            for i in 0..dc.block_rows() {
+                c[tile_range(dc, i, j)].fill(0.0);
+            }
+        }
+    }
     for j in 0..dc.block_cols() {
         for p in 0..da.block_cols() {
             let bt = &b[tile_range(&db, p, j)];
             for i in 0..dc.block_rows() {
                 let at = &a[tile_range(&da, i, p)];
-                let ct = &mut c[tile_range(&dc, i, j)];
+                let ct = &mut c[tile_range(dc, i, j)];
                 tile_mac_f32(at, bt, ct, block);
             }
         }
     }
-    Ok(c)
+    Ok(())
 }
 
 /// Blocked int8 GEMM over packed buffers in the systolic array's
@@ -175,6 +271,38 @@ pub(crate) fn tile_mac_i8(at: &[i8], bt: &[i8], ct: &mut [i32], b: usize) {
     }
 }
 
+/// Transpose one `b×b` tile: `dt = stᵀ`, both row-major within the tile
+/// (the contiguous burst layout of a packed block). Shared by the serial
+/// and tile-parallel ([`super::parallel`]) packed transposes.
+#[inline]
+pub(crate) fn transpose_tile(st: &[f32], dt: &mut [f32], b: usize) {
+    for r in 0..b {
+        for c in 0..b {
+            dt[c * b + r] = st[r * b + c];
+        }
+    }
+}
+
+/// Blocked packed→packed transpose: `dst[c, r] = src[r, c]`, both buffers
+/// BWMA-packed — destination tile `(i, j)` is the transposed source tile
+/// `(j, i)`, each a single contiguous burst, so the kernel never
+/// round-trips through row-major (the K Transpose phase of the attention
+/// pipeline, §3.2's non-GEMM operator executed in the packed domain).
+pub fn transpose_packed(src: &[f32], rows: usize, cols: usize, block: usize) -> Result<Vec<f32>> {
+    check_rowwise(src.len(), rows, cols, block)?;
+    let ds = packed_desc(rows, cols, block);
+    let dd = packed_desc(cols, rows, block);
+    let mut dst = vec![0.0f32; rows * cols];
+    for i in 0..dd.block_rows() {
+        for j in 0..dd.block_cols() {
+            let st = &src[tile_range(&ds, j, i)];
+            let dt = &mut dst[tile_range(&dd, i, j)];
+            transpose_tile(st, dt, block);
+        }
+    }
+    Ok(dst)
+}
+
 /// tanh-approximation GELU — the form an accelerator LUT implements, and
 /// the default in BERT codebases. Used by both the blocked kernel and
 /// the row-major reference so they agree bit-for-bit in structure.
@@ -218,6 +346,32 @@ pub fn bias_gelu(x: &mut [f32], bias: &[f32], rows: usize, cols: usize, block: u
     Ok(())
 }
 
+/// Normalize one logical row of a packed buffer: mean pass, variance
+/// pass, normalize + γ/β writeback. The float-op order is the contract
+/// the parallel kernels and [`add_norm`] inherit — one worker per row,
+/// always these three passes.
+#[inline]
+fn norm_row(x: &mut [f32], d: &MatrixDesc, r: usize, gamma: &[f32], beta: &[f32], eps: f32) {
+    let cols = d.cols;
+    let inv_n = 1.0 / cols as f32;
+    let mut mean = 0.0f32;
+    for c in 0..cols {
+        mean += x[d.elem_index(r, c)];
+    }
+    mean *= inv_n;
+    let mut var = 0.0f32;
+    for c in 0..cols {
+        let dv = x[d.elem_index(r, c)] - mean;
+        var += dv * dv;
+    }
+    var *= inv_n;
+    let inv_std = 1.0 / (var + eps).sqrt();
+    for c in 0..cols {
+        let i = d.elem_index(r, c);
+        x[i] = (x[i] - mean) * inv_std * gamma[c] + beta[c];
+    }
+}
+
 /// LayerNorm over each logical row of a packed buffer, with affine
 /// parameters: mean pass, variance pass, then normalize + γ/β writeback
 /// — the same 2+1-pass structure the simulator's `RowScan` models.
@@ -233,24 +387,39 @@ pub fn layernorm(
     check_rowwise(x.len(), rows, cols, block)?;
     ensure!(gamma.len() == cols && beta.len() == cols, "affine params must have {cols} elements");
     let d = packed_desc(rows, cols, block);
-    let inv_n = 1.0 / cols as f32;
     for r in 0..rows {
-        let mut mean = 0.0f32;
-        for c in 0..cols {
-            mean += x[d.elem_index(r, c)];
-        }
-        mean *= inv_n;
-        let mut var = 0.0f32;
-        for c in 0..cols {
-            let dv = x[d.elem_index(r, c)] - mean;
-            var += dv * dv;
-        }
-        var *= inv_n;
-        let inv_std = 1.0 / (var + eps).sqrt();
+        norm_row(x, &d, r, gamma, beta, eps);
+    }
+    Ok(())
+}
+
+/// Fused residual add + LayerNorm over a packed buffer:
+/// `x = LayerNorm(x + res)`, the encoder's Add/Norm phase. `res` shares
+/// `x`'s packed descriptor, so the add is an index-aligned element-wise
+/// pass; each row then normalizes in the [`layernorm`] pass structure.
+/// Row-local throughout, so the row-parallel variant
+/// ([`super::parallel::add_norm`]) is bitwise identical to this one.
+#[allow(clippy::too_many_arguments)]
+pub fn add_norm(
+    x: &mut [f32],
+    res: &[f32],
+    gamma: &[f32],
+    beta: &[f32],
+    rows: usize,
+    cols: usize,
+    block: usize,
+    eps: f32,
+) -> Result<()> {
+    check_rowwise(x.len(), rows, cols, block)?;
+    ensure!(res.len() == x.len(), "residual has {} elements, x has {}", res.len(), x.len());
+    ensure!(gamma.len() == cols && beta.len() == cols, "affine params must have {cols} elements");
+    let d = packed_desc(rows, cols, block);
+    for r in 0..rows {
         for c in 0..cols {
             let i = d.elem_index(r, c);
-            x[i] = (x[i] - mean) * inv_std * gamma[c] + beta[c];
+            x[i] += res[i];
         }
+        norm_row(x, &d, r, gamma, beta, eps);
     }
     Ok(())
 }
@@ -258,27 +427,84 @@ pub fn layernorm(
 /// Numerically-stable softmax over each logical row of a packed buffer:
 /// running-max pass, exp+sum pass, normalize pass (the simulator's
 /// softmax `RowScan` is exactly 2 read passes + 1 read/write pass).
+/// Shares [`masked_softmax`]'s fully-masked-row convention: a row that is
+/// entirely `-inf` becomes all zeros.
 pub fn softmax(x: &mut [f32], rows: usize, cols: usize, block: usize) -> Result<()> {
+    masked_softmax(x, None, 1.0, rows, cols, block)
+}
+
+/// Masked, scaled, numerically-stable softmax over each logical row of a
+/// packed buffer: the row's logits are `x[r, c] * scale + mask[c]` — the
+/// attention `1/√d_head` scale and the additive key-position mask both
+/// fold into the exp pass, no extra memory traffic (the simulator's
+/// Softmax phase models the same 2+1-pass walk).
+///
+/// **Fully-masked-row convention** (shared by the blocked, parallel, and
+/// [`reference`] kernels): a row whose logits are entirely `-inf` —
+/// every key masked, as a padding mask can produce — becomes **all
+/// zeros** (the row attends to nothing) instead of the `0/0 = NaN`
+/// garbage a naive normalize would emit. NaN logits still propagate: a
+/// row containing any NaN logit comes out all-NaN (`f32::max` would
+/// silently skip the NaN in the max pass, so the guard explicitly
+/// checks for it) — only the *clean* all-`-inf` case is defined away.
+pub fn masked_softmax(
+    x: &mut [f32],
+    mask: Option<&[f32]>,
+    scale: f32,
+    rows: usize,
+    cols: usize,
+    block: usize,
+) -> Result<()> {
     check_rowwise(x.len(), rows, cols, block)?;
+    if let Some(m) = mask {
+        ensure!(m.len() == cols, "mask has {} entries, want {cols}", m.len());
+    }
     let d = packed_desc(rows, cols, block);
     for r in 0..rows {
-        let mut max = f32::NEG_INFINITY;
-        for c in 0..cols {
-            max = max.max(x[d.elem_index(r, c)]);
-        }
-        let mut sum = 0.0f32;
-        for c in 0..cols {
-            let i = d.elem_index(r, c);
-            let e = (x[i] - max).exp();
-            x[i] = e;
-            sum += e;
-        }
-        let inv = 1.0 / sum;
-        for c in 0..cols {
-            x[d.elem_index(r, c)] *= inv;
-        }
+        softmax_row(x, &d, r, mask, scale);
     }
     Ok(())
+}
+
+/// One row of [`masked_softmax`] — the pass structure (and float-op
+/// order) every softmax variant shares.
+#[inline]
+fn softmax_row(x: &mut [f32], d: &MatrixDesc, r: usize, mask: Option<&[f32]>, scale: f32) {
+    let cols = d.cols;
+    let logit = |v: f32, c: usize| -> f32 {
+        let v = v * scale;
+        match mask {
+            Some(m) => v + m[c],
+            None => v,
+        }
+    };
+    let mut max = f32::NEG_INFINITY;
+    let mut has_nan = false;
+    for c in 0..cols {
+        let l = logit(x[d.elem_index(r, c)], c);
+        has_nan |= l.is_nan();
+        max = max.max(l);
+    }
+    // max == -inf means every logit was -inf or NaN; only the clean
+    // all-(-inf) row gets the zero convention — a NaN must propagate
+    // (falling through makes the whole row NaN: -inf - -inf = NaN).
+    if max == f32::NEG_INFINITY && !has_nan {
+        for c in 0..cols {
+            x[d.elem_index(r, c)] = 0.0;
+        }
+        return;
+    }
+    let mut sum = 0.0f32;
+    for c in 0..cols {
+        let i = d.elem_index(r, c);
+        let e = (logit(x[i], c) - max).exp();
+        x[i] = e;
+        sum += e;
+    }
+    let inv = 1.0 / sum;
+    for c in 0..cols {
+        x[d.elem_index(r, c)] *= inv;
+    }
 }
 
 /// Row-major reference kernels the blocked implementations are verified
@@ -286,6 +512,12 @@ pub fn softmax(x: &mut [f32], rows: usize, cols: usize, block: usize) -> Result<
 pub mod reference {
     use super::gelu;
 
+    /// Plain IEEE row-major GEMM, f64 accumulation. Deliberately **no**
+    /// zero-skip: `0 × NaN = NaN` and `0 × ∞ = NaN` must propagate —
+    /// a golden that silently drops a non-finite `b` operand behind a
+    /// zero `a` element would let `verify`/equivalence checks pass on
+    /// divergent outputs. (The blocked kernels keep their zero-gating —
+    /// that models the accelerator; the *reference* must be exact.)
     pub fn gemm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
         assert_eq!(a.len(), m * k);
         assert_eq!(b.len(), k * n);
@@ -293,9 +525,6 @@ pub mod reference {
         for i in 0..m {
             for p in 0..k {
                 let av = a[i * k + p] as f64;
-                if av == 0.0 {
-                    continue;
-                }
                 let brow = &b[p * n..(p + 1) * n];
                 let crow = &mut c[i * n..(i + 1) * n];
                 for (cv, &bv) in crow.iter_mut().zip(brow) {
@@ -304,6 +533,18 @@ pub mod reference {
             }
         }
         c.into_iter().map(|v| v as f32).collect()
+    }
+
+    /// Row-major transpose: `out[c, r] = src[r, c]`.
+    pub fn transpose(src: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+        assert_eq!(src.len(), rows * cols);
+        let mut out = vec![0.0f32; rows * cols];
+        for r in 0..rows {
+            for c in 0..cols {
+                out[c * rows + r] = src[r * cols + c];
+            }
+        }
+        out
     }
 
     pub fn bias_add(x: &mut [f32], bias: &[f32], rows: usize, cols: usize) {
@@ -339,14 +580,67 @@ pub mod reference {
         }
     }
 
-    pub fn softmax(x: &mut [f32], rows: usize, cols: usize) {
+    /// `x = LayerNorm(x + res)` — the encoder's Add/Norm phase.
+    pub fn add_norm(
+        x: &mut [f32],
+        res: &[f32],
+        gamma: &[f32],
+        beta: &[f32],
+        rows: usize,
+        cols: usize,
+        eps: f32,
+    ) {
         assert_eq!(x.len(), rows * cols);
+        assert_eq!(res.len(), x.len());
+        for (v, r) in x.iter_mut().zip(res) {
+            *v += r;
+        }
+        layernorm(x, gamma, beta, rows, cols, eps);
+    }
+
+    pub fn softmax(x: &mut [f32], rows: usize, cols: usize) {
+        masked_softmax(x, None, 1.0, rows, cols);
+    }
+
+    /// Row-major counterpart of [`super::masked_softmax`], sharing its
+    /// fully-masked-row convention (all-`-inf` row → all-zero row).
+    pub fn masked_softmax(
+        x: &mut [f32],
+        mask: Option<&[f32]>,
+        scale: f32,
+        rows: usize,
+        cols: usize,
+    ) {
+        assert_eq!(x.len(), rows * cols);
+        if let Some(m) = mask {
+            assert_eq!(m.len(), cols, "mask length must equal cols");
+        }
+        let logit = |v: f32, c: usize| -> f32 {
+            let v = v * scale;
+            match mask {
+                Some(m) => v + m[c],
+                None => v,
+            }
+        };
         for r in 0..rows {
             let row = &mut x[r * cols..(r + 1) * cols];
-            let max = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+            let mut max = f32::NEG_INFINITY;
+            let mut has_nan = false;
+            for (c, v) in row.iter().enumerate() {
+                let l = logit(*v, c);
+                has_nan |= l.is_nan();
+                max = max.max(l);
+            }
+            // Same convention as the blocked kernel: only a *clean*
+            // all-(-inf) row zeroes; NaN logits fall through and
+            // poison the row.
+            if max == f32::NEG_INFINITY && !has_nan {
+                row.fill(0.0);
+                continue;
+            }
             let mut sum = 0.0f32;
-            for v in row.iter_mut() {
-                *v = (*v - max).exp();
+            for (c, v) in row.iter_mut().enumerate() {
+                *v = (logit(*v, c) - max).exp();
                 sum += *v;
             }
             let inv = 1.0 / sum;
@@ -357,11 +651,168 @@ pub mod reference {
     }
 }
 
-/// A feed-forward block with packed weights — the native serving model:
+/// Deterministic ~U(-scale, scale) buffer (weights/biases init).
+fn fill_scaled(rng: &mut XorShift64, n: usize, scale: f32) -> Vec<f32> {
+    let mut v = vec![0.0f32; n];
+    rng.fill_f32(&mut v);
+    for x in &mut v {
+        *x *= scale;
+    }
+    v
+}
+
+/// One FFN sub-block's weights: packed (BWMA) copies for the blocked
+/// kernels, row-major copies for the reference path, biases, and the
+/// affine parameters of the LayerNorm that closes the sub-block.
+#[derive(Debug, Clone)]
+struct FfnParams {
+    w1: Vec<f32>,
+    w2: Vec<f32>,
+    w1_rm: Vec<f32>,
+    w2_rm: Vec<f32>,
+    b1: Vec<f32>,
+    b2: Vec<f32>,
+    gamma: Vec<f32>,
+    beta: Vec<f32>,
+}
+
+impl FfnParams {
+    /// Weights ~ U(-1,1)/√fan_in so activations stay O(1) through both
+    /// GEMMs; γ ≈ 1.
+    fn init(rng: &mut XorShift64, d_model: usize, d_ff: usize, block: usize) -> Self {
+        let w1_rm = fill_scaled(rng, d_model * d_ff, 1.0 / (d_model as f32).sqrt());
+        let w2_rm = fill_scaled(rng, d_ff * d_model, 1.0 / (d_ff as f32).sqrt());
+        let b1 = fill_scaled(rng, d_ff, 0.1);
+        let b2 = fill_scaled(rng, d_model, 0.1);
+        let mut gamma = fill_scaled(rng, d_model, 0.2);
+        for g in &mut gamma {
+            *g += 1.0; // γ ≈ 1
+        }
+        let beta = fill_scaled(rng, d_model, 0.1);
+        let w1 = crate::layout::rwma_to_bwma(&w1_rm, d_model, d_ff, block);
+        let w2 = crate::layout::rwma_to_bwma(&w2_rm, d_ff, d_model, block);
+        Self { w1, w2, w1_rm, w2_rm, b1, b2, gamma, beta }
+    }
+}
+
+/// Multi-head attention weights of one encoder layer: per-head Q/K/V
+/// projections (packed + row-major), the output projection, and the
+/// affine parameters of the attention-side Add/Norm.
+#[derive(Debug, Clone)]
+struct AttentionParams {
+    heads: usize,
+    d_head: usize,
+    /// Per-head packed `[d_model, d_head]` projection weights.
+    wq: Vec<Vec<f32>>,
+    wk: Vec<Vec<f32>>,
+    wv: Vec<Vec<f32>>,
+    /// Row-major copies for the reference path.
+    wq_rm: Vec<Vec<f32>>,
+    wk_rm: Vec<Vec<f32>>,
+    wv_rm: Vec<Vec<f32>>,
+    /// Per-head projection biases (`d_head` each).
+    bq: Vec<Vec<f32>>,
+    bk: Vec<Vec<f32>>,
+    bv: Vec<Vec<f32>>,
+    /// Output projection `[d_model, d_model]` (packed + row-major) + bias.
+    wo: Vec<f32>,
+    wo_rm: Vec<f32>,
+    bo: Vec<f32>,
+    /// Add/Norm 1 affine parameters.
+    gamma: Vec<f32>,
+    beta: Vec<f32>,
+}
+
+impl AttentionParams {
+    fn init(rng: &mut XorShift64, d_model: usize, heads: usize, block: usize) -> Self {
+        let d_head = d_model / heads;
+        let scale = 1.0 / (d_model as f32).sqrt();
+        let (mut wq, mut wk, mut wv) = (Vec::new(), Vec::new(), Vec::new());
+        let (mut wq_rm, mut wk_rm, mut wv_rm) = (Vec::new(), Vec::new(), Vec::new());
+        let (mut bq, mut bk, mut bv) = (Vec::new(), Vec::new(), Vec::new());
+        for _ in 0..heads {
+            for (packed, rm, bias) in [
+                (&mut wq, &mut wq_rm, &mut bq),
+                (&mut wk, &mut wk_rm, &mut bk),
+                (&mut wv, &mut wv_rm, &mut bv),
+            ] {
+                let w = fill_scaled(rng, d_model * d_head, scale);
+                packed.push(crate::layout::rwma_to_bwma(&w, d_model, d_head, block));
+                rm.push(w);
+                bias.push(fill_scaled(rng, d_head, 0.1));
+            }
+        }
+        let wo_rm = fill_scaled(rng, d_model * d_model, scale);
+        let wo = crate::layout::rwma_to_bwma(&wo_rm, d_model, d_model, block);
+        let bo = fill_scaled(rng, d_model, 0.1);
+        let mut gamma = fill_scaled(rng, d_model, 0.2);
+        for g in &mut gamma {
+            *g += 1.0;
+        }
+        let beta = fill_scaled(rng, d_model, 0.1);
+        Self { heads, d_head, wq, wk, wv, wq_rm, wk_rm, wv_rm, bq, bk, bv, wo, wo_rm, bo, gamma, beta }
+    }
+}
+
+/// One encoder layer = multi-head attention + FFN (each closed by its
+/// residual Add/Norm).
+#[derive(Debug, Clone)]
+struct EncoderLayerParams {
+    attn: AttentionParams,
+    ffn: FfnParams,
+}
+
+/// What a [`NativeModel`] computes per sequence.
+#[derive(Debug, Clone)]
+enum ModelKind {
+    /// Legacy FFN block: `out = LayerNorm(GELU(x·W1 + b1)·W2 + b2)` (no
+    /// residual — [`NativeModel::new`], PR-1 behavior preserved).
+    Ffn(FfnParams),
+    /// Stack of full BERT encoder layers ([`NativeModel::new_encoder`]).
+    Encoder(Vec<EncoderLayerParams>),
+}
+
+/// Wall-time per encoder phase, accumulated across heads and layers by
+/// phase name — the names are exactly the simulator's `LayerPhases`
+/// phase names, so a native breakdown lines up row-for-row with a
+/// `bwma simulate` phase table (`benches/encoder_phases.rs`).
+#[derive(Debug, Clone, Default)]
+pub struct PhaseTimings {
+    entries: Vec<(&'static str, Duration)>,
+}
+
+impl PhaseTimings {
+    fn add(&mut self, name: &'static str, dt: Duration) {
+        if let Some(e) = self.entries.iter_mut().find(|(n, _)| *n == name) {
+            e.1 += dt;
+        } else {
+            self.entries.push((name, dt));
+        }
+    }
+
+    /// `(phase name, accumulated wall time)` in first-occurrence order.
+    pub fn entries(&self) -> &[(&'static str, Duration)] {
+        &self.entries
+    }
+
+    /// Total wall time across all phases.
+    pub fn total(&self) -> Duration {
+        self.entries.iter().map(|(_, d)| *d).sum()
+    }
+}
+
+/// A packed-weights model — the native serving executor. Two shapes:
 ///
-/// ```text
-/// out = LayerNorm( GELU(x·W1 + b1) · W2 + b2 )
-/// ```
+/// * [`NativeModel::new`] — the legacy FFN block
+///   `out = LayerNorm(GELU(x·W1 + b1)·W2 + b2)`;
+/// * [`NativeModel::new_encoder`] — a stack of full multi-head BERT
+///   encoder layers executing **entirely on BWMA-packed buffers**:
+///   per-head Q/K/V projections, packed Kᵀ transpose, QKᵀ GEMM, masked
+///   softmax (scale + additive key mask folded into the exp pass), AV
+///   GEMM with each head writing its column slice of the concatenated
+///   output through a view descriptor, output projection, fused residual
+///   Add/Norm, then the FFN — the same ten phases, in the same order, as
+///   the simulator's `LayerPhases`.
 ///
 /// Requests carry a row-major `[seq, d_model]` activation; `forward`
 /// packs it block-wise at the door, runs every kernel on packed buffers,
@@ -377,62 +828,100 @@ pub struct NativeModel {
     /// results are bitwise identical either way — see
     /// [`super::parallel`]).
     cores: usize,
-    /// Packed (BWMA) weights, as they would live in accelerator memory.
-    w1: Vec<f32>,
-    w2: Vec<f32>,
-    /// Row-major copies, for the reference path.
-    w1_rm: Vec<f32>,
-    w2_rm: Vec<f32>,
-    b1: Vec<f32>,
-    b2: Vec<f32>,
-    gamma: Vec<f32>,
-    beta: Vec<f32>,
+    /// Additive attention mask over key positions (`len == seq`),
+    /// encoder models only.
+    mask: Option<Vec<f32>>,
+    kind: ModelKind,
 }
 
 impl NativeModel {
     pub const EPS: f32 = 1e-5;
 
-    /// Deterministically-initialized model (weights ~ U(-1,1)/√fan_in so
-    /// activations stay O(1) through both GEMMs).
+    /// Deterministically-initialized FFN block (weights ~ U(-1,1)/√fan_in
+    /// so activations stay O(1) through both GEMMs).
     pub fn new(seq: usize, d_model: usize, d_ff: usize, block: usize, seed: u64) -> Result<Self> {
         ensure!(
             block > 0 && seq % block == 0 && d_model % block == 0 && d_ff % block == 0,
             "model dims {seq}/{d_model}/{d_ff} not divisible by block {block}"
         );
         let mut rng = XorShift64::new(seed);
-        let mut fill = |n: usize, scale: f32| -> Vec<f32> {
-            let mut v = vec![0.0f32; n];
-            rng.fill_f32(&mut v);
-            for x in &mut v {
-                *x *= scale;
-            }
-            v
-        };
-        let w1_rm = fill(d_model * d_ff, 1.0 / (d_model as f32).sqrt());
-        let w2_rm = fill(d_ff * d_model, 1.0 / (d_ff as f32).sqrt());
-        let b1 = fill(d_ff, 0.1);
-        let b2 = fill(d_model, 0.1);
-        let mut gamma = fill(d_model, 0.2);
-        for g in &mut gamma {
-            *g += 1.0; // γ ≈ 1
-        }
-        let beta = fill(d_model, 0.1);
-        let w1 = crate::layout::rwma_to_bwma(&w1_rm, d_model, d_ff, block);
-        let w2 = crate::layout::rwma_to_bwma(&w2_rm, d_ff, d_model, block);
-        Ok(Self { seq, d_model, d_ff, block, cores: 1, w1, w2, w1_rm, w2_rm, b1, b2, gamma, beta })
+        let ffn = FfnParams::init(&mut rng, d_model, d_ff, block);
+        Ok(Self { seq, d_model, d_ff, block, cores: 1, mask: None, kind: ModelKind::Ffn(ffn) })
+    }
+
+    /// Deterministically-initialized stack of `layers` full BERT encoder
+    /// layers (`heads` attention heads of `d_model / heads` dimensions
+    /// each, FFN width `d_ff`), with independent weights per layer.
+    pub fn new_encoder(
+        seq: usize,
+        d_model: usize,
+        heads: usize,
+        d_ff: usize,
+        layers: usize,
+        block: usize,
+        seed: u64,
+    ) -> Result<Self> {
+        ensure!(layers >= 1, "encoder needs at least one layer");
+        ensure!(heads >= 1 && d_model % heads == 0, "d_model {d_model} not divisible by heads {heads}");
+        let d_head = d_model / heads;
+        ensure!(
+            block > 0
+                && seq % block == 0
+                && d_model % block == 0
+                && d_head % block == 0
+                && d_ff % block == 0,
+            "encoder dims seq={seq}/d_model={d_model}/d_head={d_head}/d_ff={d_ff} not divisible by block {block}"
+        );
+        let mut rng = XorShift64::new(seed);
+        let stack = (0..layers)
+            .map(|_| EncoderLayerParams {
+                attn: AttentionParams::init(&mut rng, d_model, heads, block),
+                ffn: FfnParams::init(&mut rng, d_model, d_ff, block),
+            })
+            .collect();
+        Ok(Self { seq, d_model, d_ff, block, cores: 1, mask: None, kind: ModelKind::Encoder(stack) })
     }
 
     /// Set the worker count the model's kernels (and the batcher's
-    /// per-sequence dispatch) fan out over. Clamped to ≥ 1; numerics are
-    /// bitwise independent of the choice.
-    pub fn with_cores(mut self, cores: usize) -> Self {
-        self.cores = cores.max(1);
-        self
+    /// per-sequence dispatch) fan out over. `cores` must be ≥ 1 — zero
+    /// workers is a configuration error, rejected here (and at the CLI)
+    /// before it can reach the pool. Numerics are bitwise independent of
+    /// the choice.
+    pub fn with_cores(mut self, cores: usize) -> Result<Self> {
+        ensure!(cores >= 1, "cores must be >= 1 (got {cores})");
+        self.cores = cores;
+        Ok(self)
+    }
+
+    /// Attach an additive attention mask over key positions: `mask[c]`
+    /// is added to every head's score logits for key `c` (`0.0` =
+    /// attend, `f32::NEG_INFINITY` = masked — a padding mask). Encoder
+    /// models only; `len == seq`. A mask that blanks every key yields
+    /// all-zero attention rows (see [`masked_softmax`]).
+    pub fn with_mask(mut self, mask: Vec<f32>) -> Result<Self> {
+        ensure!(self.is_encoder(), "attention mask requires an encoder model");
+        ensure!(mask.len() == self.seq, "mask has {} entries, want seq = {}", mask.len(), self.seq);
+        self.mask = Some(mask);
+        Ok(self)
     }
 
     /// Worker threads this model executes with.
     pub fn cores(&self) -> usize {
         self.cores
+    }
+
+    /// Whether this model runs the full encoder stack (vs the legacy
+    /// FFN-only block).
+    pub fn is_encoder(&self) -> bool {
+        matches!(self.kind, ModelKind::Encoder(_))
+    }
+
+    /// Number of encoder layers (1 for the FFN-only model).
+    pub fn num_layers(&self) -> usize {
+        match &self.kind {
+            ModelKind::Ffn(_) => 1,
+            ModelKind::Encoder(stack) => stack.len(),
+        }
     }
 
     /// Per-sequence input shape (row-major host tensor).
@@ -451,38 +940,230 @@ impl NativeModel {
         self.forward_with_cores(x, self.cores)
     }
 
-    /// Forward on an explicit core count: `cores <= 1` runs the serial
+    /// Forward on an explicit core count: `cores == 1` runs the serial
     /// kernels; more fans each GEMM's output tile-grid and the row-wise
     /// ops over a scoped worker pool ([`super::parallel`]). The result
     /// is bitwise identical for every `cores` value.
     pub fn forward_with_cores(&self, x: &Tensor, cores: usize) -> Result<Tensor> {
+        let mut timings = PhaseTimings::default();
+        self.forward_packed(x, cores, &mut timings)
+    }
+
+    /// Instrumented forward (encoder models only): the output plus
+    /// per-phase wall time, phase names matching the simulator's
+    /// `LayerPhases` (accumulated across heads and layers).
+    pub fn forward_timed(&self, x: &Tensor, cores: usize) -> Result<(Tensor, PhaseTimings)> {
+        ensure!(self.is_encoder(), "forward_timed requires an encoder model (new_encoder)");
+        let mut timings = PhaseTimings::default();
+        let out = self.forward_packed(x, cores, &mut timings)?;
+        Ok((out, timings))
+    }
+
+    /// Shared forward body: pack at the door, run the blocked pipeline,
+    /// unpack at the exit.
+    fn forward_packed(&self, x: &Tensor, cores: usize, timings: &mut PhaseTimings) -> Result<Tensor> {
+        ensure!(cores >= 1, "cores must be >= 1 (got {cores})");
         ensure!(
             x.shape == self.in_shape(),
             "input shape {:?}, model wants {:?}",
             x.shape,
             self.in_shape()
         );
+        let (s, d, b) = (self.seq, self.d_model, self.block);
+        let mut xp = x.pack_blocked(b)?.data;
+        match &self.kind {
+            ModelKind::Ffn(ffn) => {
+                xp = self.ffn_forward(&xp, ffn, cores)?;
+            }
+            ModelKind::Encoder(stack) => {
+                for layer in stack {
+                    xp = self.encoder_layer_forward(&xp, layer, cores, timings)?;
+                }
+            }
+        }
+        Tensor::new(vec![s / b, d / b, b, b], xp).unpack_blocked()
+    }
+
+    /// Legacy FFN block on packed buffers (no residual — PR-1 contract).
+    fn ffn_forward(&self, xp: &[f32], ffn: &FfnParams, cores: usize) -> Result<Vec<f32>> {
         let (s, d, f, b) = (self.seq, self.d_model, self.d_ff, self.block);
-        let xp = x.pack_blocked(b)?;
-        let mut h = super::parallel::gemm_f32(&xp.data, &self.w1, s, d, f, b, cores)?;
-        bias_gelu(&mut h, &self.b1, s, f, b)?;
-        let mut y = super::parallel::gemm_f32(&h, &self.w2, s, f, d, b, cores)?;
-        bias_add(&mut y, &self.b2, s, d, b)?;
-        super::parallel::layernorm(&mut y, &self.gamma, &self.beta, s, d, b, Self::EPS, cores)?;
-        Tensor::new(vec![s / b, d / b, b, b], y).unpack_blocked()
+        let mut h = super::parallel::gemm_f32(xp, &ffn.w1, s, d, f, b, cores)?;
+        bias_gelu(&mut h, &ffn.b1, s, f, b)?;
+        let mut y = super::parallel::gemm_f32(&h, &ffn.w2, s, f, d, b, cores)?;
+        bias_add(&mut y, &ffn.b2, s, d, b)?;
+        super::parallel::layernorm(&mut y, &ffn.gamma, &ffn.beta, s, d, b, Self::EPS, cores)?;
+        Ok(y)
+    }
+
+    /// One encoder layer on packed buffers — ten phases, named and
+    /// ordered exactly as the simulator's `LayerPhases::build`, so
+    /// `simulate` and `serve` describe the same computation.
+    fn encoder_layer_forward(
+        &self,
+        xp: &[f32],
+        layer: &EncoderLayerParams,
+        cores: usize,
+        timings: &mut PhaseTimings,
+    ) -> Result<Vec<f32>> {
+        let (s, d, b) = (self.seq, self.d_model, self.block);
+        let attn = &layer.attn;
+        let (heads, dh) = (attn.heads, attn.d_head);
+        let scale = 1.0 / (dh as f32).sqrt();
+        let mask = self.mask.as_deref();
+
+        // Heads run sequentially, each kernel fanning its tiles over the
+        // pool — one thread scope per kernel call. For small d_head the
+        // spawn/join cost is measurable (see ROADMAP: fan the heads of a
+        // phase across a single parallel region instead).
+        // 1. Q/K/V projections, per head (bias fused on the store path).
+        let t0 = Instant::now();
+        let mut q = Vec::with_capacity(heads);
+        let mut k = Vec::with_capacity(heads);
+        let mut v = Vec::with_capacity(heads);
+        for i in 0..heads {
+            for (w, bias, out) in [
+                (&attn.wq[i], &attn.bq[i], &mut q),
+                (&attn.wk[i], &attn.bk[i], &mut k),
+                (&attn.wv[i], &attn.bv[i], &mut v),
+            ] {
+                let mut proj = super::parallel::gemm_f32(xp, w, s, d, dh, b, cores)?;
+                bias_add(&mut proj, bias, s, dh, b)?;
+                out.push(proj);
+            }
+        }
+        timings.add("QKV GEMM", t0.elapsed());
+
+        // 2. Kᵀ, packed→packed.
+        let t0 = Instant::now();
+        let kt = k
+            .iter()
+            .map(|ki| super::parallel::transpose_packed(ki, s, dh, b, cores))
+            .collect::<Result<Vec<_>>>()?;
+        timings.add("K Transpose", t0.elapsed());
+
+        // 3. Attention scores Q×Kᵀ.
+        let t0 = Instant::now();
+        let mut scores = (0..heads)
+            .map(|i| super::parallel::gemm_f32(&q[i], &kt[i], s, dh, s, b, cores))
+            .collect::<Result<Vec<_>>>()?;
+        timings.add("QK^T GEMM", t0.elapsed());
+
+        // 4. Masked softmax (1/√d_head scale + key mask fold into the
+        // exp pass — no extra memory traffic).
+        let t0 = Instant::now();
+        for sc in &mut scores {
+            super::parallel::masked_softmax(sc, mask, scale, s, s, b, cores)?;
+        }
+        timings.add("Softmax", t0.elapsed());
+
+        // 5. Attention × V, each head writing its column slice of the
+        // concatenated output through a view descriptor (no copy-concat).
+        let t0 = Instant::now();
+        let d_concat = packed_desc(s, d, b);
+        let mut h_concat = vec![0.0f32; s * d];
+        for i in 0..heads {
+            let view = d_concat.col_view(i * dh, dh);
+            super::parallel::gemm_f32_into(&scores[i], &v[i], &mut h_concat, &view, s, s, dh, b, cores)?;
+        }
+        timings.add("AV GEMM", t0.elapsed());
+
+        // 6. Output projection.
+        let t0 = Instant::now();
+        let mut proj = super::parallel::gemm_f32(&h_concat, &attn.wo, s, d, d, b, cores)?;
+        bias_add(&mut proj, &attn.bo, s, d, b)?;
+        timings.add("Projection GEMM", t0.elapsed());
+
+        // 7. Residual + LayerNorm (fused add_norm kernel).
+        let t0 = Instant::now();
+        super::parallel::add_norm(&mut proj, xp, &attn.gamma, &attn.beta, s, d, b, Self::EPS, cores)?;
+        timings.add("Add/Norm 1", t0.elapsed());
+
+        // 8.–9. Feed-forward with fused GELU on FF1's store path.
+        let ffn = &layer.ffn;
+        let t0 = Instant::now();
+        let mut hid = super::parallel::gemm_f32(&proj, &ffn.w1, s, d, self.d_ff, b, cores)?;
+        bias_gelu(&mut hid, &ffn.b1, s, self.d_ff, b)?;
+        timings.add("FF1 GEMM (+GELU)", t0.elapsed());
+
+        let t0 = Instant::now();
+        let mut out = super::parallel::gemm_f32(&hid, &ffn.w2, s, self.d_ff, d, b, cores)?;
+        bias_add(&mut out, &ffn.b2, s, d, b)?;
+        timings.add("FF2 GEMM", t0.elapsed());
+
+        // 10. Residual + LayerNorm.
+        let t0 = Instant::now();
+        super::parallel::add_norm(&mut out, &proj, &ffn.gamma, &ffn.beta, s, d, b, Self::EPS, cores)?;
+        timings.add("Add/Norm 2", t0.elapsed());
+
+        Ok(out)
     }
 
     /// The same function on the row-major reference kernels (golden path
     /// for `verify`, tests, and the serving cross-check).
     pub fn forward_reference(&self, x: &Tensor) -> Result<Tensor> {
         ensure!(x.shape == self.in_shape(), "input shape {:?}", x.shape);
+        let (s, d) = (self.seq, self.d_model);
+        let mut cur = x.data.clone();
+        match &self.kind {
+            ModelKind::Ffn(ffn) => {
+                cur = self.ffn_reference(&cur, ffn, false);
+            }
+            ModelKind::Encoder(stack) => {
+                for layer in stack {
+                    cur = self.encoder_layer_reference(&cur, layer);
+                }
+            }
+        }
+        Ok(Tensor::new(vec![s, d], cur))
+    }
+
+    /// Row-major FFN sub-block; `residual` selects the encoder's
+    /// Add/Norm closing (vs the legacy plain LayerNorm).
+    fn ffn_reference(&self, x: &[f32], ffn: &FfnParams, residual: bool) -> Vec<f32> {
         let (s, d, f) = (self.seq, self.d_model, self.d_ff);
-        let mut h = reference::gemm(&x.data, &self.w1_rm, s, d, f);
-        reference::bias_gelu(&mut h, &self.b1, s, f);
-        let mut y = reference::gemm(&h, &self.w2_rm, s, f, d);
-        reference::bias_add(&mut y, &self.b2, s, d);
-        reference::layernorm(&mut y, &self.gamma, &self.beta, s, d, Self::EPS);
-        Ok(Tensor::new(vec![s, d], y))
+        let mut h = reference::gemm(x, &ffn.w1_rm, s, d, f);
+        reference::bias_gelu(&mut h, &ffn.b1, s, f);
+        let mut y = reference::gemm(&h, &ffn.w2_rm, s, f, d);
+        reference::bias_add(&mut y, &ffn.b2, s, d);
+        if residual {
+            reference::add_norm(&mut y, x, &ffn.gamma, &ffn.beta, s, d, Self::EPS);
+        } else {
+            reference::layernorm(&mut y, &ffn.gamma, &ffn.beta, s, d, Self::EPS);
+        }
+        y
+    }
+
+    /// Row-major reference of one encoder layer (same phase list as the
+    /// blocked path, on the [`reference`] kernels).
+    fn encoder_layer_reference(&self, x: &[f32], layer: &EncoderLayerParams) -> Vec<f32> {
+        let (s, d) = (self.seq, self.d_model);
+        let attn = &layer.attn;
+        let (heads, dh) = (attn.heads, attn.d_head);
+        let scale = 1.0 / (dh as f32).sqrt();
+        let mask = self.mask.as_deref();
+
+        let mut h_concat = vec![0.0f32; s * d];
+        for i in 0..heads {
+            let mut q = reference::gemm(x, &attn.wq_rm[i], s, d, dh);
+            reference::bias_add(&mut q, &attn.bq[i], s, dh);
+            let mut k = reference::gemm(x, &attn.wk_rm[i], s, d, dh);
+            reference::bias_add(&mut k, &attn.bk[i], s, dh);
+            let mut v = reference::gemm(x, &attn.wv_rm[i], s, d, dh);
+            reference::bias_add(&mut v, &attn.bv[i], s, dh);
+            let kt = reference::transpose(&k, s, dh);
+            let mut sc = reference::gemm(&q, &kt, s, dh, s);
+            reference::masked_softmax(&mut sc, mask, scale, s, s);
+            let av = reference::gemm(&sc, &v, s, s, dh);
+            // Head i's column slice of the concatenated output.
+            for r in 0..s {
+                h_concat[r * d + i * dh..r * d + (i + 1) * dh]
+                    .copy_from_slice(&av[r * dh..(r + 1) * dh]);
+            }
+        }
+        let mut proj = reference::gemm(&h_concat, &attn.wo_rm, s, d, d);
+        reference::bias_add(&mut proj, &attn.bo, s, d);
+        reference::add_norm(&mut proj, x, &attn.gamma, &attn.beta, s, d, Self::EPS);
+        self.ffn_reference(&proj, &layer.ffn, true)
     }
 }
 
@@ -504,8 +1185,14 @@ pub fn native_tags() -> &'static [&'static str] {
         "native_bias_gelu_b16",
         "native_layernorm_b16",
         "native_softmax_b16",
+        "native_transpose_b16",
+        "native_masked_softmax_b16",
+        "native_add_norm_b16",
         "native_ffn_b16",
+        "native_encoder_equiv_b8",
+        "native_encoder_equiv_b16",
         "native_parallel_equiv_b16",
+        "native_encoder_parallel_equiv_b16",
     ]
 }
 
@@ -623,6 +1310,125 @@ fn check_softmax(tag: &'static str, block: usize, cores: usize) -> Result<Native
     Ok(NativeCheck { tag, max_diff: diff, ok })
 }
 
+fn check_transpose(tag: &'static str, block: usize, cores: usize) -> Result<NativeCheck> {
+    let (rows, cols) = (4 * block, 3 * block);
+    let mut rng = XorShift64::new(0x7A05);
+    let x = Tensor::new(vec![rows, cols], rand_vec(&mut rng, rows * cols));
+    let packed = x.pack_blocked(block)?.data;
+    let tp = super::parallel::transpose_packed(&packed, rows, cols, block, cores)?;
+    let got = Tensor::new(vec![cols / block, rows / block, block, block], tp.clone())
+        .unpack_blocked()?;
+    let expect = Tensor::new(vec![cols, rows], reference::transpose(&x.data, rows, cols));
+    let diff = got.max_abs_diff(&expect);
+    // Transpose moves values; it must be exact, and an involution.
+    let back = super::parallel::transpose_packed(&tp, cols, rows, block, cores)?;
+    let ok = diff == 0.0 && back == packed;
+    Ok(NativeCheck { tag, max_diff: diff, ok })
+}
+
+fn check_masked_softmax(tag: &'static str, block: usize, cores: usize) -> Result<NativeCheck> {
+    let (rows, cols) = (4 * block, 5 * block);
+    let mut rng = XorShift64::new(0x3A5C);
+    let x = Tensor::new(vec![rows, cols], rand_vec(&mut rng, rows * cols));
+    let scale = 0.125f32;
+    // Padding mask: the trailing block of key positions is blanked.
+    let mut mask = vec![0.0f32; cols];
+    for m in mask.iter_mut().skip(cols - block) {
+        *m = f32::NEG_INFINITY;
+    }
+    let mut packed = x.pack_blocked(block)?.data;
+    super::parallel::masked_softmax(&mut packed, Some(&mask), scale, rows, cols, block, cores)?;
+    let got =
+        Tensor::new(vec![rows / block, cols / block, block, block], packed).unpack_blocked()?;
+    let mut expect = x.data.clone();
+    reference::masked_softmax(&mut expect, Some(&mask), scale, rows, cols);
+    let expect = Tensor::new(vec![rows, cols], expect);
+    let diff = got.max_abs_diff(&expect);
+    let mut ok = got.allclose(&expect, 1e-5, 1e-5);
+    // Unmasked mass still normalizes; masked keys get exactly zero.
+    for r in 0..rows {
+        let row = &got.data[r * cols..(r + 1) * cols];
+        let s: f32 = row.iter().sum();
+        ok &= (s - 1.0).abs() < 1e-4;
+        ok &= row[cols - block..].iter().all(|&v| v == 0.0);
+    }
+    // Fully-masked convention: an all-(-inf) mask zeroes every row.
+    let mut all_masked = x.pack_blocked(block)?.data;
+    let full = vec![f32::NEG_INFINITY; cols];
+    super::parallel::masked_softmax(&mut all_masked, Some(&full), scale, rows, cols, block, cores)?;
+    ok &= all_masked.iter().all(|&v| v == 0.0);
+    Ok(NativeCheck { tag, max_diff: diff, ok })
+}
+
+fn check_add_norm(tag: &'static str, block: usize, cores: usize) -> Result<NativeCheck> {
+    let (rows, cols) = (4 * block, 5 * block);
+    let mut rng = XorShift64::new(0xADD);
+    let x = Tensor::new(vec![rows, cols], rand_vec(&mut rng, rows * cols));
+    let res = Tensor::new(vec![rows, cols], rand_vec(&mut rng, rows * cols));
+    let gamma = rand_vec(&mut rng, cols);
+    let beta = rand_vec(&mut rng, cols);
+    let mut packed = x.pack_blocked(block)?.data;
+    let res_packed = res.pack_blocked(block)?.data;
+    super::parallel::add_norm(
+        &mut packed,
+        &res_packed,
+        &gamma,
+        &beta,
+        rows,
+        cols,
+        block,
+        NativeModel::EPS,
+        cores,
+    )?;
+    let got =
+        Tensor::new(vec![rows / block, cols / block, block, block], packed).unpack_blocked()?;
+    let mut expect = x.data.clone();
+    reference::add_norm(&mut expect, &res.data, &gamma, &beta, rows, cols, NativeModel::EPS);
+    let expect = Tensor::new(vec![rows, cols], expect);
+    let diff = got.max_abs_diff(&expect);
+    Ok(NativeCheck { tag, max_diff: diff, ok: got.allclose(&expect, 1e-4, 1e-4) })
+}
+
+/// A small masked two-layer encoder for the encoder-level checks:
+/// seq 2b, d_model 2b (2 heads × d_head b), d_ff 4b, last block of key
+/// positions padding-masked.
+fn check_encoder_model(block: usize, seed: u64) -> Result<NativeModel> {
+    let seq = 2 * block;
+    let mut mask = vec![0.0f32; seq];
+    for m in mask.iter_mut().skip(seq - block) {
+        *m = f32::NEG_INFINITY;
+    }
+    NativeModel::new_encoder(seq, 2 * block, 2, 4 * block, 2, block, seed)?.with_mask(mask)
+}
+
+fn check_encoder(tag: &'static str, block: usize, cores: usize) -> Result<NativeCheck> {
+    let model = check_encoder_model(block, 0xE4C0)?;
+    let mut rng = XorShift64::new(0xE4C1);
+    let x = Tensor::new(model.in_shape(), rand_vec(&mut rng, model.seq * model.d_model));
+    let got = model.forward_with_cores(&x, cores)?;
+    let expect = model.forward_reference(&x)?;
+    let diff = got.max_abs_diff(&expect);
+    Ok(NativeCheck { tag, max_diff: diff, ok: got.allclose(&expect, 2e-3, 2e-3) })
+}
+
+/// Bitwise parallel==serial for the **full encoder layer stack** at
+/// several core counts — the determinism contract extended from the
+/// FFN-only `native_parallel_equiv_b16` to the attention pipeline.
+fn check_encoder_parallel(tag: &'static str, block: usize) -> Result<NativeCheck> {
+    let model = check_encoder_model(block, 0xE4C2)?;
+    let mut rng = XorShift64::new(0xE4C3);
+    let x = Tensor::new(model.in_shape(), rand_vec(&mut rng, model.seq * model.d_model));
+    let serial = model.forward_with_cores(&x, 1)?;
+    let mut max_diff = 0.0f32;
+    let mut ok = true;
+    for cores in [2usize, 3, 8] {
+        let par = model.forward_with_cores(&x, cores)?;
+        max_diff = max_diff.max(serial.max_abs_diff(&par));
+        ok &= serial.data.iter().zip(&par.data).all(|(a, b)| a.to_bits() == b.to_bits());
+    }
+    Ok(NativeCheck { tag, max_diff, ok })
+}
+
 fn check_ffn(tag: &'static str, block: usize, cores: usize) -> Result<NativeCheck> {
     let model = NativeModel::new(4 * block, 6 * block, 8 * block, block, 0xFF1)?;
     let mut rng = XorShift64::new(0xFF2);
@@ -689,8 +1495,16 @@ pub fn run_native_check_with_cores(tag: &str, cores: usize) -> Result<NativeChec
         "native_bias_gelu_b16" => check_elementwise("native_bias_gelu_b16", 16),
         "native_layernorm_b16" => check_layernorm("native_layernorm_b16", 16, cores),
         "native_softmax_b16" => check_softmax("native_softmax_b16", 16, cores),
+        "native_transpose_b16" => check_transpose("native_transpose_b16", 16, cores),
+        "native_masked_softmax_b16" => check_masked_softmax("native_masked_softmax_b16", 16, cores),
+        "native_add_norm_b16" => check_add_norm("native_add_norm_b16", 16, cores),
         "native_ffn_b16" => check_ffn("native_ffn_b16", 16, cores),
+        "native_encoder_equiv_b8" => check_encoder("native_encoder_equiv_b8", 8, cores),
+        "native_encoder_equiv_b16" => check_encoder("native_encoder_equiv_b16", 16, cores),
         "native_parallel_equiv_b16" => check_parallel_equiv("native_parallel_equiv_b16", 16),
+        "native_encoder_parallel_equiv_b16" => {
+            check_encoder_parallel("native_encoder_parallel_equiv_b16", 16)
+        }
         _ => bail!("unknown native check {tag:?} (see `bwma verify all`)"),
     }
 }
@@ -790,5 +1604,192 @@ mod tests {
         let m2 = NativeModel::new(16, 32, 32, 16, 7).unwrap();
         let x = Tensor::zeros(vec![16, 32]);
         assert_eq!(m1.forward(&x).unwrap(), m2.forward(&x).unwrap());
+    }
+
+    /// Regression (ISSUE 3): `reference::gemm` used to skip `a == 0.0`
+    /// rows, silently dropping a NaN/∞ in `b` — the golden must
+    /// propagate non-finite operands so divergence is visible.
+    #[test]
+    fn reference_gemm_propagates_nan_behind_zero_a() {
+        let a = vec![0.0f32; 4]; // 2x2 of zeros
+        let mut b = vec![1.0f32; 4];
+        b[0] = f32::NAN;
+        let c = reference::gemm(&a, &b, 2, 2, 2);
+        assert!(c[0].is_nan(), "0 × NaN must be NaN, got {}", c[0]);
+        // Same for infinity: 0 × ∞ = NaN.
+        let mut b = vec![1.0f32; 4];
+        b[3] = f32::INFINITY;
+        let c = reference::gemm(&a, &b, 2, 2, 2);
+        assert!(c[3].is_nan(), "0 × ∞ must be NaN, got {}", c[3]);
+    }
+
+    /// Regression (ISSUE 3): a fully-masked attention row (all `-inf`)
+    /// must yield a defined all-zero row — not `exp(NaN)/0` garbage —
+    /// in the blocked, parallel, and reference softmax alike.
+    #[test]
+    fn fully_masked_softmax_row_is_zero_everywhere() {
+        let (rows, cols, b) = (16usize, 16usize, 8usize);
+        let mut rng = XorShift64::new(0x111);
+        let x = Tensor::new(vec![rows, cols], rand_vec(&mut rng, rows * cols));
+        let mut packed = x.pack_blocked(b).unwrap().data;
+        // Blank row 3 entirely (a padding row of -inf logits).
+        let d = packed_desc(rows, cols, b);
+        for c in 0..cols {
+            packed[d.elem_index(3, c)] = f32::NEG_INFINITY;
+        }
+        let mut serial = packed.clone();
+        softmax(&mut serial, rows, cols, b).unwrap();
+        let mut parallel = packed.clone();
+        super::super::parallel::softmax(&mut parallel, rows, cols, b, 4).unwrap();
+        for c in 0..cols {
+            let i = d.elem_index(3, c);
+            assert_eq!(serial[i], 0.0, "blocked: masked row must be zero");
+            assert_eq!(parallel[i], 0.0, "parallel: masked row must be zero");
+        }
+        assert!(serial.iter().all(|v| v.is_finite()), "no NaN anywhere");
+        assert_eq!(serial, parallel, "parallel == serial on masked rows too");
+        // Reference kernel shares the convention.
+        let mut rm = x.data.clone();
+        for v in rm[3 * cols..4 * cols].iter_mut() {
+            *v = f32::NEG_INFINITY;
+        }
+        reference::softmax(&mut rm, rows, cols);
+        assert!(rm[3 * cols..4 * cols].iter().all(|&v| v == 0.0));
+        assert!(rm.iter().all(|v| v.is_finite()));
+    }
+
+    /// The zero-row convention must not swallow NaN: a row whose only
+    /// non-`-inf` logit is NaN (`f32::max` skips NaN, so the running
+    /// max still reads `-inf`) has to come out poisoned, not zeroed —
+    /// in the blocked and reference kernels alike.
+    #[test]
+    fn nan_logit_in_masked_row_still_propagates() {
+        let (rows, cols, b) = (8usize, 8usize, 8usize);
+        let mut packed = vec![f32::NEG_INFINITY; rows * cols];
+        let d = packed_desc(rows, cols, b);
+        packed[d.elem_index(2, 5)] = f32::NAN;
+        softmax(&mut packed, rows, cols, b).unwrap();
+        for c in 0..cols {
+            assert!(packed[d.elem_index(2, c)].is_nan(), "NaN row must stay NaN at col {c}");
+            assert_eq!(packed[d.elem_index(0, c)], 0.0, "clean -inf row still zeroes");
+        }
+        let mut rm = vec![f32::NEG_INFINITY; rows * cols];
+        rm[2 * cols + 5] = f32::NAN;
+        reference::softmax(&mut rm, rows, cols);
+        assert!(rm[2 * cols..3 * cols].iter().all(|v| v.is_nan()));
+        assert!(rm[..cols].iter().all(|&v| v == 0.0));
+    }
+
+    /// Regression (ISSUE 3): `cores = 0` must be rejected at the model
+    /// boundary with a clear error, not silently clamped into the pool.
+    #[test]
+    fn zero_cores_rejected_at_model_boundary() {
+        let model = NativeModel::new(16, 32, 32, 16, 7).unwrap();
+        let err = model.clone().with_cores(0).err().expect("cores=0 must be rejected");
+        assert!(format!("{err:#}").contains("cores"));
+        let x = Tensor::zeros(vec![16, 32]);
+        assert!(model.forward_with_cores(&x, 0).is_err());
+    }
+
+    #[test]
+    fn transpose_packed_matches_reference_and_inverts() {
+        let (rows, cols, b) = (24usize, 16usize, 8usize);
+        let mut rng = XorShift64::new(0x7A);
+        let x = Tensor::new(vec![rows, cols], rand_vec(&mut rng, rows * cols));
+        let packed = x.pack_blocked(b).unwrap().data;
+        let tp = transpose_packed(&packed, rows, cols, b).unwrap();
+        let got = Tensor::new(vec![cols / b, rows / b, b, b], tp.clone()).unpack_blocked().unwrap();
+        assert_eq!(got.data, reference::transpose(&x.data, rows, cols));
+        let back = transpose_packed(&tp, cols, rows, b).unwrap();
+        assert_eq!(back, packed, "transpose is an involution");
+    }
+
+    #[test]
+    fn gemm_into_view_writes_only_its_column_slice() {
+        // Two [m, n] products written side-by-side into an [m, 2n]
+        // backing buffer must equal the concatenation of the plain GEMMs.
+        let (m, k, n, b) = (16usize, 16usize, 16usize, 8usize);
+        let mut rng = XorShift64::new(0x51DE);
+        let a = Tensor::new(vec![m, k], rand_vec(&mut rng, m * k)).pack_blocked(b).unwrap().data;
+        let w0 = Tensor::new(vec![k, n], rand_vec(&mut rng, k * n)).pack_blocked(b).unwrap().data;
+        let w1 = Tensor::new(vec![k, n], rand_vec(&mut rng, k * n)).pack_blocked(b).unwrap().data;
+        let backing_desc = packed_desc(m, 2 * n, b);
+        let mut backing = vec![f32::NAN; m * 2 * n];
+        gemm_f32_into(&a, &w0, &mut backing, &backing_desc.col_view(0, n), m, k, n, b).unwrap();
+        gemm_f32_into(&a, &w1, &mut backing, &backing_desc.col_view(n, n), m, k, n, b).unwrap();
+        assert!(backing.iter().all(|v| v.is_finite()), "every tile written exactly once");
+        let got = Tensor::new(vec![m / b, 2 * n / b, b, b], backing).unpack_blocked().unwrap();
+        let c0 = Tensor::new(
+            vec![m / b, n / b, b, b],
+            gemm_f32(&a, &w0, m, k, n, b).unwrap(),
+        )
+        .unpack_blocked()
+        .unwrap();
+        let c1 = Tensor::new(
+            vec![m / b, n / b, b, b],
+            gemm_f32(&a, &w1, m, k, n, b).unwrap(),
+        )
+        .unpack_blocked()
+        .unwrap();
+        for r in 0..m {
+            assert_eq!(&got.data[r * 2 * n..r * 2 * n + n], &c0.data[r * n..(r + 1) * n]);
+            assert_eq!(&got.data[r * 2 * n + n..(r + 1) * 2 * n], &c1.data[r * n..(r + 1) * n]);
+        }
+    }
+
+    #[test]
+    fn encoder_forward_matches_reference() {
+        let model = NativeModel::new_encoder(32, 32, 2, 64, 2, 16, 0xBEE).unwrap();
+        let mut rng = XorShift64::new(0xBEF);
+        let x = Tensor::new(model.in_shape(), rand_vec(&mut rng, 32 * 32));
+        let got = model.forward(&x).unwrap();
+        let expect = model.forward_reference(&x).unwrap();
+        assert_eq!(got.shape, model.out_shape());
+        assert!(
+            got.allclose(&expect, 2e-3, 2e-3),
+            "max|Δ| = {:.3e}",
+            got.max_abs_diff(&expect)
+        );
+    }
+
+    #[test]
+    fn encoder_rejects_bad_shapes_and_masks() {
+        // heads must divide d_model…
+        assert!(NativeModel::new_encoder(32, 32, 3, 64, 1, 16, 1).is_err());
+        // …d_head must be divisible by block…
+        assert!(NativeModel::new_encoder(32, 64, 4, 64, 1, 32, 1).is_err());
+        // …and at least one layer.
+        assert!(NativeModel::new_encoder(32, 32, 2, 64, 0, 16, 1).is_err());
+        let model = NativeModel::new_encoder(32, 32, 2, 64, 1, 16, 1).unwrap();
+        assert!(model.clone().with_mask(vec![0.0; 16]).is_err(), "mask len != seq");
+        // FFN-only models have no attention to mask.
+        let ffn = NativeModel::new(32, 32, 64, 16, 1).unwrap();
+        assert!(ffn.with_mask(vec![0.0; 32]).is_err());
+    }
+
+    #[test]
+    fn forward_timed_reports_the_simulator_phase_names() {
+        let model = NativeModel::new_encoder(16, 16, 1, 32, 1, 16, 2).unwrap();
+        let x = Tensor::zeros(vec![16, 16]);
+        let (_, timings) = model.forward_timed(&x, 1).unwrap();
+        let names: Vec<&str> = timings.entries().iter().map(|(n, _)| *n).collect();
+        assert_eq!(
+            names,
+            [
+                "QKV GEMM",
+                "K Transpose",
+                "QK^T GEMM",
+                "Softmax",
+                "AV GEMM",
+                "Projection GEMM",
+                "Add/Norm 1",
+                "FF1 GEMM (+GELU)",
+                "FF2 GEMM",
+                "Add/Norm 2",
+            ]
+        );
+        // FFN-only models have no phase breakdown.
+        let ffn = NativeModel::new(16, 16, 32, 16, 2).unwrap();
+        assert!(ffn.forward_timed(&x, 1).is_err());
     }
 }

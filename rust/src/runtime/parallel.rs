@@ -13,10 +13,13 @@
 //! cut into `cores` contiguous chunks whose sizes differ by at most one.
 //! A worker therefore owns (nearly) whole block-columns, so under the
 //! weight-stationary TiC-SAT schedule each worker keeps its `B(p, j)`
-//! slice hot — the per-core arrangement the simulator assigns. Row-wise
-//! kernels ([`layernorm`]/[`softmax`]) split along *block-rows* instead,
-//! because under BWMA a block-row of tiles is one contiguous memory
-//! range: workers get disjoint `&mut` chunks with no copying at all.
+//! slice hot — the per-core arrangement the simulator assigns. The
+//! packed transpose ([`transpose_packed`]) partitions its *destination*
+//! grid the same way. Row-wise kernels
+//! ([`layernorm`]/[`softmax`]/[`masked_softmax`]/[`add_norm`]) split
+//! along *block-rows* instead, because under BWMA a block-row of tiles
+//! is one contiguous memory range: workers get disjoint `&mut` chunks
+//! with no copying at all.
 //!
 //! **Determinism.** Every output tile (and every logical row) is produced
 //! by exactly one worker, which reduces over `p` (or over the row) in
@@ -30,7 +33,7 @@ use std::ops::Range;
 
 use anyhow::Result;
 
-use crate::layout::TileRef;
+use crate::layout::{MatrixDesc, TileRef};
 
 use super::native;
 
@@ -118,13 +121,40 @@ pub fn gemm_f32(
     if cores <= 1 {
         return native::gemm_f32(a, b, m, k, n, block);
     }
+    // Validate before building the descriptor (`MatrixDesc` asserts).
     native::check_gemm_dims(m, k, n, block, a.len(), b.len())?;
+    let dc = native::packed_desc(m, n, block);
+    let mut c = vec![0.0f32; m * n];
+    gemm_f32_into(a, b, &mut c, &dc, m, k, n, block, cores)?;
+    Ok(c)
+}
+
+/// Tile-parallel [`native::gemm_f32_into`]: writes the output tiles
+/// through a destination descriptor (plain, or a column-slice view of a
+/// wider packed buffer — attention heads targeting their slice of the
+/// concatenated output). Bitwise identical to the serial kernel for any
+/// `cores`.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_f32_into(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    dc: &MatrixDesc,
+    m: usize,
+    k: usize,
+    n: usize,
+    block: usize,
+    cores: usize,
+) -> Result<()> {
+    if cores <= 1 {
+        return native::gemm_f32_into(a, b, c, dc, m, k, n, block);
+    }
+    native::check_gemm_dims(m, k, n, block, a.len(), b.len())?;
+    native::check_gemm_dst(c.len(), dc, m, n, block)?;
     let da = native::packed_desc(m, k, block);
     let db = native::packed_desc(k, n, block);
-    let dc = native::packed_desc(m, n, block);
     let part = GridPartition::new(dc.block_rows(), dc.block_cols(), cores);
     let kb = da.block_cols();
-    let mut c = vec![0.0f32; m * n];
     std::thread::scope(|s| {
         // Each worker accumulates its tiles into a local buffer (tiles in
         // its enumeration order); the scatter below writes each finished
@@ -152,11 +182,58 @@ pub fn gemm_f32(
         for (w, h) in handles {
             let local = h.join().expect("gemm_f32 worker panicked");
             for (t, tile) in part.tiles(w).zip(local.chunks_exact(block * block)) {
-                c[native::tile_range(&dc, t.block_row, t.block_col)].copy_from_slice(tile);
+                c[native::tile_range(dc, t.block_row, t.block_col)].copy_from_slice(tile);
             }
         }
     });
-    Ok(c)
+    Ok(())
+}
+
+/// Tile-parallel packed→packed transpose: destination tiles are
+/// partitioned exactly like a GEMM's output grid; each worker writes the
+/// transposed source tiles it owns. Pure data movement, so parallel and
+/// serial are trivially identical — the ownership discipline is kept
+/// anyway (every destination tile written by exactly one worker).
+pub fn transpose_packed(
+    src: &[f32],
+    rows: usize,
+    cols: usize,
+    block: usize,
+    cores: usize,
+) -> Result<Vec<f32>> {
+    if cores <= 1 {
+        return native::transpose_packed(src, rows, cols, block);
+    }
+    native::check_rowwise(src.len(), rows, cols, block)?;
+    let ds = native::packed_desc(rows, cols, block);
+    let dd = native::packed_desc(cols, rows, block);
+    let part = GridPartition::new(dd.block_rows(), dd.block_cols(), cores);
+    let mut dst = vec![0.0f32; rows * cols];
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..part.workers())
+            .filter(|&w| part.tile_count(w) > 0)
+            .map(|w| {
+                let part = &part;
+                let ds = &ds;
+                let handle = s.spawn(move || {
+                    let mut local = vec![0.0f32; part.tile_count(w) * block * block];
+                    for (t, dt) in part.tiles(w).zip(local.chunks_exact_mut(block * block)) {
+                        let st = &src[native::tile_range(ds, t.block_col, t.block_row)];
+                        native::transpose_tile(st, dt, block);
+                    }
+                    local
+                });
+                (w, handle)
+            })
+            .collect();
+        for (w, h) in handles {
+            let local = h.join().expect("transpose worker panicked");
+            for (t, tile) in part.tiles(w).zip(local.chunks_exact(block * block)) {
+                dst[native::tile_range(&dd, t.block_row, t.block_col)].copy_from_slice(tile);
+            }
+        }
+    });
+    Ok(dst)
 }
 
 /// Tile-parallel blocked int8 GEMM (int8 × int8 → exact i32): identical
@@ -221,20 +298,45 @@ fn rowwise_parallel<F>(x: &mut [f32], rows: usize, cols: usize, block: usize, co
 where
     F: Fn(&mut [f32], usize) -> Result<()> + Sync,
 {
+    rowwise_parallel_paired(x, None, rows, cols, block, cores, |chunk, _paired, nrows| {
+        f(chunk, nrows)
+    });
+}
+
+/// [`rowwise_parallel`] with an optional read-only buffer split along
+/// the same block-row boundaries: each worker's chunk of `x` arrives
+/// with the index-aligned chunk of `paired` ([`add_norm`]'s residual).
+#[allow(clippy::too_many_arguments)]
+fn rowwise_parallel_paired<F>(
+    x: &mut [f32],
+    paired: Option<&[f32]>,
+    rows: usize,
+    cols: usize,
+    block: usize,
+    cores: usize,
+    f: F,
+) where
+    F: Fn(&mut [f32], Option<&[f32]>, usize) -> Result<()> + Sync,
+{
     let chunk_elems = block * cols;
     let ranges = split_even(rows / block, cores);
     std::thread::scope(|s| {
         let f = &f;
         let mut chunks = x.chunks_mut(chunk_elems);
+        let mut paired_chunks = paired.map(|p| p.chunks(chunk_elems));
         let mut handles = Vec::with_capacity(ranges.len());
         for r in &ranges {
             let group: Vec<&mut [f32]> = chunks.by_ref().take(r.len()).collect();
+            let pgroup: Vec<&[f32]> = match paired_chunks.as_mut() {
+                Some(pc) => pc.by_ref().take(r.len()).collect(),
+                None => Vec::new(),
+            };
             if group.is_empty() {
                 continue;
             }
             handles.push(s.spawn(move || {
-                for chunk in group {
-                    f(chunk, block)?;
+                for (i, chunk) in group.into_iter().enumerate() {
+                    f(chunk, pgroup.get(i).copied(), block)?;
                 }
                 Ok::<(), anyhow::Error>(())
             }));
@@ -284,6 +386,65 @@ pub fn softmax(x: &mut [f32], rows: usize, cols: usize, block: usize, cores: usi
     native::check_rowwise(x.len(), rows, cols, block)?;
     rowwise_parallel(x, rows, cols, block, cores, |chunk, nrows| {
         native::softmax(chunk, nrows, cols, block)
+    });
+    Ok(())
+}
+
+/// Row-parallel masked/scaled softmax: bitwise identical to
+/// [`native::masked_softmax`] for any `cores`, including its
+/// fully-masked-row (all-`-inf` → all-zero) convention. The mask indexes
+/// key positions (columns), so every row-chunk shares it read-only.
+#[allow(clippy::too_many_arguments)]
+pub fn masked_softmax(
+    x: &mut [f32],
+    mask: Option<&[f32]>,
+    scale: f32,
+    rows: usize,
+    cols: usize,
+    block: usize,
+    cores: usize,
+) -> Result<()> {
+    if cores <= 1 {
+        return native::masked_softmax(x, mask, scale, rows, cols, block);
+    }
+    native::check_rowwise(x.len(), rows, cols, block)?;
+    if let Some(m) = mask {
+        anyhow::ensure!(m.len() == cols, "mask has {} entries, want {cols}", m.len());
+    }
+    rowwise_parallel(x, rows, cols, block, cores, |chunk, nrows| {
+        native::masked_softmax(chunk, mask, scale, nrows, cols, block)
+    });
+    Ok(())
+}
+
+/// Row-parallel fused residual add + LayerNorm: bitwise identical to
+/// [`native::add_norm`] for any `cores`. `x` and `res` are split along
+/// the same block-row boundaries, so each worker adds and normalizes
+/// whole rows with index-aligned residual chunks.
+#[allow(clippy::too_many_arguments)]
+pub fn add_norm(
+    x: &mut [f32],
+    res: &[f32],
+    gamma: &[f32],
+    beta: &[f32],
+    rows: usize,
+    cols: usize,
+    block: usize,
+    eps: f32,
+    cores: usize,
+) -> Result<()> {
+    if cores <= 1 {
+        return native::add_norm(x, res, gamma, beta, rows, cols, block, eps);
+    }
+    native::check_rowwise(x.len(), rows, cols, block)?;
+    anyhow::ensure!(res.len() == x.len(), "residual has {} elements, x has {}", res.len(), x.len());
+    anyhow::ensure!(
+        gamma.len() == cols && beta.len() == cols,
+        "affine params must have {cols} elements"
+    );
+    rowwise_parallel_paired(x, Some(res), rows, cols, block, cores, |chunk, res_chunk, nrows| {
+        let res_chunk = res_chunk.expect("paired residual chunk");
+        native::add_norm(chunk, res_chunk, gamma, beta, nrows, cols, block, eps)
     });
     Ok(())
 }

@@ -1,0 +1,240 @@
+//! Encoder-layer equivalence suite: the native multi-head encoder must
+//! (a) reproduce the row-major reference within tolerance — attention,
+//! Add/Norm, and FFN included — (b) stay **bitwise identical** between
+//! serial and parallel execution at several core counts for the full
+//! layer stack, and (c) keep the packed-transpose layout honest
+//! (round-trips, `transposed_at` on views).
+//!
+//! `BWMA_TEST_CORES` (CI matrix: 1 and 4) picks the pool width for the
+//! served-model tests, mirroring `parallel_equivalence.rs`.
+
+use std::collections::BTreeMap;
+
+use bwma::coordinator::server::BatchRunner;
+use bwma::coordinator::{Server, ServerConfig};
+use bwma::layout::{AddressMap, Layout, MatrixDesc};
+use bwma::runtime::{native, parallel, NativeModel, Tensor};
+use bwma::util::proptest::check;
+use bwma::util::XorShift64;
+
+/// Pool width for the served-model test (CI matrix runs 1 and 4).
+fn test_cores() -> usize {
+    std::env::var("BWMA_TEST_CORES").ok().and_then(|v| v.parse().ok()).unwrap_or(4)
+}
+
+fn rand_vec(rng: &mut XorShift64, n: usize) -> Vec<f32> {
+    let mut v = vec![0.0f32; n];
+    rng.fill_f32(&mut v);
+    v
+}
+
+fn assert_bits_eq(serial: &[f32], parallel: &[f32], what: &str) {
+    assert_eq!(serial.len(), parallel.len(), "{what}: length");
+    for (i, (s, p)) in serial.iter().zip(parallel).enumerate() {
+        assert_eq!(
+            s.to_bits(),
+            p.to_bits(),
+            "{what}: byte divergence at element {i} ({s:?} vs {p:?})"
+        );
+    }
+}
+
+/// A padding mask blanking the last `masked` key positions.
+fn padding_mask(seq: usize, masked: usize) -> Vec<f32> {
+    let mut m = vec![0.0f32; seq];
+    for v in m.iter_mut().skip(seq - masked) {
+        *v = f32::NEG_INFINITY;
+    }
+    m
+}
+
+#[test]
+fn prop_encoder_blocked_matches_reference() {
+    check("encoder-blocked-vs-reference", 8, |rng| {
+        let b = *rng.pick(&[8usize, 16]);
+        let heads = rng.range(1, 4) as usize;
+        let d_model = heads * b * rng.range(1, 3) as usize;
+        let seq = b * rng.range(2, 4) as usize;
+        let d_ff = b * rng.range(1, 5) as usize;
+        let layers = rng.range(1, 3) as usize;
+        let mut model =
+            NativeModel::new_encoder(seq, d_model, heads, d_ff, layers, b, rng.next_u64())
+                .unwrap();
+        if rng.below(2) == 0 {
+            model = model.with_mask(padding_mask(seq, b)).unwrap();
+        }
+        let x = Tensor::new(model.in_shape(), rand_vec(rng, seq * d_model));
+        let got = model.forward(&x).unwrap();
+        let expect = model.forward_reference(&x).unwrap();
+        assert!(
+            got.allclose(&expect, 2e-3, 2e-3),
+            "seq {seq} d {d_model} heads {heads} ff {d_ff} layers {layers} b{b}: max|Δ| = {:.3e}",
+            got.max_abs_diff(&expect)
+        );
+    });
+}
+
+#[test]
+fn prop_encoder_parallel_is_bitwise_serial() {
+    check("encoder-parallel-bitwise", 6, |rng| {
+        let b = *rng.pick(&[8usize, 16]);
+        let heads = rng.range(1, 3) as usize;
+        let d_model = heads * b;
+        let seq = b * rng.range(2, 4) as usize;
+        let model = NativeModel::new_encoder(seq, d_model, heads, 2 * d_model, 2, b, rng.next_u64())
+            .unwrap()
+            .with_mask(padding_mask(seq, b))
+            .unwrap();
+        let x = Tensor::new(model.in_shape(), rand_vec(rng, seq * d_model));
+        let serial = model.forward_with_cores(&x, 1).unwrap();
+        for cores in [2usize, 3, 8] {
+            let par = model.forward_with_cores(&x, cores).unwrap();
+            assert_eq!(serial.shape, par.shape);
+            assert_bits_eq(&serial.data, &par.data, &format!("encoder seq{seq} b{b} cores{cores}"));
+        }
+    });
+}
+
+#[test]
+fn prop_parallel_attention_kernels_are_bitwise_serial() {
+    check("attention-kernels-bitwise", 24, |rng| {
+        let b = *rng.pick(&[4usize, 8, 16]);
+        let rows = b * rng.range(1, 6) as usize;
+        let cols = b * rng.range(1, 6) as usize;
+        let x = rand_vec(rng, rows * cols);
+        let packed = bwma::layout::rwma_to_bwma(&x, rows, cols, b);
+
+        // transpose_packed
+        let t_serial = native::transpose_packed(&packed, rows, cols, b).unwrap();
+        // masked_softmax (mask over columns, a quarter of them blanked)
+        let mut mask = vec![0.0f32; cols];
+        for v in mask.iter_mut().take(cols / 4) {
+            *v = f32::NEG_INFINITY;
+        }
+        let mut sm_serial = packed.clone();
+        native::masked_softmax(&mut sm_serial, Some(&mask), 0.25, rows, cols, b).unwrap();
+        // add_norm
+        let res = bwma::layout::rwma_to_bwma(&rand_vec(rng, rows * cols), rows, cols, b);
+        let gamma = rand_vec(rng, cols);
+        let beta = rand_vec(rng, cols);
+        let mut an_serial = packed.clone();
+        native::add_norm(&mut an_serial, &res, &gamma, &beta, rows, cols, b, 1e-5).unwrap();
+
+        for cores in [2usize, 3, 8] {
+            let t = parallel::transpose_packed(&packed, rows, cols, b, cores).unwrap();
+            assert_bits_eq(&t_serial, &t, &format!("transpose {rows}x{cols} b{b} cores{cores}"));
+            let mut sm = packed.clone();
+            parallel::masked_softmax(&mut sm, Some(&mask), 0.25, rows, cols, b, cores).unwrap();
+            assert_bits_eq(&sm_serial, &sm, &format!("msoftmax {rows}x{cols} b{b} cores{cores}"));
+            let mut an = packed.clone();
+            parallel::add_norm(&mut an, &res, &gamma, &beta, rows, cols, b, 1e-5, cores).unwrap();
+            assert_bits_eq(&an_serial, &an, &format!("add_norm {rows}x{cols} b{b} cores{cores}"));
+        }
+    });
+}
+
+/// The packed-transpose layout contract: transposing the packed image
+/// equals pack(reference transpose), the descriptor `transposed_at`
+/// agrees — including on column-slice views — and the operation is an
+/// involution.
+#[test]
+fn prop_packed_transpose_layout_roundtrip() {
+    check("packed-transpose-roundtrip", 32, |rng| {
+        let b = *rng.pick(&[4usize, 8, 16]);
+        let rows = b * rng.range(1, 6) as usize;
+        let cols = b * rng.range(1, 6) as usize;
+        let x = rand_vec(rng, rows * cols);
+        let packed = bwma::layout::rwma_to_bwma(&x, rows, cols, b);
+        let tp = native::transpose_packed(&packed, rows, cols, b).unwrap();
+
+        // Element-level agreement with the descriptor pair.
+        let src = MatrixDesc::new(0, rows, cols, 1, b, Layout::Bwma);
+        let dst = src.transposed_at(0);
+        assert_eq!((dst.rows, dst.cols), (cols, rows));
+        for r in 0..rows {
+            for c in 0..cols {
+                assert_eq!(tp[dst.elem_index(c, r)], packed[src.elem_index(r, c)]);
+            }
+        }
+
+        // Involution.
+        let back = native::transpose_packed(&tp, cols, rows, b).unwrap();
+        assert_eq!(back, packed);
+
+        // transposed_at on a view describes the materialized transpose.
+        if cols >= 2 * b {
+            let view = src.col_view(b, cols - b);
+            let t = view.transposed_at(0);
+            assert_eq!((t.rows, t.cols), (cols - b, rows));
+            assert!(t.is_plain());
+        }
+    });
+}
+
+/// An encoder model served through the dynamic batcher: every response
+/// must match the reference forward of its own input, proving the
+/// attention pipeline survives batching/padding/splitting.
+#[test]
+fn encoder_serves_correct_numerics_through_the_batcher() {
+    let model = std::sync::Arc::new(
+        NativeModel::new_encoder(32, 32, 2, 64, 2, 16, 0x5E4E)
+            .unwrap()
+            .with_mask(padding_mask(32, 8))
+            .unwrap()
+            .with_cores(test_cores())
+            .unwrap(),
+    );
+    let in_shape = model.in_shape();
+    let out_shape = model.out_shape();
+    let model2 = model.clone();
+    let in_shape2 = in_shape.clone();
+    let server = Server::start(ServerConfig { max_batch: 4, ..Default::default() }, move || {
+        let mut variants: BTreeMap<usize, Box<dyn BatchRunner>> = BTreeMap::new();
+        for bsz in [1usize, 2, 4] {
+            variants.insert(bsz, Box::new(model2.clone()));
+        }
+        Ok((variants, in_shape2, out_shape))
+    })
+    .unwrap();
+
+    let mut rng = XorShift64::new(0x5E4F);
+    let inputs: Vec<Tensor> = (0..7)
+        .map(|_| Tensor::new(in_shape.clone(), rand_vec(&mut rng, 32 * 32)))
+        .collect();
+    let rxs: Vec<_> = inputs.iter().map(|x| server.submit(x.clone())).collect();
+    for (i, (rx, x)) in rxs.into_iter().zip(&inputs).enumerate() {
+        let resp = rx.recv().unwrap().unwrap();
+        let expect = model.forward_reference(x).unwrap();
+        assert!(
+            resp.output.allclose(&expect, 2e-3, 2e-3),
+            "request {i}: served encoder numerics diverge (max|Δ| = {:.3e})",
+            resp.output.max_abs_diff(&expect)
+        );
+        // And bitwise identical to the local blocked forward.
+        let blocked = model.forward_with_cores(x, 1).unwrap();
+        assert_bits_eq(&blocked.data, &resp.output.data, &format!("request {i} vs serial"));
+    }
+    let metrics = server.shutdown().unwrap();
+    assert_eq!(metrics.requests, 7);
+    assert_eq!(metrics.rejected, 0);
+}
+
+/// The encoder verify tags the acceptance criteria name: blocked vs
+/// reference within tolerance, and bitwise parallel == serial for the
+/// full layer at ≥ 2 core counts.
+#[test]
+fn encoder_verify_tags_are_green() {
+    for tag in [
+        "native_transpose_b16",
+        "native_masked_softmax_b16",
+        "native_add_norm_b16",
+        "native_encoder_equiv_b8",
+        "native_encoder_equiv_b16",
+        "native_encoder_parallel_equiv_b16",
+    ] {
+        let c = bwma::runtime::run_native_check_with_cores(tag, test_cores()).unwrap();
+        assert!(c.ok, "{tag}: max diff {}", c.max_diff);
+    }
+    let c = bwma::runtime::run_native_check("native_encoder_parallel_equiv_b16").unwrap();
+    assert_eq!(c.max_diff, 0.0, "encoder parallel equivalence must be exact");
+}

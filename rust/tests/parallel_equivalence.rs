@@ -150,8 +150,9 @@ fn start_model_server(model: Arc<NativeModel>, max_batch: usize) -> Server {
 /// input (no cross-contamination, no nondeterminism under load).
 #[test]
 fn stress_concurrent_clients_get_bitwise_serial_answers() {
-    let model =
-        Arc::new(NativeModel::new(32, 32, 64, 16, 0x57E5).unwrap().with_cores(test_cores()));
+    let model = Arc::new(
+        NativeModel::new(32, 32, 64, 16, 0x57E5).unwrap().with_cores(test_cores()).unwrap(),
+    );
     let server = start_model_server(model.clone(), 8);
     const CLIENTS: u64 = 8;
     const PER_CLIENT: usize = 50;
@@ -204,8 +205,9 @@ fn stress_concurrent_clients_get_bitwise_serial_answers() {
 fn shutdown_mid_flood_neither_deadlocks_nor_drops_responses() {
     // Big enough that one forward is ~a millisecond, so the flood is
     // still in flight when the plug is pulled at ~20 ms.
-    let model =
-        Arc::new(NativeModel::new(64, 64, 128, 16, 0x57E6).unwrap().with_cores(test_cores()));
+    let model = Arc::new(
+        NativeModel::new(64, 64, 128, 16, 0x57E6).unwrap().with_cores(test_cores()).unwrap(),
+    );
     let server = start_model_server(model.clone(), 4);
     const CLIENTS: u64 = 8;
     const PER_CLIENT: usize = 50;

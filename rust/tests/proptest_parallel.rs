@@ -6,7 +6,8 @@
 //! contract).
 
 use bwma::runtime::parallel::{split_even, GridPartition};
-use bwma::util::proptest::check_default;
+use bwma::runtime::NativeModel;
+use bwma::util::proptest::{check, check_default};
 
 #[test]
 fn prop_every_tile_assigned_exactly_once_and_balanced() {
@@ -90,4 +91,29 @@ fn more_cores_than_tiles_is_still_exactly_once() {
     let total: usize = (0..p.workers()).map(|w| p.tile_count(w)).sum();
     assert_eq!(total, 4);
     assert!((0..p.workers()).all(|w| p.tile_count(w) <= 1));
+}
+
+/// Regression (ISSUE 3): `cores = 0` must be rejected with a clear error
+/// at the model/CLI boundary — for any model shape — while the internal
+/// partitioner keeps its documented clamp-to-1 fallback (it is shared by
+/// code paths that have already validated).
+#[test]
+fn prop_cores_zero_rejected_at_the_boundary_for_any_model() {
+    check("cores-zero-rejected", 32, |rng| {
+        // The internal fallback: split_even(_, 0) behaves like 1 worker.
+        let n = rng.below(100) as usize;
+        assert_eq!(split_even(n, 0), split_even(n, 1));
+
+        // The boundary: with_cores(0) and forward_with_cores(_, 0) error.
+        let b = 8usize;
+        let dim = |r: &mut bwma::util::XorShift64| b * r.range(1, 4) as usize;
+        let (seq, d_model, d_ff) = (dim(rng), dim(rng), dim(rng));
+        let model = NativeModel::new(seq, d_model, d_ff, b, rng.next_u64()).unwrap();
+        let err = model.clone().with_cores(0).err().expect("cores=0 must be rejected");
+        assert!(format!("{err:#}").contains("cores"), "error must name the bad flag: {err:#}");
+        let x = bwma::runtime::Tensor::zeros(vec![seq, d_model]);
+        assert!(model.forward_with_cores(&x, 0).is_err());
+        // cores=1 stays valid.
+        assert!(model.with_cores(1).is_ok());
+    });
 }
