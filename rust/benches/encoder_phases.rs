@@ -6,15 +6,19 @@
 //! because `NativeModel::new_encoder` runs the same ten phases the
 //! simulator's `LayerPhases` models.
 //!
-//! Also asserts the determinism contract while it measures: every
-//! parallel forward is bitwise identical to the serial one.
+//! Each core count runs on a **persistent worker pool** (the serving
+//! configuration): phases wake long-lived workers — ten wake-ups per
+//! layer — instead of spawning one `thread::scope` per head-kernel as
+//! the pre-pool code did (ISSUE 4). The bench asserts the steady state
+//! spawns no threads, and the determinism contract while it measures:
+//! every parallel forward is bitwise identical to the serial one.
 //!
 //! Run: `cargo bench --bench encoder_phases`
 //! Greppable summary: lines starting `encoder-phase` / `encoder-speedup`.
 
 use bwma::accel::AccelKind;
 use bwma::layout::Layout;
-use bwma::runtime::{available_cores, NativeModel, Tensor};
+use bwma::runtime::{available_cores, NativeModel, Tensor, WorkerPool};
 use bwma::sim::{simulate, SimConfig};
 use bwma::util::XorShift64;
 use bwma::workload::BertConfig;
@@ -52,12 +56,15 @@ fn main() {
     let (expect, _) = model.forward_timed(&x, 1).unwrap();
     let mut baseline = f64::NAN;
     for cores in [1usize, 2, 4, 8] {
-        // Warm-up + accumulate phase times over a few runs.
-        let _ = model.forward_timed(&x, cores).unwrap();
+        // A persistent pool per core count (the serving configuration);
+        // after warm-up, the measured runs must spawn zero threads.
+        let m = model.clone().with_cores(cores).unwrap();
+        let _ = m.forward_timed(&x, cores).unwrap();
+        let spawned_before = WorkerPool::threads_spawned_total();
         const RUNS: usize = 5;
         let mut acc: Option<bwma::runtime::PhaseTimings> = None;
         for _ in 0..RUNS {
-            let (out, timings) = model.forward_timed(&x, cores).unwrap();
+            let (out, timings) = m.forward_timed(&x, cores).unwrap();
             let bitwise =
                 expect.data.iter().zip(&out.data).all(|(a, b)| a.to_bits() == b.to_bits());
             assert!(bitwise, "parallel encoder at {cores} cores diverged from serial");
@@ -74,13 +81,15 @@ fn main() {
                 }
             });
         }
+        let spawned = WorkerPool::threads_spawned_total() - spawned_before;
+        assert_eq!(spawned, 0, "steady-state pooled forwards must not spawn threads");
         let timings = acc.unwrap();
         let total = timings.total();
         if cores == 1 {
             baseline = total.as_secs_f64();
         }
         println!(
-            "encoder-speedup cores={cores} total={total:?} speedup={:.2}",
+            "encoder-speedup cores={cores} total={total:?} speedup={:.2} steady_spawns={spawned}",
             baseline / total.as_secs_f64()
         );
         for (name, dt) in timings.entries() {

@@ -4,8 +4,11 @@
 //! counterpart of the simulator's Fig. 7 multi-core scaling: future PRs
 //! track the measured curve against the paper's.
 //!
-//! Also asserts the determinism contract while it measures: every
-//! parallel forward is bitwise identical to the serial one.
+//! Each core count runs on a **persistent worker pool** (built once via
+//! `with_cores`, reused across every sample — the serving
+//! configuration). Also asserts the determinism contract while it
+//! measures: every parallel forward is bitwise identical to the serial
+//! one.
 //!
 //! Run: `cargo bench --bench multicore [-- --cores N]`
 //! (`--cores N` measures just N workers against the serial baseline;
@@ -57,7 +60,10 @@ fn main() {
 
     println!("multicore-speedup cores=1 median={baseline:?} speedup=1.00");
     for cores in core_counts() {
-        let got = model.forward_with_cores(&x, cores).unwrap();
+        // Persistent pool for this width — built once, reused by every
+        // sample below.
+        let m = model.clone().with_cores(cores).unwrap();
+        let got = m.forward(&x).unwrap();
         let bitwise = expect
             .data
             .iter()
@@ -65,7 +71,7 @@ fn main() {
             .all(|(a, b)| a.to_bits() == b.to_bits());
         assert!(bitwise, "parallel forward at {cores} cores diverged from serial");
         let s = bench::bench(&format!("multicore/ffn-forward-{cores}core"), 2, 7, || {
-            model.forward_with_cores(&x, cores).unwrap()
+            m.forward(&x).unwrap()
         });
         let speedup = baseline.as_secs_f64() / s.median().as_secs_f64();
         println!(

@@ -8,47 +8,53 @@
 //! alone), stacks the well-formed activations along a new leading axis,
 //! picks the largest compiled batch variant that fits, and splits the
 //! outputs back per request. The native executor dispatches the batch's
-//! sequences across the model's multi-core worker pool
-//! ([`crate::runtime::parallel`]) with bitwise-deterministic results.
+//! sequences across the model's **persistent** multi-core worker pool
+//! ([`crate::runtime::parallel::WorkerPool`]) with bitwise-deterministic
+//! results — serving in steady state spawns no threads at all.
 //!
 //! Executor handles may not be `Send` (PJRT's aren't), so the executor
 //! thread *owns* them: the caller passes a factory that loads/builds the
 //! model inside the thread. Everything crossing threads is plain data.
 
 use std::collections::BTreeMap;
-use std::sync::mpsc;
+use std::sync::{mpsc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context, Result};
 
 #[cfg(feature = "pjrt")]
 use crate::runtime::Executable;
-use crate::runtime::{NativeModel, Tensor};
+use crate::runtime::{parallel, NativeModel, Tensor};
 
 use super::metrics::ServerMetrics;
 
 /// One model variant the batcher can dispatch a stacked batch to. The
 /// native backend's [`NativeModel`] implements it out of the box; with
-/// the `pjrt` feature, compiled artifacts ([`Executable`]/[`WithParams`])
+/// the `pjrt` feature, compiled artifacts (`Executable`/`WithParams`)
 /// do too.
 pub trait BatchRunner {
     fn run(&self, stacked: Tensor, out_shape: Vec<usize>) -> Result<Tensor>;
 }
 
 /// The default executor: run the sequences of the stacked batch through
-/// the blocked-kernel forward pass — dispatched across the model's
-/// scoped worker pool when it has more than one core. Shape errors are
-/// returned as `Err` (never panicked): a malformed request must fail
-/// itself, not kill the executor thread for everyone else.
+/// the blocked-kernel forward pass on the model's **persistent worker
+/// pool** ([`NativeModel::pool`]) — the executor never spawns threads of
+/// its own (`tests/pool_lifecycle.rs` pins the spawn count under a
+/// serve-loop). Shape errors are returned as `Err` (never panicked): a
+/// malformed request must fail itself, not kill the executor thread for
+/// everyone else.
 ///
-/// Parallel policy: a single sequence fans its *kernels* out over all
-/// cores ([`NativeModel::forward`]); a multi-sequence batch is split
-/// into contiguous per-worker chunks of sequences, and each worker fans
-/// its own kernels over the pool's leftover share (`cores / workers`),
-/// so the full core count stays busy even when the batch is small.
-/// Either way the output is bitwise identical to the serial walk —
-/// sequences are independent, each is computed by exactly one worker,
-/// and the kernels' accumulation order is core-count-invariant.
+/// Parallel policy: a batch *smaller than the pool* (including the
+/// single-sequence case) runs its sequences one after another, each
+/// fanning its phase grids across the full pool
+/// ([`NativeModel::forward`]) — so a 2-sequence batch on an 8-worker
+/// pool still keeps all 8 workers busy. A batch at least as wide as the
+/// pool makes the sequences themselves the work items of ONE pool
+/// region — each worker forwards a contiguous chunk of sequences with
+/// the serial kernels (no nested parallel regions, no threads beyond
+/// the pool). Either way the output is bitwise identical to the serial
+/// walk — sequences are independent, each is computed by exactly one
+/// worker, and the kernels' accumulation order is core-count-invariant.
 impl BatchRunner for NativeModel {
     fn run(&self, stacked: Tensor, out_shape: Vec<usize>) -> Result<Tensor> {
         anyhow::ensure!(stacked.shape.len() == 3, "stacked batch must be [batch, seq, d]");
@@ -60,8 +66,8 @@ impl BatchRunner for NativeModel {
             &stacked.shape[1..],
             self.in_shape()
         );
-        let workers = self.cores().min(bsz);
-        let out = if workers <= 1 {
+        let pool = self.pool();
+        let out = if pool.workers() <= 1 || bsz < pool.workers() {
             let mut out = Vec::with_capacity(bsz * per_seq);
             for s in 0..bsz {
                 let x = Tensor::new(
@@ -72,35 +78,32 @@ impl BatchRunner for NativeModel {
             }
             out
         } else {
-            let inner_cores = (self.cores() / workers).max(1);
-            let ranges = crate::runtime::parallel::split_even(bsz, workers);
-            std::thread::scope(|sc| -> Result<Vec<f32>> {
-                let stacked = &stacked;
-                let handles: Vec<_> = ranges
-                    .iter()
-                    .filter(|r| !r.is_empty())
-                    .map(|r| {
-                        sc.spawn(move || -> Result<Vec<f32>> {
-                            let mut local = Vec::with_capacity(r.len() * per_seq);
-                            for s in r.clone() {
-                                let x = Tensor::new(
-                                    self.in_shape(),
-                                    stacked.data[s * per_seq..(s + 1) * per_seq].to_vec(),
-                                );
-                                local.extend_from_slice(
-                                    &self.forward_with_cores(&x, inner_cores)?.data,
-                                );
-                            }
-                            Ok(local)
-                        })
-                    })
-                    .collect();
-                let mut out = Vec::with_capacity(bsz * per_seq);
-                for h in handles {
-                    out.extend_from_slice(&h.join().expect("batch worker panicked")?);
+            let ranges = parallel::split_even(bsz, pool.workers());
+            let slots: Vec<Mutex<Result<Vec<f32>>>> =
+                ranges.iter().map(|_| Mutex::new(Ok(Vec::new()))).collect();
+            pool.run(&|w| {
+                let mut local = Vec::with_capacity(ranges[w].len() * per_seq);
+                let mut result = Ok(());
+                for s in ranges[w].clone() {
+                    let x = Tensor::new(
+                        self.in_shape(),
+                        stacked.data[s * per_seq..(s + 1) * per_seq].to_vec(),
+                    );
+                    match self.forward_with_cores(&x, 1) {
+                        Ok(y) => local.extend_from_slice(&y.data),
+                        Err(e) => {
+                            result = Err(e);
+                            break;
+                        }
+                    }
                 }
-                Ok(out)
-            })?
+                *slots[w].lock().unwrap() = result.map(|()| local);
+            })?;
+            let mut out = Vec::with_capacity(bsz * per_seq);
+            for slot in slots {
+                out.extend_from_slice(&slot.into_inner().unwrap()?);
+            }
+            out
         };
         anyhow::ensure!(
             out.len() == out_shape.iter().product::<usize>(),

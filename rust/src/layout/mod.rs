@@ -15,6 +15,35 @@
 //!
 //! Everything downstream (trace generation, the cache simulator, the Pallas
 //! kernels, the PJRT host marshalling) is parameterized over [`Layout`].
+//!
+//! ## Packed-buffer invariants
+//!
+//! The native kernels (`runtime::native`, `runtime::parallel`) lean on
+//! three properties of a BWMA-packed buffer, all consequences of the
+//! linearization above:
+//!
+//! 1. **A tile is one burst** — tile `(i, j)` of an `R×C` matrix is the
+//!    contiguous element range `((i·C/b + j)·b²) .. +b²`, row-major
+//!    within the tile ([`tile_spans`] returns exactly one span under
+//!    BWMA; the kernels slice it directly).
+//! 2. **A block-row is contiguous** — tiles `(i, 0..C/b)` occupy one
+//!    range of `b·C` elements, so row-wise kernels (layernorm, softmax,
+//!    add+norm) can hand disjoint `&mut` block-row chunks to parallel
+//!    workers with no copying.
+//! 3. **Packing is a permutation** — `rwma_to_bwma` reorders, never
+//!    pads; `bwma_to_rwma` is its exact inverse, so the pack/unpack
+//!    boundary conversion of §3.2 is lossless:
+//!
+//! ```
+//! use bwma::layout::{bwma_to_rwma, rwma_to_bwma};
+//!
+//! let x: Vec<f32> = (0..24).map(|i| i as f32).collect(); // 4×6, row-major
+//! let packed = rwma_to_bwma(&x, 4, 6, 2);
+//! // Tile (0, 0) is one contiguous burst: rows 0–1 of columns 0–1.
+//! assert_eq!(&packed[..4], &[0.0, 1.0, 6.0, 7.0]);
+//! // ...and the round-trip is the identity.
+//! assert_eq!(bwma_to_rwma(&packed, 4, 6, 2), x);
+//! ```
 
 mod address;
 mod convert;

@@ -20,10 +20,14 @@
 //!    end-to-end in the packed domain
 //!    ([`runtime::NativeModel::new_encoder`]), phase-for-phase the same
 //!    pipeline the simulator times. A multi-core execution layer
-//!    ([`runtime::parallel`]) fans the same kernels over a scoped worker
-//!    pool with bitwise-identical results for any core count. The masked
-//!    softmax defines fully-masked rows (all `-inf`) as all-zero — the
-//!    convention shared by blocked, parallel, and reference kernels.
+//!    ([`runtime::parallel`]) fans the same kernels over a **persistent
+//!    worker pool** ([`runtime::WorkerPool`] — built once per model, one
+//!    wake-up per phase, every attention head of a phase in one parallel
+//!    region) with bitwise-identical results for any core count. The
+//!    masked softmax defines fully-masked rows (all `-inf`) as all-zero
+//!    — the convention shared by blocked, parallel, and reference
+//!    kernels. The execution architecture (packing → kernel grid → pool
+//!    ownership → phase DAG) is documented in `rust/DESIGN.md`.
 //!    With `--features pjrt`, AOT-compiled JAX/Pallas artifacts (built
 //!    by `python/compile/`) execute through PJRT instead;
 //! 3. **Serving** — a request router + dynamic batcher ([`coordinator`])

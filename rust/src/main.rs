@@ -77,9 +77,10 @@ USAGE:
 
 The default backend is `native`: blocked CPU kernels executing directly on
 BWMA-packed buffers, no artifacts or Python required. `--cores N` (N >= 1)
-fans the native kernels over a scoped worker pool (default: the host's
-available parallelism; results are bitwise identical for any value — the
-same `cores` knob the simulator configs use). `serve --model encoder`
+builds a persistent N-worker pool once per model and fans every phase of
+the native kernels over it (default: the host's available parallelism;
+results are bitwise identical for any value — the same `cores` knob the
+simulator configs use). `serve --model encoder`
 serves a full multi-head BERT encoder stack (`--layers` deep) instead of
 the FFN-only block — the same ten phases per layer as `simulate`. The
 `pjrt` backend needs a build with `--features pjrt` (and real xla
@@ -240,8 +241,9 @@ fn drive_server(
 /// Serve on the native blocked-execution backend: a packed-weights model
 /// (`--model ffn` — the default FFN block — or `--model encoder`, a full
 /// multi-head BERT encoder stack `--layers` deep), batch variants
-/// 1/2/4/8, nothing loaded from disk, kernels fanned over `cores`
-/// workers.
+/// 1/2/4/8, nothing loaded from disk. `--cores` builds the model's
+/// persistent worker pool (`with_cores`); the batcher dispatches every
+/// request over that pool and spawns no threads of its own.
 fn serve_native(args: &[String], n_requests: usize, max_batch: usize, cores: usize) -> Result<()> {
     let (seq, d_model, d_ff, block) = (64usize, 96usize, 192usize, 16usize);
     let (model, label) = match opt(args, "--model").unwrap_or("ffn") {

@@ -8,8 +8,9 @@
 //!   BERT encoder stack ([`NativeModel::new_encoder`]) end-to-end in the
 //!   packed domain. `bwma serve` and `bwma verify` run on this backend
 //!   out of the box, no Python, no artifacts, no external dependencies.
-//!   [`parallel`] fans the same kernels over a scoped multi-core worker
-//!   pool with bitwise-identical results (`--cores`).
+//!   [`parallel`] fans the same kernels over a **persistent** multi-core
+//!   worker pool ([`WorkerPool`], built once per model, one wake-up per
+//!   phase) with bitwise-identical results (`--cores`).
 //! * **PJRT** (`--features pjrt`) — load AOT-compiled HLO-text artifacts
 //!   (built by `python/compile/aot.py`) and execute them through the
 //!   `xla` crate's PJRT client: `PjRtClient::cpu()` →
@@ -36,6 +37,6 @@ pub use native::{
     native_tags, run_native_check, run_native_check_with_cores, NativeCheck, NativeModel,
     PhaseTimings,
 };
-pub use parallel::available_cores;
+pub use parallel::{available_cores, WorkerPool};
 pub use quant::{qgemm, QTensor};
 pub use tensor::Tensor;

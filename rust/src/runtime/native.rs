@@ -35,9 +35,22 @@
 //! * [`native_tags`] / [`run_native_check`] — the `bwma verify` suite:
 //!   pack → blocked kernel → unpack, compared against [`reference`].
 //!
+//! **Determinism contract.** The serial kernels here fix the
+//! floating-point op order per output element (the weight-stationary
+//! `p`-reduction for GEMM tiles, the 2+1-pass walk for row ops); the
+//! multi-core layer ([`super::parallel`]) re-runs exactly those loops,
+//! one worker per output tile/row, over a **persistent**
+//! [`super::parallel::WorkerPool`] owned by the [`NativeModel`] — so a
+//! parallel forward is **bitwise identical** to the serial one for any
+//! core count. Buffers obey the packed invariants documented in
+//! [`crate::layout`] (a tile is one burst, a block-row is one
+//! contiguous range, packing is a permutation); see `rust/DESIGN.md`
+//! for the full architecture.
+//!
 //! [`layout::tile_spans`]: crate::layout::tile_spans
 //! [`layout::AddressMap`]: crate::layout::AddressMap
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, ensure, Result};
@@ -45,6 +58,7 @@ use anyhow::{bail, ensure, Result};
 use crate::layout::{tile_spans, AddressMap, Layout, MatrixDesc, TileRef};
 use crate::util::XorShift64;
 
+use super::parallel::{self, Epilogue, GemmTask, WorkerPool};
 use super::quant::{qgemm, rel_error, QTensor};
 use super::tensor::Tensor;
 
@@ -824,10 +838,12 @@ pub struct NativeModel {
     pub d_model: usize,
     pub d_ff: usize,
     pub block: usize,
-    /// Worker threads the blocked kernels fan out over (1 = serial; the
-    /// results are bitwise identical either way — see
-    /// [`super::parallel`]).
-    cores: usize,
+    /// The persistent worker pool every forward on this model fans its
+    /// phases over (created once — [`Self::with_cores`] — and shared by
+    /// clones and by the server's batch dispatch; 1 worker = serial).
+    /// Results are bitwise identical for any pool width — see
+    /// [`super::parallel`].
+    pool: Arc<WorkerPool>,
     /// Additive attention mask over key positions (`len == seq`),
     /// encoder models only.
     mask: Option<Vec<f32>>,
@@ -846,12 +862,27 @@ impl NativeModel {
         );
         let mut rng = XorShift64::new(seed);
         let ffn = FfnParams::init(&mut rng, d_model, d_ff, block);
-        Ok(Self { seq, d_model, d_ff, block, cores: 1, mask: None, kind: ModelKind::Ffn(ffn) })
+        let pool = Arc::new(WorkerPool::new(1)?);
+        Ok(Self { seq, d_model, d_ff, block, pool, mask: None, kind: ModelKind::Ffn(ffn) })
     }
 
     /// Deterministically-initialized stack of `layers` full BERT encoder
     /// layers (`heads` attention heads of `d_model / heads` dimensions
     /// each, FFN width `d_ff`), with independent weights per layer.
+    ///
+    /// The forward pass is bitwise identical for every core count — the
+    /// round-trip below runs the same input serially and on a 3-worker
+    /// pool and compares exact bits:
+    ///
+    /// ```
+    /// use bwma::runtime::{NativeModel, Tensor};
+    ///
+    /// let model = NativeModel::new_encoder(16, 16, 2, 32, 1, 8, 42).unwrap();
+    /// let x = Tensor::zeros(vec![16, 16]);
+    /// let serial = model.forward_with_cores(&x, 1).unwrap();
+    /// let pooled = model.forward_with_cores(&x, 3).unwrap();
+    /// assert_eq!(serial, pooled);
+    /// ```
     pub fn new_encoder(
         seq: usize,
         d_model: usize,
@@ -879,17 +910,19 @@ impl NativeModel {
                 ffn: FfnParams::init(&mut rng, d_model, d_ff, block),
             })
             .collect();
-        Ok(Self { seq, d_model, d_ff, block, cores: 1, mask: None, kind: ModelKind::Encoder(stack) })
+        let pool = Arc::new(WorkerPool::new(1)?);
+        Ok(Self { seq, d_model, d_ff, block, pool, mask: None, kind: ModelKind::Encoder(stack) })
     }
 
-    /// Set the worker count the model's kernels (and the batcher's
-    /// per-sequence dispatch) fan out over. `cores` must be ≥ 1 — zero
-    /// workers is a configuration error, rejected here (and at the CLI)
-    /// before it can reach the pool. Numerics are bitwise independent of
-    /// the choice.
+    /// Build the model's **persistent** worker pool: `cores` long-lived
+    /// workers shared by every subsequent [`Self::forward`] (and by the
+    /// batch server's dispatch — clones share the same pool). `cores`
+    /// must be ≥ 1 — zero workers is a configuration error, rejected
+    /// here (and at the CLI) before it can reach the pool. Numerics are
+    /// bitwise independent of the choice.
     pub fn with_cores(mut self, cores: usize) -> Result<Self> {
         ensure!(cores >= 1, "cores must be >= 1 (got {cores})");
-        self.cores = cores;
+        self.pool = Arc::new(WorkerPool::new(cores)?);
         Ok(self)
     }
 
@@ -905,9 +938,34 @@ impl NativeModel {
         Ok(self)
     }
 
-    /// Worker threads this model executes with.
+    /// Worker threads this model executes with (the width of its
+    /// persistent pool).
     pub fn cores(&self) -> usize {
-        self.cores
+        self.pool.workers()
+    }
+
+    /// The model's persistent worker pool — shared by clones; the batch
+    /// server dispatches sequence chunks over it so serving never spawns
+    /// threads beyond the pool.
+    pub fn pool(&self) -> &Arc<WorkerPool> {
+        &self.pool
+    }
+
+    /// The pool to run one forward on: the persistent pool when the
+    /// requested width matches it, otherwise a transient pool for just
+    /// this call (one pool per *forward*, never per kernel).
+    fn pool_for(&self, cores: usize) -> Result<Arc<WorkerPool>> {
+        ensure!(cores >= 1, "cores must be >= 1 (got {cores})");
+        if cores == self.pool.workers() {
+            Ok(Arc::clone(&self.pool))
+        } else if cores == 1 {
+            // The width-1 pool is thread-free and process-shared: the
+            // batch dispatcher's per-sequence serial forwards allocate
+            // nothing.
+            Ok(Arc::clone(parallel::serial_pool()))
+        } else {
+            Ok(Arc::new(WorkerPool::new(cores)?))
+        }
     }
 
     /// Whether this model runs the full encoder stack (vs the legacy
@@ -935,34 +993,45 @@ impl NativeModel {
     }
 
     /// Forward one `[seq, d_model]` sequence through the blocked kernels
-    /// on the model's configured core count ([`Self::with_cores`]).
+    /// on the model's **persistent** worker pool ([`Self::with_cores`]):
+    /// the hot serving path — no threads are created, the pool is woken
+    /// once per phase.
     pub fn forward(&self, x: &Tensor) -> Result<Tensor> {
-        self.forward_with_cores(x, self.cores)
+        let mut timings = PhaseTimings::default();
+        self.forward_packed(x, &self.pool, &mut timings)
     }
 
-    /// Forward on an explicit core count: `cores == 1` runs the serial
-    /// kernels; more fans each GEMM's output tile-grid and the row-wise
-    /// ops over a scoped worker pool ([`super::parallel`]). The result
-    /// is bitwise identical for every `cores` value.
+    /// Forward on an explicit core count: reuses the persistent pool
+    /// when `cores` matches its width, otherwise builds a transient pool
+    /// for this one call (one pool per *forward*, never per kernel).
+    /// `cores == 1` runs the serial kernels; the result is bitwise
+    /// identical for every `cores` value.
     pub fn forward_with_cores(&self, x: &Tensor, cores: usize) -> Result<Tensor> {
         let mut timings = PhaseTimings::default();
-        self.forward_packed(x, cores, &mut timings)
+        let pool = self.pool_for(cores)?;
+        self.forward_packed(x, &pool, &mut timings)
     }
 
     /// Instrumented forward (encoder models only): the output plus
     /// per-phase wall time, phase names matching the simulator's
-    /// `LayerPhases` (accumulated across heads and layers).
+    /// `LayerPhases` (accumulated across heads and layers). Pool choice
+    /// as in [`Self::forward_with_cores`].
     pub fn forward_timed(&self, x: &Tensor, cores: usize) -> Result<(Tensor, PhaseTimings)> {
         ensure!(self.is_encoder(), "forward_timed requires an encoder model (new_encoder)");
         let mut timings = PhaseTimings::default();
-        let out = self.forward_packed(x, cores, &mut timings)?;
+        let pool = self.pool_for(cores)?;
+        let out = self.forward_packed(x, &pool, &mut timings)?;
         Ok((out, timings))
     }
 
     /// Shared forward body: pack at the door, run the blocked pipeline,
     /// unpack at the exit.
-    fn forward_packed(&self, x: &Tensor, cores: usize, timings: &mut PhaseTimings) -> Result<Tensor> {
-        ensure!(cores >= 1, "cores must be >= 1 (got {cores})");
+    fn forward_packed(
+        &self,
+        x: &Tensor,
+        pool: &WorkerPool,
+        timings: &mut PhaseTimings,
+    ) -> Result<Tensor> {
         ensure!(
             x.shape == self.in_shape(),
             "input shape {:?}, model wants {:?}",
@@ -973,11 +1042,11 @@ impl NativeModel {
         let mut xp = x.pack_blocked(b)?.data;
         match &self.kind {
             ModelKind::Ffn(ffn) => {
-                xp = self.ffn_forward(&xp, ffn, cores)?;
+                xp = self.ffn_forward(&xp, ffn, pool)?;
             }
             ModelKind::Encoder(stack) => {
                 for layer in stack {
-                    xp = self.encoder_layer_forward(&xp, layer, cores, timings)?;
+                    xp = self.encoder_layer_forward(&xp, layer, pool, timings)?;
                 }
             }
         }
@@ -985,24 +1054,30 @@ impl NativeModel {
     }
 
     /// Legacy FFN block on packed buffers (no residual — PR-1 contract).
-    fn ffn_forward(&self, xp: &[f32], ffn: &FfnParams, cores: usize) -> Result<Vec<f32>> {
+    fn ffn_forward(&self, xp: &[f32], ffn: &FfnParams, pool: &WorkerPool) -> Result<Vec<f32>> {
         let (s, d, f, b) = (self.seq, self.d_model, self.d_ff, self.block);
-        let mut h = super::parallel::gemm_f32(xp, &ffn.w1, s, d, f, b, cores)?;
+        let mut h = parallel::gemm_f32_pooled(xp, &ffn.w1, s, d, f, b, pool)?;
         bias_gelu(&mut h, &ffn.b1, s, f, b)?;
-        let mut y = super::parallel::gemm_f32(&h, &ffn.w2, s, f, d, b, cores)?;
+        let mut y = parallel::gemm_f32_pooled(&h, &ffn.w2, s, f, d, b, pool)?;
         bias_add(&mut y, &ffn.b2, s, d, b)?;
-        super::parallel::layernorm(&mut y, &ffn.gamma, &ffn.beta, s, d, b, Self::EPS, cores)?;
+        parallel::layernorm_pooled(&mut y, &ffn.gamma, &ffn.beta, s, d, b, Self::EPS, pool)?;
         Ok(y)
     }
 
     /// One encoder layer on packed buffers — ten phases, named and
     /// ordered exactly as the simulator's `LayerPhases::build`, so
     /// `simulate` and `serve` describe the same computation.
+    ///
+    /// Every phase fans **all** independent heads into a single parallel
+    /// region: the work-item grid is heads × output tiles (or heads ×
+    /// block-rows for the softmax), so the pool is woken ten times per
+    /// layer instead of once per head-kernel — the ISSUE-4 fix for the
+    /// spawn/join overhead that dominated small-head GEMMs.
     fn encoder_layer_forward(
         &self,
         xp: &[f32],
         layer: &EncoderLayerParams,
-        cores: usize,
+        pool: &WorkerPool,
         timings: &mut PhaseTimings,
     ) -> Result<Vec<f32>> {
         let (s, d, b) = (self.seq, self.d_model, self.block);
@@ -1011,88 +1086,131 @@ impl NativeModel {
         let scale = 1.0 / (dh as f32).sqrt();
         let mask = self.mask.as_deref();
 
-        // Heads run sequentially, each kernel fanning its tiles over the
-        // pool — one thread scope per kernel call. For small d_head the
-        // spawn/join cost is measurable (see ROADMAP: fan the heads of a
-        // phase across a single parallel region instead).
-        // 1. Q/K/V projections, per head (bias fused on the store path).
+        // 1. Q/K/V projections: all 3·heads GEMMs (bias fused on the
+        // store path — same per-element op sequence as the serial
+        // GEMM-then-bias pass) form ONE parallel region.
         let t0 = Instant::now();
+        let mut qkv_tasks = Vec::with_capacity(3 * heads);
+        for i in 0..heads {
+            for (w, bias) in [
+                (&attn.wq[i], &attn.bq[i]),
+                (&attn.wk[i], &attn.bk[i]),
+                (&attn.wv[i], &attn.bv[i]),
+            ] {
+                qkv_tasks.push(GemmTask {
+                    a: xp,
+                    b: w,
+                    m: s,
+                    k: d,
+                    n: dh,
+                    epilogue: Epilogue::Bias(bias),
+                });
+            }
+        }
+        let qkv = parallel::gemm_f32_batch(&qkv_tasks, b, pool)?;
         let mut q = Vec::with_capacity(heads);
         let mut k = Vec::with_capacity(heads);
         let mut v = Vec::with_capacity(heads);
-        for i in 0..heads {
-            for (w, bias, out) in [
-                (&attn.wq[i], &attn.bq[i], &mut q),
-                (&attn.wk[i], &attn.bk[i], &mut k),
-                (&attn.wv[i], &attn.bv[i], &mut v),
-            ] {
-                let mut proj = super::parallel::gemm_f32(xp, w, s, d, dh, b, cores)?;
-                bias_add(&mut proj, bias, s, dh, b)?;
-                out.push(proj);
+        for (i, proj) in qkv.into_iter().enumerate() {
+            match i % 3 {
+                0 => q.push(proj),
+                1 => k.push(proj),
+                _ => v.push(proj),
             }
         }
         timings.add("QKV GEMM", t0.elapsed());
 
-        // 2. Kᵀ, packed→packed.
+        // 2. Kᵀ, packed→packed: all heads' destination tiles in one
+        // region.
         let t0 = Instant::now();
-        let kt = k
-            .iter()
-            .map(|ki| super::parallel::transpose_packed(ki, s, dh, b, cores))
-            .collect::<Result<Vec<_>>>()?;
+        let kt = parallel::transpose_packed_batch(&k, s, dh, b, pool)?;
         timings.add("K Transpose", t0.elapsed());
 
-        // 3. Attention scores Q×Kᵀ.
+        // 3. Attention scores Q×Kᵀ, all heads in one region.
         let t0 = Instant::now();
-        let mut scores = (0..heads)
-            .map(|i| super::parallel::gemm_f32(&q[i], &kt[i], s, dh, s, b, cores))
-            .collect::<Result<Vec<_>>>()?;
+        let score_tasks: Vec<GemmTask> = (0..heads)
+            .map(|i| GemmTask { a: &q[i], b: &kt[i], m: s, k: dh, n: s, epilogue: Epilogue::None })
+            .collect();
+        let mut scores = parallel::gemm_f32_batch(&score_tasks, b, pool)?;
         timings.add("QK^T GEMM", t0.elapsed());
 
         // 4. Masked softmax (1/√d_head scale + key mask fold into the
-        // exp pass — no extra memory traffic).
+        // exp pass — no extra memory traffic): the work items are every
+        // head's block-rows.
         let t0 = Instant::now();
-        for sc in &mut scores {
-            super::parallel::masked_softmax(sc, mask, scale, s, s, b, cores)?;
-        }
+        parallel::masked_softmax_batch(&mut scores, mask, scale, s, s, b, pool)?;
         timings.add("Softmax", t0.elapsed());
 
         // 5. Attention × V, each head writing its column slice of the
-        // concatenated output through a view descriptor (no copy-concat).
+        // concatenated output through a view descriptor (no copy-concat)
+        // — all heads in one region.
         let t0 = Instant::now();
         let d_concat = packed_desc(s, d, b);
         let mut h_concat = vec![0.0f32; s * d];
-        for i in 0..heads {
-            let view = d_concat.col_view(i * dh, dh);
-            super::parallel::gemm_f32_into(&scores[i], &v[i], &mut h_concat, &view, s, s, dh, b, cores)?;
-        }
+        let av_tasks: Vec<GemmTask> = (0..heads)
+            .map(|i| GemmTask {
+                a: &scores[i],
+                b: &v[i],
+                m: s,
+                k: s,
+                n: dh,
+                epilogue: Epilogue::None,
+            })
+            .collect();
+        let dsts: Vec<MatrixDesc> = (0..heads).map(|i| d_concat.col_view(i * dh, dh)).collect();
+        parallel::gemm_f32_batch_into(&av_tasks, &mut h_concat, &dsts, b, pool)?;
         timings.add("AV GEMM", t0.elapsed());
 
-        // 6. Output projection.
+        // 6. Output projection (bias fused).
         let t0 = Instant::now();
-        let mut proj = super::parallel::gemm_f32(&h_concat, &attn.wo, s, d, d, b, cores)?;
-        bias_add(&mut proj, &attn.bo, s, d, b)?;
+        let proj_task = [GemmTask {
+            a: &h_concat,
+            b: &attn.wo,
+            m: s,
+            k: d,
+            n: d,
+            epilogue: Epilogue::Bias(&attn.bo),
+        }];
+        let mut proj =
+            parallel::gemm_f32_batch(&proj_task, b, pool)?.pop().expect("one projection task");
         timings.add("Projection GEMM", t0.elapsed());
 
         // 7. Residual + LayerNorm (fused add_norm kernel).
         let t0 = Instant::now();
-        super::parallel::add_norm(&mut proj, xp, &attn.gamma, &attn.beta, s, d, b, Self::EPS, cores)?;
+        let (gamma, beta) = (&attn.gamma, &attn.beta);
+        parallel::add_norm_pooled(&mut proj, xp, gamma, beta, s, d, b, Self::EPS, pool)?;
         timings.add("Add/Norm 1", t0.elapsed());
 
         // 8.–9. Feed-forward with fused GELU on FF1's store path.
         let ffn = &layer.ffn;
         let t0 = Instant::now();
-        let mut hid = super::parallel::gemm_f32(&proj, &ffn.w1, s, d, self.d_ff, b, cores)?;
-        bias_gelu(&mut hid, &ffn.b1, s, self.d_ff, b)?;
+        let ff1_task = [GemmTask {
+            a: &proj,
+            b: &ffn.w1,
+            m: s,
+            k: d,
+            n: self.d_ff,
+            epilogue: Epilogue::BiasGelu(&ffn.b1),
+        }];
+        let hid = parallel::gemm_f32_batch(&ff1_task, b, pool)?.pop().expect("one FF1 task");
         timings.add("FF1 GEMM (+GELU)", t0.elapsed());
 
         let t0 = Instant::now();
-        let mut out = super::parallel::gemm_f32(&hid, &ffn.w2, s, self.d_ff, d, b, cores)?;
-        bias_add(&mut out, &ffn.b2, s, d, b)?;
+        let ff2_task = [GemmTask {
+            a: &hid,
+            b: &ffn.w2,
+            m: s,
+            k: self.d_ff,
+            n: d,
+            epilogue: Epilogue::Bias(&ffn.b2),
+        }];
+        let mut out = parallel::gemm_f32_batch(&ff2_task, b, pool)?.pop().expect("one FF2 task");
         timings.add("FF2 GEMM", t0.elapsed());
 
         // 10. Residual + LayerNorm.
         let t0 = Instant::now();
-        super::parallel::add_norm(&mut out, &proj, &ffn.gamma, &ffn.beta, s, d, b, Self::EPS, cores)?;
+        let (gamma, beta) = (&ffn.gamma, &ffn.beta);
+        parallel::add_norm_pooled(&mut out, &proj, gamma, beta, s, d, b, Self::EPS, pool)?;
         timings.add("Add/Norm 2", t0.elapsed());
 
         Ok(out)

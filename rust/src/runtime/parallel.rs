@@ -1,37 +1,60 @@
-//! Multi-core native execution: deterministic tile-parallel BWMA kernels.
+//! Multi-core native execution: a **persistent worker pool** driving
+//! deterministic tile-parallel BWMA kernels.
 //!
 //! The simulator models per-core L1s over a shared banked L2
 //! ([`crate::mem::system`]); this module is the execution-side
 //! counterpart — the same §3 per-core data arrangement, run for real on
-//! host threads. Zero dependencies: the pool is [`std::thread::scope`],
-//! so workers borrow the operand slices directly and every join happens
-//! before the kernel returns.
+//! host threads. Zero dependencies: [`WorkerPool`] is built from
+//! [`std::thread`], [`std::sync::Mutex`], and [`std::sync::Condvar`].
 //!
-//! **Partitioning.** [`GridPartition`] splits the *output block-grid* of
-//! a BWMA GEMM across workers along block-columns: tiles are enumerated
-//! in block-column-major order (the serial kernel's `j`-outer order) and
-//! cut into `cores` contiguous chunks whose sizes differ by at most one.
-//! A worker therefore owns (nearly) whole block-columns, so under the
-//! weight-stationary TiC-SAT schedule each worker keeps its `B(p, j)`
-//! slice hot — the per-core arrangement the simulator assigns. The
-//! packed transpose ([`transpose_packed`]) partitions its *destination*
-//! grid the same way. Row-wise kernels
-//! ([`layernorm`]/[`softmax`]/[`masked_softmax`]/[`add_norm`]) split
-//! along *block-rows* instead, because under BWMA a block-row of tiles
-//! is one contiguous memory range: workers get disjoint `&mut` chunks
-//! with no copying at all.
+//! **Pool model.** A [`WorkerPool`] of `N` workers owns `N - 1`
+//! long-lived background threads; the caller participates as worker 0.
+//! [`WorkerPool::run`] publishes one phase-sized task closure, wakes the
+//! workers, executes worker 0's share on the calling thread, and then
+//! barriers until every worker has checked in — so borrowed operand
+//! slices never outlive the phase (the classic scoped-pool argument,
+//! with the spawn/join replaced by a condvar handshake). A pool is
+//! created **once per [`NativeModel`]** and reused by every forward pass
+//! and by the server's batch dispatch; steady-state serving spawns no
+//! threads at all (`tests/pool_lifecycle.rs` pins this via
+//! [`WorkerPool::threads_spawned_total`]).
+//!
+//! **Partitioning.** The *work-item grid* of a parallel region is the
+//! flat list of output tiles of every independent GEMM in the phase
+//! (e.g. all attention heads' projections — see [`gemm_f32_batch`]), or
+//! the block-rows of every buffer for row-wise kernels. Items are
+//! enumerated in the serial kernels' order (task-major, block-column
+//! -major within a task — the order [`GridPartition`] describes) and cut
+//! by [`split_even`] into per-worker chunks whose sizes differ by at
+//! most one. A worker therefore owns (nearly) whole block-columns, so
+//! under the weight-stationary TiC-SAT schedule each worker keeps its
+//! `B(p, j)` slice hot — the per-core arrangement the simulator assigns.
+//! Row-wise kernels ([`layernorm_pooled`]/[`softmax_pooled`]/
+//! [`masked_softmax_pooled`]/[`add_norm_pooled`]) split along
+//! *block-rows* instead, because under BWMA a block-row of tiles is one
+//! contiguous memory range: workers get disjoint `&mut` chunks with no
+//! copying at all.
 //!
 //! **Determinism.** Every output tile (and every logical row) is produced
 //! by exactly one worker, which reduces over `p` (or over the row) in
 //! exactly the serial kernel's order. Floating-point accumulation order
 //! per output element is therefore identical to the serial kernels, and
 //! results are **bitwise identical for any core count** — proven by the
-//! equivalence suite (`tests/parallel_equivalence.rs`) and the
-//! `native_parallel_equiv_b16` tag of `bwma verify`.
+//! equivalence suites (`tests/parallel_equivalence.rs`,
+//! `tests/encoder_equivalence.rs`) and the `native_parallel_equiv_b16` /
+//! `native_encoder_parallel_equiv_b16` tags of `bwma verify`. See
+//! `rust/DESIGN.md` for the full ownership contract and the recipe for
+//! adding a kernel under it.
+//!
+//! [`NativeModel`]: super::NativeModel
 
+use std::cell::Cell;
 use std::ops::Range;
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 
-use anyhow::Result;
+use anyhow::{anyhow, ensure, Result};
 
 use crate::layout::{MatrixDesc, TileRef};
 
@@ -64,13 +87,26 @@ pub fn split_even(n: usize, workers: usize) -> Vec<Range<usize>> {
 /// Static assignment of a `block_rows × block_cols` output tile grid to
 /// `cores` workers: the grid is flattened in block-column-major order
 /// (column `j` outer, row `i` inner — the serial kernel's schedule) and
-/// split into contiguous chunks via [`split_even`].
+/// split into contiguous chunks via [`split_even`]. This is the
+/// single-task case of the phase-batched item grid ([`gemm_f32_batch`]
+/// enumerates the same order task by task).
 ///
 /// Invariants (property-tested in `tests/proptest_parallel.rs`):
 /// * every tile is assigned to exactly one worker;
 /// * per-worker tile counts differ by at most one (workers may own zero
 ///   tiles when `cores > block_rows · block_cols`);
 /// * within a worker, tiles ascend in the serial enumeration order.
+///
+/// ```
+/// use bwma::runtime::parallel::GridPartition;
+///
+/// // A 3×2 block grid over 2 workers: each worker owns one block-column.
+/// let p = GridPartition::new(3, 2, 2);
+/// let w0: Vec<_> = p.tiles(0).map(|t| (t.block_row, t.block_col)).collect();
+/// let w1: Vec<_> = p.tiles(1).map(|t| (t.block_row, t.block_col)).collect();
+/// assert_eq!(w0, vec![(0, 0), (1, 0), (2, 0)]);
+/// assert_eq!(w1, vec![(0, 1), (1, 1), (2, 1)]);
+/// ```
 #[derive(Debug, Clone)]
 pub struct GridPartition {
     pub block_rows: usize,
@@ -105,10 +141,600 @@ impl GridPartition {
     }
 }
 
-/// Tile-parallel blocked f32 GEMM: bitwise identical to
-/// [`native::gemm_f32`] for any `cores` (each output tile is reduced
-/// over `p` in the serial order by exactly one worker). `cores <= 1`
-/// runs the serial kernel directly.
+/// Threads ever spawned by any [`WorkerPool`] in this process (a test
+/// hook: a serve-loop in steady state must not move this counter).
+static THREADS_SPAWNED: AtomicUsize = AtomicUsize::new(0);
+
+/// Pool worker threads currently alive in this process (a test hook:
+/// dropping a pool must return this to its prior value).
+static LIVE_WORKERS: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// Whether this thread is currently executing a pool task. Pool
+    /// worker threads set it for their whole life; the caller sets it
+    /// around its worker-0 share. A nested [`WorkerPool::run`] from such
+    /// a thread executes inline instead of dispatching (see `run`).
+    static IN_POOL_JOB: Cell<bool> = const { Cell::new(false) };
+}
+
+/// The phase task currently published to the workers: a lifetime-erased
+/// pointer to the caller's closure. Workers only dereference it between
+/// the publish and the completion barrier inside [`WorkerPool::run`],
+/// which outlives neither the closure nor its borrows.
+#[derive(Clone, Copy)]
+struct JobPtr(*const (dyn Fn(usize) + Sync));
+
+// SAFETY: the pointee is `Sync` (shared-call safe from any thread), and
+// `WorkerPool::run` guarantees it stays alive while workers can see it.
+unsafe impl Send for JobPtr {}
+
+struct PoolState {
+    /// Bumped once per published job; workers run each epoch exactly once.
+    epoch: u64,
+    job: Option<JobPtr>,
+    /// Background workers that have not yet finished the current epoch.
+    remaining: usize,
+    /// Background tasks of the current epoch that panicked.
+    panicked: usize,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    /// Workers wait here for a new epoch (or shutdown).
+    work: Condvar,
+    /// `run` waits here for `remaining == 0`.
+    done: Condvar,
+}
+
+/// A persistent pool of `N` workers: `N - 1` long-lived background
+/// threads plus the calling thread as worker 0. Created once per
+/// [`NativeModel`] (shared by clones and by the server's batch dispatch)
+/// and fed one phase-sized task list per [`WorkerPool::run`] — replacing
+/// the one-`thread::scope`-per-kernel model whose spawn/join cost
+/// dominated small-head GEMMs (ROADMAP, ISSUE 4).
+///
+/// A pool of 1 worker owns no threads at all: `run` degenerates to a
+/// plain call on the caller's thread.
+///
+/// ```
+/// use std::sync::atomic::{AtomicUsize, Ordering};
+/// use bwma::runtime::parallel::WorkerPool;
+///
+/// let pool = WorkerPool::new(3).unwrap();
+/// let hits = [AtomicUsize::new(0), AtomicUsize::new(0), AtomicUsize::new(0)];
+/// pool.run(&|w| {
+///     hits[w].fetch_add(1, Ordering::SeqCst);
+/// })
+/// .unwrap();
+/// assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+/// ```
+///
+/// [`NativeModel`]: super::NativeModel
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    workers: usize,
+    /// Serializes concurrent `run` calls from different threads: one
+    /// phase owns the pool at a time (two would oversubscribe the cores
+    /// the pool stands for anyway).
+    run_lock: Mutex<()>,
+}
+
+impl std::fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WorkerPool").field("workers", &self.workers).finish_non_exhaustive()
+    }
+}
+
+impl WorkerPool {
+    /// Create a pool of `workers` (≥ 1): spawns `workers - 1` background
+    /// threads that live until the pool is dropped.
+    pub fn new(workers: usize) -> Result<Self> {
+        ensure!(workers >= 1, "worker pool needs at least 1 worker (got {workers})");
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState {
+                epoch: 0,
+                job: None,
+                remaining: 0,
+                panicked: 0,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let mut handles = Vec::with_capacity(workers - 1);
+        for w in 1..workers {
+            let worker_shared = Arc::clone(&shared);
+            // LIVE must be up before the worker can ever decrement it.
+            LIVE_WORKERS.fetch_add(1, Ordering::SeqCst);
+            let spawned = std::thread::Builder::new()
+                .name(format!("bwma-pool-{w}"))
+                .spawn(move || worker_loop(w, &worker_shared));
+            let handle = match spawned {
+                Ok(h) => h,
+                Err(e) => {
+                    // Tear the partial pool down: the workers spawned so
+                    // far would otherwise block on the condvar forever
+                    // (Self is never constructed, so Drop never runs).
+                    LIVE_WORKERS.fetch_sub(1, Ordering::SeqCst);
+                    {
+                        let mut st = shared.state.lock().unwrap();
+                        st.shutdown = true;
+                        shared.work.notify_all();
+                    }
+                    for h in handles {
+                        let _ = h.join();
+                    }
+                    return Err(anyhow::Error::from(e).context("spawning pool worker"));
+                }
+            };
+            THREADS_SPAWNED.fetch_add(1, Ordering::SeqCst);
+            handles.push(handle);
+        }
+        Ok(Self { shared, handles, workers, run_lock: Mutex::new(()) })
+    }
+
+    /// Number of workers (including the caller, worker 0).
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Total pool threads ever spawned in this process — a regression
+    /// hook: a serve-loop in steady state must leave it unchanged.
+    pub fn threads_spawned_total() -> usize {
+        THREADS_SPAWNED.load(Ordering::SeqCst)
+    }
+
+    /// Pool threads currently alive in this process — a leak hook:
+    /// dropping a pool must return it to its prior value.
+    pub fn live_worker_threads() -> usize {
+        LIVE_WORKERS.load(Ordering::SeqCst)
+    }
+
+    /// Execute one parallel region: `f(w)` runs exactly once for every
+    /// worker index `w ∈ 0..workers()`, worker 0 on the calling thread,
+    /// the rest on the pool threads, with a completion barrier before
+    /// returning — `f` and everything it borrows are guaranteed dead
+    /// only after every worker is done.
+    ///
+    /// A panic in any task (background or worker 0) is caught and
+    /// surfaced as an `Err`; the pool stays serviceable. Nested calls
+    /// from inside a pool task execute every index inline on the current
+    /// thread — by the ownership contract that is bitwise identical, and
+    /// it cannot deadlock.
+    pub fn run(&self, f: &(dyn Fn(usize) + Sync)) -> Result<()> {
+        if self.workers == 1 || IN_POOL_JOB.with(|g| g.get()) {
+            let inline = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                for w in 0..self.workers {
+                    f(w);
+                }
+            }));
+            return match inline {
+                Ok(()) => Ok(()),
+                Err(p) => Err(anyhow!("worker pool task panicked: {}", panic_msg(&*p))),
+            };
+        }
+        let _phase = self.run_lock.lock().unwrap_or_else(|e| e.into_inner());
+        // SAFETY: the erased borrow is only dereferenced by workers
+        // between the publish below and the `remaining == 0` barrier at
+        // the bottom of this function, which we reach on every path
+        // (including worker-0 panic) before `f` can go out of scope.
+        let job = JobPtr(unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(f)
+        });
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.job = Some(job);
+            st.remaining = self.workers - 1;
+            st.panicked = 0;
+            st.epoch = st.epoch.wrapping_add(1);
+            self.shared.work.notify_all();
+        }
+        // The caller is worker 0 (a pool of N uses N-1 threads).
+        IN_POOL_JOB.with(|g| g.set(true));
+        let own = std::panic::catch_unwind(AssertUnwindSafe(|| f(0)));
+        IN_POOL_JOB.with(|g| g.set(false));
+        // Barrier — even if worker 0 failed, the borrowed operands must
+        // outlive every outstanding background task.
+        let panicked = {
+            let mut st = self.shared.state.lock().unwrap();
+            while st.remaining > 0 {
+                st = self.shared.done.wait(st).unwrap();
+            }
+            st.job = None;
+            st.panicked
+        };
+        match own {
+            Err(p) => Err(anyhow!("worker pool task panicked: {}", panic_msg(&*p))),
+            Ok(()) if panicked > 0 => Err(anyhow!("{panicked} worker pool task(s) panicked")),
+            Ok(()) => Ok(()),
+        }
+    }
+}
+
+/// The process-wide width-1 pool: it owns no threads and its `run` is a
+/// plain inline call, so it is shared — serial forwards on the hot batch
+/// path ([`super::NativeModel`]'s `pool_for(1)`) allocate no pool
+/// machinery per sequence.
+pub fn serial_pool() -> &'static Arc<WorkerPool> {
+    static SERIAL: std::sync::OnceLock<Arc<WorkerPool>> = std::sync::OnceLock::new();
+    SERIAL.get_or_init(|| Arc::new(WorkerPool::new(1).expect("a 1-worker pool spawns nothing")))
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(w: usize, shared: &PoolShared) {
+    // The whole thread only ever runs pool tasks; a kernel called from
+    // one must execute nested regions inline.
+    IN_POOL_JOB.with(|g| g.set(true));
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    LIVE_WORKERS.fetch_sub(1, Ordering::SeqCst);
+                    return;
+                }
+                if st.epoch != seen {
+                    if let Some(job) = st.job {
+                        seen = st.epoch;
+                        break job;
+                    }
+                }
+                st = shared.work.wait(st).unwrap();
+            }
+        };
+        // SAFETY: see `WorkerPool::run` — the closure outlives the
+        // barrier we feed below.
+        let f = unsafe { &*job.0 };
+        let ok = std::panic::catch_unwind(AssertUnwindSafe(|| f(w))).is_ok();
+        let mut st = shared.state.lock().unwrap();
+        if !ok {
+            st.panicked += 1;
+        }
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            shared.done.notify_all();
+        }
+    }
+}
+
+/// Best-effort panic payload as text (panics carry `&str` or `String`
+/// in practice).
+fn panic_msg(p: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = p.downcast_ref::<&'static str>() {
+        s
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s
+    } else {
+        "non-string panic payload"
+    }
+}
+
+/// Per-element store-path epilogue fused onto a [`GemmTask`]'s output
+/// tiles. Applied after the tile's full `p`-reduction, it performs the
+/// *same single float op per element* as the serial
+/// [`native::bias_add`] / [`native::bias_gelu`] pass that follows the
+/// serial GEMM — so fusing it keeps parallel output bitwise identical
+/// to the serial kernel sequence.
+#[derive(Clone, Copy)]
+pub enum Epilogue<'a> {
+    /// Store the raw accumulators.
+    None,
+    /// `c[r, j] += bias[j]` (bias indexed by the task's output column).
+    Bias(&'a [f32]),
+    /// `c[r, j] = gelu(c[r, j] + bias[j])` — FF1's store path.
+    BiasGelu(&'a [f32]),
+}
+
+/// One GEMM of a phase-batched parallel region: `C[m,n] = A[m,k] ×
+/// B[k,n]` over packed buffers, plus an optional fused [`Epilogue`].
+/// All tasks of a batch share the block size and together form a single
+/// work-item grid (`Σ` output tiles) fanned over the pool — this is how
+/// `encoder_layer_forward` turns "one pool dispatch per head-kernel"
+/// into "one dispatch per phase" (heads × tiles as the grid).
+pub struct GemmTask<'a> {
+    pub a: &'a [f32],
+    pub b: &'a [f32],
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub epilogue: Epilogue<'a>,
+}
+
+/// Validate one task and return its operand descriptors.
+fn task_descs(t: &GemmTask, block: usize) -> Result<(MatrixDesc, MatrixDesc)> {
+    native::check_gemm_dims(t.m, t.k, t.n, block, t.a.len(), t.b.len())?;
+    match t.epilogue {
+        Epilogue::None => {}
+        Epilogue::Bias(bias) | Epilogue::BiasGelu(bias) => {
+            ensure!(bias.len() == t.n, "bias has {} elements, want {}", bias.len(), t.n);
+        }
+    }
+    Ok((native::packed_desc(t.m, t.k, block), native::packed_desc(t.k, t.n, block)))
+}
+
+/// Apply a task's epilogue to one finished `block × block` output tile
+/// whose first output column is `col0`.
+fn apply_epilogue(e: Epilogue, col0: usize, ct: &mut [f32], block: usize) {
+    match e {
+        Epilogue::None => {}
+        Epilogue::Bias(bias) => {
+            for r in 0..block {
+                for c in 0..block {
+                    ct[r * block + c] += bias[col0 + c];
+                }
+            }
+        }
+        Epilogue::BiasGelu(bias) => {
+            for r in 0..block {
+                for c in 0..block {
+                    let i = r * block + c;
+                    ct[i] = native::gelu(ct[i] + bias[col0 + c]);
+                }
+            }
+        }
+    }
+}
+
+/// Serial reference for one task: the exact kernel sequence the fused
+/// parallel path must match bitwise (GEMM, then the element-wise
+/// epilogue pass).
+fn gemm_task_serial(t: &GemmTask, block: usize) -> Result<Vec<f32>> {
+    let mut c = native::gemm_f32(t.a, t.b, t.m, t.k, t.n, block)?;
+    match t.epilogue {
+        Epilogue::None => {}
+        Epilogue::Bias(bias) => native::bias_add(&mut c, bias, t.m, t.n, block)?,
+        Epilogue::BiasGelu(bias) => native::bias_gelu(&mut c, bias, t.m, t.n, block)?,
+    }
+    Ok(c)
+}
+
+/// Compute every task's output tiles into per-worker local buffers.
+/// Returns the flat item list (task-major, block-column-major within a
+/// task — the serial enumeration), the per-worker item ranges, and the
+/// per-worker tile buffers (tiles in item order).
+#[allow(clippy::type_complexity)]
+fn gemm_batch_locals(
+    tasks: &[GemmTask],
+    block: usize,
+    pool: &WorkerPool,
+) -> Result<(Vec<(usize, TileRef)>, Vec<Range<usize>>, Vec<Vec<f32>>)> {
+    let bb = block * block;
+    let mut descs = Vec::with_capacity(tasks.len());
+    let mut items = Vec::new();
+    for (t, task) in tasks.iter().enumerate() {
+        let (da, db) = task_descs(task, block)?;
+        for j in 0..db.block_cols() {
+            for i in 0..da.block_rows() {
+                items.push((t, TileRef { block_row: i, block_col: j }));
+            }
+        }
+        descs.push((da, db));
+    }
+    let ranges = split_even(items.len(), pool.workers());
+    let locals: Vec<Mutex<Vec<f32>>> =
+        ranges.iter().map(|r| Mutex::new(vec![0.0f32; r.len() * bb])).collect();
+    pool.run(&|w| {
+        let mut buf = locals[w].lock().unwrap();
+        for (slot, idx) in ranges[w].clone().enumerate() {
+            let (t, tile) = items[idx];
+            let task = &tasks[t];
+            let (da, db) = &descs[t];
+            let ct = &mut buf[slot * bb..(slot + 1) * bb];
+            for p in 0..da.block_cols() {
+                let at = &task.a[native::tile_range(da, tile.block_row, p)];
+                let bt = &task.b[native::tile_range(db, p, tile.block_col)];
+                native::tile_mac_f32(at, bt, ct, block);
+            }
+            apply_epilogue(task.epilogue, tile.block_col * block, ct, block);
+        }
+    })?;
+    let locals = locals.into_iter().map(|m| m.into_inner().unwrap()).collect();
+    Ok((items, ranges, locals))
+}
+
+/// Run every task of a phase as ONE parallel region and return each
+/// task's packed output. Bitwise identical to running the serial kernel
+/// (+ epilogue pass) per task in order, for any pool width: each output
+/// tile is reduced over `p` in the serial order by exactly one worker,
+/// and the epilogue performs the same per-element ops as the serial
+/// bias pass. A 1-worker pool takes the serial kernels directly.
+pub fn gemm_f32_batch(
+    tasks: &[GemmTask],
+    block: usize,
+    pool: &WorkerPool,
+) -> Result<Vec<Vec<f32>>> {
+    if pool.workers() <= 1 {
+        return tasks.iter().map(|t| gemm_task_serial(t, block)).collect();
+    }
+    // Validation happens inside gemm_batch_locals (`task_descs`) BEFORE
+    // any descriptor is built — `MatrixDesc` asserts its invariants, so
+    // bad caller dims must surface as an `Err`, not a panic.
+    let (items, ranges, locals) = gemm_batch_locals(tasks, block, pool)?;
+    let dcs: Vec<MatrixDesc> =
+        tasks.iter().map(|t| native::packed_desc(t.m, t.n, block)).collect();
+    let bb = block * block;
+    let mut outs: Vec<Vec<f32>> = tasks.iter().map(|t| vec![0.0f32; t.m * t.n]).collect();
+    for (w, local) in locals.iter().enumerate() {
+        for (slot, idx) in ranges[w].clone().enumerate() {
+            let (t, tile) = items[idx];
+            outs[t][native::tile_range(&dcs[t], tile.block_row, tile.block_col)]
+                .copy_from_slice(&local[slot * bb..(slot + 1) * bb]);
+        }
+    }
+    Ok(outs)
+}
+
+/// [`gemm_f32_batch`] writing through per-task destination descriptors
+/// into ONE shared backing buffer — attention heads targeting their
+/// column slice of the concatenated output (`MatrixDesc::col_view`, no
+/// copy-concat). The caller guarantees the views are disjoint; every
+/// destination tile is overwritten by exactly one computed tile, so the
+/// serial scatter order cannot matter.
+pub fn gemm_f32_batch_into(
+    tasks: &[GemmTask],
+    c: &mut [f32],
+    dsts: &[MatrixDesc],
+    block: usize,
+    pool: &WorkerPool,
+) -> Result<()> {
+    ensure!(tasks.len() == dsts.len(), "{} tasks but {} destinations", tasks.len(), dsts.len());
+    for (task, dc) in tasks.iter().zip(dsts) {
+        native::check_gemm_dst(c.len(), dc, task.m, task.n, block)?;
+    }
+    // Width-1 fast path: write tiles straight through the serial kernel,
+    // skipping the locals + scatter copy (epilogues fall through to the
+    // engine — the serial bias kernels only address plain matrices).
+    if pool.workers() <= 1 && tasks.iter().all(|t| matches!(t.epilogue, Epilogue::None)) {
+        for (task, dc) in tasks.iter().zip(dsts) {
+            native::gemm_f32_into(task.a, task.b, c, dc, task.m, task.k, task.n, block)?;
+        }
+        return Ok(());
+    }
+    let (items, ranges, locals) = gemm_batch_locals(tasks, block, pool)?;
+    let bb = block * block;
+    for (w, local) in locals.iter().enumerate() {
+        for (slot, idx) in ranges[w].clone().enumerate() {
+            let (t, tile) = items[idx];
+            c[native::tile_range(&dsts[t], tile.block_row, tile.block_col)]
+                .copy_from_slice(&local[slot * bb..(slot + 1) * bb]);
+        }
+    }
+    Ok(())
+}
+
+/// Transpose many same-shaped packed matrices (the per-head Kᵀ phase) as
+/// ONE parallel region: the work-item grid is every destination tile of
+/// every source. Pure data movement — parallel and serial are trivially
+/// identical; the one-writer-per-tile discipline is kept anyway.
+pub fn transpose_packed_batch(
+    srcs: &[Vec<f32>],
+    rows: usize,
+    cols: usize,
+    block: usize,
+    pool: &WorkerPool,
+) -> Result<Vec<Vec<f32>>> {
+    if pool.workers() <= 1 {
+        return srcs.iter().map(|s| native::transpose_packed(s, rows, cols, block)).collect();
+    }
+    for s in srcs {
+        native::check_rowwise(s.len(), rows, cols, block)?;
+    }
+    let ds = native::packed_desc(rows, cols, block);
+    let dd = native::packed_desc(cols, rows, block);
+    let bb = block * block;
+    let mut items = Vec::with_capacity(srcs.len() * dd.block_rows() * dd.block_cols());
+    for t in 0..srcs.len() {
+        for j in 0..dd.block_cols() {
+            for i in 0..dd.block_rows() {
+                items.push((t, TileRef { block_row: i, block_col: j }));
+            }
+        }
+    }
+    let ranges = split_even(items.len(), pool.workers());
+    let locals: Vec<Mutex<Vec<f32>>> =
+        ranges.iter().map(|r| Mutex::new(vec![0.0f32; r.len() * bb])).collect();
+    pool.run(&|w| {
+        let mut buf = locals[w].lock().unwrap();
+        for (slot, idx) in ranges[w].clone().enumerate() {
+            let (t, tile) = items[idx];
+            let st = &srcs[t][native::tile_range(&ds, tile.block_col, tile.block_row)];
+            native::transpose_tile(st, &mut buf[slot * bb..(slot + 1) * bb], block);
+        }
+    })?;
+    let mut outs: Vec<Vec<f32>> = srcs.iter().map(|_| vec![0.0f32; rows * cols]).collect();
+    for (w, local) in locals.iter().enumerate() {
+        for (slot, idx) in ranges[w].clone().enumerate() {
+            let (t, tile) = items[idx];
+            outs[t][native::tile_range(&dd, tile.block_row, tile.block_col)]
+                .copy_from_slice(&local[slot * bb..(slot + 1) * bb]);
+        }
+    }
+    Ok(outs)
+}
+
+/// Masked/scaled softmax over many same-shaped packed buffers (all heads'
+/// score matrices) as ONE parallel region: the work items are every
+/// block-row of every buffer — under BWMA each is one contiguous `&mut`
+/// range, handed whole to exactly one worker. Bitwise identical to the
+/// serial per-buffer [`native::masked_softmax`] walk for any pool width,
+/// including the fully-masked-row (all `-inf` → all-zero) convention.
+#[allow(clippy::too_many_arguments, clippy::type_complexity)]
+pub fn masked_softmax_batch(
+    xs: &mut [Vec<f32>],
+    mask: Option<&[f32]>,
+    scale: f32,
+    rows: usize,
+    cols: usize,
+    block: usize,
+    pool: &WorkerPool,
+) -> Result<()> {
+    for x in xs.iter() {
+        native::check_rowwise(x.len(), rows, cols, block)?;
+    }
+    if let Some(m) = mask {
+        ensure!(m.len() == cols, "mask has {} entries, want {cols}", m.len());
+    }
+    if pool.workers() <= 1 {
+        for x in xs.iter_mut() {
+            native::masked_softmax(x, mask, scale, rows, cols, block)?;
+        }
+        return Ok(());
+    }
+    let chunk_elems = block * cols;
+    let chunks: Vec<&mut [f32]> =
+        xs.iter_mut().flat_map(|x| x.chunks_mut(chunk_elems)).collect();
+    let ranges = split_even(chunks.len(), pool.workers());
+    let mut iter = chunks.into_iter();
+    let slots: Vec<Mutex<Vec<&mut [f32]>>> =
+        ranges.iter().map(|r| Mutex::new(iter.by_ref().take(r.len()).collect())).collect();
+    pool.run(&|w| {
+        let mut group = slots[w].lock().unwrap();
+        for chunk in group.drain(..) {
+            // Pre-validated sub-shapes: failure here is a logic bug.
+            native::masked_softmax(chunk, mask, scale, block, cols, block)
+                .expect("masked_softmax on pre-validated chunk");
+        }
+    })
+}
+
+/// Pooled blocked f32 GEMM: bitwise identical to [`native::gemm_f32`]
+/// for any pool width (each output tile is reduced over `p` in the
+/// serial order by exactly one worker). A 1-worker pool runs the serial
+/// kernel directly.
+pub fn gemm_f32_pooled(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    block: usize,
+    pool: &WorkerPool,
+) -> Result<Vec<f32>> {
+    if pool.workers() <= 1 {
+        return native::gemm_f32(a, b, m, k, n, block);
+    }
+    let tasks = [GemmTask { a, b, m, k, n, epilogue: Epilogue::None }];
+    Ok(gemm_f32_batch(&tasks, block, pool)?.pop().expect("one task in, one output out"))
+}
+
+/// Tile-parallel blocked f32 GEMM on a transient pool — kept for tests
+/// and ad-hoc callers; hot paths hold a [`WorkerPool`] and use
+/// [`gemm_f32_pooled`]. `cores <= 1` runs the serial kernel directly.
 pub fn gemm_f32(
     a: &[f32],
     b: &[f32],
@@ -121,124 +747,55 @@ pub fn gemm_f32(
     if cores <= 1 {
         return native::gemm_f32(a, b, m, k, n, block);
     }
-    // Validate before building the descriptor (`MatrixDesc` asserts).
-    native::check_gemm_dims(m, k, n, block, a.len(), b.len())?;
-    let dc = native::packed_desc(m, n, block);
-    let mut c = vec![0.0f32; m * n];
-    gemm_f32_into(a, b, &mut c, &dc, m, k, n, block, cores)?;
-    Ok(c)
+    gemm_f32_pooled(a, b, m, k, n, block, &WorkerPool::new(cores)?)
 }
 
-/// Tile-parallel [`native::gemm_f32_into`]: writes the output tiles
-/// through a destination descriptor (plain, or a column-slice view of a
-/// wider packed buffer — attention heads targeting their slice of the
-/// concatenated output). Bitwise identical to the serial kernel for any
-/// `cores`.
-#[allow(clippy::too_many_arguments)]
-pub fn gemm_f32_into(
-    a: &[f32],
-    b: &[f32],
-    c: &mut [f32],
-    dc: &MatrixDesc,
+/// Pooled blocked int8 GEMM (int8 × int8 → exact i32): identical to
+/// [`native::gemm_i8`] for any pool width — integer accumulation is
+/// exact, and the tile ownership/order discipline matches anyway.
+pub fn gemm_i8_pooled(
+    a: &[i8],
+    b: &[i8],
     m: usize,
     k: usize,
     n: usize,
     block: usize,
-    cores: usize,
-) -> Result<()> {
-    if cores <= 1 {
-        return native::gemm_f32_into(a, b, c, dc, m, k, n, block);
+    pool: &WorkerPool,
+) -> Result<Vec<i32>> {
+    if pool.workers() <= 1 {
+        return native::gemm_i8(a, b, m, k, n, block);
     }
     native::check_gemm_dims(m, k, n, block, a.len(), b.len())?;
-    native::check_gemm_dst(c.len(), dc, m, n, block)?;
     let da = native::packed_desc(m, k, block);
     let db = native::packed_desc(k, n, block);
-    let part = GridPartition::new(dc.block_rows(), dc.block_cols(), cores);
+    let dc = native::packed_desc(m, n, block);
+    let part = GridPartition::new(dc.block_rows(), dc.block_cols(), pool.workers());
     let kb = da.block_cols();
-    std::thread::scope(|s| {
-        // Each worker accumulates its tiles into a local buffer (tiles in
-        // its enumeration order); the scatter below writes each finished
-        // tile to its packed burst. The copy is O(m·n) against the
-        // kernel's O(m·k·n) — noise, and it keeps the code unsafe-free.
-        let handles: Vec<_> = (0..part.workers())
-            .filter(|&w| part.tile_count(w) > 0)
-            .map(|w| {
-                let part = &part;
-                let (da, db) = (&da, &db);
-                let handle = s.spawn(move || {
-                    let mut local = vec![0.0f32; part.tile_count(w) * block * block];
-                    for (t, ct) in part.tiles(w).zip(local.chunks_exact_mut(block * block)) {
-                        for p in 0..kb {
-                            let at = &a[native::tile_range(da, t.block_row, p)];
-                            let bt = &b[native::tile_range(db, p, t.block_col)];
-                            native::tile_mac_f32(at, bt, ct, block);
-                        }
-                    }
-                    local
-                });
-                (w, handle)
-            })
-            .collect();
-        for (w, h) in handles {
-            let local = h.join().expect("gemm_f32 worker panicked");
-            for (t, tile) in part.tiles(w).zip(local.chunks_exact(block * block)) {
-                c[native::tile_range(dc, t.block_row, t.block_col)].copy_from_slice(tile);
+    let bb = block * block;
+    let locals: Vec<Mutex<Vec<i32>>> = (0..part.workers())
+        .map(|w| Mutex::new(vec![0i32; part.tile_count(w) * bb]))
+        .collect();
+    pool.run(&|w| {
+        let mut buf = locals[w].lock().unwrap();
+        for (t, ct) in part.tiles(w).zip(buf.chunks_exact_mut(bb)) {
+            for p in 0..kb {
+                let at = &a[native::tile_range(&da, t.block_row, p)];
+                let bt = &b[native::tile_range(&db, p, t.block_col)];
+                native::tile_mac_i8(at, bt, ct, block);
             }
         }
-    });
-    Ok(())
-}
-
-/// Tile-parallel packed→packed transpose: destination tiles are
-/// partitioned exactly like a GEMM's output grid; each worker writes the
-/// transposed source tiles it owns. Pure data movement, so parallel and
-/// serial are trivially identical — the ownership discipline is kept
-/// anyway (every destination tile written by exactly one worker).
-pub fn transpose_packed(
-    src: &[f32],
-    rows: usize,
-    cols: usize,
-    block: usize,
-    cores: usize,
-) -> Result<Vec<f32>> {
-    if cores <= 1 {
-        return native::transpose_packed(src, rows, cols, block);
+    })?;
+    let mut c = vec![0i32; m * n];
+    for (w, local) in locals.iter().enumerate() {
+        let local = local.lock().unwrap();
+        for (t, tile) in part.tiles(w).zip(local.chunks_exact(bb)) {
+            c[native::tile_range(&dc, t.block_row, t.block_col)].copy_from_slice(tile);
+        }
     }
-    native::check_rowwise(src.len(), rows, cols, block)?;
-    let ds = native::packed_desc(rows, cols, block);
-    let dd = native::packed_desc(cols, rows, block);
-    let part = GridPartition::new(dd.block_rows(), dd.block_cols(), cores);
-    let mut dst = vec![0.0f32; rows * cols];
-    std::thread::scope(|s| {
-        let handles: Vec<_> = (0..part.workers())
-            .filter(|&w| part.tile_count(w) > 0)
-            .map(|w| {
-                let part = &part;
-                let ds = &ds;
-                let handle = s.spawn(move || {
-                    let mut local = vec![0.0f32; part.tile_count(w) * block * block];
-                    for (t, dt) in part.tiles(w).zip(local.chunks_exact_mut(block * block)) {
-                        let st = &src[native::tile_range(ds, t.block_col, t.block_row)];
-                        native::transpose_tile(st, dt, block);
-                    }
-                    local
-                });
-                (w, handle)
-            })
-            .collect();
-        for (w, h) in handles {
-            let local = h.join().expect("transpose worker panicked");
-            for (t, tile) in part.tiles(w).zip(local.chunks_exact(block * block)) {
-                dst[native::tile_range(&dd, t.block_row, t.block_col)].copy_from_slice(tile);
-            }
-        }
-    });
-    Ok(dst)
+    Ok(c)
 }
 
-/// Tile-parallel blocked int8 GEMM (int8 × int8 → exact i32): identical
-/// to [`native::gemm_i8`] for any `cores` — integer accumulation is
-/// exact, and the tile ownership/order discipline matches anyway.
+/// Tile-parallel blocked int8 GEMM on a transient pool (tests / ad-hoc).
 pub fn gemm_i8(
     a: &[i8],
     b: &[i8],
@@ -251,107 +808,136 @@ pub fn gemm_i8(
     if cores <= 1 {
         return native::gemm_i8(a, b, m, k, n, block);
     }
-    native::check_gemm_dims(m, k, n, block, a.len(), b.len())?;
-    let da = native::packed_desc(m, k, block);
-    let db = native::packed_desc(k, n, block);
-    let dc = native::packed_desc(m, n, block);
-    let part = GridPartition::new(dc.block_rows(), dc.block_cols(), cores);
-    let kb = da.block_cols();
-    let mut c = vec![0i32; m * n];
-    std::thread::scope(|s| {
-        let handles: Vec<_> = (0..part.workers())
-            .filter(|&w| part.tile_count(w) > 0)
-            .map(|w| {
-                let part = &part;
-                let (da, db) = (&da, &db);
-                let handle = s.spawn(move || {
-                    let mut local = vec![0i32; part.tile_count(w) * block * block];
-                    for (t, ct) in part.tiles(w).zip(local.chunks_exact_mut(block * block)) {
-                        for p in 0..kb {
-                            let at = &a[native::tile_range(da, t.block_row, p)];
-                            let bt = &b[native::tile_range(db, p, t.block_col)];
-                            native::tile_mac_i8(at, bt, ct, block);
-                        }
-                    }
-                    local
-                });
-                (w, handle)
-            })
-            .collect();
-        for (w, h) in handles {
-            let local = h.join().expect("gemm_i8 worker panicked");
-            for (t, tile) in part.tiles(w).zip(local.chunks_exact(block * block)) {
-                c[native::tile_range(&dc, t.block_row, t.block_col)].copy_from_slice(tile);
-            }
+    gemm_i8_pooled(a, b, m, k, n, block, &WorkerPool::new(cores)?)
+}
+
+/// Pooled packed→packed transpose (single matrix): destination tiles are
+/// partitioned exactly like a GEMM's output grid; each worker writes the
+/// transposed source tiles it owns (the one-source case of
+/// [`transpose_packed_batch`], without the batch bookkeeping).
+pub fn transpose_packed_pooled(
+    src: &[f32],
+    rows: usize,
+    cols: usize,
+    block: usize,
+    pool: &WorkerPool,
+) -> Result<Vec<f32>> {
+    if pool.workers() <= 1 {
+        return native::transpose_packed(src, rows, cols, block);
+    }
+    native::check_rowwise(src.len(), rows, cols, block)?;
+    let ds = native::packed_desc(rows, cols, block);
+    let dd = native::packed_desc(cols, rows, block);
+    let part = GridPartition::new(dd.block_rows(), dd.block_cols(), pool.workers());
+    let bb = block * block;
+    let locals: Vec<Mutex<Vec<f32>>> = (0..part.workers())
+        .map(|w| Mutex::new(vec![0.0f32; part.tile_count(w) * bb]))
+        .collect();
+    pool.run(&|w| {
+        let mut buf = locals[w].lock().unwrap();
+        for (t, dt) in part.tiles(w).zip(buf.chunks_exact_mut(bb)) {
+            let st = &src[native::tile_range(&ds, t.block_col, t.block_row)];
+            native::transpose_tile(st, dt, block);
         }
-    });
-    Ok(c)
+    })?;
+    let mut dst = vec![0.0f32; rows * cols];
+    for (w, local) in locals.iter().enumerate() {
+        let local = local.lock().unwrap();
+        for (t, tile) in part.tiles(w).zip(local.chunks_exact(bb)) {
+            dst[native::tile_range(&dd, t.block_row, t.block_col)].copy_from_slice(tile);
+        }
+    }
+    Ok(dst)
+}
+
+/// Tile-parallel packed→packed transpose on a transient pool (tests /
+/// ad-hoc callers; hot paths batch all heads via
+/// [`transpose_packed_batch`]).
+pub fn transpose_packed(
+    src: &[f32],
+    rows: usize,
+    cols: usize,
+    block: usize,
+    cores: usize,
+) -> Result<Vec<f32>> {
+    if cores <= 1 {
+        return native::transpose_packed(src, rows, cols, block);
+    }
+    transpose_packed_pooled(src, rows, cols, block, &WorkerPool::new(cores)?)
 }
 
 /// Split a packed `rows × cols` buffer along block-row boundaries (under
 /// BWMA a block-row of tiles is one contiguous range of `block · cols`
-/// elements) and hand each worker a contiguous group of block-rows to
-/// run `f` over, one scoped thread per non-empty group. Rows are never
-/// split across workers, so any independent row-wise kernel stays
-/// bitwise identical to its serial run.
-fn rowwise_parallel<F>(x: &mut [f32], rows: usize, cols: usize, block: usize, cores: usize, f: F)
-where
-    F: Fn(&mut [f32], usize) -> Result<()> + Sync,
-{
-    rowwise_parallel_paired(x, None, rows, cols, block, cores, |chunk, _paired, nrows| {
-        f(chunk, nrows)
-    });
-}
-
-/// [`rowwise_parallel`] with an optional read-only buffer split along
-/// the same block-row boundaries: each worker's chunk of `x` arrives
-/// with the index-aligned chunk of `paired` ([`add_norm`]'s residual).
-#[allow(clippy::too_many_arguments)]
-fn rowwise_parallel_paired<F>(
+/// elements, optionally paired with the index-aligned chunk of a
+/// read-only buffer — [`add_norm_pooled`]'s residual) and run `f` over
+/// each worker's contiguous group of block-rows as ONE pool region.
+/// Rows are never split across workers, so any independent row-wise
+/// kernel stays bitwise identical to its serial run.
+#[allow(clippy::type_complexity)]
+fn rowwise_pooled<F>(
     x: &mut [f32],
     paired: Option<&[f32]>,
     rows: usize,
     cols: usize,
     block: usize,
-    cores: usize,
+    pool: &WorkerPool,
     f: F,
-) where
+) -> Result<()>
+where
     F: Fn(&mut [f32], Option<&[f32]>, usize) -> Result<()> + Sync,
 {
     let chunk_elems = block * cols;
-    let ranges = split_even(rows / block, cores);
-    std::thread::scope(|s| {
-        let f = &f;
-        let mut chunks = x.chunks_mut(chunk_elems);
-        let mut paired_chunks = paired.map(|p| p.chunks(chunk_elems));
-        let mut handles = Vec::with_capacity(ranges.len());
-        for r in &ranges {
-            let group: Vec<&mut [f32]> = chunks.by_ref().take(r.len()).collect();
-            let pgroup: Vec<&[f32]> = match paired_chunks.as_mut() {
-                Some(pc) => pc.by_ref().take(r.len()).collect(),
-                None => Vec::new(),
-            };
-            if group.is_empty() {
-                continue;
-            }
-            handles.push(s.spawn(move || {
-                for (i, chunk) in group.into_iter().enumerate() {
-                    f(chunk, pgroup.get(i).copied(), block)?;
-                }
-                Ok::<(), anyhow::Error>(())
-            }));
+    let ranges = split_even(rows / block, pool.workers());
+    let mut chunks = x.chunks_mut(chunk_elems);
+    let mut paired_chunks = paired.map(|p| p.chunks(chunk_elems));
+    let slots: Vec<Mutex<Vec<(&mut [f32], Option<&[f32]>)>>> = ranges
+        .iter()
+        .map(|r| {
+            let group = chunks
+                .by_ref()
+                .take(r.len())
+                .map(|c| (c, paired_chunks.as_mut().and_then(|pc| pc.next())))
+                .collect();
+            Mutex::new(group)
+        })
+        .collect();
+    pool.run(&|w| {
+        let mut group = slots[w].lock().unwrap();
+        for (chunk, p) in group.drain(..) {
+            // Pre-validated sub-shapes: failure here is a logic bug.
+            f(chunk, p, block).expect("row-wise sub-kernel failed");
         }
-        for h in handles {
-            // The closures below only re-run the serial kernel on
-            // pre-validated sub-shapes, so failure here is a logic bug.
-            h.join().expect("row-wise worker panicked").expect("row-wise sub-kernel failed");
-        }
-    });
+    })
 }
 
-/// Row-parallel LayerNorm over a packed buffer: bitwise identical to
-/// [`native::layernorm`] for any `cores` (each logical row is normalized
-/// entirely by one worker, in the serial pass structure).
+/// Pooled LayerNorm over a packed buffer: bitwise identical to
+/// [`native::layernorm`] for any pool width (each logical row is
+/// normalized entirely by one worker, in the serial pass structure).
+#[allow(clippy::too_many_arguments)]
+pub fn layernorm_pooled(
+    x: &mut [f32],
+    gamma: &[f32],
+    beta: &[f32],
+    rows: usize,
+    cols: usize,
+    block: usize,
+    eps: f32,
+    pool: &WorkerPool,
+) -> Result<()> {
+    if pool.workers() <= 1 {
+        return native::layernorm(x, gamma, beta, rows, cols, block, eps);
+    }
+    native::check_rowwise(x.len(), rows, cols, block)?;
+    ensure!(
+        gamma.len() == cols && beta.len() == cols,
+        "affine params must have {cols} elements"
+    );
+    rowwise_pooled(x, None, rows, cols, block, pool, |chunk, _res, nrows| {
+        native::layernorm(chunk, gamma, beta, nrows, cols, block, eps)
+    })
+}
+
+/// Row-parallel LayerNorm on a transient pool (tests / ad-hoc).
 #[allow(clippy::too_many_arguments)]
 pub fn layernorm(
     x: &mut [f32],
@@ -366,34 +952,56 @@ pub fn layernorm(
     if cores <= 1 {
         return native::layernorm(x, gamma, beta, rows, cols, block, eps);
     }
-    native::check_rowwise(x.len(), rows, cols, block)?;
-    anyhow::ensure!(
-        gamma.len() == cols && beta.len() == cols,
-        "affine params must have {cols} elements"
-    );
-    rowwise_parallel(x, rows, cols, block, cores, |chunk, nrows| {
-        native::layernorm(chunk, gamma, beta, nrows, cols, block, eps)
-    });
-    Ok(())
+    layernorm_pooled(x, gamma, beta, rows, cols, block, eps, &WorkerPool::new(cores)?)
 }
 
-/// Row-parallel numerically-stable softmax over a packed buffer: bitwise
-/// identical to [`native::softmax`] for any `cores`.
+/// Pooled numerically-stable softmax over a packed buffer: bitwise
+/// identical to [`native::softmax`] for any pool width.
+pub fn softmax_pooled(
+    x: &mut [f32],
+    rows: usize,
+    cols: usize,
+    block: usize,
+    pool: &WorkerPool,
+) -> Result<()> {
+    masked_softmax_pooled(x, None, 1.0, rows, cols, block, pool)
+}
+
+/// Row-parallel softmax on a transient pool (tests / ad-hoc).
 pub fn softmax(x: &mut [f32], rows: usize, cols: usize, block: usize, cores: usize) -> Result<()> {
     if cores <= 1 {
         return native::softmax(x, rows, cols, block);
     }
-    native::check_rowwise(x.len(), rows, cols, block)?;
-    rowwise_parallel(x, rows, cols, block, cores, |chunk, nrows| {
-        native::softmax(chunk, nrows, cols, block)
-    });
-    Ok(())
+    softmax_pooled(x, rows, cols, block, &WorkerPool::new(cores)?)
 }
 
-/// Row-parallel masked/scaled softmax: bitwise identical to
-/// [`native::masked_softmax`] for any `cores`, including its
+/// Pooled masked/scaled softmax (single buffer): bitwise identical to
+/// [`native::masked_softmax`] for any pool width, including its
 /// fully-masked-row (all-`-inf` → all-zero) convention. The mask indexes
 /// key positions (columns), so every row-chunk shares it read-only.
+#[allow(clippy::too_many_arguments)]
+pub fn masked_softmax_pooled(
+    x: &mut [f32],
+    mask: Option<&[f32]>,
+    scale: f32,
+    rows: usize,
+    cols: usize,
+    block: usize,
+    pool: &WorkerPool,
+) -> Result<()> {
+    if pool.workers() <= 1 {
+        return native::masked_softmax(x, mask, scale, rows, cols, block);
+    }
+    native::check_rowwise(x.len(), rows, cols, block)?;
+    if let Some(m) = mask {
+        ensure!(m.len() == cols, "mask has {} entries, want {cols}", m.len());
+    }
+    rowwise_pooled(x, None, rows, cols, block, pool, |chunk, _res, nrows| {
+        native::masked_softmax(chunk, mask, scale, nrows, cols, block)
+    })
+}
+
+/// Row-parallel masked softmax on a transient pool (tests / ad-hoc).
 #[allow(clippy::too_many_arguments)]
 pub fn masked_softmax(
     x: &mut [f32],
@@ -407,20 +1015,42 @@ pub fn masked_softmax(
     if cores <= 1 {
         return native::masked_softmax(x, mask, scale, rows, cols, block);
     }
-    native::check_rowwise(x.len(), rows, cols, block)?;
-    if let Some(m) = mask {
-        anyhow::ensure!(m.len() == cols, "mask has {} entries, want {cols}", m.len());
-    }
-    rowwise_parallel(x, rows, cols, block, cores, |chunk, nrows| {
-        native::masked_softmax(chunk, mask, scale, nrows, cols, block)
-    });
-    Ok(())
+    masked_softmax_pooled(x, mask, scale, rows, cols, block, &WorkerPool::new(cores)?)
 }
 
-/// Row-parallel fused residual add + LayerNorm: bitwise identical to
-/// [`native::add_norm`] for any `cores`. `x` and `res` are split along
-/// the same block-row boundaries, so each worker adds and normalizes
-/// whole rows with index-aligned residual chunks.
+/// Pooled fused residual add + LayerNorm: bitwise identical to
+/// [`native::add_norm`] for any pool width. `x` and `res` are split
+/// along the same block-row boundaries, so each worker adds and
+/// normalizes whole rows with index-aligned residual chunks.
+#[allow(clippy::too_many_arguments)]
+pub fn add_norm_pooled(
+    x: &mut [f32],
+    res: &[f32],
+    gamma: &[f32],
+    beta: &[f32],
+    rows: usize,
+    cols: usize,
+    block: usize,
+    eps: f32,
+    pool: &WorkerPool,
+) -> Result<()> {
+    if pool.workers() <= 1 {
+        return native::add_norm(x, res, gamma, beta, rows, cols, block, eps);
+    }
+    native::check_rowwise(x.len(), rows, cols, block)?;
+    ensure!(res.len() == x.len(), "residual has {} elements, x has {}", res.len(), x.len());
+    ensure!(
+        gamma.len() == cols && beta.len() == cols,
+        "affine params must have {cols} elements"
+    );
+    rowwise_pooled(x, Some(res), rows, cols, block, pool, |chunk, res_chunk, nrows| {
+        let res_chunk = res_chunk.expect("paired residual chunk");
+        native::add_norm(chunk, res_chunk, gamma, beta, nrows, cols, block, eps)
+    })
+}
+
+/// Row-parallel fused add + LayerNorm on a transient pool (tests /
+/// ad-hoc).
 #[allow(clippy::too_many_arguments)]
 pub fn add_norm(
     x: &mut [f32],
@@ -436,17 +1066,7 @@ pub fn add_norm(
     if cores <= 1 {
         return native::add_norm(x, res, gamma, beta, rows, cols, block, eps);
     }
-    native::check_rowwise(x.len(), rows, cols, block)?;
-    anyhow::ensure!(res.len() == x.len(), "residual has {} elements, x has {}", res.len(), x.len());
-    anyhow::ensure!(
-        gamma.len() == cols && beta.len() == cols,
-        "affine params must have {cols} elements"
-    );
-    rowwise_parallel_paired(x, Some(res), rows, cols, block, cores, |chunk, res_chunk, nrows| {
-        let res_chunk = res_chunk.expect("paired residual chunk");
-        native::add_norm(chunk, res_chunk, gamma, beta, nrows, cols, block, eps)
-    });
-    Ok(())
+    add_norm_pooled(x, res, gamma, beta, rows, cols, block, eps, &WorkerPool::new(cores)?)
 }
 
 #[cfg(test)]
@@ -510,5 +1130,72 @@ mod tests {
     #[test]
     fn available_cores_is_at_least_one() {
         assert!(available_cores() >= 1);
+    }
+
+    #[test]
+    fn pool_rejects_zero_workers() {
+        assert!(WorkerPool::new(0).is_err());
+    }
+
+    #[test]
+    fn one_worker_pool_runs_inline_without_threads() {
+        let pool = WorkerPool::new(1).unwrap();
+        assert_eq!(pool.workers(), 1);
+        let hits = AtomicUsize::new(0);
+        pool.run(&|w| {
+            assert_eq!(w, 0);
+            hits.fetch_add(1, Ordering::SeqCst);
+        })
+        .unwrap();
+        assert_eq!(hits.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn nested_run_executes_inline_instead_of_deadlocking() {
+        let pool = WorkerPool::new(3).unwrap();
+        let inner_hits = AtomicUsize::new(0);
+        pool.run(&|w| {
+            if w == 0 {
+                // Re-entering the pool from inside a task must not
+                // deadlock: the nested region runs inline.
+                pool.run(&|_| {
+                    inner_hits.fetch_add(1, Ordering::SeqCst);
+                })
+                .unwrap();
+            }
+        })
+        .unwrap();
+        assert_eq!(inner_hits.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn batched_gemm_with_fused_bias_matches_serial_kernel_sequence() {
+        use crate::util::XorShift64;
+        let (m, k, n, b) = (16usize, 16usize, 16usize, 8usize);
+        let mut rng = XorShift64::new(0xBA7C);
+        let mut a = vec![0.0f32; m * k];
+        let mut w0 = vec![0.0f32; k * n];
+        let mut w1 = vec![0.0f32; k * n];
+        let mut bias = vec![0.0f32; n];
+        rng.fill_f32(&mut a);
+        rng.fill_f32(&mut w0);
+        rng.fill_f32(&mut w1);
+        rng.fill_f32(&mut bias);
+        let tasks = [
+            GemmTask { a: &a, b: &w0, m, k, n, epilogue: Epilogue::Bias(&bias) },
+            GemmTask { a: &a, b: &w1, m, k, n, epilogue: Epilogue::BiasGelu(&bias) },
+        ];
+        let serial: Vec<Vec<f32>> =
+            tasks.iter().map(|t| gemm_task_serial(t, b).unwrap()).collect();
+        for cores in [2usize, 3, 8] {
+            let pool = WorkerPool::new(cores).unwrap();
+            let got = gemm_f32_batch(&tasks, b, &pool).unwrap();
+            for (t, (s, g)) in serial.iter().zip(&got).enumerate() {
+                assert!(
+                    s.iter().zip(g).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "task {t} diverged at {cores} workers"
+                );
+            }
+        }
     }
 }

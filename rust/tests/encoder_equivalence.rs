@@ -171,6 +171,32 @@ fn prop_packed_transpose_layout_roundtrip() {
     });
 }
 
+/// The persistent pool (ISSUE 4): a model built `with_cores(N)` must
+/// produce the same bits through its long-lived pool — reused across
+/// calls — as through a transient pool of another width, and as serial.
+#[test]
+fn persistent_pool_matches_transient_and_serial_bitwise() {
+    let mk = |cores: usize| {
+        NativeModel::new_encoder(32, 32, 2, 64, 2, 16, 0x9006)
+            .unwrap()
+            .with_mask(padding_mask(32, 8))
+            .unwrap()
+            .with_cores(cores)
+            .unwrap()
+    };
+    let pooled = mk(3);
+    let serial = mk(1);
+    let mut rng = XorShift64::new(0x9007);
+    let x = Tensor::new(pooled.in_shape(), rand_vec(&mut rng, 32 * 32));
+    let base = serial.forward(&x).unwrap();
+    for round in 0..3 {
+        let y = pooled.forward(&x).unwrap();
+        assert_bits_eq(&base.data, &y.data, &format!("persistent pool round {round}"));
+    }
+    let t = pooled.forward_with_cores(&x, 5).unwrap();
+    assert_bits_eq(&base.data, &t.data, "transient 5-worker pool vs serial");
+}
+
 /// An encoder model served through the dynamic batcher: every response
 /// must match the reference forward of its own input, proving the
 /// attention pipeline survives batching/padding/splitting.

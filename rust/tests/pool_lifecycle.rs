@@ -1,0 +1,169 @@
+//! Lifecycle of the persistent worker pool (`WorkerPool`): reuse across
+//! many forwards stays bitwise identical to serial and spawns nothing,
+//! drop joins every thread (no leak), a panicking task surfaces as an
+//! error (never a hang), and a serve-loop under load creates no threads
+//! beyond the pool its model was built with.
+//!
+//! The spawn/live counters are process-global, so every test in this
+//! binary serializes on [`counter_lock`] (CI additionally runs the file
+//! under `--test-threads=1` to pin the no-leak property end to end).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use bwma::coordinator::server::BatchRunner;
+use bwma::coordinator::{Server, ServerConfig};
+use bwma::runtime::parallel::WorkerPool;
+use bwma::runtime::{NativeModel, Tensor};
+use bwma::util::XorShift64;
+
+static COUNTER_LOCK: Mutex<()> = Mutex::new(());
+
+/// Serialize counter-sensitive tests; a poisoned lock (failed sibling
+/// test) must not cascade.
+fn counter_lock() -> MutexGuard<'static, ()> {
+    COUNTER_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn rand_tensor(rng: &mut XorShift64, shape: Vec<usize>) -> Tensor {
+    let mut data = vec![0.0f32; shape.iter().product()];
+    rng.fill_f32(&mut data);
+    Tensor::new(shape, data)
+}
+
+fn assert_bits_eq(serial: &[f32], pooled: &[f32], what: &str) {
+    assert_eq!(serial.len(), pooled.len(), "{what}: length");
+    for (i, (s, p)) in serial.iter().zip(pooled).enumerate() {
+        assert_eq!(
+            s.to_bits(),
+            p.to_bits(),
+            "{what}: byte divergence at element {i} ({s:?} vs {p:?})"
+        );
+    }
+}
+
+/// Pool reuse: ≥ 100 consecutive forwards through one persistent pool
+/// are bitwise identical to the serial forward — and spawn no threads
+/// after the pool is built.
+#[test]
+fn pool_reuse_across_100_forwards_is_bitwise_serial_and_spawn_free() {
+    let _g = counter_lock();
+    let model = NativeModel::new_encoder(32, 32, 2, 64, 1, 16, 0x9001)
+        .unwrap()
+        .with_cores(3)
+        .unwrap();
+    let mut rng = XorShift64::new(0x9002);
+    let x = rand_tensor(&mut rng, vec![32, 32]);
+    let serial = model.forward_with_cores(&x, 1).unwrap();
+    let spawned = WorkerPool::threads_spawned_total();
+    for i in 0..100 {
+        let y = model.forward(&x).unwrap();
+        assert_eq!(serial.shape, y.shape, "iteration {i}");
+        assert_bits_eq(&serial.data, &y.data, &format!("forward iteration {i}"));
+    }
+    assert_eq!(
+        WorkerPool::threads_spawned_total(),
+        spawned,
+        "100 pooled forwards must not spawn a single new thread"
+    );
+}
+
+/// Dropping a pool joins all its workers: the live-thread counter
+/// returns to its prior value (no leak; CI re-runs this binary with
+/// `--test-threads=1` so nothing else can touch the counter mid-test).
+#[test]
+fn dropping_a_pool_joins_every_worker() {
+    let _g = counter_lock();
+    let live = WorkerPool::live_worker_threads();
+    let pool = WorkerPool::new(5).unwrap();
+    assert_eq!(WorkerPool::live_worker_threads(), live + 4, "N workers = N-1 threads + caller");
+    let hits: Vec<AtomicUsize> = (0..5).map(|_| AtomicUsize::new(0)).collect();
+    pool.run(&|w| {
+        hits[w].fetch_add(1, Ordering::SeqCst);
+    })
+    .unwrap();
+    assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1), "each index runs exactly once");
+    drop(pool);
+    assert_eq!(WorkerPool::live_worker_threads(), live, "drop must join all workers");
+}
+
+/// `forward_with_cores` on a width other than the persistent pool's
+/// builds a transient pool for that call — which must also be joined by
+/// the time the call returns the tensor and the pool is dropped.
+#[test]
+fn transient_forward_pools_do_not_leak_threads() {
+    let _g = counter_lock();
+    let live = WorkerPool::live_worker_threads();
+    let model = NativeModel::new(32, 32, 64, 16, 0x9003).unwrap();
+    let x = Tensor::zeros(vec![32, 32]);
+    for cores in [2usize, 3, 8] {
+        model.forward_with_cores(&x, cores).unwrap();
+        assert_eq!(
+            WorkerPool::live_worker_threads(),
+            live,
+            "transient {cores}-worker pool must be joined when the forward returns"
+        );
+    }
+}
+
+/// A panic inside a pool task — in a background worker or in the
+/// caller's worker-0 share — surfaces as an `Err`, never a hang, and
+/// the pool stays serviceable afterwards.
+#[test]
+fn panicking_task_surfaces_as_error_not_hang() {
+    let _g = counter_lock();
+    let pool = WorkerPool::new(4).unwrap();
+    let err = pool
+        .run(&|w| {
+            if w == 2 {
+                panic!("boom in worker {w}");
+            }
+        })
+        .expect_err("background worker panic must become an error");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("panic"), "error should mention the panic: {msg}");
+    assert!(pool.run(&|w| if w == 0 { panic!("boom in caller") }).is_err());
+    let sum = AtomicUsize::new(0);
+    pool.run(&|w| {
+        sum.fetch_add(w + 1, Ordering::SeqCst);
+    })
+    .unwrap();
+    assert_eq!(sum.load(Ordering::SeqCst), 1 + 2 + 3 + 4, "pool serviceable after a panic");
+}
+
+/// Regression (ISSUE 4): the batch dispatch used to open an ad-hoc
+/// `thread::scope` per batch (`coordinator/server.rs`); it must route
+/// through the model's persistent pool instead — a serve-loop under
+/// load creates no threads beyond the pool built at model construction.
+#[test]
+fn serve_loop_under_load_creates_no_threads_beyond_the_pool() {
+    let _g = counter_lock();
+    let model =
+        Arc::new(NativeModel::new(32, 32, 64, 16, 0x9004).unwrap().with_cores(2).unwrap());
+    let in_shape = model.in_shape();
+    let out_shape = model.out_shape();
+    let (model2, in2) = (model.clone(), in_shape.clone());
+    let server = Server::start(ServerConfig::default(), move || {
+        let mut variants: BTreeMap<usize, Box<dyn BatchRunner>> = BTreeMap::new();
+        for bsz in [1usize, 2, 4, 8] {
+            variants.insert(bsz, Box::new(model2.clone()));
+        }
+        Ok((variants, in2, out_shape))
+    })
+    .unwrap();
+    let spawned = WorkerPool::threads_spawned_total();
+    let mut rng = XorShift64::new(0x9005);
+    let rxs: Vec<_> =
+        (0..48).map(|_| server.submit(rand_tensor(&mut rng, in_shape.clone()))).collect();
+    for rx in rxs {
+        rx.recv().unwrap().unwrap();
+    }
+    let metrics = server.shutdown().unwrap();
+    assert_eq!(metrics.requests, 48);
+    assert_eq!(
+        WorkerPool::threads_spawned_total(),
+        spawned,
+        "batch dispatch must reuse the model's pool, not spawn per batch"
+    );
+}
