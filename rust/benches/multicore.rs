@@ -5,10 +5,13 @@
 //! track the measured curve against the paper's.
 //!
 //! Each core count runs on a **persistent worker pool** (built once via
-//! `with_cores`, reused across every sample — the serving
-//! configuration). Also asserts the determinism contract while it
-//! measures: every parallel forward is bitwise identical to the serial
-//! one.
+//! `with_cores`, reused across every sample) and a reused workspace
+//! lane, with the output landing in a preallocated tensor
+//! (`forward_into`) — the serving configuration. The bench installs the
+//! counting global allocator and asserts `steady_allocs = 0` across
+//! warm forwards at every width (alongside the determinism contract:
+//! every parallel forward is bitwise identical to the serial one), so
+//! the timed samples measure kernels, not allocator churn.
 //!
 //! Run: `cargo bench --bench multicore [-- --cores N]`
 //! (`--cores N` measures just N workers against the serial baseline;
@@ -16,7 +19,11 @@
 //! Greppable summary: lines starting `multicore-speedup`.
 
 use bwma::runtime::{available_cores, NativeModel, Tensor};
+use bwma::util::alloc::{heap_allocs_total, CountingAllocator};
 use bwma::util::{bench, XorShift64};
+
+#[global_allocator]
+static ALLOC: CountingAllocator = CountingAllocator;
 
 fn core_counts() -> Vec<usize> {
     let args: Vec<String> = std::env::args().collect();
@@ -37,6 +44,22 @@ fn core_counts() -> Vec<usize> {
     counts
 }
 
+/// Assert zero heap allocations across `iters` warm forwards, returning
+/// the observed delta (printed as `steady_allocs`).
+fn assert_steady_allocs(m: &NativeModel, x: &Tensor, out: &mut Tensor, iters: usize) -> usize {
+    // Warm-up: lane creation, page faults, first-use paths.
+    for _ in 0..2 {
+        m.forward_into(x, out).unwrap();
+    }
+    let before = heap_allocs_total();
+    for _ in 0..iters {
+        m.forward_into(x, out).unwrap();
+    }
+    let allocs = heap_allocs_total() - before;
+    assert_eq!(allocs, 0, "warm forwards must not allocate at {} cores", m.cores());
+    allocs
+}
+
 fn main() {
     // BERT-tiny FFN block.
     let (seq, d_model, d_ff, block) = (128usize, 128usize, 512usize, 16usize);
@@ -45,6 +68,7 @@ fn main() {
     let mut data = vec![0.0f32; seq * d_model];
     rng.fill_f32(&mut data);
     let x = Tensor::new(vec![seq, d_model], data);
+    let mut out = Tensor::zeros(vec![seq, d_model]);
 
     println!(
         "# multicore: BERT-tiny FFN (seq {seq}, d_model {d_model}, d_ff {d_ff}, block {block}); \
@@ -52,13 +76,15 @@ fn main() {
         available_cores()
     );
 
+    // The base model's persistent pool is width 1 — the serial baseline.
+    let steady = assert_steady_allocs(&model, &x, &mut out, 10);
     let serial = bench::bench("multicore/ffn-forward-1core", 2, 7, || {
-        model.forward_with_cores(&x, 1).unwrap()
+        model.forward_into(&x, &mut out).unwrap()
     });
     let baseline = serial.median();
     let expect = model.forward_with_cores(&x, 1).unwrap();
 
-    println!("multicore-speedup cores=1 median={baseline:?} speedup=1.00");
+    println!("multicore-speedup cores=1 median={baseline:?} speedup=1.00 steady_allocs={steady}");
     for cores in core_counts() {
         // Persistent pool for this width — built once, reused by every
         // sample below.
@@ -70,12 +96,13 @@ fn main() {
             .zip(&got.data)
             .all(|(a, b)| a.to_bits() == b.to_bits());
         assert!(bitwise, "parallel forward at {cores} cores diverged from serial");
+        let steady = assert_steady_allocs(&m, &x, &mut out, 10);
         let s = bench::bench(&format!("multicore/ffn-forward-{cores}core"), 2, 7, || {
-            m.forward(&x).unwrap()
+            m.forward_into(&x, &mut out).unwrap()
         });
         let speedup = baseline.as_secs_f64() / s.median().as_secs_f64();
         println!(
-            "multicore-speedup cores={cores} median={:?} speedup={speedup:.2}",
+            "multicore-speedup cores={cores} median={:?} speedup={speedup:.2} steady_allocs={steady}",
             s.median()
         );
     }

@@ -10,21 +10,24 @@
 //! outputs back per request. The native executor dispatches the batch's
 //! sequences across the model's **persistent** multi-core worker pool
 //! ([`crate::runtime::parallel::WorkerPool`]) with bitwise-deterministic
-//! results — serving in steady state spawns no threads at all.
+//! results — serving in steady state spawns no threads at all, and each
+//! concurrent sequence checks a preplanned workspace lane
+//! ([`crate::runtime::EncoderWorkspace`]) out of the model's shared
+//! stack instead of allocating its intermediates per request.
 //!
 //! Executor handles may not be `Send` (PJRT's aren't), so the executor
 //! thread *owns* them: the caller passes a factory that loads/builds the
 //! model inside the thread. Everything crossing threads is plain data.
 
 use std::collections::BTreeMap;
-use std::sync::{mpsc, Mutex};
+use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context, Result};
 
 #[cfg(feature = "pjrt")]
 use crate::runtime::Executable;
-use crate::runtime::{parallel, NativeModel, Tensor};
+use crate::runtime::{NativeModel, Tensor};
 
 use super::metrics::ServerMetrics;
 
@@ -36,80 +39,40 @@ pub trait BatchRunner {
     fn run(&self, stacked: Tensor, out_shape: Vec<usize>) -> Result<Tensor>;
 }
 
-/// The default executor: run the sequences of the stacked batch through
-/// the blocked-kernel forward pass on the model's **persistent worker
-/// pool** ([`NativeModel::pool`]) — the executor never spawns threads of
-/// its own (`tests/pool_lifecycle.rs` pins the spawn count under a
-/// serve-loop). Shape errors are returned as `Err` (never panicked): a
-/// malformed request must fail itself, not kill the executor thread for
-/// everyone else.
+/// The default executor: hand the stacked batch to
+/// [`NativeModel::run_batch_into`], which forwards every sequence on the
+/// model's **persistent worker pool** with per-worker **workspace-lane
+/// checkout** — the executor never spawns threads of its own
+/// (`tests/pool_lifecycle.rs` pins the spawn count under a serve-loop)
+/// and, once warm, its per-batch heap traffic is exactly one output
+/// buffer (`tests/alloc_steady_state.rs` pins the inner loop at zero).
+/// Shape errors are returned as `Err` (never panicked): a malformed
+/// request must fail itself, not kill the executor thread for everyone
+/// else.
 ///
-/// Parallel policy: a batch *smaller than the pool* (including the
-/// single-sequence case) runs its sequences one after another, each
-/// fanning its phase grids across the full pool
-/// ([`NativeModel::forward`]) — so a 2-sequence batch on an 8-worker
-/// pool still keeps all 8 workers busy. A batch at least as wide as the
-/// pool makes the sequences themselves the work items of ONE pool
-/// region — each worker forwards a contiguous chunk of sequences with
-/// the serial kernels (no nested parallel regions, no threads beyond
-/// the pool). Either way the output is bitwise identical to the serial
-/// walk — sequences are independent, each is computed by exactly one
-/// worker, and the kernels' accumulation order is core-count-invariant.
+/// Parallel policy (documented on [`NativeModel::run_batch_into`]): a
+/// batch smaller than the pool runs its sequences one after another,
+/// each fanning its phase grids across the full pool; a batch at least
+/// as wide as the pool makes the sequences themselves the work items of
+/// ONE pool region. Either way the output is bitwise identical to the
+/// serial walk.
 impl BatchRunner for NativeModel {
     fn run(&self, stacked: Tensor, out_shape: Vec<usize>) -> Result<Tensor> {
         anyhow::ensure!(stacked.shape.len() == 3, "stacked batch must be [batch, seq, d]");
         let bsz = stacked.shape[0];
-        let per_seq: usize = stacked.shape[1..].iter().product();
         anyhow::ensure!(
             stacked.shape[1..] == self.in_shape()[..],
             "request shape {:?} does not match model input {:?}",
             &stacked.shape[1..],
             self.in_shape()
         );
-        let pool = self.pool();
-        let out = if pool.workers() <= 1 || bsz < pool.workers() {
-            let mut out = Vec::with_capacity(bsz * per_seq);
-            for s in 0..bsz {
-                let x = Tensor::new(
-                    self.in_shape(),
-                    stacked.data[s * per_seq..(s + 1) * per_seq].to_vec(),
-                );
-                out.extend_from_slice(&self.forward(&x)?.data);
-            }
-            out
-        } else {
-            let ranges = parallel::split_even(bsz, pool.workers());
-            let slots: Vec<Mutex<Result<Vec<f32>>>> =
-                ranges.iter().map(|_| Mutex::new(Ok(Vec::new()))).collect();
-            pool.run(&|w| {
-                let mut local = Vec::with_capacity(ranges[w].len() * per_seq);
-                let mut result = Ok(());
-                for s in ranges[w].clone() {
-                    let x = Tensor::new(
-                        self.in_shape(),
-                        stacked.data[s * per_seq..(s + 1) * per_seq].to_vec(),
-                    );
-                    match self.forward_with_cores(&x, 1) {
-                        Ok(y) => local.extend_from_slice(&y.data),
-                        Err(e) => {
-                            result = Err(e);
-                            break;
-                        }
-                    }
-                }
-                *slots[w].lock().unwrap() = result.map(|()| local);
-            })?;
-            let mut out = Vec::with_capacity(bsz * per_seq);
-            for slot in slots {
-                out.extend_from_slice(&slot.into_inner().unwrap()?);
-            }
-            out
-        };
         anyhow::ensure!(
-            out.len() == out_shape.iter().product::<usize>(),
-            "forward produced {} elements, caller expected shape {out_shape:?}",
-            out.len()
+            stacked.len() == out_shape.iter().product::<usize>(),
+            "stacked batch has {} elements, caller expected shape {out_shape:?}",
+            stacked.len()
         );
+        let mut out = vec![0.0f32; stacked.len()];
+        self.run_batch_into(&stacked.data, bsz, &mut out)?;
         Ok(Tensor::new(out_shape, out))
     }
 }

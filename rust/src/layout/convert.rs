@@ -30,6 +30,31 @@ pub fn bwma_to_rwma<T: Copy>(src: &[T], rows: usize, cols: usize, block: usize) 
     permute(src, rows, cols, block, Layout::Bwma, Layout::Rwma)
 }
 
+/// [`rwma_to_bwma`] into a caller-provided buffer — the allocation-free
+/// boundary conversion the serving hot path uses (`dst` is a reused
+/// workspace slice; every element is overwritten).
+pub fn rwma_to_bwma_into<T: Copy>(
+    src: &[T],
+    dst: &mut [T],
+    rows: usize,
+    cols: usize,
+    block: usize,
+) {
+    permute_into(src, dst, rows, cols, block, Layout::Rwma, Layout::Bwma);
+}
+
+/// [`bwma_to_rwma`] into a caller-provided buffer (allocation-free).
+pub fn bwma_to_rwma_into<T: Copy>(
+    src: &[T],
+    dst: &mut [T],
+    rows: usize,
+    cols: usize,
+    block: usize,
+) {
+    permute_into(src, dst, rows, cols, block, Layout::Bwma, Layout::Rwma);
+}
+
+/// Allocating single-pass permute (push into a fresh `Vec`).
 fn permute<T: Copy>(
     src: &[T],
     rows: usize,
@@ -50,6 +75,26 @@ fn permute<T: Copy>(
         out.push(src[s.elem_index(r, c)]);
     }
     out
+}
+
+fn permute_into<T: Copy>(
+    src: &[T],
+    dst: &mut [T],
+    rows: usize,
+    cols: usize,
+    block: usize,
+    from: Layout,
+    to: Layout,
+) {
+    assert_eq!(src.len(), rows * cols, "buffer/shape mismatch");
+    assert_eq!(dst.len(), src.len(), "destination/shape mismatch");
+    let s = MatrixDesc::new(0, rows, cols, 1, block, from);
+    let d = MatrixDesc::new(0, rows, cols, 1, block, to);
+    // Same destination-linear walk as `permute`, into a reused buffer.
+    for (idx, v) in dst.iter_mut().enumerate() {
+        let (r, c) = d.elem_coords(idx);
+        *v = src[s.elem_index(r, c)];
+    }
 }
 
 /// Access counts of converting one `rows×cols` matrix (each element is one

@@ -50,7 +50,10 @@ mod convert;
 mod tile;
 
 pub use address::{AddressMap, Layout, MatrixDesc};
-pub use convert::{bwma_to_rwma, rwma_to_bwma, conversion_access_count, ConvertStats};
+pub use convert::{
+    bwma_to_rwma, bwma_to_rwma_into, conversion_access_count, rwma_to_bwma, rwma_to_bwma_into,
+    ConvertStats,
+};
 pub use tile::{tile_spans, TileIter, TileRef, TileWalk};
 
 #[cfg(test)]

@@ -23,11 +23,16 @@
 //!    ([`runtime::parallel`]) fans the same kernels over a **persistent
 //!    worker pool** ([`runtime::WorkerPool`] — built once per model, one
 //!    wake-up per phase, every attention head of a phase in one parallel
-//!    region) with bitwise-identical results for any core count. The
-//!    masked softmax defines fully-masked rows (all `-inf`) as all-zero
-//!    — the convention shared by blocked, parallel, and reference
-//!    kernels. The execution architecture (packing → kernel grid → pool
-//!    ownership → phase DAG) is documented in `rust/DESIGN.md`.
+//!    region) with bitwise-identical results for any core count, and a
+//!    preplanned workspace ([`runtime::workspace`] — every per-forward
+//!    buffer sized once from the model dims, reused across layers and
+//!    forwards) makes a warm forward allocation-free
+//!    ([`runtime::NativeModel::forward_into`]). The masked softmax
+//!    defines fully-masked rows (all `-inf`) as all-zero, and the
+//!    blocked GEMM propagates `0 × NaN`/`0 × ∞` — conventions shared by
+//!    blocked, parallel, and reference kernels. The execution
+//!    architecture (packing → kernel grid → pool ownership → workspace
+//!    lifetime → phase DAG) is documented in `rust/DESIGN.md`.
 //!    With `--features pjrt`, AOT-compiled JAX/Pallas artifacts (built
 //!    by `python/compile/`) execute through PJRT instead;
 //! 3. **Serving** — a request router + dynamic batcher ([`coordinator`])

@@ -10,7 +10,10 @@
 //!   out of the box, no Python, no artifacts, no external dependencies.
 //!   [`parallel`] fans the same kernels over a **persistent** multi-core
 //!   worker pool ([`WorkerPool`], built once per model, one wake-up per
-//!   phase) with bitwise-identical results (`--cores`).
+//!   phase) with bitwise-identical results (`--cores`), and every
+//!   forward runs in a reused [`workspace`] lane ([`EncoderWorkspace`],
+//!   sized once from the model dims) — a warm
+//!   [`NativeModel::forward_into`] performs zero heap allocations.
 //! * **PJRT** (`--features pjrt`) — load AOT-compiled HLO-text artifacts
 //!   (built by `python/compile/aot.py`) and execute them through the
 //!   `xla` crate's PJRT client: `PjRtClient::cpu()` →
@@ -29,6 +32,7 @@ pub mod native;
 pub mod parallel;
 pub mod quant;
 mod tensor;
+pub mod workspace;
 
 pub use artifacts::{artifacts_dir, GoldenSet};
 #[cfg(feature = "pjrt")]
@@ -40,3 +44,4 @@ pub use native::{
 pub use parallel::{available_cores, WorkerPool};
 pub use quant::{qgemm, QTensor};
 pub use tensor::Tensor;
+pub use workspace::EncoderWorkspace;

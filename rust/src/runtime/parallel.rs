@@ -21,19 +21,37 @@
 //!
 //! **Partitioning.** The *work-item grid* of a parallel region is the
 //! flat list of output tiles of every independent GEMM in the phase
-//! (e.g. all attention heads' projections — see [`gemm_f32_batch`]), or
-//! the block-rows of every buffer for row-wise kernels. Items are
-//! enumerated in the serial kernels' order (task-major, block-column
-//! -major within a task — the order [`GridPartition`] describes) and cut
-//! by [`split_even`] into per-worker chunks whose sizes differ by at
-//! most one. A worker therefore owns (nearly) whole block-columns, so
-//! under the weight-stationary TiC-SAT schedule each worker keeps its
-//! `B(p, j)` slice hot — the per-core arrangement the simulator assigns.
-//! Row-wise kernels ([`layernorm_pooled`]/[`softmax_pooled`]/
+//! (e.g. all attention heads' projections — see
+//! [`gemm_f32_batch_into`]), or the block-rows of every buffer for
+//! row-wise kernels. Items are enumerated in the serial kernels' order
+//! (task-major, block-column-major within a task — the order
+//! [`GridPartition`] describes) and cut by [`split_even`] (in closed
+//! form, via the internal `chunk_range`) into per-worker chunks whose
+//! sizes differ by at most one. A worker
+//! therefore owns (nearly) whole block-columns, so under the
+//! weight-stationary TiC-SAT schedule each worker keeps its `B(p, j)`
+//! slice hot — the per-core arrangement the simulator assigns. Row-wise
+//! kernels ([`layernorm_pooled`]/[`softmax_pooled`]/
 //! [`masked_softmax_pooled`]/[`add_norm_pooled`]) split along
 //! *block-rows* instead, because under BWMA a block-row of tiles is one
-//! contiguous memory range: workers get disjoint `&mut` chunks with no
-//! copying at all.
+//! contiguous memory range: workers get disjoint chunks with no copying
+//! at all.
+//!
+//! **Zero steady-state allocations.** Every hot-path kernel here writes
+//! each finished output unit **directly** into its destination burst
+//! (each tile/row is owned by exactly one worker, so the writes are
+//! disjoint — the internal `SharedSlice` hands workers non-overlapping
+//! sub-slices of one `&mut` buffer), and per-worker item ranges are
+//! computed in closed form (`chunk_range`) instead of materialized.
+//! Together with
+//! the caller threading preplanned workspace slices
+//! ([`super::workspace`]) through the `_into` entry points, a warm
+//! forward performs **zero** heap allocations
+//! (`tests/alloc_steady_state.rs` pins this with the counting allocator
+//! in [`crate::util::alloc`]). The earlier design accumulated tiles in
+//! per-worker local buffers and scatter-copied after the barrier; the
+//! direct-write discipline removes both the allocation and the
+//! `O(m·n)` copy without touching the float-op order.
 //!
 //! **Determinism.** Every output tile (and every logical row) is produced
 //! by exactly one worker, which reduces over `p` (or over the row) in
@@ -72,16 +90,59 @@ pub fn available_cores() -> usize {
 /// `workers` is clamped to at least 1; chunks beyond `n` are empty.
 pub fn split_even(n: usize, workers: usize) -> Vec<Range<usize>> {
     let workers = workers.max(1);
+    (0..workers).map(|w| chunk_range(n, workers, w)).collect()
+}
+
+/// Worker `w`'s chunk of [`split_even`]`(n, workers)`, in closed form —
+/// the allocation-free item partition the hot-path kernels use (every
+/// worker computes its own range; nothing is materialized).
+pub(crate) fn chunk_range(n: usize, workers: usize, w: usize) -> Range<usize> {
+    debug_assert!(w < workers && workers >= 1);
     let base = n / workers;
     let extra = n % workers;
-    let mut out = Vec::with_capacity(workers);
-    let mut start = 0;
-    for w in 0..workers {
-        let len = base + usize::from(w < extra);
-        out.push(start..start + len);
-        start += len;
+    let start = w * base + w.min(extra);
+    start..start + base + usize::from(w < extra)
+}
+
+/// A lifetime-bound shared view of one `&mut [f32]` output buffer that
+/// workers carve **disjoint** sub-ranges out of — the direct-write
+/// mechanism behind the zero-allocation kernels. Construction takes the
+/// exclusive borrow, so no other access to the buffer can exist while
+/// the view is alive; every `range_mut` call must honor the ownership
+/// contract (each output tile / block-row chunk is produced by exactly
+/// one worker), which is what makes the disjointness sound.
+pub(crate) struct SharedSlice<'a> {
+    ptr: *mut f32,
+    len: usize,
+    /// Holds the exclusive borrow for the view's whole lifetime, so the
+    /// compiler rejects any other access to the buffer while workers can
+    /// still write through the pointer.
+    _borrow: std::marker::PhantomData<&'a mut [f32]>,
+}
+
+// SAFETY: the pointer is only dereferenced through `range_mut`, whose
+// callers guarantee disjoint ranges across workers (one writer per
+// output unit — the module's ownership contract), and the pool's
+// completion barrier keeps the underlying borrow alive until every
+// worker is done.
+unsafe impl Send for SharedSlice<'_> {}
+unsafe impl Sync for SharedSlice<'_> {}
+
+impl<'a> SharedSlice<'a> {
+    pub(crate) fn new(s: &'a mut [f32]) -> Self {
+        Self { ptr: s.as_mut_ptr(), len: s.len(), _borrow: std::marker::PhantomData }
     }
-    out
+
+    /// A mutable view of `r`.
+    ///
+    /// # Safety
+    /// `r` must be in bounds and disjoint from every other range handed
+    /// out while the returned borrow is alive.
+    #[allow(clippy::mut_from_ref)]
+    pub(crate) unsafe fn range_mut(&self, r: Range<usize>) -> &mut [f32] {
+        debug_assert!(r.start <= r.end && r.end <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(r.start), r.end - r.start)
+    }
 }
 
 /// Static assignment of a `block_rows × block_cols` output tile grid to
@@ -442,10 +503,12 @@ pub enum Epilogue<'a> {
 
 /// One GEMM of a phase-batched parallel region: `C[m,n] = A[m,k] ×
 /// B[k,n]` over packed buffers, plus an optional fused [`Epilogue`].
-/// All tasks of a batch share the block size and together form a single
-/// work-item grid (`Σ` output tiles) fanned over the pool — this is how
-/// `encoder_layer_forward` turns "one pool dispatch per head-kernel"
-/// into "one dispatch per phase" (heads × tiles as the grid).
+/// All tasks of a batch share one shape and block size and together form
+/// a single work-item grid (`Σ` output tiles) fanned over the pool —
+/// this is how `encoder_layer_forward` turns "one pool dispatch per
+/// head-kernel" into "one dispatch per phase" (heads × tiles as the
+/// grid).
+#[derive(Clone, Copy)]
 pub struct GemmTask<'a> {
     pub a: &'a [f32],
     pub b: &'a [f32],
@@ -453,18 +516,6 @@ pub struct GemmTask<'a> {
     pub k: usize,
     pub n: usize,
     pub epilogue: Epilogue<'a>,
-}
-
-/// Validate one task and return its operand descriptors.
-fn task_descs(t: &GemmTask, block: usize) -> Result<(MatrixDesc, MatrixDesc)> {
-    native::check_gemm_dims(t.m, t.k, t.n, block, t.a.len(), t.b.len())?;
-    match t.epilogue {
-        Epilogue::None => {}
-        Epilogue::Bias(bias) | Epilogue::BiasGelu(bias) => {
-            ensure!(bias.len() == t.n, "bias has {} elements, want {}", bias.len(), t.n);
-        }
-    }
-    Ok((native::packed_desc(t.m, t.k, block), native::packed_desc(t.k, t.n, block)))
 }
 
 /// Apply a task's epilogue to one finished `block × block` output tile
@@ -490,224 +541,161 @@ fn apply_epilogue(e: Epilogue, col0: usize, ct: &mut [f32], block: usize) {
     }
 }
 
-/// Serial reference for one task: the exact kernel sequence the fused
-/// parallel path must match bitwise (GEMM, then the element-wise
-/// epilogue pass).
-fn gemm_task_serial(t: &GemmTask, block: usize) -> Result<Vec<f32>> {
-    let mut c = native::gemm_f32(t.a, t.b, t.m, t.k, t.n, block)?;
-    match t.epilogue {
-        Epilogue::None => {}
-        Epilogue::Bias(bias) => native::bias_add(&mut c, bias, t.m, t.n, block)?,
-        Epilogue::BiasGelu(bias) => native::bias_gelu(&mut c, bias, t.m, t.n, block)?,
-    }
-    Ok(c)
-}
-
-/// Compute every task's output tiles into per-worker local buffers.
-/// Returns the flat item list (task-major, block-column-major within a
-/// task — the serial enumeration), the per-worker item ranges, and the
-/// per-worker tile buffers (tiles in item order).
-#[allow(clippy::type_complexity)]
-fn gemm_batch_locals(
-    tasks: &[GemmTask],
+/// Run `ntasks` same-shaped GEMMs (+ fused epilogues) as ONE parallel
+/// region, each finished tile written **directly** into the shared
+/// backing buffer `c` through its task's destination descriptor — a
+/// plain packed matrix at an element offset (`base`, in element units:
+/// workspace arenas), or a column-slice view (`MatrixDesc::col_view`:
+/// attention heads targeting their slice of the concatenated output, no
+/// copy-concat). Tasks and destinations are produced on demand by the
+/// `task`/`dst` closures, so nothing is materialized: a warm call
+/// performs **zero** heap allocations.
+///
+/// Bitwise identical to running the serial kernel
+/// ([`native::gemm_f32_into`]) plus the serial bias pass per task in
+/// order, for any pool width: each output tile is zeroed and reduced
+/// over `p` in the serial order by exactly one worker, and the epilogue
+/// performs the same per-element ops as the serial bias kernels. The
+/// caller guarantees the destination descriptors are disjoint; every
+/// destination tile is then written by exactly one worker.
+pub fn gemm_f32_batch_into<'a>(
+    ntasks: usize,
+    task: &(dyn Fn(usize) -> GemmTask<'a> + Sync),
+    c: &mut [f32],
+    dst: &(dyn Fn(usize) -> MatrixDesc + Sync),
     block: usize,
     pool: &WorkerPool,
-) -> Result<(Vec<(usize, TileRef)>, Vec<Range<usize>>, Vec<Vec<f32>>)> {
-    let bb = block * block;
-    let mut descs = Vec::with_capacity(tasks.len());
-    let mut items = Vec::new();
-    for (t, task) in tasks.iter().enumerate() {
-        let (da, db) = task_descs(task, block)?;
-        for j in 0..db.block_cols() {
-            for i in 0..da.block_rows() {
-                items.push((t, TileRef { block_row: i, block_col: j }));
-            }
-        }
-        descs.push((da, db));
+) -> Result<()> {
+    if ntasks == 0 {
+        return Ok(());
     }
-    let ranges = split_even(items.len(), pool.workers());
-    let locals: Vec<Mutex<Vec<f32>>> =
-        ranges.iter().map(|r| Mutex::new(vec![0.0f32; r.len() * bb])).collect();
+    let shape = task(0);
+    let (m, k, n) = (shape.m, shape.k, shape.n);
+    // Validate every task BEFORE any packed descriptor is built —
+    // `MatrixDesc` asserts its invariants, so bad caller dims must
+    // surface as an `Err`, not a panic.
+    for t in 0..ntasks {
+        let ti = task(t);
+        ensure!(
+            ti.m == m && ti.k == k && ti.n == n,
+            "task {t} is {}x{}x{}, batched GEMM tasks must all be {m}x{k}x{n}",
+            ti.m,
+            ti.k,
+            ti.n
+        );
+        native::check_gemm_dims(m, k, n, block, ti.a.len(), ti.b.len())?;
+        if let Epilogue::Bias(bias) | Epilogue::BiasGelu(bias) = ti.epilogue {
+            ensure!(bias.len() == n, "task {t}: bias has {} elements, want {n}", bias.len());
+        }
+        native::check_gemm_dst(c.len(), &dst(t), m, n, block)?;
+    }
+    let da = native::packed_desc(m, k, block);
+    let db = native::packed_desc(k, n, block);
+    let (bm, kb) = (m / block, k / block);
+    let tiles_per = bm * (n / block);
+    let total = ntasks * tiles_per;
+    let workers = pool.workers();
+    let shared = SharedSlice::new(c);
     pool.run(&|w| {
-        let mut buf = locals[w].lock().unwrap();
-        for (slot, idx) in ranges[w].clone().enumerate() {
-            let (t, tile) = items[idx];
-            let task = &tasks[t];
-            let (da, db) = &descs[t];
-            let ct = &mut buf[slot * bb..(slot + 1) * bb];
-            for p in 0..da.block_cols() {
-                let at = &task.a[native::tile_range(da, tile.block_row, p)];
-                let bt = &task.b[native::tile_range(db, p, tile.block_col)];
+        for idx in chunk_range(total, workers, w) {
+            let (t, r) = (idx / tiles_per, idx % tiles_per);
+            // Task-major, block-column-major within a task — the serial
+            // enumeration ([`GridPartition`]'s order).
+            let (block_col, block_row) = (r / bm, r % bm);
+            let ti = task(t);
+            let dc = dst(t);
+            // SAFETY: item `idx` (→ tile `(t, block_row, block_col)`) is
+            // owned by exactly one worker (`chunk_range` partitions
+            // `0..total`), destination descriptors are caller-guaranteed
+            // disjoint across tasks, and distinct tiles of one packed
+            // destination occupy disjoint bursts.
+            let ct = unsafe { shared.range_mut(native::tile_range(&dc, block_row, block_col)) };
+            ct.fill(0.0);
+            for p in 0..kb {
+                let at = &ti.a[native::tile_range(&da, block_row, p)];
+                let bt = &ti.b[native::tile_range(&db, p, block_col)];
                 native::tile_mac_f32(at, bt, ct, block);
             }
-            apply_epilogue(task.epilogue, tile.block_col * block, ct, block);
+            apply_epilogue(ti.epilogue, block_col * block, ct, block);
         }
-    })?;
-    let locals = locals.into_iter().map(|m| m.into_inner().unwrap()).collect();
-    Ok((items, ranges, locals))
+    })
 }
 
 /// Run every task of a phase as ONE parallel region and return each
-/// task's packed output. Bitwise identical to running the serial kernel
-/// (+ epilogue pass) per task in order, for any pool width: each output
-/// tile is reduced over `p` in the serial order by exactly one worker,
-/// and the epilogue performs the same per-element ops as the serial
-/// bias pass. A 1-worker pool takes the serial kernels directly.
+/// task's packed output as a fresh `Vec` — the allocating convenience
+/// wrapper around [`gemm_f32_batch_into`] kept for tests and ad-hoc
+/// callers (hot paths thread workspace slices through the `_into` form).
+/// All tasks must share one `m×k×n` shape.
 pub fn gemm_f32_batch(
     tasks: &[GemmTask],
     block: usize,
     pool: &WorkerPool,
 ) -> Result<Vec<Vec<f32>>> {
-    if pool.workers() <= 1 {
-        return tasks.iter().map(|t| gemm_task_serial(t, block)).collect();
+    if tasks.is_empty() {
+        return Ok(Vec::new());
     }
-    // Validation happens inside gemm_batch_locals (`task_descs`) BEFORE
-    // any descriptor is built — `MatrixDesc` asserts its invariants, so
-    // bad caller dims must surface as an `Err`, not a panic.
-    let (items, ranges, locals) = gemm_batch_locals(tasks, block, pool)?;
-    let dcs: Vec<MatrixDesc> =
-        tasks.iter().map(|t| native::packed_desc(t.m, t.n, block)).collect();
-    let bb = block * block;
-    let mut outs: Vec<Vec<f32>> = tasks.iter().map(|t| vec![0.0f32; t.m * t.n]).collect();
-    for (w, local) in locals.iter().enumerate() {
-        for (slot, idx) in ranges[w].clone().enumerate() {
-            let (t, tile) = items[idx];
-            outs[t][native::tile_range(&dcs[t], tile.block_row, tile.block_col)]
-                .copy_from_slice(&local[slot * bb..(slot + 1) * bb]);
-        }
-    }
-    Ok(outs)
+    let (m, n) = (tasks[0].m, tasks[0].n);
+    let mut arena = vec![0.0f32; tasks.len() * m * n];
+    gemm_f32_batch_into(
+        tasks.len(),
+        &|t| tasks[t],
+        &mut arena,
+        &|t| native::packed_desc_at((t * m * n) as u64, m, n, block),
+        block,
+        pool,
+    )?;
+    Ok(arena.chunks(m * n).map(|c| c.to_vec()).collect())
 }
 
-/// [`gemm_f32_batch`] writing through per-task destination descriptors
-/// into ONE shared backing buffer — attention heads targeting their
-/// column slice of the concatenated output (`MatrixDesc::col_view`, no
-/// copy-concat). The caller guarantees the views are disjoint; every
-/// destination tile is overwritten by exactly one computed tile, so the
-/// serial scatter order cannot matter.
-pub fn gemm_f32_batch_into(
-    tasks: &[GemmTask],
-    c: &mut [f32],
-    dsts: &[MatrixDesc],
-    block: usize,
-    pool: &WorkerPool,
-) -> Result<()> {
-    ensure!(tasks.len() == dsts.len(), "{} tasks but {} destinations", tasks.len(), dsts.len());
-    for (task, dc) in tasks.iter().zip(dsts) {
-        native::check_gemm_dst(c.len(), dc, task.m, task.n, block)?;
-    }
-    // Width-1 fast path: write tiles straight through the serial kernel,
-    // skipping the locals + scatter copy (epilogues fall through to the
-    // engine — the serial bias kernels only address plain matrices).
-    if pool.workers() <= 1 && tasks.iter().all(|t| matches!(t.epilogue, Epilogue::None)) {
-        for (task, dc) in tasks.iter().zip(dsts) {
-            native::gemm_f32_into(task.a, task.b, c, dc, task.m, task.k, task.n, block)?;
-        }
-        return Ok(());
-    }
-    let (items, ranges, locals) = gemm_batch_locals(tasks, block, pool)?;
-    let bb = block * block;
-    for (w, local) in locals.iter().enumerate() {
-        for (slot, idx) in ranges[w].clone().enumerate() {
-            let (t, tile) = items[idx];
-            c[native::tile_range(&dsts[t], tile.block_row, tile.block_col)]
-                .copy_from_slice(&local[slot * bb..(slot + 1) * bb]);
-        }
-    }
-    Ok(())
-}
-
-/// Transpose many same-shaped packed matrices (the per-head Kᵀ phase) as
-/// ONE parallel region: the work-item grid is every destination tile of
-/// every source. Pure data movement — parallel and serial are trivially
-/// identical; the one-writer-per-tile discipline is kept anyway.
-pub fn transpose_packed_batch(
-    srcs: &[Vec<f32>],
+/// Transpose `count` same-shaped packed `rows×cols` matrices stored
+/// contiguously in `src` (the per-head Kᵀ phase: the workspace K arena)
+/// into `count` packed `cols×rows` matrices contiguous in `dst`, as ONE
+/// parallel region whose work-item grid is every destination tile of
+/// every matrix. Pure data movement — parallel and serial are trivially
+/// identical; the one-writer-per-tile discipline is kept anyway, and a
+/// warm call performs zero heap allocations.
+pub fn transpose_packed_many_into(
+    src: &[f32],
+    dst: &mut [f32],
+    count: usize,
     rows: usize,
     cols: usize,
     block: usize,
     pool: &WorkerPool,
-) -> Result<Vec<Vec<f32>>> {
-    if pool.workers() <= 1 {
-        return srcs.iter().map(|s| native::transpose_packed(s, rows, cols, block)).collect();
+) -> Result<()> {
+    let per = rows * cols;
+    ensure!(
+        src.len() == count * per,
+        "source holds {} elements, {count} {rows}x{cols} matrices need {}",
+        src.len(),
+        count * per
+    );
+    ensure!(dst.len() == src.len(), "destination holds {} elements, want {}", dst.len(), src.len());
+    if count == 0 {
+        return Ok(());
     }
-    for s in srcs {
-        native::check_rowwise(s.len(), rows, cols, block)?;
-    }
+    native::check_rowwise(per, rows, cols, block)?;
     let ds = native::packed_desc(rows, cols, block);
     let dd = native::packed_desc(cols, rows, block);
-    let bb = block * block;
-    let mut items = Vec::with_capacity(srcs.len() * dd.block_rows() * dd.block_cols());
-    for t in 0..srcs.len() {
-        for j in 0..dd.block_cols() {
-            for i in 0..dd.block_rows() {
-                items.push((t, TileRef { block_row: i, block_col: j }));
-            }
-        }
-    }
-    let ranges = split_even(items.len(), pool.workers());
-    let locals: Vec<Mutex<Vec<f32>>> =
-        ranges.iter().map(|r| Mutex::new(vec![0.0f32; r.len() * bb])).collect();
+    let bm = dd.block_rows();
+    let tiles_per = bm * dd.block_cols();
+    let total = count * tiles_per;
+    let workers = pool.workers();
+    let shared = SharedSlice::new(dst);
     pool.run(&|w| {
-        let mut buf = locals[w].lock().unwrap();
-        for (slot, idx) in ranges[w].clone().enumerate() {
-            let (t, tile) = items[idx];
-            let st = &srcs[t][native::tile_range(&ds, tile.block_col, tile.block_row)];
-            native::transpose_tile(st, &mut buf[slot * bb..(slot + 1) * bb], block);
-        }
-    })?;
-    let mut outs: Vec<Vec<f32>> = srcs.iter().map(|_| vec![0.0f32; rows * cols]).collect();
-    for (w, local) in locals.iter().enumerate() {
-        for (slot, idx) in ranges[w].clone().enumerate() {
-            let (t, tile) = items[idx];
-            outs[t][native::tile_range(&dd, tile.block_row, tile.block_col)]
-                .copy_from_slice(&local[slot * bb..(slot + 1) * bb]);
-        }
-    }
-    Ok(outs)
-}
-
-/// Masked/scaled softmax over many same-shaped packed buffers (all heads'
-/// score matrices) as ONE parallel region: the work items are every
-/// block-row of every buffer — under BWMA each is one contiguous `&mut`
-/// range, handed whole to exactly one worker. Bitwise identical to the
-/// serial per-buffer [`native::masked_softmax`] walk for any pool width,
-/// including the fully-masked-row (all `-inf` → all-zero) convention.
-#[allow(clippy::too_many_arguments, clippy::type_complexity)]
-pub fn masked_softmax_batch(
-    xs: &mut [Vec<f32>],
-    mask: Option<&[f32]>,
-    scale: f32,
-    rows: usize,
-    cols: usize,
-    block: usize,
-    pool: &WorkerPool,
-) -> Result<()> {
-    for x in xs.iter() {
-        native::check_rowwise(x.len(), rows, cols, block)?;
-    }
-    if let Some(m) = mask {
-        ensure!(m.len() == cols, "mask has {} entries, want {cols}", m.len());
-    }
-    if pool.workers() <= 1 {
-        for x in xs.iter_mut() {
-            native::masked_softmax(x, mask, scale, rows, cols, block)?;
-        }
-        return Ok(());
-    }
-    let chunk_elems = block * cols;
-    let chunks: Vec<&mut [f32]> =
-        xs.iter_mut().flat_map(|x| x.chunks_mut(chunk_elems)).collect();
-    let ranges = split_even(chunks.len(), pool.workers());
-    let mut iter = chunks.into_iter();
-    let slots: Vec<Mutex<Vec<&mut [f32]>>> =
-        ranges.iter().map(|r| Mutex::new(iter.by_ref().take(r.len()).collect())).collect();
-    pool.run(&|w| {
-        let mut group = slots[w].lock().unwrap();
-        for chunk in group.drain(..) {
-            // Pre-validated sub-shapes: failure here is a logic bug.
-            native::masked_softmax(chunk, mask, scale, block, cols, block)
-                .expect("masked_softmax on pre-validated chunk");
+        for idx in chunk_range(total, workers, w) {
+            let (t, r) = (idx / tiles_per, idx % tiles_per);
+            let (block_col, block_row) = (r / bm, r % bm);
+            // Destination tile (i, j) is the transposed source tile (j, i).
+            let st = &src[t * per..][native::tile_range(&ds, block_col, block_row)];
+            let mut range = native::tile_range(&dd, block_row, block_col);
+            range.start += t * per;
+            range.end += t * per;
+            // SAFETY: one worker per destination tile (chunk_range
+            // partition); tiles are disjoint bursts, matrices disjoint
+            // `per`-element regions.
+            let dt = unsafe { shared.range_mut(range) };
+            native::transpose_tile(st, dt, block);
         }
     })
 }
@@ -728,8 +716,16 @@ pub fn gemm_f32_pooled(
     if pool.workers() <= 1 {
         return native::gemm_f32(a, b, m, k, n, block);
     }
-    let tasks = [GemmTask { a, b, m, k, n, epilogue: Epilogue::None }];
-    Ok(gemm_f32_batch(&tasks, block, pool)?.pop().expect("one task in, one output out"))
+    let mut c = vec![0.0f32; m * n];
+    gemm_f32_batch_into(
+        1,
+        &|_| GemmTask { a, b, m, k, n, epilogue: Epilogue::None },
+        &mut c,
+        &|_| native::packed_desc(m, n, block),
+        block,
+        pool,
+    )?;
+    Ok(c)
 }
 
 /// Tile-parallel blocked f32 GEMM on a transient pool — kept for tests
@@ -811,10 +807,9 @@ pub fn gemm_i8(
     gemm_i8_pooled(a, b, m, k, n, block, &WorkerPool::new(cores)?)
 }
 
-/// Pooled packed→packed transpose (single matrix): destination tiles are
-/// partitioned exactly like a GEMM's output grid; each worker writes the
-/// transposed source tiles it owns (the one-source case of
-/// [`transpose_packed_batch`], without the batch bookkeeping).
+/// Pooled packed→packed transpose (single matrix) returning a fresh
+/// buffer — the one-source case of [`transpose_packed_many_into`] (which
+/// hot paths call directly with a workspace destination).
 pub fn transpose_packed_pooled(
     src: &[f32],
     rows: usize,
@@ -825,34 +820,14 @@ pub fn transpose_packed_pooled(
     if pool.workers() <= 1 {
         return native::transpose_packed(src, rows, cols, block);
     }
-    native::check_rowwise(src.len(), rows, cols, block)?;
-    let ds = native::packed_desc(rows, cols, block);
-    let dd = native::packed_desc(cols, rows, block);
-    let part = GridPartition::new(dd.block_rows(), dd.block_cols(), pool.workers());
-    let bb = block * block;
-    let locals: Vec<Mutex<Vec<f32>>> = (0..part.workers())
-        .map(|w| Mutex::new(vec![0.0f32; part.tile_count(w) * bb]))
-        .collect();
-    pool.run(&|w| {
-        let mut buf = locals[w].lock().unwrap();
-        for (t, dt) in part.tiles(w).zip(buf.chunks_exact_mut(bb)) {
-            let st = &src[native::tile_range(&ds, t.block_col, t.block_row)];
-            native::transpose_tile(st, dt, block);
-        }
-    })?;
     let mut dst = vec![0.0f32; rows * cols];
-    for (w, local) in locals.iter().enumerate() {
-        let local = local.lock().unwrap();
-        for (t, tile) in part.tiles(w).zip(local.chunks_exact(bb)) {
-            dst[native::tile_range(&dd, t.block_row, t.block_col)].copy_from_slice(tile);
-        }
-    }
+    transpose_packed_many_into(src, &mut dst, 1, rows, cols, block, pool)?;
     Ok(dst)
 }
 
 /// Tile-parallel packed→packed transpose on a transient pool (tests /
 /// ad-hoc callers; hot paths batch all heads via
-/// [`transpose_packed_batch`]).
+/// [`transpose_packed_many_into`]).
 pub fn transpose_packed(
     src: &[f32],
     rows: usize,
@@ -869,11 +844,12 @@ pub fn transpose_packed(
 /// Split a packed `rows × cols` buffer along block-row boundaries (under
 /// BWMA a block-row of tiles is one contiguous range of `block · cols`
 /// elements, optionally paired with the index-aligned chunk of a
-/// read-only buffer — [`add_norm_pooled`]'s residual) and run `f` over
-/// each worker's contiguous group of block-rows as ONE pool region.
-/// Rows are never split across workers, so any independent row-wise
-/// kernel stays bitwise identical to its serial run.
-#[allow(clippy::type_complexity)]
+/// read-only buffer — [`add_norm_pooled`]'s residual) and run `f` once
+/// per worker over that worker's contiguous group of block-rows, as ONE
+/// pool region. Rows are never split across workers, so any independent
+/// row-wise kernel stays bitwise identical to its serial run; worker
+/// ranges come from [`chunk_range`] and the disjoint sub-slices from
+/// [`SharedSlice`], so a warm call performs zero heap allocations.
 fn rowwise_pooled<F>(
     x: &mut [f32],
     paired: Option<&[f32]>,
@@ -887,26 +863,21 @@ where
     F: Fn(&mut [f32], Option<&[f32]>, usize) -> Result<()> + Sync,
 {
     let chunk_elems = block * cols;
-    let ranges = split_even(rows / block, pool.workers());
-    let mut chunks = x.chunks_mut(chunk_elems);
-    let mut paired_chunks = paired.map(|p| p.chunks(chunk_elems));
-    let slots: Vec<Mutex<Vec<(&mut [f32], Option<&[f32]>)>>> = ranges
-        .iter()
-        .map(|r| {
-            let group = chunks
-                .by_ref()
-                .take(r.len())
-                .map(|c| (c, paired_chunks.as_mut().and_then(|pc| pc.next())))
-                .collect();
-            Mutex::new(group)
-        })
-        .collect();
+    let nchunks = rows / block;
+    let workers = pool.workers();
+    let shared = SharedSlice::new(x);
     pool.run(&|w| {
-        let mut group = slots[w].lock().unwrap();
-        for (chunk, p) in group.drain(..) {
-            // Pre-validated sub-shapes: failure here is a logic bug.
-            f(chunk, p, block).expect("row-wise sub-kernel failed");
+        let r = chunk_range(nchunks, workers, w);
+        if r.is_empty() {
+            return;
         }
+        let elems = r.start * chunk_elems..r.end * chunk_elems;
+        let p = paired.map(|p| &p[elems.clone()]);
+        // SAFETY: block-row groups are contiguous and disjoint across
+        // workers (`chunk_range` partitions `0..nchunks`).
+        let chunk = unsafe { shared.range_mut(elems) };
+        // Pre-validated sub-shapes: failure here is a logic bug.
+        f(chunk, p, r.len() * block).expect("row-wise sub-kernel failed");
     })
 }
 
@@ -1097,6 +1068,16 @@ mod tests {
     }
 
     #[test]
+    fn chunk_range_agrees_with_split_even() {
+        for (n, w) in [(0usize, 3usize), (1, 1), (7, 3), (12, 4), (3, 8), (100, 7)] {
+            let ranges = split_even(n, w);
+            for (i, r) in ranges.iter().enumerate() {
+                assert_eq!(*r, chunk_range(n, w, i), "n={n} w={w} i={i}");
+            }
+        }
+    }
+
+    #[test]
     fn grid_partition_is_column_major() {
         // 3 block-rows × 2 block-cols over 2 workers: worker 0 gets the
         // first column (3 tiles), worker 1 the second (3 tiles).
@@ -1168,6 +1149,18 @@ mod tests {
         assert_eq!(inner_hits.load(Ordering::SeqCst), 3);
     }
 
+    /// The serial kernel sequence (GEMM, then the element-wise epilogue
+    /// pass) every batched-GEMM result must match bitwise.
+    fn gemm_task_serial(t: &GemmTask, block: usize) -> Result<Vec<f32>> {
+        let mut c = native::gemm_f32(t.a, t.b, t.m, t.k, t.n, block)?;
+        match t.epilogue {
+            Epilogue::None => {}
+            Epilogue::Bias(bias) => native::bias_add(&mut c, bias, t.m, t.n, block)?,
+            Epilogue::BiasGelu(bias) => native::bias_gelu(&mut c, bias, t.m, t.n, block)?,
+        }
+        Ok(c)
+    }
+
     #[test]
     fn batched_gemm_with_fused_bias_matches_serial_kernel_sequence() {
         use crate::util::XorShift64;
@@ -1187,7 +1180,7 @@ mod tests {
         ];
         let serial: Vec<Vec<f32>> =
             tasks.iter().map(|t| gemm_task_serial(t, b).unwrap()).collect();
-        for cores in [2usize, 3, 8] {
+        for cores in [1usize, 2, 3, 8] {
             let pool = WorkerPool::new(cores).unwrap();
             let got = gemm_f32_batch(&tasks, b, &pool).unwrap();
             for (t, (s, g)) in serial.iter().zip(&got).enumerate() {
@@ -1197,5 +1190,65 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn batched_gemm_rejects_mixed_shapes_and_bad_bias() {
+        let a = vec![0.0f32; 16 * 16];
+        let pool = WorkerPool::new(1).unwrap();
+        let mut c = vec![0.0f32; 2 * 16 * 16];
+        // Task 1 reports a different shape than task 0.
+        let shapes = [(16usize, 16usize, 16usize), (16, 32, 16)];
+        let err = gemm_f32_batch_into(
+            2,
+            &|t| {
+                let (m, k, n) = shapes[t];
+                GemmTask { a: &a, b: &a, m, k, n, epilogue: Epilogue::None }
+            },
+            &mut c,
+            &|t| native::packed_desc_at((t * 16 * 16) as u64, 16, 16, 16),
+            16,
+            &pool,
+        );
+        assert!(err.is_err(), "mixed task shapes must be rejected");
+        // Bias length must match n.
+        let bias = vec![0.0f32; 4];
+        let err = gemm_f32_batch_into(
+            1,
+            &|_| GemmTask { a: &a, b: &a, m: 16, k: 16, n: 16, epilogue: Epilogue::Bias(&bias) },
+            &mut c,
+            &|_| native::packed_desc(16, 16, 16),
+            16,
+            &pool,
+        );
+        assert!(err.is_err(), "short bias must be rejected");
+    }
+
+    #[test]
+    fn transpose_many_matches_per_matrix_serial() {
+        use crate::util::XorShift64;
+        let (count, rows, cols, b) = (3usize, 24usize, 16usize, 8usize);
+        let mut rng = XorShift64::new(0x7A11);
+        let mut src = vec![0.0f32; count * rows * cols];
+        rng.fill_f32(&mut src);
+        let per = rows * cols;
+        let mut expect = vec![0.0f32; count * per];
+        for t in 0..count {
+            let one =
+                native::transpose_packed(&src[t * per..(t + 1) * per], rows, cols, b).unwrap();
+            expect[t * per..(t + 1) * per].copy_from_slice(&one);
+        }
+        for cores in [1usize, 2, 3, 8] {
+            let pool = WorkerPool::new(cores).unwrap();
+            let mut dst = vec![f32::NAN; count * per];
+            transpose_packed_many_into(&src, &mut dst, count, rows, cols, b, &pool).unwrap();
+            assert_eq!(dst, expect, "diverged at {cores} workers");
+        }
+        // Shape mismatches surface as errors.
+        let pool = WorkerPool::new(2).unwrap();
+        let mut short = vec![0.0f32; count * per - 1];
+        assert!(
+            transpose_packed_many_into(&src, &mut short, count, rows, cols, b, &pool).is_err()
+        );
     }
 }

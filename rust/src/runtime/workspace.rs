@@ -1,0 +1,264 @@
+//! Preplanned packed-buffer workspace: every intermediate a forward pass
+//! touches, sized **once** from the model dimensions and reused forever.
+//!
+//! The paper's thesis is that data *arrangement* — not FLOPs — bounds
+//! transformer run-time. Before this module, the host side undid that
+//! discipline every forward: each phase of each layer heap-allocated
+//! fresh packed buffers (q/k/v per head, Kᵀ, the score matrices,
+//! the concatenated heads, the projection, the FFN hidden, the layer
+//! output), so steady-state serving churned the allocator, re-faulted
+//! pages, and evicted exactly the cache-resident tiles the BWMA layout
+//! fought to arrange. [`EncoderWorkspace`] fixes the lifetime story the
+//! same way ISSUE 4's `WorkerPool` fixed the thread story: allocate at
+//! model construction, reuse across layers **and across forwards** —
+//! a warm [`NativeModel::forward_into`] performs **zero** heap
+//! allocations (pinned by `tests/alloc_steady_state.rs`).
+//!
+//! ## Sizing (f32 elements, from `seq`·`d_model`·`d_ff`·`heads`)
+//!
+//! | arena    | elements            | holds                                    |
+//! |----------|---------------------|------------------------------------------|
+//! | `x`      | `seq·d_model`       | packed activations entering the layer     |
+//! | `hc`     | `seq·d_model`       | concatenated attention heads (AV output)  |
+//! | `proj`   | `seq·d_model`       | output projection + Add/Norm 1            |
+//! | `out`    | `seq·d_model`       | FF2 + Add/Norm 2 (the layer output)       |
+//! | `qkv`    | `3·seq·d_model`     | per-head Q \| K \| V projections, grouped by kind |
+//! | `kt`     | `seq·d_model`       | per-head transposed keys (`d_head·seq` each) |
+//! | `scores` | `heads·seq·seq`     | per-head attention scores, stacked        |
+//! | `hid`    | `seq·d_ff`          | FFN hidden activations                    |
+//!
+//! Total: `(7 + 3)·seq·d_model`-ish — `8·seq·d_model + heads·seq² +
+//! seq·d_ff` exactly ([`EncoderWorkspace::total_f32`]); the FFN-only
+//! model keeps just `x`/`out`/`hid`. The `block` size shapes the packing
+//! (every arena is BWMA-packed), not the byte count.
+//!
+//! ## Ping-pong across layers
+//!
+//! A layer reads `x` and leaves its result in `out`; the internal
+//! `advance_layer` swaps the two `Vec`s (pointer
+//! swap, no copy), so layer `L+1` reads layer `L`'s output while every
+//! other arena is recycled as scratch. Every arena is fully overwritten
+//! before it is read within a layer — a workspace poisoned with NaN
+//! between forwards must not leak a single bit into the next result
+//! (`tests/alloc_steady_state.rs` and the encoder equivalence suite pin
+//! this with [`NativeModel::poison_workspaces`]).
+//!
+//! ## Lanes (concurrent checkout)
+//!
+//! The batch server forwards independent sequences concurrently, one per
+//! pool worker. Each in-flight forward needs its *own* workspace, so a
+//! [`NativeModel`] owns a lane pool (the crate-internal `WorkspacePool`):
+//! a stack of interchangeable
+//! lanes behind a `Mutex`. A forward pops a lane (creating one only if
+//! the stack is empty — a warm-up cost), runs, and pushes it back; the
+//! steady state of any stable serving configuration touches the
+//! allocator zero times. Clones of a model (the batcher's per-variant
+//! slots) share one lane pool via `Arc`, exactly like they share the
+//! worker pool.
+//!
+//! [`NativeModel`]: super::NativeModel
+//! [`NativeModel::forward_into`]: super::NativeModel::forward_into
+//! [`NativeModel::poison_workspaces`]: super::NativeModel::poison_workspaces
+
+use std::sync::{Mutex, MutexGuard};
+
+/// All per-forward intermediates of one [`NativeModel`](super::NativeModel)
+/// forward pass, BWMA-packed, allocated once (see the module docs for the
+/// sizing table and the ping-pong discipline).
+#[derive(Debug)]
+pub struct EncoderWorkspace {
+    /// Packed activations entering the current layer (`seq·d_model`).
+    pub(crate) x: Vec<f32>,
+    /// Concatenated attention-head outputs (`seq·d_model`; empty for FFN-only).
+    pub(crate) hc: Vec<f32>,
+    /// Output projection / Add-Norm-1 result (`seq·d_model`; empty for FFN-only).
+    pub(crate) proj: Vec<f32>,
+    /// Layer output (`seq·d_model`); swapped with `x` between layers.
+    pub(crate) out: Vec<f32>,
+    /// Per-head Q | K | V projections, grouped by kind (`3·seq·d_model`;
+    /// empty for FFN-only).
+    pub(crate) qkv: Vec<f32>,
+    /// Per-head transposed keys (`seq·d_model`; empty for FFN-only).
+    pub(crate) kt: Vec<f32>,
+    /// Per-head attention scores, stacked (`heads·seq·seq`; empty for
+    /// FFN-only).
+    pub(crate) scores: Vec<f32>,
+    /// FFN hidden activations (`seq·d_ff`).
+    pub(crate) hid: Vec<f32>,
+}
+
+impl EncoderWorkspace {
+    /// Workspace for a full multi-head encoder stack. Dimensions must
+    /// already satisfy the model's divisibility contract (asserted in
+    /// debug builds; `NativeModel`'s constructors validate with errors).
+    pub fn new_encoder(
+        seq: usize,
+        d_model: usize,
+        heads: usize,
+        d_ff: usize,
+        block: usize,
+    ) -> Self {
+        debug_assert!(
+            block > 0
+                && heads > 0
+                && seq % block == 0
+                && d_model % block == 0
+                && d_model % heads == 0
+                && (d_model / heads) % block == 0
+                && d_ff % block == 0,
+            "workspace dims seq={seq}/d_model={d_model}/heads={heads}/d_ff={d_ff} vs block {block}"
+        );
+        let sd = seq * d_model;
+        Self {
+            x: vec![0.0; sd],
+            hc: vec![0.0; sd],
+            proj: vec![0.0; sd],
+            out: vec![0.0; sd],
+            qkv: vec![0.0; 3 * sd],
+            kt: vec![0.0; sd],
+            scores: vec![0.0; heads * seq * seq],
+            hid: vec![0.0; seq * d_ff],
+        }
+    }
+
+    /// Workspace for the legacy FFN-only block (no attention arenas).
+    pub fn new_ffn(seq: usize, d_model: usize, d_ff: usize, block: usize) -> Self {
+        debug_assert!(
+            block > 0 && seq % block == 0 && d_model % block == 0 && d_ff % block == 0,
+            "workspace dims seq={seq}/d_model={d_model}/d_ff={d_ff} vs block {block}"
+        );
+        let sd = seq * d_model;
+        Self {
+            x: vec![0.0; sd],
+            hc: Vec::new(),
+            proj: Vec::new(),
+            out: vec![0.0; sd],
+            qkv: Vec::new(),
+            kt: Vec::new(),
+            scores: Vec::new(),
+            hid: vec![0.0; seq * d_ff],
+        }
+    }
+
+    /// Total f32 elements held (the workspace footprint).
+    pub fn total_f32(&self) -> usize {
+        self.x.len()
+            + self.hc.len()
+            + self.proj.len()
+            + self.out.len()
+            + self.qkv.len()
+            + self.kt.len()
+            + self.scores.len()
+            + self.hid.len()
+    }
+
+    /// Rotate the layer ping-pong: the layer just wrote `out`; the next
+    /// layer reads it as `x` (pointer swap — no copy, no allocation).
+    pub(crate) fn advance_layer(&mut self) {
+        std::mem::swap(&mut self.x, &mut self.out);
+    }
+
+    /// Fill every arena with NaN — the stale-data test hook: a forward on
+    /// a poisoned workspace must produce bitwise-identical results,
+    /// proving every element is overwritten before it is read.
+    pub(crate) fn poison(&mut self) {
+        for buf in [
+            &mut self.x,
+            &mut self.hc,
+            &mut self.proj,
+            &mut self.out,
+            &mut self.qkv,
+            &mut self.kt,
+            &mut self.scores,
+            &mut self.hid,
+        ] {
+            buf.fill(f32::NAN);
+        }
+    }
+}
+
+/// Fixed capacity of the lane stack: pushing a lane back never reallocates
+/// as long as at most this many forwards ever ran concurrently (64 lanes
+/// is far beyond any realistic pool width × batch depth).
+const LANE_CAPACITY: usize = 64;
+
+/// A stack of interchangeable [`EncoderWorkspace`] lanes shared by every
+/// clone of a model (the server's batch-variant slots): concurrent batch
+/// sequences each check a lane out instead of allocating per request.
+#[derive(Debug)]
+pub(crate) struct WorkspacePool {
+    lanes: Mutex<Vec<EncoderWorkspace>>,
+}
+
+impl WorkspacePool {
+    pub(crate) fn new() -> Self {
+        Self { lanes: Mutex::new(Vec::with_capacity(LANE_CAPACITY)) }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, Vec<EncoderWorkspace>> {
+        // A poisoned lock (a panicked sibling forward) must not cascade:
+        // lanes are always structurally valid, their contents are
+        // overwritten before use.
+        self.lanes.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Pop a free lane, if any (the caller creates one otherwise — the
+    /// only allocating path, taken once per peak-concurrency slot).
+    pub(crate) fn checkout(&self) -> Option<EncoderWorkspace> {
+        self.lock().pop()
+    }
+
+    /// Return a lane to the stack (no allocation up to [`LANE_CAPACITY`]).
+    pub(crate) fn checkin(&self, ws: EncoderWorkspace) {
+        self.lock().push(ws);
+    }
+
+    /// Free lanes currently checked in (test hook).
+    pub(crate) fn free_lanes(&self) -> usize {
+        self.lock().len()
+    }
+
+    /// Poison every free lane (test hook — see [`EncoderWorkspace::poison`]).
+    pub(crate) fn poison_all(&self) {
+        for ws in self.lock().iter_mut() {
+            ws.poison();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizing_matches_the_documented_formula() {
+        let (s, d, h, f, b) = (32usize, 32usize, 2usize, 64usize, 16usize);
+        let ws = EncoderWorkspace::new_encoder(s, d, h, f, b);
+        assert_eq!(ws.total_f32(), 8 * s * d + h * s * s + s * f);
+        let ffn = EncoderWorkspace::new_ffn(s, d, f, b);
+        assert_eq!(ffn.total_f32(), 2 * s * d + s * f);
+    }
+
+    #[test]
+    fn lane_checkout_roundtrip() {
+        let pool = WorkspacePool::new();
+        assert_eq!(pool.free_lanes(), 0);
+        assert!(pool.checkout().is_none());
+        pool.checkin(EncoderWorkspace::new_ffn(16, 16, 32, 16));
+        pool.checkin(EncoderWorkspace::new_ffn(16, 16, 32, 16));
+        assert_eq!(pool.free_lanes(), 2);
+        let a = pool.checkout().unwrap();
+        assert_eq!(pool.free_lanes(), 1);
+        pool.checkin(a);
+        assert_eq!(pool.free_lanes(), 2);
+    }
+
+    #[test]
+    fn poison_fills_every_arena() {
+        let mut ws = EncoderWorkspace::new_encoder(16, 16, 1, 32, 16);
+        ws.poison();
+        assert!(ws.x.iter().all(|v| v.is_nan()));
+        assert!(ws.scores.iter().all(|v| v.is_nan()));
+        assert!(ws.hid.iter().all(|v| v.is_nan()));
+    }
+}

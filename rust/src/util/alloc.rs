@@ -1,0 +1,64 @@
+//! Thread-aware counting global allocator — the allocation-count test
+//! hook, mirroring the `threads_spawned_total` spawn hook from ISSUE 4.
+//!
+//! [`CountingAllocator`] wraps [`System`] and bumps a process-global
+//! atomic on every `alloc`/`alloc_zeroed`/`realloc`, from **any** thread
+//! (pool workers included — exactly the threads the zero-allocation
+//! contract must cover). It counts nothing unless a binary installs it:
+//!
+//! ```ignore
+//! #[global_allocator]
+//! static ALLOC: bwma::util::alloc::CountingAllocator =
+//!     bwma::util::alloc::CountingAllocator;
+//! ```
+//!
+//! `tests/alloc_steady_state.rs` and the `encoder_phases`/`multicore`
+//! benches install it and assert a **zero delta** across warm forwards
+//! and steady serve-loop batches (`steady_allocs = 0`). Deallocations
+//! are deliberately not counted: the contract is "the steady state never
+//! touches the allocator", and every acquisition path goes through
+//! `alloc`/`realloc`.
+//!
+//! Counter reads are monotone, so concurrent tests in one binary must
+//! serialize around their measured windows (the alloc test uses a file-
+//! local lock, and CI additionally runs it under `--test-threads=1`).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+/// Heap acquisitions (`alloc` + `alloc_zeroed` + `realloc`) observed by
+/// an installed [`CountingAllocator`] since process start, across all
+/// threads. Always 0 when the allocator is not installed.
+pub fn heap_allocs_total() -> usize {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+/// A [`System`]-backed global allocator that counts acquisitions (see
+/// the module docs).
+pub struct CountingAllocator;
+
+// SAFETY: defers every operation to `System`, which upholds the
+// `GlobalAlloc` contract; the counter bump has no effect on the
+// returned memory.
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}

@@ -2,6 +2,7 @@
 //! the crate carries its own PRNG, property-test harness, bench timing,
 //! and table formatting instead of pulling rand/proptest/criterion).
 
+pub mod alloc;
 pub mod bench;
 pub mod kv;
 pub mod proptest;

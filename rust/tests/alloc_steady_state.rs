@@ -1,0 +1,156 @@
+//! Zero-allocation steady state (ISSUE 5): a warm `forward_into` on the
+//! persistent pool, and the server's steady batch loop
+//! (`run_batch_into`), must perform **zero** heap allocations — pinned
+//! by installing the counting global allocator and asserting a zero
+//! delta across hundreds of iterations. Alongside, the workspace-reuse
+//! contract: repeated forwards on the same lanes are bitwise stable, and
+//! lanes poisoned with NaN between forwards leak nothing.
+//!
+//! The allocation counter is process-global and monotone, so every
+//! measuring test serializes on [`counter_lock`] (CI additionally runs
+//! this binary under `--test-threads=1` and `BWMA_TEST_CORES=4`).
+
+use std::sync::{Mutex, MutexGuard};
+
+use bwma::runtime::{NativeModel, Tensor};
+use bwma::util::alloc::{heap_allocs_total, CountingAllocator};
+use bwma::util::XorShift64;
+
+#[global_allocator]
+static ALLOC: CountingAllocator = CountingAllocator;
+
+static COUNTER_LOCK: Mutex<()> = Mutex::new(());
+
+/// Serialize counter-sensitive tests; a poisoned lock (failed sibling
+/// test) must not cascade.
+fn counter_lock() -> MutexGuard<'static, ()> {
+    COUNTER_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Pool width for the measured models (CI matrix runs 1 and 4).
+fn test_cores() -> usize {
+    std::env::var("BWMA_TEST_CORES").ok().and_then(|v| v.parse().ok()).unwrap_or(4)
+}
+
+fn rand_vec(rng: &mut XorShift64, n: usize) -> Vec<f32> {
+    let mut v = vec![0.0f32; n];
+    rng.fill_f32(&mut v);
+    v
+}
+
+/// The whole suite is vacuous if the installed allocator stops counting
+/// — prove it sees an ordinary allocation.
+#[test]
+fn counting_allocator_is_live() {
+    let _g = counter_lock();
+    let before = heap_allocs_total();
+    let v = std::hint::black_box(vec![0u8; 4096]);
+    assert!(heap_allocs_total() > before, "counting allocator must observe allocations");
+    drop(v);
+}
+
+/// ISSUE 5 acceptance: 100 warm encoder forwards on the persistent pool
+/// allocate nothing — the packed input, every per-head intermediate,
+/// every layer ping-pong, and the unpacked output all live in the
+/// reused workspace lane and the caller's output tensor.
+#[test]
+fn warm_forward_performs_zero_heap_allocations() {
+    let _g = counter_lock();
+    let model = NativeModel::new_encoder(32, 32, 2, 64, 2, 16, 0xA110)
+        .unwrap()
+        .with_cores(test_cores())
+        .unwrap();
+    let mut rng = XorShift64::new(0xA111);
+    let x = Tensor::new(model.in_shape(), rand_vec(&mut rng, 32 * 32));
+    let mut out = Tensor::zeros(model.out_shape());
+    // Warm-up: create the lane, fault the pages, exercise every
+    // first-use path (condvar waits included).
+    for _ in 0..3 {
+        model.forward_into(&x, &mut out).unwrap();
+    }
+    let expect = out.clone();
+    let before = heap_allocs_total();
+    for i in 0..100 {
+        model.forward_into(&x, &mut out).unwrap();
+        assert_eq!(out.data, expect.data, "iteration {i} drifted");
+    }
+    let allocs = heap_allocs_total() - before;
+    assert_eq!(allocs, 0, "100 warm forwards must not allocate (saw {allocs})");
+}
+
+/// The FFN-only model shares the contract.
+#[test]
+fn warm_ffn_forward_performs_zero_heap_allocations() {
+    let _g = counter_lock();
+    let model =
+        NativeModel::new(32, 32, 64, 16, 0xA112).unwrap().with_cores(test_cores()).unwrap();
+    let mut rng = XorShift64::new(0xA113);
+    let x = Tensor::new(model.in_shape(), rand_vec(&mut rng, 32 * 32));
+    let mut out = Tensor::zeros(model.out_shape());
+    for _ in 0..3 {
+        model.forward_into(&x, &mut out).unwrap();
+    }
+    let before = heap_allocs_total();
+    for _ in 0..100 {
+        model.forward_into(&x, &mut out).unwrap();
+    }
+    assert_eq!(heap_allocs_total() - before, 0, "warm FFN forwards must not allocate");
+}
+
+/// ISSUE 5 acceptance: the server's steady batch loop — sequences fanned
+/// over the pool, one workspace lane per worker — allocates nothing
+/// once the lane stack is pre-sized to the pool width.
+#[test]
+fn steady_batch_loop_performs_zero_heap_allocations() {
+    let _g = counter_lock();
+    let cores = test_cores();
+    let model =
+        NativeModel::new_encoder(32, 32, 2, 64, 1, 16, 0xA114).unwrap().with_cores(cores).unwrap();
+    // Pre-size lanes to the peak concurrency so lane creation cannot
+    // race into the measured window (the documented serving warm-up).
+    model.reserve_workspace_lanes(cores);
+    let mut rng = XorShift64::new(0xA115);
+    let per = 32 * 32;
+    let bsz = 2 * cores.max(1); // wide batch: sequences become work items
+    let stacked = rand_vec(&mut rng, bsz * per);
+    let mut out = vec![0.0f32; bsz * per];
+    for _ in 0..3 {
+        model.run_batch_into(&stacked, bsz, &mut out).unwrap();
+    }
+    let expect = out.clone();
+    let before = heap_allocs_total();
+    for i in 0..100 {
+        model.run_batch_into(&stacked, bsz, &mut out).unwrap();
+        assert_eq!(out, expect, "batch iteration {i} drifted");
+    }
+    let allocs = heap_allocs_total() - before;
+    assert_eq!(allocs, 0, "steady batch loop must not allocate (saw {allocs})");
+    assert!(
+        model.workspace_lanes_free() <= cores.max(1),
+        "lane stack must stay at the reserved width"
+    );
+}
+
+/// Stale-data contract: poisoning every free lane with NaN between
+/// forwards must not leak a single bit into the next result — every
+/// workspace element is written before it is read.
+#[test]
+fn poisoned_workspace_does_not_leak_into_results() {
+    let _g = counter_lock();
+    let model = NativeModel::new_encoder(32, 32, 2, 64, 2, 16, 0xA116)
+        .unwrap()
+        .with_cores(test_cores())
+        .unwrap();
+    let mut rng = XorShift64::new(0xA117);
+    let x = Tensor::new(model.in_shape(), rand_vec(&mut rng, 32 * 32));
+    let expect = model.forward(&x).unwrap();
+    assert!(expect.data.iter().all(|v| v.is_finite()), "baseline must be clean");
+    for round in 0..3 {
+        model.poison_workspaces();
+        let got = model.forward(&x).unwrap();
+        assert!(
+            got.data.iter().zip(&expect.data).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "round {round}: poisoned workspace leaked into the output"
+        );
+    }
+}

@@ -197,6 +197,68 @@ fn persistent_pool_matches_transient_and_serial_bitwise() {
     assert_bits_eq(&base.data, &t.data, "transient 5-worker pool vs serial");
 }
 
+/// Workspace reuse (ISSUE 5): interleaved forwards with differing inputs
+/// and differing masks on the **same shared workspace lanes** (clones
+/// share the lane stack) must be bitwise identical to forwards on fresh,
+/// isolated models — at every tested core count. Nothing a previous
+/// forward left in a lane may influence the next one.
+#[test]
+fn workspace_reuse_is_bitwise_stable_across_inputs_and_masks() {
+    let seed = 0x90A5;
+    let base = NativeModel::new_encoder(32, 32, 2, 64, 2, 16, seed).unwrap();
+    // Same weights, different mask, SAME lane stack (clone shares it).
+    let masked = base.clone().with_mask(padding_mask(32, 8)).unwrap();
+    // Golden outputs from isolated models (their own untouched lanes).
+    let fresh_base = NativeModel::new_encoder(32, 32, 2, 64, 2, 16, seed).unwrap();
+    let fresh_masked = NativeModel::new_encoder(32, 32, 2, 64, 2, 16, seed)
+        .unwrap()
+        .with_mask(padding_mask(32, 8))
+        .unwrap();
+    let mut rng = XorShift64::new(0x90A6);
+    let inputs: Vec<Tensor> =
+        (0..3).map(|_| Tensor::new(base.in_shape(), rand_vec(&mut rng, 32 * 32))).collect();
+    for cores in [1usize, 2, 3, 8] {
+        for (i, x) in inputs.iter().enumerate() {
+            // Interleave masked/unmasked forwards so every lane sees
+            // alternating shapes of data.
+            let got_base = base.forward_with_cores(x, cores).unwrap();
+            let got_masked = masked.forward_with_cores(x, cores).unwrap();
+            let want_base = fresh_base.forward_with_cores(x, 1).unwrap();
+            let want_masked = fresh_masked.forward_with_cores(x, 1).unwrap();
+            assert_bits_eq(
+                &want_base.data,
+                &got_base.data,
+                &format!("input {i} cores {cores} (unmasked, shared lanes)"),
+            );
+            assert_bits_eq(
+                &want_masked.data,
+                &got_masked.data,
+                &format!("input {i} cores {cores} (masked, shared lanes)"),
+            );
+        }
+    }
+}
+
+/// Stale-data contract at every tested core count: lanes poisoned with
+/// NaN between forwards leak nothing (see also
+/// `tests/alloc_steady_state.rs` for the allocation side).
+#[test]
+fn poisoned_lanes_stay_invisible_at_every_core_count() {
+    let model = NativeModel::new_encoder(32, 32, 2, 64, 2, 16, 0x90A7)
+        .unwrap()
+        .with_mask(padding_mask(32, 8))
+        .unwrap();
+    let mut rng = XorShift64::new(0x90A8);
+    let x = Tensor::new(model.in_shape(), rand_vec(&mut rng, 32 * 32));
+    let expect = model.forward_with_cores(&x, 1).unwrap();
+    for cores in [1usize, 2, 3, 8] {
+        model.poison_workspaces();
+        let got = model.forward_with_cores(&x, cores).unwrap();
+        assert_bits_eq(&expect.data, &got.data, &format!("poisoned lane, cores {cores}"));
+        assert!(got.data.iter().all(|v| v.is_finite()), "NaN leaked at cores {cores}");
+    }
+}
+
 /// An encoder model served through the dynamic batcher: every response
 /// must match the reference forward of its own input, proving the
 /// attention pipeline survives batching/padding/splitting.
