@@ -1,0 +1,128 @@
+//! Bench precision — f32 vs int8 encoder forward at 1/2/4/8 cores
+//! (ISSUE 6). Both precisions run the identical ten-phase pipeline on
+//! the identical seed-derived weights; the int8 model packs weights at
+//! 1 byte/element (`packed_param_bytes`, printed as `bytes_packed`) and
+//! runs i8×i8→i32 GEMMs with fused dequant epilogues over the f32
+//! residual/norm/softmax spine.
+//!
+//! Every measured configuration runs on a persistent worker pool and a
+//! reused workspace lane (`forward_into`), with the counting global
+//! allocator asserting `steady_allocs = 0` and the pool's spawn counter
+//! asserting `steady_spawns = 0` across the warm forwards — for BOTH
+//! precisions: the quantized path must not buy its byte savings with
+//! allocator or thread churn.
+//!
+//! Run: `cargo bench --bench precision [-- --cores N]`
+//! Greppable summary: lines starting `precision-forward`.
+
+use bwma::runtime::{available_cores, NativeModel, Precision, Tensor, WorkerPool};
+use bwma::util::alloc::{heap_allocs_total, CountingAllocator};
+use bwma::util::{bench, XorShift64};
+
+#[global_allocator]
+static ALLOC: CountingAllocator = CountingAllocator;
+
+fn core_counts() -> Vec<usize> {
+    let args: Vec<String> = std::env::args().collect();
+    if let Some(n) = args
+        .iter()
+        .position(|a| a == "--cores")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+    {
+        return vec![n];
+    }
+    vec![1usize, 2, 4, 8]
+}
+
+/// Zero allocations AND zero thread spawns across `iters` warm forwards.
+fn assert_steady(m: &NativeModel, x: &Tensor, out: &mut Tensor, iters: usize) -> (usize, usize) {
+    for _ in 0..2 {
+        m.forward_into(x, out).unwrap();
+    }
+    let allocs_before = heap_allocs_total();
+    let spawns_before = WorkerPool::threads_spawned_total();
+    for _ in 0..iters {
+        m.forward_into(x, out).unwrap();
+    }
+    let allocs = heap_allocs_total() - allocs_before;
+    let spawns = WorkerPool::threads_spawned_total() - spawns_before;
+    assert_eq!(
+        allocs,
+        0,
+        "warm {} forwards must not allocate at {} cores",
+        m.precision(),
+        m.cores()
+    );
+    assert_eq!(
+        spawns,
+        0,
+        "warm {} forwards must not spawn threads at {} cores",
+        m.precision(),
+        m.cores()
+    );
+    (allocs, spawns)
+}
+
+fn main() {
+    // The serving encoder shape (`bwma serve --model encoder`).
+    let (seq, d_model, heads, d_ff, layers, block) =
+        (64usize, 96usize, 3usize, 192usize, 2usize, 16usize);
+    let seed = 0xB118u64;
+    let f32_model =
+        NativeModel::new_encoder(seq, d_model, heads, d_ff, layers, block, seed).unwrap();
+    let int8_model =
+        NativeModel::new_encoder_int8(seq, d_model, heads, d_ff, layers, block, seed).unwrap();
+    let mut rng = XorShift64::new(0xB119);
+    let mut data = vec![0.0f32; seq * d_model];
+    rng.fill_f32(&mut data);
+    let x = Tensor::new(vec![seq, d_model], data);
+    let mut out = Tensor::zeros(vec![seq, d_model]);
+
+    println!(
+        "# precision: encoder {layers}x[{seq}x{d_model}, {heads} heads, ff {d_ff}], block {block}; \
+         host parallelism {}",
+        available_cores()
+    );
+    println!(
+        "# bytes_packed: f32 {} vs int8 {} ({}x reduction in packed weight payload)",
+        f32_model.packed_param_bytes(),
+        int8_model.packed_param_bytes(),
+        f32_model.packed_param_bytes() / int8_model.packed_param_bytes().max(1)
+    );
+
+    for cores in core_counts() {
+        let mut f32_median = None;
+        for (base, precision) in [(&f32_model, Precision::F32), (&int8_model, Precision::Int8)] {
+            // Persistent pool for this width — built once, reused by
+            // every sample below.
+            let m = base.clone().with_cores(cores).unwrap();
+            // Determinism contract while measuring: pooled == serial.
+            let serial = base.forward_with_cores(&x, 1).unwrap();
+            let got = m.forward(&x).unwrap();
+            assert!(
+                serial.data.iter().zip(&got.data).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "{precision} forward at {cores} cores diverged from serial"
+            );
+            let (steady_allocs, steady_spawns) = assert_steady(&m, &x, &mut out, 10);
+            let s = bench::bench(&format!("precision/{precision}-forward-{cores}core"), 2, 7, || {
+                m.forward_into(&x, &mut out).unwrap()
+            });
+            let median = s.median();
+            let vs_f32 = match (precision, f32_median) {
+                (Precision::F32, _) => {
+                    f32_median = Some(median);
+                    1.0
+                }
+                (Precision::Int8, Some(f)) => f.as_secs_f64() / median.as_secs_f64(),
+                (Precision::Int8, None) => 1.0,
+            };
+            println!(
+                "precision-forward precision={precision} cores={cores} median={median:?} \
+                 vs_f32={vs_f32:.2} bytes_packed={} steady_allocs={steady_allocs} \
+                 steady_spawns={steady_spawns}",
+                m.packed_param_bytes()
+            );
+        }
+    }
+}

@@ -15,6 +15,15 @@
 //! ([`crate::runtime::EncoderWorkspace`]) out of the model's shared
 //! stack instead of allocating its intermediates per request.
 //!
+//! The server stack is **precision-agnostic**: requests and responses
+//! are f32 activations either way, and [`BatchRunner`] dispatches on the
+//! model, so an int8 encoder ([`NativeModel::new_encoder_int8`], served
+//! by `bwma serve --precision int8`) plugs into the identical
+//! router/batcher/executor path — the quantize/dequantize passes live
+//! inside the model's forward, and the zero-allocation and
+//! bitwise-determinism contracts hold for both precisions
+//! (`tests/alloc_steady_state.rs`, `tests/precision_accuracy.rs`).
+//!
 //! Executor handles may not be `Send` (PJRT's aren't), so the executor
 //! thread *owns* them: the caller passes a factory that loads/builds the
 //! model inside the thread. Everything crossing threads is plain data.

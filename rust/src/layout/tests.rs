@@ -175,3 +175,44 @@ fn transpose_roundtrip_is_identity_on_descriptors() {
     let tt = m.transposed_at(0x3000).transposed_at(0x2000);
     assert_eq!(tt, m);
 }
+
+#[test]
+fn int8_payloads_pack_through_the_same_permutation() {
+    // The conversion kernels are element-type generic: an i8 weight
+    // matrix follows exactly the BWMA permutation its elem=1 descriptor
+    // describes, so quantized weights pack at 1 byte/element with no
+    // separate code path.
+    let (rows, cols, block) = (32usize, 48usize, 16usize);
+    let src: Vec<i8> = (0..(rows * cols) as i32).map(|i| (i * 37 % 251 - 125) as i8).collect();
+    let blocked = rwma_to_bwma(&src, rows, cols, block);
+    let m = MatrixDesc::new(0, rows, cols, 1, block, Layout::Bwma);
+    for r in 0..rows {
+        for c in 0..cols {
+            assert_eq!(blocked[m.elem_index(r, c)], src[r * cols + c]);
+        }
+    }
+    assert_eq!(bwma_to_rwma(&blocked, rows, cols, block), src);
+    // And the alloc-free variant agrees.
+    let mut dst = vec![0i8; rows * cols];
+    rwma_to_bwma_into(&src, &mut dst, rows, cols, block);
+    assert_eq!(dst, blocked);
+}
+
+#[test]
+fn descriptor_bytes_scale_with_element_size() {
+    // Same logical matrix, int8 vs f32 storage: the address map carries
+    // the element size, so footprints and per-tile burst sizes are 4x
+    // apart — the bytes-moved reduction the 8-bit accelerator is built
+    // around.
+    let q = MatrixDesc::new(0, 64, 64, 1, 16, Layout::Bwma);
+    let f = MatrixDesc::new(0, 64, 64, 4, 16, Layout::Bwma);
+    assert_eq!(q.bytes(), 64 * 64);
+    assert_eq!(f.bytes(), 4 * q.bytes());
+    let t = TileRef { block_row: 1, block_col: 2 };
+    assert_eq!(tile_spans(&q, t).total_bytes(), 16 * 16);
+    assert_eq!(tile_spans(&f, t).total_bytes(), 4 * 16 * 16);
+    // The permutation itself is element-size independent…
+    assert_eq!(q.elem_index(5, 21), f.elem_index(5, 21));
+    // …only the byte addresses differ.
+    assert_eq!(f.addr(5, 21), 4 * q.addr(5, 21));
+}

@@ -27,12 +27,23 @@
 //!    preplanned workspace ([`runtime::workspace`] — every per-forward
 //!    buffer sized once from the model dims, reused across layers and
 //!    forwards) makes a warm forward allocation-free
-//!    ([`runtime::NativeModel::forward_into`]). The masked softmax
+//!    ([`runtime::NativeModel::forward_into`]). The encoder is
+//!    **precision-generic** (`--precision {f32,int8}`): the int8 variant
+//!    ([`runtime::NativeModel::new_encoder_int8`]) packs weights at
+//!    1 byte/element with per-channel scales, accumulates GEMMs exactly
+//!    in i32 with fused dequant→bias(/GELU) epilogues over an f32
+//!    residual/norm/softmax spine, keeps every contract above (bitwise
+//!    core-count invariance, allocation-free warm forwards), and is
+//!    pinned within a [`runtime::rel_error`] bound of its retained f32
+//!    golden (verify tags `native_gemm_i8_parallel_equiv_b16`,
+//!    `native_encoder_int8_accuracy_b16`,
+//!    `native_encoder_int8_parallel_equiv_b16`). The masked softmax
 //!    defines fully-masked rows (all `-inf`) as all-zero, and the
 //!    blocked GEMM propagates `0 × NaN`/`0 × ∞` — conventions shared by
 //!    blocked, parallel, and reference kernels. The execution
 //!    architecture (packing → kernel grid → pool ownership → workspace
-//!    lifetime → phase DAG) is documented in `rust/DESIGN.md`.
+//!    lifetime → phase DAG, incl. the "Precision & quantization"
+//!    section) is documented in `rust/DESIGN.md`.
 //!    With `--features pjrt`, AOT-compiled JAX/Pallas artifacts (built
 //!    by `python/compile/`) execute through PJRT instead;
 //! 3. **Serving** — a request router + dynamic batcher ([`coordinator`])

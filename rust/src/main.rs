@@ -27,7 +27,9 @@ use bwma::coordinator::server::WithParams;
 use bwma::coordinator::{report, Server, ServerConfig};
 #[cfg(feature = "pjrt")]
 use bwma::runtime::{artifacts_dir, GoldenSet, Runtime};
-use bwma::runtime::{available_cores, native_tags, run_native_check_with_cores, NativeModel, Tensor};
+use bwma::runtime::{
+    available_cores, native_tags, run_native_check_with_cores, NativeModel, Precision, Tensor,
+};
 use bwma::sim::simulate;
 use bwma::util::{table, XorShift64};
 
@@ -69,8 +71,9 @@ USAGE:
   bwma experiment <fig6a|fig6b|fig7|fig8|convert-overhead|headline|all>
                   [--scale paper|tiny] [--markdown]
   bwma simulate <preset|config-file> [--layers N] [--convert] [--cores N]
+                [--precision f32|int8]
   bwma serve [--requests N] [--max-batch B] [--cores N]
-             [--model ffn|encoder] [--layers N]
+             [--model ffn|encoder] [--layers N] [--precision f32|int8]
              [--backend native|pjrt] [--tag encoder_jnp_b16]
   bwma verify <check-tag|all> [--cores N] [--backend native|pjrt]
   bwma config <list|dump <preset>>
@@ -82,7 +85,13 @@ the native kernels over it (default: the host's available parallelism;
 results are bitwise identical for any value — the same `cores` knob the
 simulator configs use). `serve --model encoder`
 serves a full multi-head BERT encoder stack (`--layers` deep) instead of
-the FFN-only block — the same ten phases per layer as `simulate`. The
+the FFN-only block — the same ten phases per layer as `simulate`.
+`--precision int8` (encoder only) serves the quantized stack: int8
+BWMA-packed weights at 1 byte/element, i32 tile accumulation, fused
+dequant→bias(/GELU) epilogues, f32 residual/norm/softmax spine — same
+ten phases, same bitwise core-count invariance, ~4x fewer packed weight
+bytes. On `simulate`, `--precision` sets the modeled element size
+(int8 = 1 byte, the paper's accelerator; f32 = 4). The
 `pjrt` backend needs a build with `--features pjrt` (and real xla
 bindings) plus artifacts from `python/compile/aot.py`.
 ";
@@ -129,6 +138,15 @@ fn cmd_simulate(args: &[String]) -> Result<()> {
         // memory model, as config::apply does).
         cfg.cores = c.parse().context("--cores")?;
         cfg.mem.cores = cfg.cores;
+    }
+    if let Some(p) = opt(args, "--precision") {
+        // Same key as the config files' `elem =`: modeled element size in
+        // bytes (the paper's accelerator is 8-bit, so int8 is the default
+        // in every preset).
+        cfg.bert.elem = match p.parse::<Precision>().context("--precision")? {
+            Precision::F32 => 4,
+            Precision::Int8 => 1,
+        };
     }
     // Validate the *final* core count, whichever source set it.
     ensure!(cfg.cores >= 1, "cores must be >= 1 (got {})", cfg.cores);
@@ -244,20 +262,38 @@ fn drive_server(
 /// 1/2/4/8, nothing loaded from disk. `--cores` builds the model's
 /// persistent worker pool (`with_cores`); the batcher dispatches every
 /// request over that pool and spawns no threads of its own.
+/// `--precision int8` swaps in the quantized encoder
+/// ([`NativeModel::new_encoder_int8`]) — the server stack is
+/// precision-agnostic, so nothing else changes.
 fn serve_native(args: &[String], n_requests: usize, max_batch: usize, cores: usize) -> Result<()> {
     let (seq, d_model, d_ff, block) = (64usize, 96usize, 192usize, 16usize);
+    let precision: Precision = opt(args, "--precision").unwrap_or("f32").parse()?;
     let (model, label) = match opt(args, "--model").unwrap_or("ffn") {
-        "ffn" => (
-            NativeModel::new(seq, d_model, d_ff, block, 0xB3D)?,
-            format!("native FFN {seq}x{d_model}→{d_ff}"),
-        ),
+        "ffn" => {
+            ensure!(
+                precision == Precision::F32,
+                "--precision int8 needs --model encoder (the FFN demo block has no quantized path)"
+            );
+            (
+                NativeModel::new(seq, d_model, d_ff, block, 0xB3D)?,
+                format!("native FFN {seq}x{d_model}→{d_ff}"),
+            )
+        }
         "encoder" => {
             let layers: usize = opt(args, "--layers").unwrap_or("2").parse().context("--layers")?;
             let heads = 3usize; // d_head = 96/3 = 32, a multiple of the block
-            (
-                NativeModel::new_encoder(seq, d_model, heads, d_ff, layers, block, 0xB3D)?,
-                format!("native encoder {layers}x[{seq}x{d_model}, {heads} heads, ff {d_ff}]"),
-            )
+            let model = match precision {
+                Precision::F32 => {
+                    NativeModel::new_encoder(seq, d_model, heads, d_ff, layers, block, 0xB3D)?
+                }
+                Precision::Int8 => {
+                    NativeModel::new_encoder_int8(seq, d_model, heads, d_ff, layers, block, 0xB3D)?
+                }
+            };
+            let label = format!(
+                "native {precision} encoder {layers}x[{seq}x{d_model}, {heads} heads, ff {d_ff}]"
+            );
+            (model, label)
         }
         other => bail!("unknown --model {other:?} (ffn|encoder)"),
     };

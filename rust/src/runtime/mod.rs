@@ -39,9 +39,9 @@ pub use artifacts::{artifacts_dir, GoldenSet};
 pub use client::{Executable, Runtime};
 pub use native::{
     native_tags, run_native_check, run_native_check_with_cores, NativeCheck, NativeModel,
-    PhaseTimings,
+    PhaseTimings, Precision,
 };
 pub use parallel::{available_cores, WorkerPool};
-pub use quant::{qgemm, QTensor};
+pub use quant::{qgemm, rel_error, QTensor};
 pub use tensor::Tensor;
 pub use workspace::EncoderWorkspace;

@@ -58,8 +58,8 @@ use anyhow::{bail, ensure, Result};
 use crate::layout::{AddressMap, Layout, MatrixDesc};
 use crate::util::XorShift64;
 
-use super::parallel::{self, Epilogue, GemmTask, WorkerPool};
-use super::quant::{qgemm, rel_error, QTensor};
+use super::parallel::{self, Epilogue, GemmTask, QEpilogue, QGemmTask, WorkerPool};
+use super::quant::{self, qgemm, rel_error, QTensor};
 use super::tensor::Tensor;
 use super::workspace::{EncoderWorkspace, WorkspacePool};
 
@@ -843,6 +843,115 @@ struct EncoderLayerParams {
     ffn: FfnParams,
 }
 
+/// Numeric format a [`NativeModel`] stores and computes its GEMM
+/// operands in (the `--precision` CLI knob).
+///
+/// * [`Precision::F32`] — everything f32 (4 bytes/element packed);
+/// * [`Precision::Int8`] — the paper's accelerator format: weights
+///   quantized per output channel, activations per tensor, GEMMs
+///   reduced in exact i32 with fused dequant epilogues; the residual /
+///   LayerNorm / softmax spine stays f32. Packed GEMM operands occupy
+///   1 byte/element — the payload width BWMA's data arrangement is
+///   designed around.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    F32,
+    Int8,
+}
+
+impl std::str::FromStr for Precision {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(Self::F32),
+            "int8" => Ok(Self::Int8),
+            other => bail!("unknown precision {other:?} (f32|int8)"),
+        }
+    }
+}
+
+impl std::fmt::Display for Precision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Self::F32 => "f32",
+            Self::Int8 => "int8",
+        })
+    }
+}
+
+/// One quantized linear operand: the BWMA-packed i8 image of a `k×n`
+/// weight matrix (1 byte/element — [`crate::layout::rwma_to_bwma`] is
+/// generic over the element type, so int8 packs through the *same*
+/// permutation as f32) plus its per-output-channel symmetric scales.
+/// Biases stay f32 on the retained golden params — they are added
+/// *after* dequantization in the fused [`QEpilogue`].
+#[derive(Debug, Clone)]
+struct QLinear {
+    /// BWMA-packed i8 weight payload.
+    w: Vec<i8>,
+    /// `scales[j]` = symmetric scale of output column `j`
+    /// ([`quant::per_channel_scales`]) — per-channel calibration keeps
+    /// one outlier column from starving every other column's resolution.
+    wscales: Vec<f32>,
+}
+
+impl QLinear {
+    /// Quantize a row-major f32 weight per output channel and pack the
+    /// i8 payload block-wise.
+    fn from_rm(w_rm: &[f32], k: usize, n: usize, block: usize) -> Result<Self> {
+        let wscales = quant::per_channel_scales(w_rm, k, n)?;
+        let q = quant::quantize_per_channel(w_rm, k, n, &wscales)?;
+        Ok(Self { w: crate::layout::rwma_to_bwma(&q, k, n, block), wscales })
+    }
+}
+
+/// Quantized weights of one encoder layer's attention block (per-head
+/// Q/K/V projections + output projection).
+#[derive(Debug, Clone)]
+struct QAttentionParams {
+    wq: Vec<QLinear>,
+    wk: Vec<QLinear>,
+    wv: Vec<QLinear>,
+    wo: QLinear,
+}
+
+/// Quantized weights of one encoder layer's FFN block.
+#[derive(Debug, Clone)]
+struct QFfnParams {
+    w1: QLinear,
+    w2: QLinear,
+}
+
+/// Quantized weights of one full encoder layer — derived from (and kept
+/// alongside) the f32 [`EncoderLayerParams`], which continue to supply
+/// the biases, the Add/Norm affine parameters, and the f32
+/// golden/reference path the accuracy bound is pinned against.
+#[derive(Debug, Clone)]
+struct QEncoderLayerParams {
+    attn: QAttentionParams,
+    ffn: QFfnParams,
+}
+
+impl QEncoderLayerParams {
+    fn quantize(l: &EncoderLayerParams, d_model: usize, d_ff: usize, block: usize) -> Result<Self> {
+        let a = &l.attn;
+        let dh = a.d_head;
+        let mut wq = Vec::with_capacity(a.heads);
+        let mut wk = Vec::with_capacity(a.heads);
+        let mut wv = Vec::with_capacity(a.heads);
+        for i in 0..a.heads {
+            wq.push(QLinear::from_rm(&a.wq_rm[i], d_model, dh, block)?);
+            wk.push(QLinear::from_rm(&a.wk_rm[i], d_model, dh, block)?);
+            wv.push(QLinear::from_rm(&a.wv_rm[i], d_model, dh, block)?);
+        }
+        let wo = QLinear::from_rm(&a.wo_rm, d_model, d_model, block)?;
+        let w1 = QLinear::from_rm(&l.ffn.w1_rm, d_model, d_ff, block)?;
+        let w2 = QLinear::from_rm(&l.ffn.w2_rm, d_ff, d_model, block)?;
+        Ok(Self { attn: QAttentionParams { wq, wk, wv, wo }, ffn: QFfnParams { w1, w2 } })
+    }
+}
+
 /// What a [`NativeModel`] computes per sequence.
 #[derive(Debug, Clone)]
 enum ModelKind {
@@ -851,6 +960,15 @@ enum ModelKind {
     Ffn(FfnParams),
     /// Stack of full BERT encoder layers ([`NativeModel::new_encoder`]).
     Encoder(Vec<EncoderLayerParams>),
+    /// The same encoder stack in the accelerator's int8 format
+    /// ([`NativeModel::new_encoder_int8`]): GEMM weights quantized per
+    /// output channel (`qlayers`), activations requantized per tensor
+    /// between GEMMs, every GEMM reduced in exact i32 with a fused
+    /// dequant epilogue. `golden` retains the f32 parameters the
+    /// quantized weights were derived from — they supply the biases and
+    /// Add/Norm affines of the f32 spine *and* the unquantized
+    /// reference forward the accuracy bound compares against.
+    EncoderInt8 { qlayers: Vec<QEncoderLayerParams>, golden: Vec<EncoderLayerParams> },
 }
 
 /// Wall-time per encoder phase, accumulated across heads and layers by
@@ -1020,6 +1138,90 @@ impl NativeModel {
         })
     }
 
+    /// The int8 twin of [`Self::new_encoder`]: the **same** f32
+    /// parameters (same `seed`, same init) quantized into the
+    /// accelerator's format — weights per output channel
+    /// ([`quant::per_channel_scales`]), activations per tensor at run
+    /// time — with every GEMM reduced in exact i32 and dequantized
+    /// through a fused epilogue. The residual / LayerNorm / softmax
+    /// spine stays f32, so the ten phases (and their names) are
+    /// unchanged. Packed GEMM operands occupy 1 byte/element.
+    ///
+    /// Because the quantized weights derive from the identical f32
+    /// init, `new_encoder(..)` with the same arguments is this model's
+    /// golden: the int8 forward must stay within the pinned
+    /// [`rel_error`] bound of it (`native_encoder_int8_accuracy_b16`,
+    /// `tests/precision_accuracy.rs`). Bitwise serial==pooled and the
+    /// warm-forward zero-allocation contract hold exactly as for f32.
+    ///
+    /// `block` must be ≤ [`parallel::MAX_QBLOCK`] (workers reduce into
+    /// stack-resident i32 tiles).
+    pub fn new_encoder_int8(
+        seq: usize,
+        d_model: usize,
+        heads: usize,
+        d_ff: usize,
+        layers: usize,
+        block: usize,
+        seed: u64,
+    ) -> Result<Self> {
+        ensure!(
+            block <= parallel::MAX_QBLOCK,
+            "int8 encoder supports block sizes up to {} (got {block})",
+            parallel::MAX_QBLOCK
+        );
+        let mut model = Self::new_encoder(seq, d_model, heads, d_ff, layers, block, seed)?;
+        let ModelKind::Encoder(golden) = model.kind else {
+            unreachable!("new_encoder builds Encoder")
+        };
+        let qlayers = golden
+            .iter()
+            .map(|l| QEncoderLayerParams::quantize(l, d_model, d_ff, block))
+            .collect::<Result<Vec<_>>>()?;
+        model.kind = ModelKind::EncoderInt8 { qlayers, golden };
+        // The f32 constructor seeded an f32-only lane; int8 forwards
+        // need the quantized-operand arenas too, so reseed the pool.
+        model.workspaces = Arc::new(WorkspacePool::new());
+        model
+            .workspaces
+            .checkin(EncoderWorkspace::new_encoder_int8(seq, d_model, heads, d_ff, block));
+        Ok(model)
+    }
+
+    /// The numeric format this model's GEMM stack runs in.
+    pub fn precision(&self) -> Precision {
+        match self.kind {
+            ModelKind::EncoderInt8 { .. } => Precision::Int8,
+            _ => Precision::F32,
+        }
+    }
+
+    /// Bytes of packed GEMM weight payload (4 per f32 element, 1 per
+    /// int8 element — per-channel scales, biases, and Add/Norm affines
+    /// excluded): the byte traffic the paper's data arrangement is
+    /// designed to minimize, and what `benches/precision.rs` reports as
+    /// "bytes packed".
+    pub fn packed_param_bytes(&self) -> usize {
+        fn f32_layer(l: &EncoderLayerParams) -> usize {
+            let a = &l.attn;
+            let per_head: usize = a.wq.iter().chain(&a.wk).chain(&a.wv).map(|w| w.len()).sum();
+            4 * (per_head + a.wo.len() + l.ffn.w1.len() + l.ffn.w2.len())
+        }
+        match &self.kind {
+            ModelKind::Ffn(f) => 4 * (f.w1.len() + f.w2.len()),
+            ModelKind::Encoder(stack) => stack.iter().map(f32_layer).sum(),
+            ModelKind::EncoderInt8 { qlayers, .. } => qlayers
+                .iter()
+                .map(|l| {
+                    let a = &l.attn;
+                    let per_head: usize =
+                        a.wq.iter().chain(&a.wk).chain(&a.wv).map(|w| w.w.len()).sum();
+                    per_head + a.wo.w.len() + l.ffn.w1.w.len() + l.ffn.w2.w.len()
+                })
+                .sum(),
+        }
+    }
+
     /// Build the model's **persistent** worker pool: `cores` long-lived
     /// workers shared by every subsequent [`Self::forward`] (and by the
     /// batch server's dispatch — clones share the same pool). `cores`
@@ -1089,6 +1291,13 @@ impl NativeModel {
                 self.d_ff,
                 self.block,
             ),
+            ModelKind::EncoderInt8 { golden, .. } => EncoderWorkspace::new_encoder_int8(
+                self.seq,
+                self.d_model,
+                golden[0].attn.heads,
+                self.d_ff,
+                self.block,
+            ),
         }
     }
 
@@ -1118,9 +1327,9 @@ impl NativeModel {
     }
 
     /// Whether this model runs the full encoder stack (vs the legacy
-    /// FFN-only block).
+    /// FFN-only block), in either precision.
     pub fn is_encoder(&self) -> bool {
-        matches!(self.kind, ModelKind::Encoder(_))
+        matches!(self.kind, ModelKind::Encoder(_) | ModelKind::EncoderInt8 { .. })
     }
 
     /// Number of encoder layers (1 for the FFN-only model).
@@ -1128,6 +1337,7 @@ impl NativeModel {
         match &self.kind {
             ModelKind::Ffn(_) => 1,
             ModelKind::Encoder(stack) => stack.len(),
+            ModelKind::EncoderInt8 { golden, .. } => golden.len(),
         }
     }
 
@@ -1264,6 +1474,18 @@ impl NativeModel {
             ModelKind::Encoder(stack) => {
                 for layer in stack {
                     self.encoder_layer_forward_ws(layer, ws, pool, timings.as_deref_mut())?;
+                    ws.advance_layer();
+                }
+            }
+            ModelKind::EncoderInt8 { qlayers, golden } => {
+                for (ql, layer) in qlayers.iter().zip(golden) {
+                    self.encoder_layer_forward_int8_ws(
+                        ql,
+                        layer,
+                        ws,
+                        pool,
+                        timings.as_deref_mut(),
+                    )?;
                     ws.advance_layer();
                 }
             }
@@ -1421,7 +1643,7 @@ impl NativeModel {
         let mask = self.mask.as_deref();
         let sdh = s * dh;
 
-        let EncoderWorkspace { x, hc, proj, out, qkv, kt, scores, hid } = ws;
+        let EncoderWorkspace { x, hc, proj, out, qkv, kt, scores, hid, .. } = ws;
         let xs: &[f32] = x;
         // Clock reads only when the caller asked for timings — the
         // untimed hot path must not pay 10 clock calls per layer.
@@ -1611,8 +1833,281 @@ impl NativeModel {
         Ok(())
     }
 
+    /// One encoder layer in the accelerator's **int8** format — the same
+    /// ten phases, names, and order as [`Self::encoder_layer_forward_ws`]
+    /// (so `simulate`, `serve --precision f32`, and
+    /// `serve --precision int8` all describe one pipeline), with every
+    /// GEMM running on quantized operands:
+    ///
+    /// * each GEMM's activation operand is requantized per tensor into
+    ///   its i8 workspace arena by a **serial**
+    ///   [`quant::quantize_slice_into`] pass (one max-abs fold + one
+    ///   store pass, pool-width-independent, allocation-free) folded
+    ///   into the phase's timing;
+    /// * the GEMM itself reduces int8×int8 in exact i32 on the owning
+    ///   worker's stack and stores f32 through a fused
+    ///   [`QEpilogue`] — per-output-channel weight dequant (+ bias
+    ///   (+GELU)) for the linear layers, a single combined scale for the
+    ///   per-tensor QKᵀ and probs·V attention GEMMs;
+    /// * the residual / LayerNorm / softmax spine, the packed Kᵀ
+    ///   transpose, and the layer ping-pong run on the f32 arenas
+    ///   unchanged.
+    ///
+    /// Determinism: the quantize passes are serial, i32 accumulation is
+    /// exact, and the epilogues are fixed per-element float sequences —
+    /// so the int8 forward inherits the bitwise serial==pooled guarantee
+    /// at every core count. A warm call allocates nothing: the i8 arenas
+    /// are preplanned ([`EncoderWorkspace::new_encoder_int8`]) and the
+    /// i32 accumulator tiles live on worker stacks
+    /// ([`parallel::MAX_QBLOCK`]).
+    fn encoder_layer_forward_int8_ws(
+        &self,
+        ql: &QEncoderLayerParams,
+        layer: &EncoderLayerParams,
+        ws: &mut EncoderWorkspace,
+        pool: &WorkerPool,
+        mut timings: Option<&mut PhaseTimings>,
+    ) -> Result<()> {
+        let (s, d, b, dff) = (self.seq, self.d_model, self.block, self.d_ff);
+        let attn = &layer.attn;
+        let ffn = &layer.ffn;
+        let (heads, dh) = (attn.heads, attn.d_head);
+        let scale = 1.0 / (dh as f32).sqrt();
+        let mask = self.mask.as_deref();
+        let sdh = s * dh;
+
+        let EncoderWorkspace {
+            x, hc, proj, out, qkv, kt, scores, hid, xq, qkvq, ktq, scoresq, hcq, hidq,
+        } = ws;
+        let xs: &[f32] = x;
+        let timed = timings.is_some();
+
+        // 1. Q/K/V projections: quantize the packed layer input once,
+        // then all 3·heads int8 GEMMs form ONE parallel region, each
+        // tile dequantized per output channel with the bias fused.
+        let t0 = timed.then(Instant::now);
+        let x_scale = quant::quantize_slice_into(xs, xq);
+        let xqs: &[i8] = xq;
+        parallel::gemm_i8_batch_into(
+            3 * heads,
+            &|t| {
+                let (kind, i) = (t / heads, t % heads);
+                let (w, bias) = match kind {
+                    0 => (&ql.attn.wq[i], &attn.bq[i]),
+                    1 => (&ql.attn.wk[i], &attn.bk[i]),
+                    _ => (&ql.attn.wv[i], &attn.bv[i]),
+                };
+                QGemmTask {
+                    a: xqs,
+                    b: &w.w,
+                    m: s,
+                    k: d,
+                    n: dh,
+                    epilogue: QEpilogue::DequantBias {
+                        a_scale: x_scale,
+                        wscales: &w.wscales,
+                        bias,
+                    },
+                }
+            },
+            qkv,
+            &|t| packed_desc_at((t * sdh) as u64, s, dh, b),
+            b,
+            pool,
+        )?;
+        if let (Some(t0), Some(t)) = (t0, timings.as_deref_mut()) {
+            t.add("QKV GEMM", t0.elapsed());
+        }
+
+        // 2. Kᵀ on the dequantized f32 K region (pure data movement —
+        // quantizing before or after a transpose is equivalent, so the
+        // spine keeps the f32 kernel).
+        let t0 = timed.then(Instant::now);
+        parallel::transpose_packed_many_into(
+            &qkv[heads * sdh..2 * heads * sdh],
+            kt,
+            heads,
+            s,
+            dh,
+            b,
+            pool,
+        )?;
+        if let (Some(t0), Some(t)) = (t0, timings.as_deref_mut()) {
+            t.add("K Transpose", t0.elapsed());
+        }
+
+        // 3. Attention scores Q×Kᵀ: requantize Q and Kᵀ per tensor, all
+        // heads' int8 GEMMs in one region, dequantized with the combined
+        // scale s_q·s_k (the 1/√d_head attention scale stays folded into
+        // the softmax pass, as in f32).
+        let t0 = timed.then(Instant::now);
+        let q_scale = quant::quantize_slice_into(&qkv[..heads * sdh], &mut qkvq[..heads * sdh]);
+        let k_scale = quant::quantize_slice_into(kt, ktq);
+        let qqs: &[i8] = &qkvq[..heads * sdh];
+        let ktqs: &[i8] = ktq;
+        parallel::gemm_i8_batch_into(
+            heads,
+            &|i| QGemmTask {
+                a: &qqs[i * sdh..(i + 1) * sdh],
+                b: &ktqs[i * sdh..(i + 1) * sdh],
+                m: s,
+                k: dh,
+                n: s,
+                epilogue: QEpilogue::Dequant { scale: q_scale * k_scale },
+            },
+            scores,
+            &|i| packed_desc_at((i * s * s) as u64, s, s, b),
+            b,
+            pool,
+        )?;
+        if let (Some(t0), Some(t)) = (t0, timings.as_deref_mut()) {
+            t.add("QK^T GEMM", t0.elapsed());
+        }
+
+        // 4. Masked softmax — f32 spine, identical to the f32 path.
+        let t0 = timed.then(Instant::now);
+        parallel::masked_softmax_pooled(scores, mask, scale, heads * s, s, b, pool)?;
+        if let (Some(t0), Some(t)) = (t0, timings.as_deref_mut()) {
+            t.add("Softmax", t0.elapsed());
+        }
+
+        // 5. Attention × V: requantize the probabilities (amax ≤ 1, so
+        // the scale is ≤ 1/127) and the V region, each head writing its
+        // column slice of the concatenated output via a view descriptor.
+        let t0 = timed.then(Instant::now);
+        let p_scale = quant::quantize_slice_into(&scores[..], scoresq);
+        let v_scale =
+            quant::quantize_slice_into(&qkv[2 * heads * sdh..], &mut qkvq[2 * heads * sdh..]);
+        let pqs: &[i8] = scoresq;
+        let vqs: &[i8] = &qkvq[2 * heads * sdh..];
+        let d_concat = packed_desc(s, d, b);
+        parallel::gemm_i8_batch_into(
+            heads,
+            &|i| QGemmTask {
+                a: &pqs[i * s * s..(i + 1) * s * s],
+                b: &vqs[i * sdh..(i + 1) * sdh],
+                m: s,
+                k: s,
+                n: dh,
+                epilogue: QEpilogue::Dequant { scale: p_scale * v_scale },
+            },
+            hc,
+            &|i| d_concat.col_view(i * dh, dh),
+            b,
+            pool,
+        )?;
+        if let (Some(t0), Some(t)) = (t0, timings.as_deref_mut()) {
+            t.add("AV GEMM", t0.elapsed());
+        }
+
+        // 6. Output projection: requantize the concatenated heads,
+        // per-channel dequant + fused bias.
+        let t0 = timed.then(Instant::now);
+        let hc_scale = quant::quantize_slice_into(&hc[..], hcq);
+        let hcqs: &[i8] = hcq;
+        parallel::gemm_i8_batch_into(
+            1,
+            &|_| QGemmTask {
+                a: hcqs,
+                b: &ql.attn.wo.w,
+                m: s,
+                k: d,
+                n: d,
+                epilogue: QEpilogue::DequantBias {
+                    a_scale: hc_scale,
+                    wscales: &ql.attn.wo.wscales,
+                    bias: &attn.bo,
+                },
+            },
+            proj,
+            &|_| packed_desc(s, d, b),
+            b,
+            pool,
+        )?;
+        if let (Some(t0), Some(t)) = (t0, timings.as_deref_mut()) {
+            t.add("Projection GEMM", t0.elapsed());
+        }
+
+        // 7. Residual + LayerNorm — f32 spine.
+        let t0 = timed.then(Instant::now);
+        parallel::add_norm_pooled(proj, xs, &attn.gamma, &attn.beta, s, d, b, Self::EPS, pool)?;
+        if let (Some(t0), Some(t)) = (t0, timings.as_deref_mut()) {
+            t.add("Add/Norm 1", t0.elapsed());
+        }
+
+        // 8.–9. Feed-forward: requantize the Add/Norm-1 output (the xq
+        // arena is free again — the layer input's quantized image is
+        // dead once Q/K/V are projected), GELU fused on FF1's dequant
+        // store path.
+        let t0 = timed.then(Instant::now);
+        let ps: &[f32] = proj;
+        let proj_scale = quant::quantize_slice_into(ps, xq);
+        let projq: &[i8] = xq;
+        parallel::gemm_i8_batch_into(
+            1,
+            &|_| QGemmTask {
+                a: projq,
+                b: &ql.ffn.w1.w,
+                m: s,
+                k: d,
+                n: dff,
+                epilogue: QEpilogue::DequantBiasGelu {
+                    a_scale: proj_scale,
+                    wscales: &ql.ffn.w1.wscales,
+                    bias: &ffn.b1,
+                },
+            },
+            hid,
+            &|_| packed_desc(s, dff, b),
+            b,
+            pool,
+        )?;
+        if let (Some(t0), Some(t)) = (t0, timings.as_deref_mut()) {
+            t.add("FF1 GEMM (+GELU)", t0.elapsed());
+        }
+
+        let t0 = timed.then(Instant::now);
+        let hid_scale = quant::quantize_slice_into(&hid[..], hidq);
+        let hidqs: &[i8] = hidq;
+        parallel::gemm_i8_batch_into(
+            1,
+            &|_| QGemmTask {
+                a: hidqs,
+                b: &ql.ffn.w2.w,
+                m: s,
+                k: dff,
+                n: d,
+                epilogue: QEpilogue::DequantBias {
+                    a_scale: hid_scale,
+                    wscales: &ql.ffn.w2.wscales,
+                    bias: &ffn.b2,
+                },
+            },
+            out,
+            &|_| packed_desc(s, d, b),
+            b,
+            pool,
+        )?;
+        if let (Some(t0), Some(t)) = (t0, timings.as_deref_mut()) {
+            t.add("FF2 GEMM", t0.elapsed());
+        }
+
+        // 10. Residual + LayerNorm — f32 spine.
+        let t0 = timed.then(Instant::now);
+        parallel::add_norm_pooled(out, ps, &ffn.gamma, &ffn.beta, s, d, b, Self::EPS, pool)?;
+        if let (Some(t0), Some(t)) = (t0, timings.as_deref_mut()) {
+            t.add("Add/Norm 2", t0.elapsed());
+        }
+
+        Ok(())
+    }
+
     /// The same function on the row-major reference kernels (golden path
-    /// for `verify`, tests, and the serving cross-check).
+    /// for `verify`, tests, and the serving cross-check). For an int8
+    /// model this runs the retained **unquantized f32** parameters — the
+    /// golden the quantized forward's [`rel_error`] bound is pinned
+    /// against, not a bit-level reference of the int8 arithmetic (that
+    /// contract is serial==pooled bitwise equality instead).
     pub fn forward_reference(&self, x: &Tensor) -> Result<Tensor> {
         ensure!(x.shape == self.in_shape(), "input shape {:?}", x.shape);
         let (s, d) = (self.seq, self.d_model);
@@ -1621,7 +2116,7 @@ impl NativeModel {
             ModelKind::Ffn(ffn) => {
                 cur = self.ffn_reference(&cur, ffn, false);
             }
-            ModelKind::Encoder(stack) => {
+            ModelKind::Encoder(stack) | ModelKind::EncoderInt8 { golden: stack, .. } => {
                 for layer in stack {
                     cur = self.encoder_layer_reference(&cur, layer);
                 }
@@ -1706,6 +2201,9 @@ pub fn native_tags() -> &'static [&'static str] {
         "native_encoder_equiv_b16",
         "native_parallel_equiv_b16",
         "native_encoder_parallel_equiv_b16",
+        "native_gemm_i8_parallel_equiv_b16",
+        "native_encoder_int8_accuracy_b16",
+        "native_encoder_int8_parallel_equiv_b16",
     ]
 }
 
@@ -1990,6 +2488,118 @@ fn check_parallel_equiv(tag: &'static str, block: usize) -> Result<NativeCheck> 
     Ok(NativeCheck { tag, max_diff, ok })
 }
 
+/// The int8 determinism contract as a verify tag: the blocked int8 GEMM
+/// (exact i32 accumulation) must be **identical** to its serial run at
+/// several awkward core counts, and the batched epilogue path
+/// ([`parallel::gemm_i8_batch_into`]) must be bitwise serial==pooled.
+fn check_gemm_i8_parallel(tag: &'static str, block: usize) -> Result<NativeCheck> {
+    let (m, k, n) = (4 * block, 6 * block, 3 * block);
+    let mut rng = XorShift64::new(0x18E9);
+    let a = QTensor::quantize(&Tensor::new(vec![m, k], rand_vec(&mut rng, m * k)))?;
+    let b = QTensor::quantize(&Tensor::new(vec![k, n], rand_vec(&mut rng, k * n)))?;
+    let ap = crate::layout::rwma_to_bwma(&a.data, m, k, block);
+    let bp = crate::layout::rwma_to_bwma(&b.data, k, n, block);
+    let serial = super::parallel::gemm_i8(&ap, &bp, m, k, n, block, 1)?;
+    let wscales = vec![b.scale; n];
+    let bias = rand_vec(&mut rng, n);
+    let mut c_serial = vec![0.0f32; m * n];
+    let task = |_: usize| QGemmTask {
+        a: &ap,
+        b: &bp,
+        m,
+        k,
+        n,
+        epilogue: QEpilogue::DequantBias { a_scale: a.scale, wscales: &wscales, bias: &bias },
+    };
+    super::parallel::gemm_i8_batch_into(
+        1,
+        &task,
+        &mut c_serial,
+        &|_| packed_desc(m, n, block),
+        block,
+        parallel::serial_pool(),
+    )?;
+    let mut max_diff = 0.0f32;
+    let mut ok = true;
+    for cores in [2usize, 3, 8] {
+        let par = super::parallel::gemm_i8(&ap, &bp, m, k, n, block, cores)?;
+        max_diff = max_diff
+            .max(serial.iter().zip(&par).map(|(s, p)| (s - p).abs() as f32).fold(0.0, f32::max));
+        ok &= serial == par;
+        let pool = WorkerPool::new(cores)?;
+        let mut c_par = vec![0.0f32; m * n];
+        super::parallel::gemm_i8_batch_into(
+            1,
+            &task,
+            &mut c_par,
+            &|_| packed_desc(m, n, block),
+            block,
+            &pool,
+        )?;
+        max_diff = max_diff
+            .max(c_serial.iter().zip(&c_par).map(|(s, p)| (s - p).abs()).fold(0.0, f32::max));
+        ok &= c_serial.iter().zip(&c_par).all(|(s, p)| s.to_bits() == p.to_bits());
+    }
+    Ok(NativeCheck { tag, max_diff, ok })
+}
+
+/// The int8 encoder check model: [`check_encoder_model`]'s shape and
+/// mask, quantized — plus its f32 golden built from the same seed.
+fn check_encoder_int8_models(block: usize, seed: u64) -> Result<(NativeModel, NativeModel)> {
+    let seq = 2 * block;
+    let mut mask = vec![0.0f32; seq];
+    for m in mask.iter_mut().skip(seq - block) {
+        *m = f32::NEG_INFINITY;
+    }
+    let int8 = NativeModel::new_encoder_int8(seq, 2 * block, 2, 4 * block, 2, block, seed)?
+        .with_mask(mask.clone())?;
+    let golden =
+        NativeModel::new_encoder(seq, 2 * block, 2, 4 * block, 2, block, seed)?.with_mask(mask)?;
+    Ok((int8, golden))
+}
+
+/// The accuracy bound as a verify tag: the int8 encoder forward must
+/// stay within a pinned [`rel_error`] of the f32 golden built from the
+/// same seed (`max_diff` reports the relative Frobenius error). The
+/// bound is deliberately generous — typical error at these shapes is
+/// well under 2% — so it trips on broken scaling, not on quantization
+/// noise.
+fn check_encoder_int8_accuracy(
+    tag: &'static str,
+    block: usize,
+    cores: usize,
+) -> Result<NativeCheck> {
+    let (int8, golden) = check_encoder_int8_models(block, 0x18E4)?;
+    let mut rng = XorShift64::new(0x18E5);
+    let x = Tensor::new(int8.in_shape(), rand_vec(&mut rng, int8.seq * int8.d_model));
+    let got = int8.forward_with_cores(&x, cores)?;
+    let expect = golden.forward_with_cores(&x, 1)?;
+    let err = rel_error(&got, &expect);
+    // The retained golden params double as the int8 model's own
+    // reference path — the two goldens must agree.
+    let reference = int8.forward_reference(&x)?;
+    let ok = err < 0.1 && golden.forward_reference(&x)?.max_abs_diff(&reference) == 0.0;
+    Ok(NativeCheck { tag, max_diff: err, ok })
+}
+
+/// Bitwise parallel==serial for the **int8** encoder stack at several
+/// core counts — the determinism contract extended to the quantized
+/// pipeline (exact i32 GEMMs + serial requantize passes).
+fn check_encoder_int8_parallel(tag: &'static str, block: usize) -> Result<NativeCheck> {
+    let (model, _) = check_encoder_int8_models(block, 0x18E6)?;
+    let mut rng = XorShift64::new(0x18E7);
+    let x = Tensor::new(model.in_shape(), rand_vec(&mut rng, model.seq * model.d_model));
+    let serial = model.forward_with_cores(&x, 1)?;
+    let mut max_diff = 0.0f32;
+    let mut ok = true;
+    for cores in [2usize, 3, 8] {
+        let par = model.forward_with_cores(&x, cores)?;
+        max_diff = max_diff.max(serial.max_abs_diff(&par));
+        ok &= serial.data.iter().zip(&par.data).all(|(a, b)| a.to_bits() == b.to_bits());
+    }
+    Ok(NativeCheck { tag, max_diff, ok })
+}
+
 /// Run one named check of the native suite on the serial kernels.
 pub fn run_native_check(tag: &str) -> Result<NativeCheck> {
     run_native_check_with_cores(tag, 1)
@@ -2017,6 +2627,15 @@ pub fn run_native_check_with_cores(tag: &str, cores: usize) -> Result<NativeChec
         "native_parallel_equiv_b16" => check_parallel_equiv("native_parallel_equiv_b16", 16),
         "native_encoder_parallel_equiv_b16" => {
             check_encoder_parallel("native_encoder_parallel_equiv_b16", 16)
+        }
+        "native_gemm_i8_parallel_equiv_b16" => {
+            check_gemm_i8_parallel("native_gemm_i8_parallel_equiv_b16", 16)
+        }
+        "native_encoder_int8_accuracy_b16" => {
+            check_encoder_int8_accuracy("native_encoder_int8_accuracy_b16", 16, cores)
+        }
+        "native_encoder_int8_parallel_equiv_b16" => {
+            check_encoder_int8_parallel("native_encoder_int8_parallel_equiv_b16", 16)
         }
         _ => bail!("unknown native check {tag:?} (see `bwma verify all`)"),
     }
@@ -2432,5 +3051,98 @@ mod tests {
         // FFN-only models have no phase breakdown.
         let ffn = NativeModel::new(16, 16, 32, 16, 2).unwrap();
         assert!(ffn.forward_timed(&x, 1).is_err());
+    }
+
+    #[test]
+    fn precision_parses_and_prints() {
+        assert_eq!("f32".parse::<Precision>().unwrap(), Precision::F32);
+        assert_eq!("int8".parse::<Precision>().unwrap(), Precision::Int8);
+        assert!("fp16".parse::<Precision>().is_err());
+        assert_eq!(Precision::Int8.to_string(), "int8");
+        let model = NativeModel::new_encoder(16, 16, 2, 32, 1, 8, 1).unwrap();
+        assert_eq!(model.precision(), Precision::F32);
+        let qmodel = NativeModel::new_encoder_int8(16, 16, 2, 32, 1, 8, 1).unwrap();
+        assert_eq!(qmodel.precision(), Precision::Int8);
+        assert!(qmodel.is_encoder());
+        assert_eq!(qmodel.num_layers(), 1);
+    }
+
+    #[test]
+    fn int8_encoder_rejects_oversized_blocks() {
+        // 64 > MAX_QBLOCK: the worker-stack i32 accumulator tile cannot
+        // hold the block, so the constructor must refuse.
+        let err = NativeModel::new_encoder_int8(64, 64, 1, 128, 1, 64, 1)
+            .err()
+            .expect("block 64 must be rejected for int8");
+        assert!(format!("{err:#}").contains("block"));
+        // The same shape is fine in f32…
+        assert!(NativeModel::new_encoder(64, 64, 1, 128, 1, 64, 1).is_ok());
+        // …and the paper's kernel sizes are fine in int8.
+        assert!(NativeModel::new_encoder_int8(32, 32, 2, 64, 1, 16, 1).is_ok());
+    }
+
+    #[test]
+    fn int8_encoder_tracks_the_f32_golden() {
+        let seed = 0x18E0;
+        let int8 = NativeModel::new_encoder_int8(32, 32, 2, 64, 2, 16, seed).unwrap();
+        let f32m = NativeModel::new_encoder(32, 32, 2, 64, 2, 16, seed).unwrap();
+        let mut rng = XorShift64::new(0x18E1);
+        let x = Tensor::new(int8.in_shape(), rand_vec(&mut rng, 32 * 32));
+        let got = int8.forward(&x).unwrap();
+        let expect = f32m.forward(&x).unwrap();
+        let err = rel_error(&got, &expect);
+        assert!(err < 0.1, "int8 encoder vs f32 golden rel_error {err}");
+        // The int8 model's own reference path IS the f32 golden.
+        let reference = int8.forward_reference(&x).unwrap();
+        assert_eq!(reference, f32m.forward_reference(&x).unwrap());
+    }
+
+    #[test]
+    fn int8_forward_is_bitwise_core_count_invariant() {
+        let model = NativeModel::new_encoder_int8(32, 32, 2, 64, 2, 16, 0x18E2).unwrap();
+        let mut rng = XorShift64::new(0x18E3);
+        let x = Tensor::new(model.in_shape(), rand_vec(&mut rng, 32 * 32));
+        let serial = model.forward_with_cores(&x, 1).unwrap();
+        for cores in [2usize, 3, 8] {
+            let par = model.forward_with_cores(&x, cores).unwrap();
+            assert!(
+                serial.data.iter().zip(&par.data).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "int8 forward diverged at {cores} cores"
+            );
+        }
+    }
+
+    #[test]
+    fn int8_forward_timed_reports_the_same_phase_names() {
+        let model = NativeModel::new_encoder_int8(16, 16, 1, 32, 1, 16, 2).unwrap();
+        let x = Tensor::zeros(vec![16, 16]);
+        let (_, timings) = model.forward_timed(&x, 1).unwrap();
+        let names: Vec<&str> = timings.entries().iter().map(|(n, _)| *n).collect();
+        assert_eq!(
+            names,
+            [
+                "QKV GEMM",
+                "K Transpose",
+                "QK^T GEMM",
+                "Softmax",
+                "AV GEMM",
+                "Projection GEMM",
+                "Add/Norm 1",
+                "FF1 GEMM (+GELU)",
+                "FF2 GEMM",
+                "Add/Norm 2",
+            ]
+        );
+    }
+
+    #[test]
+    fn int8_packs_one_byte_per_weight_element() {
+        let f32m = NativeModel::new_encoder(32, 32, 2, 64, 2, 16, 3).unwrap();
+        let int8 = NativeModel::new_encoder_int8(32, 32, 2, 64, 2, 16, 3).unwrap();
+        // Same element counts, 4 bytes vs 1 byte per packed element.
+        assert_eq!(f32m.packed_param_bytes(), 4 * int8.packed_param_bytes());
+        // Per layer: 3 per-head d×dh + d×d + d×dff + dff×d elements.
+        let per_layer = 3 * 32 * 32 + 32 * 32 + 2 * 32 * 64;
+        assert_eq!(int8.packed_param_bytes(), 2 * per_layer);
     }
 }

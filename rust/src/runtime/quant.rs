@@ -19,11 +19,15 @@ pub struct QTensor {
 
 impl QTensor {
     /// Quantize with the max-abs (per-tensor symmetric) calibration.
+    ///
+    /// Fails on non-finite input: `f32::max` silently drops NaN, so a NaN
+    /// would corrupt the calibration without tripping it, and ±∞ would
+    /// produce an infinite scale — both must be rejected, not absorbed.
     pub fn quantize(t: &Tensor) -> Result<Self> {
         if t.is_empty() {
             bail!("cannot quantize an empty tensor");
         }
-        let amax = t.data.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        let amax = checked_amax(&t.data)?;
         let scale = if amax == 0.0 { 1.0 } else { amax / 127.0 };
         let data = t
             .data
@@ -49,6 +53,68 @@ impl QTensor {
     pub fn bytes(&self) -> usize {
         self.data.len()
     }
+}
+
+/// Max-abs calibration scan that refuses non-finite input (NaN slips
+/// through `f32::max` unnoticed; ±∞ yields an unusable scale).
+pub fn checked_amax(xs: &[f32]) -> Result<f32> {
+    let mut amax = 0.0f32;
+    for (i, &v) in xs.iter().enumerate() {
+        if !v.is_finite() {
+            bail!("non-finite value {v} at index {i} in quantization input");
+        }
+        amax = amax.max(v.abs());
+    }
+    Ok(amax)
+}
+
+/// Symmetric per-output-channel scales for a row-major `k×n` weight
+/// matrix: `scales[j] = amax(column j) / 127` (1.0 for an all-zero
+/// column). Per-channel calibration is what keeps the int8 encoder
+/// accurate — one badly-scaled column no longer poisons the whole
+/// tensor's resolution.
+pub fn per_channel_scales(w: &[f32], k: usize, n: usize) -> Result<Vec<f32>> {
+    if w.len() != k * n {
+        bail!("weight buffer {} != {k}x{n}", w.len());
+    }
+    let mut amax = vec![0.0f32; n];
+    for (i, &v) in w.iter().enumerate() {
+        if !v.is_finite() {
+            bail!("non-finite weight {v} at index {i}");
+        }
+        let a = &mut amax[i % n];
+        *a = a.max(v.abs());
+    }
+    Ok(amax.into_iter().map(|a| if a == 0.0 { 1.0 } else { a / 127.0 }).collect())
+}
+
+/// Quantize a row-major `k×n` weight matrix with the given per-channel
+/// scales (`out[i*n+j] = round(w[i*n+j] / scales[j])`, clamped to ±127).
+pub fn quantize_per_channel(w: &[f32], k: usize, n: usize, scales: &[f32]) -> Result<Vec<i8>> {
+    if w.len() != k * n || scales.len() != n {
+        bail!("shape mismatch: weight {} vs {k}x{n}, scales {} vs {n}", w.len(), scales.len());
+    }
+    Ok(w.iter()
+        .enumerate()
+        .map(|(i, &v)| (v / scales[i % n]).round().clamp(-127.0, 127.0) as i8)
+        .collect())
+}
+
+/// Deterministic serial per-tensor quantize into a reused buffer — the
+/// allocation-free form the int8 hot path runs between GEMM phases.
+/// Returns the symmetric scale. The serial single-pass scan keeps the
+/// scale (and therefore every downstream bit) identical at every pool
+/// width. Callers guarantee finite input (the f32 spine is NaN-free);
+/// debug builds verify it.
+pub fn quantize_slice_into(src: &[f32], dst: &mut [i8]) -> f32 {
+    debug_assert_eq!(src.len(), dst.len());
+    let amax = src.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+    debug_assert!(amax.is_finite(), "non-finite activation entering int8 requantize");
+    let scale = if amax == 0.0 { 1.0 } else { amax / 127.0 };
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = (s / scale).round().clamp(-127.0, 127.0) as i8;
+    }
+    scale
 }
 
 /// Reference quantized GEMM: int8 × int8 → i32 accumulate → rescale.
@@ -148,6 +214,71 @@ mod tests {
         let expect = Tensor::new(vec![32, 16], expect);
         let err = rel_error(&got, &expect);
         assert!(err < 0.02, "int8 GEMM error too large: {err}");
+    }
+
+    /// Regression: `f32::max` drops NaN, so the old max-abs fold would
+    /// calibrate a NaN-bearing tensor as if the NaN were absent and then
+    /// quantize the NaN to 0 — a silent corruption. It must error.
+    #[test]
+    fn quantize_rejects_nan() {
+        let t = Tensor::new(vec![4], vec![1.0, f32::NAN, 3.0, 4.0]);
+        let err = QTensor::quantize(&t).unwrap_err().to_string();
+        assert!(err.contains("non-finite"), "unexpected error: {err}");
+    }
+
+    /// Regression: ±∞ survived the old fold and produced an infinite
+    /// scale (every finite value quantizes to 0). It must error.
+    #[test]
+    fn quantize_rejects_infinities() {
+        for bad in [f32::INFINITY, f32::NEG_INFINITY] {
+            let t = Tensor::new(vec![3], vec![1.0, bad, -2.0]);
+            let err = QTensor::quantize(&t).unwrap_err().to_string();
+            assert!(err.contains("non-finite"), "unexpected error for {bad}: {err}");
+        }
+    }
+
+    #[test]
+    fn per_channel_scales_match_column_maxima() {
+        // 2×3: column amax = [4, 0, 0.5] → scales [4/127, 1.0, 0.5/127].
+        let w = vec![4.0, 0.0, -0.5, -1.0, 0.0, 0.3];
+        let s = per_channel_scales(&w, 2, 3).unwrap();
+        assert_eq!(s, vec![4.0 / 127.0, 1.0, 0.5 / 127.0]);
+        let q = quantize_per_channel(&w, 2, 3, &s).unwrap();
+        assert_eq!(q, vec![127, 0, -127, -32, 0, 76]);
+    }
+
+    #[test]
+    fn per_channel_beats_per_tensor_on_skewed_columns() {
+        // One huge column starves the others of resolution under a single
+        // per-tensor scale; per-channel keeps every column exact-ish.
+        let mut w = vec![0.0f32; 8 * 4];
+        for i in 0..8 {
+            w[i * 4] = 100.0;
+            w[i * 4 + 1] = 0.01 * (i as f32 + 1.0);
+        }
+        let s = per_channel_scales(&w, 8, 4).unwrap();
+        let q = quantize_per_channel(&w, 8, 4, &s).unwrap();
+        for i in 0..8 {
+            let back = q[i * 4 + 1] as f32 * s[1];
+            let want = 0.01 * (i as f32 + 1.0);
+            assert!((back - want).abs() <= s[1] / 2.0 + 1e-7, "lost column resolution");
+        }
+    }
+
+    #[test]
+    fn per_channel_rejects_non_finite() {
+        let w = vec![1.0, f32::NAN, 2.0, 3.0];
+        assert!(per_channel_scales(&w, 2, 2).is_err());
+    }
+
+    #[test]
+    fn quantize_slice_into_matches_qtensor() {
+        let t = rand_tensor(11, vec![16, 16]);
+        let q = QTensor::quantize(&t).unwrap();
+        let mut dst = vec![0i8; t.data.len()];
+        let scale = quantize_slice_into(&t.data, &mut dst);
+        assert_eq!(scale, q.scale);
+        assert_eq!(dst, q.data);
     }
 
     #[test]

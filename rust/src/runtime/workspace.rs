@@ -32,6 +32,14 @@
 //! model keeps just `x`/`out`/`hid`. The `block` size shapes the packing
 //! (every arena is BWMA-packed), not the byte count.
 //!
+//! An **int8** model ([`EncoderWorkspace::new_encoder_int8`]) adds i8
+//! operand arenas (`xq`/`qkvq`/`ktq`/`scoresq`/`hcq`/`hidq` — one byte
+//! per element, `6·seq·d_model + heads·seq² + seq·d_ff` total,
+//! [`EncoderWorkspace::total_i8`]) that the deterministic requantize
+//! passes write between GEMMs; the f32 arenas stay as the
+//! residual/norm/softmax spine and the dequantized GEMM outputs. f32
+//! models leave them empty.
+//!
 //! ## Ping-pong across layers
 //!
 //! A layer reads `x` and leaves its result in `out`; the internal
@@ -85,6 +93,20 @@ pub struct EncoderWorkspace {
     pub(crate) scores: Vec<f32>,
     /// FFN hidden activations (`seq·d_ff`).
     pub(crate) hid: Vec<f32>,
+    /// Quantized layer input / Add-Norm-1 output (`seq·d_model` i8;
+    /// empty for f32 models — as are all `*q` arenas below).
+    pub(crate) xq: Vec<i8>,
+    /// Quantized Q | K | V projections (`3·seq·d_model` i8): Q and V are
+    /// requantized here between attention GEMMs.
+    pub(crate) qkvq: Vec<i8>,
+    /// Quantized transposed keys (`seq·d_model` i8).
+    pub(crate) ktq: Vec<i8>,
+    /// Quantized attention probabilities (`heads·seq·seq` i8).
+    pub(crate) scoresq: Vec<i8>,
+    /// Quantized concatenated heads (`seq·d_model` i8).
+    pub(crate) hcq: Vec<i8>,
+    /// Quantized FFN hidden activations (`seq·d_ff` i8).
+    pub(crate) hidq: Vec<i8>,
 }
 
 impl EncoderWorkspace {
@@ -118,7 +140,36 @@ impl EncoderWorkspace {
             kt: vec![0.0; sd],
             scores: vec![0.0; heads * seq * seq],
             hid: vec![0.0; seq * d_ff],
+            xq: Vec::new(),
+            qkvq: Vec::new(),
+            ktq: Vec::new(),
+            scoresq: Vec::new(),
+            hcq: Vec::new(),
+            hidq: Vec::new(),
         }
+    }
+
+    /// Workspace for an **int8** encoder stack: the f32 arenas (the
+    /// residual/norm/softmax spine and every GEMM's dequantized output)
+    /// plus the i8 operand arenas the requantize passes write — sized
+    /// once from the model dims, so the quantized path keeps the
+    /// `steady_allocs = 0` contract.
+    pub fn new_encoder_int8(
+        seq: usize,
+        d_model: usize,
+        heads: usize,
+        d_ff: usize,
+        block: usize,
+    ) -> Self {
+        let mut ws = Self::new_encoder(seq, d_model, heads, d_ff, block);
+        let sd = seq * d_model;
+        ws.xq = vec![0; sd];
+        ws.qkvq = vec![0; 3 * sd];
+        ws.ktq = vec![0; sd];
+        ws.scoresq = vec![0; heads * seq * seq];
+        ws.hcq = vec![0; sd];
+        ws.hidq = vec![0; seq * d_ff];
+        ws
     }
 
     /// Workspace for the legacy FFN-only block (no attention arenas).
@@ -137,6 +188,12 @@ impl EncoderWorkspace {
             kt: Vec::new(),
             scores: Vec::new(),
             hid: vec![0.0; seq * d_ff],
+            xq: Vec::new(),
+            qkvq: Vec::new(),
+            ktq: Vec::new(),
+            scoresq: Vec::new(),
+            hcq: Vec::new(),
+            hidq: Vec::new(),
         }
     }
 
@@ -152,15 +209,31 @@ impl EncoderWorkspace {
             + self.hid.len()
     }
 
+    /// Total i8 elements held (the quantized-operand footprint; 0 for
+    /// f32 models). One i8 element is one byte — the payload width the
+    /// paper's 1-byte/element data arrangement is designed around.
+    pub fn total_i8(&self) -> usize {
+        self.xq.len()
+            + self.qkvq.len()
+            + self.ktq.len()
+            + self.scoresq.len()
+            + self.hcq.len()
+            + self.hidq.len()
+    }
+
     /// Rotate the layer ping-pong: the layer just wrote `out`; the next
     /// layer reads it as `x` (pointer swap — no copy, no allocation).
     pub(crate) fn advance_layer(&mut self) {
         std::mem::swap(&mut self.x, &mut self.out);
     }
 
-    /// Fill every arena with NaN — the stale-data test hook: a forward on
-    /// a poisoned workspace must produce bitwise-identical results,
-    /// proving every element is overwritten before it is read.
+    /// Fill every arena with a poison pattern — the stale-data test
+    /// hook: a forward on a poisoned workspace must produce
+    /// bitwise-identical results, proving every element is overwritten
+    /// before it is read. f32 arenas get NaN (which would propagate
+    /// loudly through any read); i8 arenas have no NaN, so they get
+    /// `i8::MIN` — a value the requantize passes never produce (outputs
+    /// are clamped to ±127), making any stale read corrupt the result.
     pub(crate) fn poison(&mut self) {
         for buf in [
             &mut self.x,
@@ -173,6 +246,16 @@ impl EncoderWorkspace {
             &mut self.hid,
         ] {
             buf.fill(f32::NAN);
+        }
+        for buf in [
+            &mut self.xq,
+            &mut self.qkvq,
+            &mut self.ktq,
+            &mut self.scoresq,
+            &mut self.hcq,
+            &mut self.hidq,
+        ] {
+            buf.fill(i8::MIN);
         }
     }
 }
@@ -235,8 +318,22 @@ mod tests {
         let (s, d, h, f, b) = (32usize, 32usize, 2usize, 64usize, 16usize);
         let ws = EncoderWorkspace::new_encoder(s, d, h, f, b);
         assert_eq!(ws.total_f32(), 8 * s * d + h * s * s + s * f);
+        assert_eq!(ws.total_i8(), 0, "f32 workspaces carry no quantized arenas");
         let ffn = EncoderWorkspace::new_ffn(s, d, f, b);
         assert_eq!(ffn.total_f32(), 2 * s * d + s * f);
+        assert_eq!(ffn.total_i8(), 0);
+    }
+
+    #[test]
+    fn int8_sizing_adds_the_quantized_operand_arenas() {
+        let (s, d, h, f, b) = (32usize, 32usize, 2usize, 64usize, 16usize);
+        let ws = EncoderWorkspace::new_encoder_int8(s, d, h, f, b);
+        // Same f32 spine as the float workspace...
+        assert_eq!(ws.total_f32(), 8 * s * d + h * s * s + s * f);
+        // ...plus one i8 byte per quantized operand element: x (s·d),
+        // Q|K|V (3·s·d), Kᵀ (s·d), concatenated heads (s·d), probs
+        // (h·s²), FFN hidden (s·d_ff).
+        assert_eq!(ws.total_i8(), 6 * s * d + h * s * s + s * f);
     }
 
     #[test]
@@ -260,5 +357,15 @@ mod tests {
         assert!(ws.x.iter().all(|v| v.is_nan()));
         assert!(ws.scores.iter().all(|v| v.is_nan()));
         assert!(ws.hid.iter().all(|v| v.is_nan()));
+    }
+
+    #[test]
+    fn poison_covers_the_quantized_arenas_too() {
+        let mut ws = EncoderWorkspace::new_encoder_int8(16, 16, 1, 32, 16);
+        ws.poison();
+        assert!(ws.x.iter().all(|v| v.is_nan()));
+        for buf in [&ws.xq, &ws.qkvq, &ws.ktq, &ws.scoresq, &ws.hcq, &ws.hidq] {
+            assert!(buf.iter().all(|&v| v == i8::MIN));
+        }
     }
 }

@@ -9,6 +9,11 @@
 //! The allocation counter is process-global and monotone, so every
 //! measuring test serializes on [`counter_lock`] (CI additionally runs
 //! this binary under `--test-threads=1` and `BWMA_TEST_CORES=4`).
+//!
+//! ISSUE 6 extends every contract to the int8 encoder: the quantized
+//! forward (activation requantize passes, i8 GEMMs with fused dequant
+//! epilogues, f32 spine) must hit the same zero-allocation and
+//! no-stale-lane-reads bars as the f32 path.
 
 use std::sync::{Mutex, MutexGuard};
 
@@ -131,6 +136,62 @@ fn steady_batch_loop_performs_zero_heap_allocations() {
     );
 }
 
+/// ISSUE 6: the quantized encoder shares the zero-allocation contract —
+/// the i8 operand arenas are part of the workspace lane, the per-tile
+/// i32 accumulators live on worker stacks, and the activation
+/// requantize passes write into reused arenas. Nothing allocates warm.
+#[test]
+fn warm_int8_forward_performs_zero_heap_allocations() {
+    let _g = counter_lock();
+    let model = NativeModel::new_encoder_int8(32, 32, 2, 64, 2, 16, 0xA118)
+        .unwrap()
+        .with_cores(test_cores())
+        .unwrap();
+    let mut rng = XorShift64::new(0xA119);
+    let x = Tensor::new(model.in_shape(), rand_vec(&mut rng, 32 * 32));
+    let mut out = Tensor::zeros(model.out_shape());
+    for _ in 0..3 {
+        model.forward_into(&x, &mut out).unwrap();
+    }
+    let expect = out.clone();
+    let before = heap_allocs_total();
+    for i in 0..100 {
+        model.forward_into(&x, &mut out).unwrap();
+        assert_eq!(out.data, expect.data, "int8 iteration {i} drifted");
+    }
+    let allocs = heap_allocs_total() - before;
+    assert_eq!(allocs, 0, "100 warm int8 forwards must not allocate (saw {allocs})");
+}
+
+/// ISSUE 6: the server's steady batch loop holds at zero allocations
+/// with the int8 model behind the same `run_batch_into` entry point.
+#[test]
+fn steady_int8_batch_loop_performs_zero_heap_allocations() {
+    let _g = counter_lock();
+    let cores = test_cores();
+    let model = NativeModel::new_encoder_int8(32, 32, 2, 64, 1, 16, 0xA11A)
+        .unwrap()
+        .with_cores(cores)
+        .unwrap();
+    model.reserve_workspace_lanes(cores);
+    let mut rng = XorShift64::new(0xA11B);
+    let per = 32 * 32;
+    let bsz = 2 * cores.max(1);
+    let stacked = rand_vec(&mut rng, bsz * per);
+    let mut out = vec![0.0f32; bsz * per];
+    for _ in 0..3 {
+        model.run_batch_into(&stacked, bsz, &mut out).unwrap();
+    }
+    let expect = out.clone();
+    let before = heap_allocs_total();
+    for i in 0..100 {
+        model.run_batch_into(&stacked, bsz, &mut out).unwrap();
+        assert_eq!(out, expect, "int8 batch iteration {i} drifted");
+    }
+    let allocs = heap_allocs_total() - before;
+    assert_eq!(allocs, 0, "steady int8 batch loop must not allocate (saw {allocs})");
+}
+
 /// Stale-data contract: poisoning every free lane with NaN between
 /// forwards must not leak a single bit into the next result — every
 /// workspace element is written before it is read.
@@ -151,6 +212,30 @@ fn poisoned_workspace_does_not_leak_into_results() {
         assert!(
             got.data.iter().zip(&expect.data).all(|(a, b)| a.to_bits() == b.to_bits()),
             "round {round}: poisoned workspace leaked into the output"
+        );
+    }
+}
+
+/// ISSUE 6: poison extends to the i8 operand arenas (filled with
+/// `i8::MIN`, a value the requantize clamp can never produce) — the
+/// quantized forward must overwrite every arena byte it reads.
+#[test]
+fn poisoned_int8_workspace_does_not_leak_into_results() {
+    let _g = counter_lock();
+    let model = NativeModel::new_encoder_int8(32, 32, 2, 64, 2, 16, 0xA11C)
+        .unwrap()
+        .with_cores(test_cores())
+        .unwrap();
+    let mut rng = XorShift64::new(0xA11D);
+    let x = Tensor::new(model.in_shape(), rand_vec(&mut rng, 32 * 32));
+    let expect = model.forward(&x).unwrap();
+    assert!(expect.data.iter().all(|v| v.is_finite()), "baseline must be clean");
+    for round in 0..3 {
+        model.poison_workspaces();
+        let got = model.forward(&x).unwrap();
+        assert!(
+            got.data.iter().zip(&expect.data).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "round {round}: poisoned int8 workspace leaked into the output"
         );
     }
 }
