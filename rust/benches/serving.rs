@@ -1,0 +1,149 @@
+//! Bench serving — throughput and tail latency of the two batcher
+//! engines on the same encoder family: the fixed engine (fuse + pad to
+//! a compiled variant) on uniform-length load, and the continuous
+//! engine (length buckets, per-sequence lane refill) on both uniform
+//! and mixed-length load. The mixed-length scenario is the one the
+//! continuous engine exists for: the fixed engine would pad every
+//! request to the longest variant, the continuous engine runs each at
+//! its own length.
+//!
+//! Every scenario asserts the serving contracts while it measures:
+//! nothing shed, nothing failed, nothing rejected, and **zero threads
+//! spawned across the measured window** (the flood rides the persistent
+//! pool built at warm-up).
+//!
+//! Run: `cargo bench --bench serving [-- --cores N]`
+//! Greppable summary: lines starting `serving-throughput`.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use bwma::coordinator::server::BatchRunner;
+use bwma::coordinator::{LatencyStats, Server, ServerConfig};
+use bwma::runtime::{available_cores, NativeModel, Tensor, WorkerPool};
+use bwma::util::XorShift64;
+
+const D_MODEL: usize = 64;
+const HEADS: usize = 2;
+const D_FF: usize = 128;
+const LAYERS: usize = 1;
+const BLOCK: usize = 16;
+const SEED: u64 = 0xBE4C;
+const REQUESTS: usize = 256;
+
+fn cores_arg() -> usize {
+    let args: Vec<String> = std::env::args().collect();
+    if let Some(n) = args
+        .iter()
+        .position(|a| a == "--cores")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+    {
+        return n;
+    }
+    available_cores().clamp(2, 4)
+}
+
+fn encoder(seq: usize) -> NativeModel {
+    NativeModel::new_encoder(seq, D_MODEL, HEADS, D_FF, LAYERS, BLOCK, SEED).unwrap()
+}
+
+/// Fixed engine: one 64-length model behind padded variants {1,2,4,8}.
+fn start_fixed(cores: usize) -> Server {
+    let model = Arc::new(encoder(64).with_cores(cores).unwrap());
+    let in_shape = model.in_shape();
+    let out_shape = model.out_shape();
+    let cfg = ServerConfig {
+        max_batch: 8,
+        batch_timeout: Duration::from_millis(1),
+        ..Default::default()
+    };
+    Server::start(cfg, move || {
+        let mut variants: BTreeMap<usize, Box<dyn BatchRunner>> = BTreeMap::new();
+        for bsz in [1usize, 2, 4, 8] {
+            variants.insert(bsz, Box::new(model.clone()));
+        }
+        Ok((variants, in_shape, out_shape))
+    })
+    .unwrap()
+}
+
+/// Continuous engine: one model per bucket, all on one shared pool.
+fn start_continuous(buckets: &[usize], cores: usize) -> Server {
+    let buckets = buckets.to_vec();
+    Server::start_continuous(ServerConfig::default(), move || {
+        let mut models: Vec<NativeModel> = Vec::new();
+        for &seq in &buckets {
+            let m = match models.first() {
+                None => encoder(seq).with_cores(cores)?,
+                Some(first) => encoder(seq).with_pool(Arc::clone(first.pool())),
+            };
+            models.push(m);
+        }
+        Ok(models)
+    })
+    .unwrap()
+}
+
+fn rand_input(rng: &mut XorShift64, seq: usize) -> Tensor {
+    let mut data = vec![0.0f32; seq * D_MODEL];
+    rng.fill_f32(&mut data);
+    Tensor::new(vec![seq, D_MODEL], data)
+}
+
+fn inputs(rng: &mut XorShift64, n: usize, buckets: &[usize]) -> Vec<Tensor> {
+    (0..n).map(|i| rand_input(rng, buckets[i % buckets.len()])).collect()
+}
+
+/// Submit the whole flood, await every response; returns requests/s and
+/// the server-side (queue + exec) latency distribution.
+fn flood(server: &Server, load: &[Tensor]) -> (f64, LatencyStats) {
+    let start = Instant::now();
+    let rxs: Vec<_> = load.iter().map(|x| server.submit(x.clone())).collect();
+    let mut lat = Vec::with_capacity(load.len());
+    for rx in rxs {
+        let resp = rx.recv().unwrap().unwrap();
+        lat.push(resp.queue_time + resp.exec_time);
+    }
+    let elapsed = start.elapsed().as_secs_f64();
+    (load.len() as f64 / elapsed, LatencyStats::from_samples(lat))
+}
+
+fn run_scenario(engine: &str, load_name: &str, server: Server, load: &[Tensor]) {
+    // Warm-up: build pools and workspace lanes outside the window.
+    flood(&server, &load[..load.len().min(16)]);
+    let spawned = WorkerPool::threads_spawned_total();
+    let (rps, lat) = flood(&server, load);
+    let steady_spawns = WorkerPool::threads_spawned_total() - spawned;
+    let metrics = server.shutdown().unwrap();
+    assert_eq!(steady_spawns, 0, "{engine}/{load_name}: measured window spawned threads");
+    assert_eq!(metrics.failed, 0, "{engine}/{load_name}: requests failed under the bench flood");
+    assert_eq!(metrics.shed, 0, "{engine}/{load_name}: the default queue depth must absorb this");
+    assert_eq!(metrics.rejected, 0, "{engine}/{load_name}: every bench request is well-formed");
+    let batching = if metrics.batches > 0 {
+        format!(" mean_batch={:.2}", metrics.mean_batch_size())
+    } else {
+        String::new()
+    };
+    println!(
+        "serving-throughput engine={engine} load={load_name} req_s={rps:.0} p50={:?} p99={:?} \
+         steady_spawns={steady_spawns}{batching}",
+        lat.p50(),
+        lat.p99(),
+    );
+}
+
+fn main() {
+    let cores = cores_arg();
+    let mut rng = XorShift64::new(0xBE4D);
+    println!(
+        "# serving: encoder (d_model {D_MODEL}, heads {HEADS}, d_ff {D_FF}, layers {LAYERS}, \
+         block {BLOCK}); {REQUESTS} requests/scenario, {cores} cores"
+    );
+    let uniform = inputs(&mut rng, REQUESTS, &[64]);
+    run_scenario("fixed", "uniform-64", start_fixed(cores), &uniform);
+    run_scenario("continuous", "uniform-64", start_continuous(&[64], cores), &uniform);
+    let mixed = inputs(&mut rng, REQUESTS, &[32, 64, 96]);
+    run_scenario("continuous", "mixed-32/64/96", start_continuous(&[32, 64, 96], cores), &mixed);
+}

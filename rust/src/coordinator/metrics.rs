@@ -1,5 +1,17 @@
-//! Serving metrics: latency percentiles, throughput, batch shapes.
+//! Serving metrics: latency percentiles, throughput, batch shapes — and
+//! the live hub ([`MetricsHub`]) both batcher engines record into.
+//!
+//! The hub is the shared atomic/mutex view behind
+//! [`Server::metrics`](crate::coordinator::Server::metrics): counters are
+//! atomics, the histogram/sample state sits behind a mutex, and a
+//! [`ServerMetrics`] snapshot can be taken mid-flight at any time — not
+//! only at shutdown. The hub also owns the admission gate
+//! ([`MetricsHub::try_admit`]): the in-flight counter it maintains is
+//! both the live queue-depth reading and the overload-shedding limit
+//! check, so the shed counter can never disagree with the gate.
 
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard};
 use std::time::Duration;
 
 /// Latency distribution computed from raw samples.
@@ -40,65 +52,197 @@ impl LatencyStats {
     }
 }
 
-/// Aggregate serving counters, filled by the batcher thread and handed
-/// back at [`shutdown`](crate::coordinator::Server::shutdown) — the
-/// per-request queue/exec samples turn into [`LatencyStats`] via
-/// [`Self::queue_latency`]/[`Self::exec_latency`].
+/// A point-in-time snapshot of the serving counters, taken from the
+/// [`MetricsHub`] — live via [`Server::metrics`] or final via
+/// [`Server::shutdown`]. Per-request queue/exec samples turn into
+/// [`LatencyStats`] through [`Self::queue_latency`]/[`Self::exec_latency`].
+///
+/// Accounting contract (the ISSUE-7 bugfixes): `requests` counts only
+/// requests that were **served successfully** — failures land in
+/// `failed`, shape rejections in `rejected`, overload rejections in
+/// `shed`, and none of those contribute latency samples or batch
+/// statistics, so throughput and p99 never silently include errors.
+///
+/// [`Server::metrics`]: crate::coordinator::Server::metrics
+/// [`Server::shutdown`]: crate::coordinator::Server::shutdown
 #[derive(Debug, Clone, Default)]
 pub struct ServerMetrics {
+    /// Requests served successfully (and only those).
     pub requests: u64,
+    /// Model executions that returned `Ok` (continuous batching runs
+    /// per-sequence lanes, not padded batches, so it leaves this at 0).
     pub batches: u64,
-    /// Requests rejected at batch-assembly time (shape mismatch) —
-    /// failed individually, never fused with well-formed requests.
+    /// Requests whose model execution returned `Err` — excluded from
+    /// `requests`, `model_exec_time`, and the latency samples.
+    pub failed: u64,
+    /// Requests rejected at admission (shape mismatch) — failed
+    /// individually, never fused with well-formed requests.
     pub rejected: u64,
-    /// Histogram over executed batch sizes (index = size).
+    /// Requests shed at the admission gate because the queue-depth limit
+    /// was reached (typed overload rejection, before any queueing).
+    pub shed: u64,
+    /// Requests in flight (admitted, not yet answered) at snapshot time
+    /// — the live queue-depth reading.
+    pub in_flight: u64,
+    /// Histogram over **real** batch sizes (index = live requests fused
+    /// into the execution, before padding).
     pub batch_size_hist: Vec<u64>,
+    /// Histogram over **executed** batch sizes (index = the variant the
+    /// batch was padded to; equals the real size when no padding).
+    pub padded_size_hist: Vec<u64>,
+    /// Wall time spent in successful model executions.
     pub model_exec_time: Duration,
-    /// Per-request time spent queued before its batch executed.
+    /// Per-request time spent queued before its execution started.
     pub queue_samples: Vec<Duration>,
-    /// Per-request model execution time (the batch's, attributed to each
-    /// request fused into it).
+    /// Per-request model execution time (a fused batch's, attributed to
+    /// each request in it; a continuous lane's own forward otherwise).
     pub exec_samples: Vec<Duration>,
 }
 
 impl ServerMetrics {
-    pub fn record_batch(&mut self, size: usize, exec: Duration) {
-        self.requests += size as u64;
-        self.batches += 1;
-        if self.batch_size_hist.len() <= size {
-            self.batch_size_hist.resize(size + 1, 0);
-        }
-        self.batch_size_hist[size] += 1;
-        self.model_exec_time += exec;
-    }
-
-    /// Record one request's latency breakdown (executor loop, at batch
-    /// completion).
-    pub fn record_request(&mut self, queue: Duration, exec: Duration) {
-        self.queue_samples.push(queue);
-        self.exec_samples.push(exec);
-    }
-
-    /// Queue-time distribution over every recorded request (`None`
-    /// before any request completed).
+    /// Queue-time distribution over every served request (`None` before
+    /// any request completed).
     pub fn queue_latency(&self) -> Option<LatencyStats> {
         (!self.queue_samples.is_empty())
             .then(|| LatencyStats::from_samples(self.queue_samples.clone()))
     }
 
-    /// Execution-time distribution over every recorded request.
+    /// Execution-time distribution over every served request.
     pub fn exec_latency(&self) -> Option<LatencyStats> {
         (!self.exec_samples.is_empty())
             .then(|| LatencyStats::from_samples(self.exec_samples.clone()))
     }
 
+    /// Mean **real** batch size over successful executions (0.0 when no
+    /// batch ran — e.g. under continuous batching).
     pub fn mean_batch_size(&self) -> f64 {
         if self.batches == 0 {
             0.0
         } else {
-            self.requests as f64 / self.batches as f64
+            let fused: u64 = self
+                .batch_size_hist
+                .iter()
+                .enumerate()
+                .map(|(size, n)| size as u64 * n)
+                .sum();
+            fused as f64 / self.batches as f64
         }
     }
+}
+
+/// Sample/histogram state behind the hub's mutex (counters stay atomic
+/// so the admission gate and snapshots never contend with recording).
+#[derive(Debug, Default)]
+struct HubInner {
+    batch_size_hist: Vec<u64>,
+    padded_size_hist: Vec<u64>,
+    model_exec_time: Duration,
+    queue_samples: Vec<Duration>,
+    exec_samples: Vec<Duration>,
+}
+
+/// The live metrics view shared by the submit handles (admission gate,
+/// shed counter) and the executor (everything else). Cheap to record
+/// into from concurrent scheduler lanes; snapshot at any time with
+/// [`Self::snapshot`].
+#[derive(Debug, Default)]
+pub struct MetricsHub {
+    served: AtomicU64,
+    batches: AtomicU64,
+    failed: AtomicU64,
+    rejected: AtomicU64,
+    shed: AtomicU64,
+    in_flight: AtomicU64,
+    inner: Mutex<HubInner>,
+}
+
+impl MetricsHub {
+    /// A poisoned inner lock (a panicked sibling) must not cascade: the
+    /// sample state is always structurally valid.
+    fn lock(&self) -> MutexGuard<'_, HubInner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Admission gate: atomically claim an in-flight slot. Refuses (and
+    /// bumps the shed counter) once `limit` slots are taken — the
+    /// overload path is an immediate typed rejection, never an unbounded
+    /// queue. Every accepted claim must be matched by exactly one
+    /// [`Self::release`] when the request is answered.
+    pub fn try_admit(&self, limit: usize) -> bool {
+        let prev = self.in_flight.fetch_add(1, Ordering::SeqCst);
+        if prev >= limit as u64 {
+            self.in_flight.fetch_sub(1, Ordering::SeqCst);
+            self.shed.fetch_add(1, Ordering::SeqCst);
+            return false;
+        }
+        true
+    }
+
+    /// Release an admitted request's in-flight slot (called once per
+    /// request, on every answer path: served, failed, or rejected).
+    pub fn release(&self) {
+        self.in_flight.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    /// Requests currently in flight (admitted, not yet answered).
+    pub fn in_flight(&self) -> u64 {
+        self.in_flight.load(Ordering::SeqCst)
+    }
+
+    /// Record one **successful** model execution: `real` live requests
+    /// fused, executed at (padded) variant size `padded`.
+    pub fn record_batch(&self, real: usize, padded: usize, exec: Duration) {
+        self.batches.fetch_add(1, Ordering::SeqCst);
+        let mut inner = self.lock();
+        bump_hist(&mut inner.batch_size_hist, real);
+        bump_hist(&mut inner.padded_size_hist, padded);
+        inner.model_exec_time += exec;
+    }
+
+    /// Record one successfully served request's latency breakdown.
+    pub fn record_served(&self, queue: Duration, exec: Duration) {
+        self.served.fetch_add(1, Ordering::SeqCst);
+        let mut inner = self.lock();
+        inner.queue_samples.push(queue);
+        inner.exec_samples.push(exec);
+    }
+
+    /// Record `n` requests whose model execution failed (kept out of the
+    /// served counters and the latency samples).
+    pub fn record_failed(&self, n: u64) {
+        self.failed.fetch_add(n, Ordering::SeqCst);
+    }
+
+    /// Record one request rejected at admission (shape mismatch).
+    pub fn record_rejected(&self) {
+        self.rejected.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// Clone out a point-in-time [`ServerMetrics`] snapshot (readable
+    /// mid-flight; the final shutdown metrics are the same call).
+    pub fn snapshot(&self) -> ServerMetrics {
+        let inner = self.lock();
+        ServerMetrics {
+            requests: self.served.load(Ordering::SeqCst),
+            batches: self.batches.load(Ordering::SeqCst),
+            failed: self.failed.load(Ordering::SeqCst),
+            rejected: self.rejected.load(Ordering::SeqCst),
+            shed: self.shed.load(Ordering::SeqCst),
+            in_flight: self.in_flight.load(Ordering::SeqCst),
+            batch_size_hist: inner.batch_size_hist.clone(),
+            padded_size_hist: inner.padded_size_hist.clone(),
+            model_exec_time: inner.model_exec_time,
+            queue_samples: inner.queue_samples.clone(),
+            exec_samples: inner.exec_samples.clone(),
+        }
+    }
+}
+
+fn bump_hist(hist: &mut Vec<u64>, size: usize) {
+    if hist.len() <= size {
+        hist.resize(size + 1, 0);
+    }
+    hist[size] += 1;
 }
 
 #[cfg(test)]
@@ -107,9 +251,7 @@ mod tests {
 
     #[test]
     fn percentiles_nearest_rank() {
-        let s = LatencyStats::from_samples(
-            (1..=100).map(Duration::from_millis).collect(),
-        );
+        let s = LatencyStats::from_samples((1..=100).map(Duration::from_millis).collect());
         assert_eq!(s.p50(), Duration::from_millis(50));
         assert_eq!(s.p99(), Duration::from_millis(99));
         assert_eq!(s.percentile(0.0), Duration::from_millis(1));
@@ -117,27 +259,65 @@ mod tests {
     }
 
     #[test]
-    fn batch_metrics_accumulate() {
-        let mut m = ServerMetrics::default();
-        m.record_batch(4, Duration::from_millis(10));
-        m.record_batch(2, Duration::from_millis(5));
-        m.record_batch(4, Duration::from_millis(10));
-        assert_eq!(m.requests, 10);
+    fn batch_metrics_report_real_and_padded_sizes() {
+        let hub = MetricsHub::default();
+        hub.record_batch(4, 4, Duration::from_millis(10));
+        hub.record_batch(2, 4, Duration::from_millis(5));
+        hub.record_batch(3, 4, Duration::from_millis(10));
+        let m = hub.snapshot();
         assert_eq!(m.batches, 3);
-        assert_eq!(m.batch_size_hist[4], 2);
-        assert!((m.mean_batch_size() - 10.0 / 3.0).abs() < 1e-12);
+        assert_eq!(m.batch_size_hist[4], 1, "one batch had 4 live requests");
+        assert_eq!(m.batch_size_hist[2], 1);
+        assert_eq!(m.batch_size_hist[3], 1);
+        assert_eq!(m.padded_size_hist[4], 3, "all three executed at variant 4");
+        assert_eq!(m.model_exec_time, Duration::from_millis(25));
+        assert!((m.mean_batch_size() - 3.0).abs() < 1e-12, "mean over REAL sizes");
+    }
+
+    #[test]
+    fn failed_requests_stay_out_of_served_counters() {
+        let hub = MetricsHub::default();
+        hub.record_served(Duration::from_millis(1), Duration::from_millis(2));
+        hub.record_failed(3);
+        let m = hub.snapshot();
+        assert_eq!(m.requests, 1);
+        assert_eq!(m.failed, 3);
+        assert_eq!(m.queue_samples.len(), 1, "failures contribute no latency samples");
+    }
+
+    #[test]
+    fn admission_gate_sheds_at_the_limit_and_recovers_on_release() {
+        let hub = MetricsHub::default();
+        assert!(hub.try_admit(2));
+        assert!(hub.try_admit(2));
+        assert!(!hub.try_admit(2), "third claim must shed at limit 2");
+        assert_eq!(hub.in_flight(), 2);
+        assert_eq!(hub.snapshot().shed, 1);
+        hub.release();
+        assert!(hub.try_admit(2), "a released slot is admittable again");
+        assert_eq!(hub.in_flight(), 2);
+    }
+
+    #[test]
+    fn zero_depth_limit_sheds_everything() {
+        let hub = MetricsHub::default();
+        assert!(!hub.try_admit(0));
+        assert_eq!(hub.in_flight(), 0);
+        assert_eq!(hub.snapshot().shed, 1);
     }
 
     #[test]
     fn request_latency_aggregation() {
-        let mut m = ServerMetrics::default();
-        assert!(m.queue_latency().is_none(), "no samples yet");
-        assert!(m.exec_latency().is_none());
+        let hub = MetricsHub::default();
+        assert!(hub.snapshot().queue_latency().is_none(), "no samples yet");
+        assert!(hub.snapshot().exec_latency().is_none());
         // Queue times 1..=100 ms (shuffled order must not matter), exec
         // pinned at 7 ms.
         for q in (1..=50).rev().chain(51..=100) {
-            m.record_request(Duration::from_millis(q), Duration::from_millis(7));
+            hub.record_served(Duration::from_millis(q), Duration::from_millis(7));
         }
+        let m = hub.snapshot();
+        assert_eq!(m.requests, 100);
         let queue = m.queue_latency().unwrap();
         assert_eq!(queue.count(), 100);
         assert_eq!(queue.p50(), Duration::from_millis(50));

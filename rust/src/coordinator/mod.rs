@@ -1,9 +1,13 @@
 //! Layer-3 coordinator: the paper's experiments as first-class drivers,
-//! plus a threaded inference server (router → dynamic batcher →
-//! executor) proving the BWMA execution path serves real traffic with
-//! Python nowhere in sight. The executor is any [`server::BatchRunner`]:
-//! the native blocked-kernel model by default, compiled PJRT artifacts
-//! with `--features pjrt`.
+//! plus a threaded inference server (admission gate → queue → batcher
+//! engine) proving the BWMA execution path serves real traffic with
+//! Python nowhere in sight. Two engines share the stack: the fixed-batch
+//! dispatcher over any [`server::BatchRunner`] (native blocked-kernel
+//! model by default, compiled PJRT artifacts with `--features pjrt`),
+//! and a **continuous batcher** ([`Server::start_continuous`]) that
+//! admits variable-length sequences into length buckets and refills
+//! worker lanes from the queue as individual sequences complete — no
+//! padded batches, typed overload shedding, live metrics snapshots.
 //!
 //! (The usual tokio stack is unavailable in this offline build; the
 //! server uses std threads + channels, which at this request scale is
@@ -15,5 +19,5 @@ pub mod report;
 pub mod server;
 
 pub use experiment::{run_experiment, ExperimentOutput};
-pub use metrics::{LatencyStats, ServerMetrics};
-pub use server::{Server, ServerConfig, ServerHandle};
+pub use metrics::{LatencyStats, MetricsHub, ServerMetrics};
+pub use server::{ServeError, Server, ServerConfig, ServerHandle};

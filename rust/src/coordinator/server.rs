@@ -1,44 +1,67 @@
-//! Threaded inference server: router → dynamic batcher → executor
+//! Threaded inference server: admission gate → queue → batcher engine
 //! (native blocked kernels by default; PJRT with `--features pjrt`).
 //!
-//! Requests carry a blocked activation tensor (one sequence). The batcher
-//! greedily drains the queue up to `max_batch` (bounded by a short
-//! timeout, vLLM-style continuous batching at this scale), validates each
-//! request's shape against the server's input contract (offenders fail
-//! alone), stacks the well-formed activations along a new leading axis,
-//! picks the largest compiled batch variant that fits, and splits the
-//! outputs back per request. The native executor dispatches the batch's
-//! sequences across the model's **persistent** multi-core worker pool
-//! ([`crate::runtime::parallel::WorkerPool`]) with bitwise-deterministic
-//! results — serving in steady state spawns no threads at all, and each
-//! concurrent sequence checks a preplanned workspace lane
-//! ([`crate::runtime::EncoderWorkspace`]) out of the model's shared
-//! stack instead of allocating its intermediates per request.
+//! Requests carry a blocked activation tensor (one sequence) and pass a
+//! shared **admission gate** first: at most `queue_depth` requests may be
+//! in flight (queued + executing), and a submit beyond that sheds
+//! immediately with a typed [`ServeError::Overloaded`] — the backlog is
+//! bounded by construction, never an unbounded `Vec`. Admitted requests
+//! flow to one of two executor engines:
+//!
+//! - **Fixed batching** ([`Server::start`]): the original dynamic
+//!   batcher. It greedily drains the queue up to `max_batch` (bounded by
+//!   a short timeout), validates each request's shape against the
+//!   server's input contract (offenders fail alone), stacks the
+//!   well-formed activations along a new leading axis, picks the largest
+//!   compiled batch variant that fits — padding up to the smallest
+//!   variant when the tail is short — and splits the outputs back per
+//!   request. Responses report the **real** fused size and the
+//!   **padded** executed size separately ([`Response::batch_real`] /
+//!   [`Response::batch_padded`]), matching the server-side histograms.
+//! - **Continuous batching** ([`Server::start_continuous`]): the heavy
+//!   traffic engine. Admission is **length-bucketed** — the factory
+//!   provides one [`NativeModel`] per supported sequence length, so a
+//!   short sequence runs in a short bucket instead of padding to max
+//!   seq. There is no padded batch at all: each worker of ONE persistent
+//!   pool region claims individual sequences off the shared queue,
+//!   forwards them with the serial kernels inside its checked-out
+//!   workspace lane ([`crate::runtime::EncoderWorkspace`]), and refills
+//!   its lane from the queue the moment its sequence completes — worker
+//!   0 doubles as the channel pump so the region keeps absorbing new
+//!   arrivals while it runs. Per-sequence outputs are bitwise identical
+//!   to the serial walk at any core count, and the steady loop neither
+//!   spawns threads nor allocates workspace (the lanes are preplanned at
+//!   startup).
+//!
+//! Serving metrics live in a shared [`MetricsHub`]: counters are updated
+//! as requests are served, and [`Server::metrics`] /
+//! [`ServerHandle::metrics`] snapshot them **mid-flight** — queue depth,
+//! shed/failed/rejected counts, latency samples — without stopping the
+//! server. [`Server::shutdown`] stops intake, **drains the channel and
+//! answers every pending request**, then returns the final snapshot.
 //!
 //! The server stack is **precision-agnostic**: requests and responses
-//! are f32 activations either way, and [`BatchRunner`] dispatches on the
+//! are f32 activations either way, and the executors dispatch on the
 //! model, so an int8 encoder ([`NativeModel::new_encoder_int8`], served
-//! by `bwma serve --precision int8`) plugs into the identical
-//! router/batcher/executor path — the quantize/dequantize passes live
-//! inside the model's forward, and the zero-allocation and
-//! bitwise-determinism contracts hold for both precisions
-//! (`tests/alloc_steady_state.rs`, `tests/precision_accuracy.rs`).
+//! by `bwma serve --precision int8`) plugs into the identical path — the
+//! quantize/dequantize passes live inside the model's forward.
 //!
 //! Executor handles may not be `Send` (PJRT's aren't), so the executor
 //! thread *owns* them: the caller passes a factory that loads/builds the
 //! model inside the thread. Everything crossing threads is plain data.
 
-use std::collections::BTreeMap;
-use std::sync::mpsc;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, ensure, Context, Result};
 
 #[cfg(feature = "pjrt")]
 use crate::runtime::Executable;
-use crate::runtime::{NativeModel, Tensor};
+use crate::runtime::{NativeModel, Tensor, WorkerPool};
 
-use super::metrics::ServerMetrics;
+use super::metrics::{MetricsHub, ServerMetrics};
 
 /// One model variant the batcher can dispatch a stacked batch to. The
 /// native backend's [`NativeModel`] implements it out of the box; with
@@ -48,7 +71,7 @@ pub trait BatchRunner {
     fn run(&self, stacked: Tensor, out_shape: Vec<usize>) -> Result<Tensor>;
 }
 
-/// The default executor: hand the stacked batch to
+/// The default fixed-batch executor: hand the stacked batch to
 /// [`NativeModel::run_batch_into`], which forwards every sequence on the
 /// model's **persistent worker pool** with per-worker **workspace-lane
 /// checkout** — the executor never spawns threads of its own
@@ -67,15 +90,15 @@ pub trait BatchRunner {
 /// serial walk.
 impl BatchRunner for NativeModel {
     fn run(&self, stacked: Tensor, out_shape: Vec<usize>) -> Result<Tensor> {
-        anyhow::ensure!(stacked.shape.len() == 3, "stacked batch must be [batch, seq, d]");
+        ensure!(stacked.shape.len() == 3, "stacked batch must be [batch, seq, d]");
         let bsz = stacked.shape[0];
-        anyhow::ensure!(
+        ensure!(
             stacked.shape[1..] == self.in_shape()[..],
             "request shape {:?} does not match model input {:?}",
             &stacked.shape[1..],
             self.in_shape()
         );
-        anyhow::ensure!(
+        ensure!(
             stacked.len() == out_shape.iter().product::<usize>(),
             "stacked batch has {} elements, caller expected shape {out_shape:?}",
             stacked.len()
@@ -121,18 +144,47 @@ impl BatchRunner for WithParams {
     }
 }
 
+/// Typed admission rejection: returned by [`ServerHandle::try_submit`]
+/// *before* the request is queued, so an overloaded server answers in
+/// constant time instead of growing its backlog.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// The admission gate is full: `in_flight` requests already hold the
+    /// server's `limit` (= [`ServerConfig::queue_depth`]) slots.
+    Overloaded { in_flight: usize, limit: usize },
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Overloaded { in_flight, limit } => write!(
+                f,
+                "server overloaded: {in_flight} requests in flight at queue depth limit {limit}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
-    /// Maximum requests fused into one model execution. Must be one of
+    /// Maximum requests fused into one model execution (fixed-batch
+    /// engine only — continuous batching never fuses). Must be one of
     /// the compiled batch variants.
     pub max_batch: usize,
-    /// How long the batcher waits to fill a batch after the first request.
+    /// How long the fixed batcher waits to fill a batch after the first
+    /// request (unused by the continuous engine, which never waits).
     pub batch_timeout: Duration,
+    /// Admission-gate depth: the maximum number of requests in flight
+    /// (queued + executing) before submits shed with
+    /// [`ServeError::Overloaded`]. Applies to both engines.
+    pub queue_depth: usize,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        Self { max_batch: 8, batch_timeout: Duration::from_millis(2) }
+        Self { max_batch: 8, batch_timeout: Duration::from_millis(2), queue_depth: 1024 }
     }
 }
 
@@ -148,7 +200,12 @@ pub struct Response {
     pub output: Tensor,
     pub queue_time: Duration,
     pub exec_time: Duration,
-    pub batch_size: usize,
+    /// Live requests fused into the execution that served this response
+    /// (always 1 under continuous batching — lanes never fuse or pad).
+    pub batch_real: usize,
+    /// Batch size the execution actually ran at: the compiled variant
+    /// the fixed batcher padded up to, or 1 under continuous batching.
+    pub batch_padded: usize,
 }
 
 enum Msg {
@@ -159,6 +216,8 @@ enum Msg {
 /// Handle to a running server (cloneable submitter + shutdown).
 pub struct Server {
     tx: mpsc::Sender<Msg>,
+    hub: Arc<MetricsHub>,
+    queue_depth: usize,
     worker: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -169,45 +228,116 @@ pub struct Server {
 #[derive(Clone)]
 pub struct ServerHandle {
     tx: mpsc::Sender<Msg>,
+    hub: Arc<MetricsHub>,
+    queue_depth: usize,
 }
 
 impl ServerHandle {
-    /// Submit one sequence; returns a receiver for the response.
-    pub fn submit(&self, input: Tensor) -> mpsc::Receiver<Result<Response>> {
+    /// Submit one sequence through the admission gate; returns a
+    /// receiver for the response, or [`ServeError::Overloaded`] without
+    /// queueing anything when `queue_depth` requests are already in
+    /// flight.
+    pub fn try_submit(
+        &self,
+        input: Tensor,
+    ) -> std::result::Result<mpsc::Receiver<Result<Response>>, ServeError> {
+        if !self.hub.try_admit(self.queue_depth) {
+            return Err(ServeError::Overloaded {
+                in_flight: self.hub.in_flight() as usize,
+                limit: self.queue_depth,
+            });
+        }
         let (rtx, rrx) = mpsc::channel();
         let req = Request { input, enqueued: Instant::now(), respond: rtx };
         if self.tx.send(Msg::Req(req)).is_err() {
-            // Executor gone: the receiver will observe a disconnect.
+            // Executor gone: the request (and its response sender) was
+            // dropped, so the receiver observes a disconnect. Release
+            // the admission slot nothing will ever serve.
+            self.hub.release();
         }
-        rrx
+        Ok(rrx)
+    }
+
+    /// Submit one sequence; returns a receiver for the response. An
+    /// admission rejection arrives through the receiver as an `Err`
+    /// (use [`Self::try_submit`] for the typed variant).
+    pub fn submit(&self, input: Tensor) -> mpsc::Receiver<Result<Response>> {
+        match self.try_submit(input) {
+            Ok(rrx) => rrx,
+            Err(e) => {
+                let (rtx, rrx) = mpsc::channel();
+                let _ = rtx.send(Err(e.into()));
+                rrx
+            }
+        }
+    }
+
+    /// Live snapshot of the serving metrics (no shutdown required).
+    pub fn metrics(&self) -> ServerMetrics {
+        self.hub.snapshot()
     }
 }
 
 impl Server {
-    /// Start the executor thread. `factory` runs inside the thread and
-    /// returns the batch-variant map (batch size → executable) plus the
-    /// per-sequence input and output shapes. The input shape is the
-    /// server's admission contract: requests with any other shape are
-    /// rejected individually at batch-assembly time.
+    /// Start the **fixed-batch** executor thread. `factory` runs inside
+    /// the thread and returns the batch-variant map (batch size →
+    /// executable) plus the per-sequence input and output shapes. The
+    /// input shape is the server's admission contract: requests with any
+    /// other shape are rejected individually at batch-assembly time.
     pub fn start<F>(cfg: ServerConfig, factory: F) -> Result<Self>
     where
         F: FnOnce() -> Result<(BTreeMap<usize, Box<dyn BatchRunner>>, Vec<usize>, Vec<usize>)>
             + Send
             + 'static,
     {
+        let hub = Arc::new(MetricsHub::default());
+        let queue_depth = cfg.queue_depth;
         let (tx, rx) = mpsc::channel::<Msg>();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let hub2 = Arc::clone(&hub);
         let worker = std::thread::Builder::new()
             .name("bwma-executor".into())
-            .spawn(move || executor_loop(cfg, factory, rx, ready_tx))
+            .spawn(move || executor_loop(cfg, factory, rx, ready_tx, hub2))
             .context("spawning executor")?;
         ready_rx.recv().context("executor died during init")??;
-        Ok(Self { tx, worker: Some(worker) })
+        Ok(Self { tx, hub, queue_depth, worker: Some(worker) })
+    }
+
+    /// Start the **continuous batching** executor thread over native
+    /// length buckets. `factory` runs inside the thread and returns one
+    /// [`NativeModel`] per supported sequence length (same `d_model`,
+    /// distinct `seq`); a request of shape `[seq, d_model]` is admitted
+    /// iff `seq` names a bucket, and runs unpadded in that bucket.
+    /// Bucket models should share ONE worker pool
+    /// ([`NativeModel::with_pool`]) — the scheduler runs a single pool
+    /// region and refills each worker's workspace lane from the shared
+    /// queue as its sequence completes. Only
+    /// [`ServerConfig::queue_depth`] is read from `cfg`: there is no
+    /// batch to size or wait for.
+    pub fn start_continuous<F>(cfg: ServerConfig, factory: F) -> Result<Self>
+    where
+        F: FnOnce() -> Result<Vec<NativeModel>> + Send + 'static,
+    {
+        let hub = Arc::new(MetricsHub::default());
+        let queue_depth = cfg.queue_depth;
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let hub2 = Arc::clone(&hub);
+        let worker = std::thread::Builder::new()
+            .name("bwma-executor".into())
+            .spawn(move || continuous_loop(queue_depth, factory, rx, ready_tx, hub2))
+            .context("spawning executor")?;
+        ready_rx.recv().context("executor died during init")??;
+        Ok(Self { tx, hub, queue_depth, worker: Some(worker) })
     }
 
     /// A cloneable submitter for concurrent client threads.
     pub fn handle(&self) -> ServerHandle {
-        ServerHandle { tx: self.tx.clone() }
+        ServerHandle {
+            tx: self.tx.clone(),
+            hub: Arc::clone(&self.hub),
+            queue_depth: self.queue_depth,
+        }
     }
 
     /// Submit one sequence; returns a receiver for the response.
@@ -215,7 +345,25 @@ impl Server {
         self.handle().submit(input)
     }
 
-    /// Stop the server and collect final metrics.
+    /// Typed-rejection submit (see [`ServerHandle::try_submit`]).
+    pub fn try_submit(
+        &self,
+        input: Tensor,
+    ) -> std::result::Result<mpsc::Receiver<Result<Response>>, ServeError> {
+        self.handle().try_submit(input)
+    }
+
+    /// Live snapshot of the serving metrics, readable mid-flight: queue
+    /// depth (`in_flight`), shed/failed/rejected counters, latency
+    /// samples so far. Shutdown is *not* required to observe the server.
+    pub fn metrics(&self) -> ServerMetrics {
+        self.hub.snapshot()
+    }
+
+    /// Stop the server and collect final metrics. Intake stops, but the
+    /// channel is **drained**: every request already submitted is served
+    /// (or answered with its error) before the executor exits — shutdown
+    /// never strands a queued request with a bare disconnect.
     pub fn shutdown(mut self) -> Result<ServerMetrics> {
         let (mtx, mrx) = mpsc::channel();
         self.tx.send(Msg::Shutdown(mtx)).map_err(|_| anyhow!("executor already gone"))?;
@@ -227,11 +375,16 @@ impl Server {
     }
 }
 
+// ---------------------------------------------------------------------
+// Fixed-batch engine
+// ---------------------------------------------------------------------
+
 fn executor_loop<F>(
     cfg: ServerConfig,
     factory: F,
     rx: mpsc::Receiver<Msg>,
     ready: mpsc::Sender<Result<()>>,
+    hub: Arc<MetricsHub>,
 ) where
     F: FnOnce() -> Result<(BTreeMap<usize, Box<dyn BatchRunner>>, Vec<usize>, Vec<usize>)>,
 {
@@ -246,14 +399,14 @@ fn executor_loop<F>(
         }
     };
     assert!(!variants.is_empty(), "no batch variants");
-    let mut metrics = ServerMetrics::default();
 
     loop {
         // Block for the first request.
         let first = match rx.recv() {
             Ok(Msg::Req(r)) => r,
             Ok(Msg::Shutdown(mtx)) => {
-                let _ = mtx.send(metrics);
+                drain_at_shutdown(&variants, &in_shape, &out_shape, &rx, Vec::new(), &hub);
+                let _ = mtx.send(hub.snapshot());
                 return;
             }
             Err(_) => return,
@@ -269,15 +422,43 @@ fn executor_loop<F>(
             match rx.recv_timeout(deadline - now) {
                 Ok(Msg::Req(r)) => batch.push(r),
                 Ok(Msg::Shutdown(mtx)) => {
-                    run_batch(&variants, &in_shape, &out_shape, batch, &mut metrics);
-                    let _ = mtx.send(metrics);
+                    drain_at_shutdown(&variants, &in_shape, &out_shape, &rx, batch, &hub);
+                    let _ = mtx.send(hub.snapshot());
                     return;
                 }
                 Err(mpsc::RecvTimeoutError::Timeout) => break,
                 Err(mpsc::RecvTimeoutError::Disconnected) => break,
             }
         }
-        run_batch(&variants, &in_shape, &out_shape, batch, &mut metrics);
+        run_batch(&variants, &in_shape, &out_shape, batch, &hub);
+    }
+}
+
+/// Shutdown must not strand queued work: requests already sitting in the
+/// channel behind the shutdown message used to get a bare disconnect.
+/// Drain the channel and **serve** everything pending — the admission
+/// gate bounds the backlog at `queue_depth`, so this is a bounded final
+/// flush, not an unbounded tail.
+fn drain_at_shutdown(
+    variants: &BTreeMap<usize, Box<dyn BatchRunner>>,
+    in_shape: &[usize],
+    out_shape: &[usize],
+    rx: &mpsc::Receiver<Msg>,
+    mut pending: Vec<Request>,
+    hub: &MetricsHub,
+) {
+    let mut replies = Vec::new();
+    while let Ok(msg) = rx.try_recv() {
+        match msg {
+            Msg::Req(r) => pending.push(r),
+            Msg::Shutdown(mtx) => replies.push(mtx),
+        }
+    }
+    if !pending.is_empty() {
+        run_batch(variants, in_shape, out_shape, pending, hub);
+    }
+    for mtx in replies {
+        let _ = mtx.send(hub.snapshot());
     }
 }
 
@@ -287,7 +468,7 @@ fn run_batch(
     in_shape: &[usize],
     out_shape: &[usize],
     batch: Vec<Request>,
-    metrics: &mut ServerMetrics,
+    hub: &MetricsHub,
 ) {
     // Batch-assembly validation: requests are blindly concatenated below
     // (and the last one is reused as padding), so one malformed request
@@ -299,7 +480,8 @@ fn run_batch(
             if r.input.shape == in_shape {
                 Some(r)
             } else {
-                metrics.rejected += 1;
+                hub.record_rejected();
+                hub.release();
                 let _ = r.respond.send(Err(anyhow!(
                     "request shape {:?} does not match server input shape {in_shape:?}",
                     r.input.shape
@@ -319,6 +501,7 @@ fn run_batch(
         // If even the smallest variant is larger than what remains, pad by
         // repeating the last request (outputs for pads are dropped).
         let chunk: Vec<Request> = batch.drain(..take).collect();
+        let real = chunk.len();
         let exe = &variants[&size];
 
         let per_seq: usize = chunk[0].input.len();
@@ -339,30 +522,421 @@ fn run_batch(
         let t0 = Instant::now();
         let result = exe.run(input, full_out_shape);
         let exec = t0.elapsed();
-        metrics.record_batch(chunk.len(), exec);
 
         match result {
             Ok(out) => {
+                // Success only: a failed execution must not inflate the
+                // batch statistics or the served latency samples.
+                hub.record_batch(real, size, exec);
                 let per_out: usize = out_shape.iter().product();
                 for (i, r) in chunk.into_iter().enumerate() {
                     let data = out.data[i * per_out..(i + 1) * per_out].to_vec();
                     let queue = t0.duration_since(r.enqueued);
-                    metrics.record_request(queue, exec);
+                    hub.record_served(queue, exec);
+                    hub.release();
                     let resp = Response {
                         output: Tensor::new(out_shape.to_vec(), data),
                         queue_time: queue,
                         exec_time: exec,
-                        batch_size: size,
+                        batch_real: real,
+                        batch_padded: size,
                     };
                     let _ = r.respond.send(Ok(resp));
                 }
             }
             Err(e) => {
+                hub.record_failed(real as u64);
                 let msg = format!("{e:#}");
                 for r in chunk {
-                    metrics.record_request(t0.duration_since(r.enqueued), exec);
+                    hub.release();
                     let _ = r.respond.send(Err(anyhow!("{msg}")));
                 }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Continuous-batching engine
+// ---------------------------------------------------------------------
+
+type Buckets = BTreeMap<usize, NativeModel>;
+
+/// Shared state of the scheduler: the admission queue plus the region
+/// lifecycle flags. Workers claim requests under the queue lock, so
+/// "queue empty and nothing in flight" is a sound region-exit test.
+struct RegionState {
+    queue: Mutex<VecDeque<Request>>,
+    cv: Condvar,
+    /// Helper lanes block on `cv` only while `live` is set; worker 0
+    /// clears it (under the queue lock) to release them.
+    live: AtomicBool,
+    /// Intake is over: a shutdown was received or every submitter hung
+    /// up. Queued requests are still served.
+    stop: AtomicBool,
+    /// Requests claimed off the queue but not yet answered.
+    inflight: AtomicUsize,
+    reply: Mutex<Option<mpsc::Sender<ServerMetrics>>>,
+}
+
+impl RegionState {
+    fn new(depth: usize) -> Self {
+        Self {
+            queue: Mutex::new(VecDeque::with_capacity(depth.min(1024))),
+            cv: Condvar::new(),
+            live: AtomicBool::new(false),
+            stop: AtomicBool::new(false),
+            inflight: AtomicUsize::new(0),
+            reply: Mutex::new(None),
+        }
+    }
+
+    fn lock_queue(&self) -> MutexGuard<'_, VecDeque<Request>> {
+        self.queue.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn lock_reply(&self) -> MutexGuard<'_, Option<mpsc::Sender<ServerMetrics>>> {
+        self.reply.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn push(&self, r: Request) {
+        self.lock_queue().push_back(r);
+        self.cv.notify_one();
+    }
+
+    /// Pop one queued request, registering it in flight under the same
+    /// lock.
+    fn claim(&self) -> Option<Request> {
+        let mut q = self.lock_queue();
+        let r = q.pop_front();
+        if r.is_some() {
+            self.inflight.fetch_add(1, Ordering::SeqCst);
+        }
+        r
+    }
+
+    /// Blocking claim for helper lanes: waits while the queue is empty
+    /// and the region is live. Keeps draining leftovers after `live`
+    /// drops, so a region never ends with queued work.
+    fn wait_claim(&self) -> Option<Request> {
+        let mut q = self.lock_queue();
+        loop {
+            if let Some(r) = q.pop_front() {
+                self.inflight.fetch_add(1, Ordering::SeqCst);
+                return Some(r);
+            }
+            if !self.live.load(Ordering::SeqCst) {
+                return None;
+            }
+            q = self.cv.wait(q).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    fn done(&self) {
+        self.inflight.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    fn queued(&self) -> usize {
+        self.lock_queue().len()
+    }
+}
+
+/// Region drop-guard: whatever path worker 0 exits on, the helper lanes
+/// must be released from the region condvar, or the pool barrier would
+/// never complete. The store happens under the queue lock so a helper
+/// can't check `live` and then miss the wakeup.
+struct LiveGuard<'a>(&'a RegionState);
+
+impl Drop for LiveGuard<'_> {
+    fn drop(&mut self) {
+        let _q = self.0.lock_queue();
+        self.0.live.store(false, Ordering::SeqCst);
+        self.0.cv.notify_all();
+    }
+}
+
+/// The continuous-batching scheduler: length-bucketed models, one shared
+/// admission queue, one pool region whose lanes refill from the queue.
+struct Continuous {
+    rx: Mutex<mpsc::Receiver<Msg>>,
+    models: Buckets,
+    d_model: usize,
+    pool: Arc<WorkerPool>,
+    hub: Arc<MetricsHub>,
+    st: RegionState,
+}
+
+fn continuous_loop<F>(
+    depth: usize,
+    factory: F,
+    rx: mpsc::Receiver<Msg>,
+    ready: mpsc::Sender<Result<()>>,
+    hub: Arc<MetricsHub>,
+) where
+    F: FnOnce() -> Result<Vec<NativeModel>>,
+{
+    let eng = match Continuous::build(depth, factory, rx, hub) {
+        Ok(eng) => {
+            let _ = ready.send(Ok(()));
+            eng
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    eng.event_loop();
+}
+
+impl Continuous {
+    fn build<F>(
+        depth: usize,
+        factory: F,
+        rx: mpsc::Receiver<Msg>,
+        hub: Arc<MetricsHub>,
+    ) -> Result<Self>
+    where
+        F: FnOnce() -> Result<Vec<NativeModel>>,
+    {
+        let list = factory()?;
+        ensure!(!list.is_empty(), "continuous server needs at least one bucket model");
+        let d_model = list[0].d_model;
+        let mut models = Buckets::new();
+        for m in list {
+            ensure!(
+                m.d_model == d_model,
+                "bucket models must agree on d_model ({} vs {d_model})",
+                m.d_model
+            );
+            let seq = m.seq;
+            ensure!(models.insert(seq, m).is_none(), "duplicate bucket for seq {seq}");
+        }
+        // The region runs on ONE pool — the widest among the buckets
+        // (normally they all share a single pool via `with_pool`).
+        let pool = models
+            .values()
+            .map(NativeModel::pool)
+            .max_by_key(|p| p.workers())
+            .cloned()
+            .expect("bucket map is non-empty");
+        // Preplan a workspace lane per worker per bucket so the steady
+        // serve loop never allocates one.
+        for m in models.values() {
+            m.reserve_workspace_lanes(pool.workers());
+        }
+        Ok(Self { rx: Mutex::new(rx), models, d_model, pool, hub, st: RegionState::new(depth) })
+    }
+
+    fn lock_rx(&self) -> MutexGuard<'_, mpsc::Receiver<Msg>> {
+        self.rx.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn event_loop(&self) {
+        loop {
+            // Block for traffic (or shutdown); the mutex has no other
+            // contenders — it exists to make `&self` Sync for the pool
+            // region, whose worker 0 is this same thread.
+            let msg = match self.lock_rx().recv() {
+                Ok(m) => m,
+                Err(_) => return,
+            };
+            self.handle_msg(msg);
+            self.pump();
+            self.serve_queued();
+            if self.st.stop.load(Ordering::SeqCst) {
+                // Intake is over. Serve whatever raced in behind the
+                // shutdown message, answer the caller, exit.
+                self.pump();
+                while let Some(r) = self.st.claim() {
+                    self.serve_one(r, true);
+                    self.st.done();
+                }
+                if let Some(mtx) = self.st.lock_reply().take() {
+                    let _ = mtx.send(self.hub.snapshot());
+                }
+                return;
+            }
+        }
+    }
+
+    fn handle_msg(&self, msg: Msg) {
+        match msg {
+            Msg::Req(r) => self.admit(r),
+            Msg::Shutdown(mtx) => {
+                *self.st.lock_reply() = Some(mtx);
+                self.st.stop.store(true, Ordering::SeqCst);
+            }
+        }
+    }
+
+    /// Validate and enqueue: the request's `[seq, d_model]` must name a
+    /// configured bucket. Offenders are rejected individually and
+    /// immediately — they never occupy a lane.
+    fn admit(&self, r: Request) {
+        let ok = r.input.shape.len() == 2
+            && r.input.shape[1] == self.d_model
+            && self.models.contains_key(&r.input.shape[0]);
+        if ok {
+            self.st.push(r);
+            return;
+        }
+        let buckets: Vec<usize> = self.models.keys().copied().collect();
+        self.hub.record_rejected();
+        self.hub.release();
+        let _ = r.respond.send(Err(anyhow!(
+            "request shape {:?} does not match any bucket: want [seq, {}] with seq in {buckets:?}",
+            r.input.shape,
+            self.d_model
+        )));
+    }
+
+    /// Drain everything currently in the channel into the admission
+    /// queue (mpsc is FIFO, so when a shutdown message is reached, every
+    /// request submitted before it has already been admitted).
+    fn pump(&self) {
+        loop {
+            let msg = match self.lock_rx().try_recv() {
+                Ok(m) => m,
+                Err(mpsc::TryRecvError::Empty) => return,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    self.st.stop.store(true, Ordering::SeqCst);
+                    return;
+                }
+            };
+            self.handle_msg(msg);
+        }
+    }
+
+    /// Worker 0's idle tick: helpers are busy but the queue is empty, so
+    /// block briefly on the channel instead of spinning on `try_recv`.
+    fn nap(&self) {
+        let msg = match self.lock_rx().recv_timeout(Duration::from_micros(200)) {
+            Ok(m) => m,
+            Err(mpsc::RecvTimeoutError::Timeout) => return,
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                self.st.stop.store(true, Ordering::SeqCst);
+                return;
+            }
+        };
+        self.handle_msg(msg);
+    }
+
+    /// Serve everything queued right now (and whatever arrives while
+    /// doing so). A degenerate pool or a lone request runs inline — each
+    /// forward fanning its phase grids across the full pool; otherwise
+    /// ONE pool region runs with per-worker lane refill.
+    fn serve_queued(&self) {
+        let queued = self.st.queued();
+        if queued == 0 {
+            return;
+        }
+        if self.pool.workers() < 2 || queued == 1 {
+            while let Some(r) = self.st.claim() {
+                self.serve_one(r, true);
+                self.st.done();
+            }
+            return;
+        }
+        if let Err(e) = self.run_region() {
+            // A panicked worker: the queue is structurally intact, but
+            // anything still queued must be answered, not stranded.
+            let msg = format!("{e:#}");
+            while let Some(r) = self.st.claim() {
+                self.hub.record_failed(1);
+                self.hub.release();
+                let _ = r.respond.send(Err(anyhow!("{msg}")));
+                self.st.done();
+            }
+        }
+    }
+
+    /// One pool region: worker 0 (this thread) pumps the channel and
+    /// serves between pumps; every other worker blocks on the queue and
+    /// serves sequences in its own workspace lane as they arrive —
+    /// continuous refill, no padded batch, no barrier per request.
+    fn run_region(&self) -> Result<()> {
+        self.st.live.store(true, Ordering::SeqCst);
+        self.pool.run(&|w| {
+            if w == 0 {
+                self.pump_and_serve_lane();
+            } else {
+                while let Some(r) = self.st.wait_claim() {
+                    self.serve_one(r, false);
+                    self.st.done();
+                }
+            }
+        })
+    }
+
+    /// Worker 0 of a region. This code must be panic-free: worker 0 is
+    /// the only lane that can release the helpers from the region
+    /// condvar (the pool barrier cannot wake them), and the [`LiveGuard`]
+    /// makes that release unconditional even on an unexpected unwind.
+    fn pump_and_serve_lane(&self) {
+        let guard = LiveGuard(&self.st);
+        loop {
+            self.pump();
+            if self.st.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            if let Some(r) = self.st.claim() {
+                self.serve_one(r, false);
+                self.st.done();
+                continue;
+            }
+            if self.st.inflight.load(Ordering::SeqCst) == 0 {
+                break;
+            }
+            self.nap();
+        }
+        // Release the helper lanes, then help drain what's left.
+        drop(guard);
+        while let Some(r) = self.st.claim() {
+            self.serve_one(r, false);
+            self.st.done();
+        }
+    }
+
+    /// Serve one claimed request end-to-end. `pooled` forwards fan phase
+    /// grids across the whole pool (inline path); lane forwards run the
+    /// serial kernels inside this worker's checked-out workspace lane.
+    /// Both are bitwise identical to the serial walk. Runs on pool
+    /// workers — written panic-free (no unwraps, no raw indexing).
+    fn serve_one(&self, r: Request, pooled: bool) {
+        let started = Instant::now();
+        let queue_t = started.duration_since(r.enqueued);
+        let Some(model) = r.input.shape.first().and_then(|s| self.models.get(s)) else {
+            // `admit` vets shapes, so this arm is defensive.
+            self.hub.record_rejected();
+            self.hub.release();
+            let e = anyhow!("no bucket model for request shape {:?}", r.input.shape);
+            let _ = r.respond.send(Err(e));
+            return;
+        };
+        let mut out = vec![0.0f32; r.input.data.len()];
+        let res = if pooled {
+            model.forward_slice_into(&r.input.data, &mut out)
+        } else {
+            model.forward_lane_into(&r.input.data, &mut out)
+        };
+        let exec = started.elapsed();
+        match res {
+            Ok(()) => {
+                self.hub.record_served(queue_t, exec);
+                self.hub.release();
+                let resp = Response {
+                    output: Tensor::new(model.out_shape(), out),
+                    queue_time: queue_t,
+                    exec_time: exec,
+                    batch_real: 1,
+                    batch_padded: 1,
+                };
+                let _ = r.respond.send(Ok(resp));
+            }
+            Err(e) => {
+                self.hub.record_failed(1);
+                self.hub.release();
+                let _ = r.respond.send(Err(e));
             }
         }
     }

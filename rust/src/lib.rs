@@ -46,10 +46,13 @@
 //!    section) is documented in `rust/DESIGN.md`.
 //!    With `--features pjrt`, AOT-compiled JAX/Pallas artifacts (built
 //!    by `python/compile/`) execute through PJRT instead;
-//! 3. **Serving** — a request router + dynamic batcher ([`coordinator`])
-//!    that runs either backend on the request path — batch sequences
-//!    dispatched across the native worker pool — with Python nowhere
-//!    in sight.
+//! 3. **Serving** — an admission-gated request router ([`coordinator`])
+//!    with two batcher engines on either backend: classic fixed batching
+//!    (pad to a compiled variant), and **continuous batching** — length
+//!    buckets instead of pad-to-max-seq, worker lanes refilled from the
+//!    queue as individual sequences complete, typed overload shedding at
+//!    a configurable queue depth, and live mid-flight metrics snapshots
+//!    — with Python nowhere in sight.
 //!
 //! See `rust/README.md` for build instructions, the feature matrix, and
 //! the experiment index (`bwma experiment …` regenerates every paper

@@ -4,9 +4,11 @@
 //!   experiment <id>    regenerate a paper table/figure (fig6a, fig6b,
 //!                      fig7, fig8, convert-overhead, headline, all)
 //!   simulate <config>  run one simulation (preset name or config file)
-//!   serve              threaded batch-serving demo (native blocked
-//!                      kernels by default; PJRT with --backend pjrt on a
-//!                      `--features pjrt` build)
+//!   serve              threaded serving demo — continuous batching with
+//!                      length buckets by default, classic fixed batching
+//!                      with --batcher fixed (native blocked kernels;
+//!                      PJRT with --backend pjrt on a `--features pjrt`
+//!                      build)
 //!   verify <tag>       check backend numerics against references
 //!                      (native suite by default; PJRT goldens with
 //!                      --backend pjrt)
@@ -72,7 +74,8 @@ USAGE:
                   [--scale paper|tiny] [--markdown]
   bwma simulate <preset|config-file> [--layers N] [--convert] [--cores N]
                 [--precision f32|int8]
-  bwma serve [--requests N] [--max-batch B] [--cores N]
+  bwma serve [--requests N] [--batcher continuous|fixed] [--buckets S1,S2,…]
+             [--queue-depth D] [--max-batch B] [--cores N]
              [--model ffn|encoder] [--layers N] [--precision f32|int8]
              [--backend native|pjrt] [--tag encoder_jnp_b16]
   bwma verify <check-tag|all> [--cores N] [--backend native|pjrt]
@@ -94,6 +97,18 @@ bytes. On `simulate`, `--precision` sets the modeled element size
 (int8 = 1 byte, the paper's accelerator; f32 = 4). The
 `pjrt` backend needs a build with `--features pjrt` (and real xla
 bindings) plus artifacts from `python/compile/aot.py`.
+
+Serving runs **continuous batching** by default (`--batcher continuous`,
+native backend only): `--buckets 32,64` builds one model per sequence
+length (multiples of the pack block, sharing ONE worker pool), requests
+are admitted into their length bucket instead of padding to max seq, and
+pool workers refill their workspace lanes from the shared queue as
+individual sequences complete. `--queue-depth D` bounds the requests in
+flight — submits beyond it shed immediately with a typed overload error
+(never an unbounded queue). `--batcher fixed` keeps the classic dynamic
+batcher (pad-to-variant, batch variants 1/2/4/8, `--max-batch` cap);
+the PJRT backend always serves fixed batches. Live metrics (queue depth,
+shed/failed counts, latency percentiles) are snapshotted mid-flight.
 ";
 
 /// Parse `--cores` (defaulting to the host's available parallelism) and
@@ -194,53 +209,114 @@ fn cmd_simulate(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Serve-command options shared by both backends.
+struct ServeOpts {
+    n_requests: usize,
+    max_batch: usize,
+    cores: usize,
+    queue_depth: usize,
+}
+
+/// Fixed demo dims of the native serving models:
+/// (d_model, d_ff, pack block, attention heads).
+const NATIVE_DIMS: (usize, usize, usize, usize) = (96, 192, 16, 3);
+
 fn cmd_serve(args: &[String]) -> Result<()> {
-    let n_requests: usize = opt(args, "--requests").unwrap_or("64").parse()?;
-    let max_batch: usize = opt(args, "--max-batch").unwrap_or("8").parse()?;
-    let cores = parse_cores(args)?;
+    let opts = ServeOpts {
+        n_requests: opt(args, "--requests").unwrap_or("64").parse().context("--requests")?,
+        max_batch: opt(args, "--max-batch").unwrap_or("8").parse().context("--max-batch")?,
+        cores: parse_cores(args)?,
+        queue_depth: opt(args, "--queue-depth")
+            .unwrap_or("1024")
+            .parse()
+            .context("--queue-depth")?,
+    };
     match opt(args, "--backend").unwrap_or("native") {
-        "native" => serve_native(args, n_requests, max_batch, cores),
+        "native" => serve_native(args, &opts),
         #[cfg(feature = "pjrt")]
-        "pjrt" => serve_pjrt(args, n_requests, max_batch),
+        "pjrt" => serve_pjrt(args, &opts),
         #[cfg(not(feature = "pjrt"))]
         "pjrt" => bail!("this build has no PJRT support (rebuild with --features pjrt)"),
         other => bail!("unknown backend {other:?} (native|pjrt)"),
     }
 }
 
-/// Drive the batcher with synthetic traffic and report serving metrics.
+/// Parse `--buckets 32,64` into sorted, deduplicated sequence lengths
+/// (default: the single demo bucket). Every bucket must be a positive
+/// multiple of the pack block — the packing boundary, checked at the CLI
+/// before any model is built.
+fn parse_buckets(args: &[String], default_seq: usize, block: usize) -> Result<Vec<usize>> {
+    let mut buckets: Vec<usize> = match opt(args, "--buckets") {
+        None => vec![default_seq],
+        Some(csv) => csv
+            .split(',')
+            .map(|s| s.trim().parse::<usize>().context("--buckets"))
+            .collect::<Result<_>>()?,
+    };
+    buckets.sort_unstable();
+    buckets.dedup();
+    for &b in &buckets {
+        ensure!(b > 0 && b % block == 0, "bucket seq {b} must be a positive multiple of {block}");
+    }
+    Ok(buckets)
+}
+
+/// Drive the batcher with synthetic traffic (round-robin over the bucket
+/// shapes), snapshot the live metrics mid-flight, and report serving
+/// statistics. Shed or failed requests are counted, not fatal — heavy
+/// traffic against a shallow `--queue-depth` is expected to shed.
 fn drive_server(
     server: Server,
-    n_requests: usize,
-    in_shape: &[usize],
+    opts: &ServeOpts,
+    in_shapes: &[Vec<usize>],
     label: &str,
 ) -> Result<()> {
     let mut rng = XorShift64::new(0xC0FFEE);
     let mut pending = Vec::new();
-    let n_in: usize = in_shape.iter().product();
     let t0 = Instant::now();
-    for _ in 0..n_requests {
-        let mut data = vec![0.0f32; n_in];
+    for i in 0..opts.n_requests {
+        let shape = &in_shapes[i % in_shapes.len()];
+        let mut data = vec![0.0f32; shape.iter().product()];
         rng.fill_f32(&mut data);
-        pending.push(server.submit(Tensor::new(in_shape.to_vec(), data)));
+        pending.push(server.submit(Tensor::new(shape.clone(), data)));
     }
+    // Live observability: the hub is readable mid-flight, no shutdown
+    // required (queue depth and shed counters move while we wait).
+    let live = server.metrics();
     let mut latencies = Vec::new();
+    let mut errored = 0usize;
     for rx in pending {
-        let resp = rx.recv().context("response channel")??;
-        latencies.push(resp.queue_time + resp.exec_time);
+        match rx.recv().context("response channel")? {
+            Ok(resp) => latencies.push(resp.queue_time + resp.exec_time),
+            Err(_) => errored += 1,
+        }
     }
     let wall = t0.elapsed();
     let metrics = server.shutdown()?;
+    println!(
+        "mid-flight snapshot: {} in flight, {} served, {} shed",
+        live.in_flight, live.requests, live.shed
+    );
+    ensure!(!latencies.is_empty(), "no request succeeded ({errored} shed/failed)");
     let stats = bwma::coordinator::LatencyStats::from_samples(latencies);
     println!(
-        "done ({label}): {} requests in {wall:?} → {:.1} req/s | p50 {:?} p99 {:?} | {} batches, mean size {:.2}",
+        "done ({label}): {} served in {wall:?} → {:.1} req/s | p50 {:?} p99 {:?} | \
+         shed {} failed {} rejected {}",
         metrics.requests,
-        n_requests as f64 / wall.as_secs_f64(),
+        metrics.requests as f64 / wall.as_secs_f64(),
         stats.p50(),
         stats.p99(),
-        metrics.batches,
-        metrics.mean_batch_size(),
+        metrics.shed,
+        metrics.failed,
+        metrics.rejected,
     );
+    if metrics.batches > 0 {
+        println!(
+            "batching: {} executions, mean real size {:.2}",
+            metrics.batches,
+            metrics.mean_batch_size()
+        );
+    }
     // Server-side latency aggregation (executor-recorded samples).
     if let (Some(q), Some(e)) = (metrics.queue_latency(), metrics.exec_latency()) {
         println!(
@@ -256,70 +332,122 @@ fn drive_server(
     Ok(())
 }
 
-/// Serve on the native blocked-execution backend: a packed-weights model
-/// (`--model ffn` — the default FFN block — or `--model encoder`, a full
-/// multi-head BERT encoder stack `--layers` deep), batch variants
-/// 1/2/4/8, nothing loaded from disk. `--cores` builds the model's
-/// persistent worker pool (`with_cores`); the batcher dispatches every
-/// request over that pool and spawns no threads of its own.
-/// `--precision int8` swaps in the quantized encoder
-/// ([`NativeModel::new_encoder_int8`]) — the server stack is
-/// precision-agnostic, so nothing else changes.
-fn serve_native(args: &[String], n_requests: usize, max_batch: usize, cores: usize) -> Result<()> {
-    let (seq, d_model, d_ff, block) = (64usize, 96usize, 192usize, 16usize);
-    let precision: Precision = opt(args, "--precision").unwrap_or("f32").parse()?;
-    let (model, label) = match opt(args, "--model").unwrap_or("ffn") {
+/// Build one native bucket model: `--model ffn` (the demo FFN block) or
+/// `--model encoder` (a full multi-head BERT encoder stack `layers`
+/// deep); `--precision int8` swaps in the quantized encoder — the server
+/// stack is precision-agnostic, so nothing else changes.
+fn build_native_model(
+    kind: &str,
+    precision: Precision,
+    seq: usize,
+    layers: usize,
+) -> Result<NativeModel> {
+    let (d_model, d_ff, block, heads) = NATIVE_DIMS; // d_head = 96/3 = 32, block-aligned
+    match kind {
         "ffn" => {
             ensure!(
                 precision == Precision::F32,
                 "--precision int8 needs --model encoder (the FFN demo block has no quantized path)"
             );
-            (
-                NativeModel::new(seq, d_model, d_ff, block, 0xB3D)?,
-                format!("native FFN {seq}x{d_model}→{d_ff}"),
-            )
+            NativeModel::new(seq, d_model, d_ff, block, 0xB3D)
         }
-        "encoder" => {
-            let layers: usize = opt(args, "--layers").unwrap_or("2").parse().context("--layers")?;
-            let heads = 3usize; // d_head = 96/3 = 32, a multiple of the block
-            let model = match precision {
-                Precision::F32 => {
-                    NativeModel::new_encoder(seq, d_model, heads, d_ff, layers, block, 0xB3D)?
-                }
-                Precision::Int8 => {
-                    NativeModel::new_encoder_int8(seq, d_model, heads, d_ff, layers, block, 0xB3D)?
-                }
-            };
-            let label = format!(
-                "native {precision} encoder {layers}x[{seq}x{d_model}, {heads} heads, ff {d_ff}]"
-            );
-            (model, label)
-        }
+        "encoder" => match precision {
+            Precision::F32 => {
+                NativeModel::new_encoder(seq, d_model, heads, d_ff, layers, block, 0xB3D)
+            }
+            Precision::Int8 => {
+                NativeModel::new_encoder_int8(seq, d_model, heads, d_ff, layers, block, 0xB3D)
+            }
+        },
         other => bail!("unknown --model {other:?} (ffn|encoder)"),
-    };
-    let model = model.with_cores(cores)?;
-    let in_shape = model.in_shape();
-    let out_shape = model.out_shape();
-    let in_shape2 = in_shape.clone();
-    let server = Server::start(ServerConfig { max_batch, ..Default::default() }, move || {
-        // One set of weights, shared by every batch-variant slot.
-        let model = std::sync::Arc::new(model);
-        let mut variants: BTreeMap<usize, Box<dyn BatchRunner>> = BTreeMap::new();
-        for bsz in [1usize, 2, 4, 8] {
-            variants.insert(bsz, Box::new(model.clone()));
-        }
-        Ok((variants, in_shape2, out_shape))
-    })?;
-    println!(
-        "serving {n_requests} requests (max batch {max_batch}, {cores} cores, \
-         {label}, block {block})…"
-    );
-    drive_server(server, n_requests, &in_shape, "native")
+    }
 }
 
-/// Serve compiled PJRT artifacts (requires `make artifacts`).
+/// Serve on the native blocked-execution backend. The default
+/// `--batcher continuous` builds one packed-weights model per
+/// `--buckets` sequence length — all sharing ONE persistent worker pool
+/// (`with_cores` on the first, `with_pool` on the rest) — and refills
+/// the pool's workspace lanes from the admission queue as individual
+/// sequences complete; `--batcher fixed` keeps the classic dynamic
+/// batcher with batch variants 1/2/4/8. Neither mode loads anything from
+/// disk, and neither spawns threads beyond the pool.
+fn serve_native(args: &[String], opts: &ServeOpts) -> Result<()> {
+    let (default_seq, block) = (64usize, NATIVE_DIMS.2);
+    let precision: Precision = opt(args, "--precision").unwrap_or("f32").parse()?;
+    let kind = opt(args, "--model").unwrap_or("ffn").to_string();
+    let layers: usize = opt(args, "--layers").unwrap_or("2").parse().context("--layers")?;
+    let buckets = parse_buckets(args, default_seq, block)?;
+    let in_shapes: Vec<Vec<usize>> = buckets.iter().map(|&s| vec![s, NATIVE_DIMS.0]).collect();
+    let cores = opts.cores;
+    match opt(args, "--batcher").unwrap_or("continuous") {
+        "continuous" => {
+            let kind2 = kind.clone();
+            let buckets2 = buckets.clone();
+            let server = Server::start_continuous(
+                ServerConfig { queue_depth: opts.queue_depth, ..Default::default() },
+                move || {
+                    let mut models: Vec<NativeModel> = Vec::with_capacity(buckets2.len());
+                    for &seq in &buckets2 {
+                        let m = build_native_model(&kind2, precision, seq, layers)?;
+                        let m = match models.first() {
+                            // One pool for every bucket: tenancy never
+                            // multiplies worker threads.
+                            None => m.with_cores(cores)?,
+                            Some(first) => m.with_pool(std::sync::Arc::clone(first.pool())),
+                        };
+                        models.push(m);
+                    }
+                    Ok(models)
+                },
+            )?;
+            println!(
+                "serving {} requests (continuous batching, buckets {buckets:?}, queue depth {}, \
+                 {cores} cores, {kind} {precision})…",
+                opts.n_requests, opts.queue_depth
+            );
+            drive_server(server, opts, &in_shapes, "native continuous")
+        }
+        "fixed" => {
+            ensure!(
+                buckets.len() == 1,
+                "--batcher fixed serves a single sequence length (got --buckets {buckets:?}); \
+                 use --batcher continuous for length bucketing"
+            );
+            let model =
+                build_native_model(&kind, precision, buckets[0], layers)?.with_cores(cores)?;
+            let in_shape = model.in_shape();
+            let out_shape = model.out_shape();
+            let in_shape2 = in_shape.clone();
+            let cfg = ServerConfig {
+                max_batch: opts.max_batch,
+                queue_depth: opts.queue_depth,
+                ..Default::default()
+            };
+            let server = Server::start(cfg, move || {
+                // One set of weights, shared by every batch-variant slot.
+                let model = std::sync::Arc::new(model);
+                let mut variants: BTreeMap<usize, Box<dyn BatchRunner>> = BTreeMap::new();
+                for bsz in [1usize, 2, 4, 8] {
+                    variants.insert(bsz, Box::new(model.clone()));
+                }
+                Ok((variants, in_shape2, out_shape))
+            })?;
+            println!(
+                "serving {} requests (fixed batching, max batch {}, seq {}, {cores} cores, \
+                 {kind} {precision}, block {block})…",
+                opts.n_requests, opts.max_batch, buckets[0]
+            );
+            drive_server(server, opts, &in_shapes, "native fixed")
+        }
+        other => bail!("unknown --batcher {other:?} (continuous|fixed)"),
+    }
+}
+
+/// Serve compiled PJRT artifacts (requires `make artifacts`). PJRT
+/// executables are compiled per batch size, so this backend always runs
+/// the fixed batcher.
 #[cfg(feature = "pjrt")]
-fn serve_pjrt(args: &[String], n_requests: usize, max_batch: usize) -> Result<()> {
+fn serve_pjrt(args: &[String], opts: &ServeOpts) -> Result<()> {
     let tag = opt(args, "--tag").unwrap_or("encoder_jnp_b16").to_string();
     let dir = artifacts_dir()?;
     let golden = GoldenSet::load(&dir, &tag)?;
@@ -338,7 +466,12 @@ fn serve_pjrt(args: &[String], n_requests: usize, max_batch: usize) -> Result<()
     let tag2 = tag.clone();
     let in_shape2 = in_shape.clone();
     let out_shape2 = out_shape.clone();
-    let server = Server::start(ServerConfig { max_batch, ..Default::default() }, move || {
+    let cfg = ServerConfig {
+        max_batch: opts.max_batch,
+        queue_depth: opts.queue_depth,
+        ..Default::default()
+    };
+    let server = Server::start(cfg, move || {
         let rt = Runtime::cpu()?;
         let mut variants: BTreeMap<usize, Box<dyn BatchRunner>> = BTreeMap::new();
         for bsz in [1usize, 2, 4, 8] {
@@ -351,8 +484,11 @@ fn serve_pjrt(args: &[String], n_requests: usize, max_batch: usize) -> Result<()
         anyhow::ensure!(!variants.is_empty(), "no batch artifacts for {tag2}; run `make artifacts`");
         Ok((variants, in_shape2, out_shape2))
     })?;
-    println!("serving {n_requests} requests (max batch {max_batch}, artifact {tag})…");
-    drive_server(server, n_requests, &in_shape, "pjrt")
+    println!(
+        "serving {} requests (fixed batching, max batch {}, artifact {tag})…",
+        opts.n_requests, opts.max_batch
+    );
+    drive_server(server, opts, std::slice::from_ref(&in_shape), "pjrt")
 }
 
 fn cmd_verify(args: &[String]) -> Result<()> {

@@ -301,6 +301,18 @@ impl WorkspacePool {
         self.lock().len()
     }
 
+    /// Top the stack up to at least `n` free lanes under ONE lock
+    /// acquisition — serving warm-up (the continuous batcher preplans a
+    /// lane per pool worker per bucket so steady-state lane refill never
+    /// allocates, and no concurrent checkout can interleave with the
+    /// count-and-fill).
+    pub(crate) fn reserve_with(&self, n: usize, mut make: impl FnMut() -> EncoderWorkspace) {
+        let mut lanes = self.lock();
+        while lanes.len() < n {
+            lanes.push(make());
+        }
+    }
+
     /// Poison every free lane (test hook — see [`EncoderWorkspace::poison`]).
     pub(crate) fn poison_all(&self) {
         for ws in self.lock().iter_mut() {
@@ -348,6 +360,25 @@ mod tests {
         assert_eq!(pool.free_lanes(), 1);
         pool.checkin(a);
         assert_eq!(pool.free_lanes(), 2);
+    }
+
+    #[test]
+    fn reserve_with_tops_up_to_the_requested_depth() {
+        let pool = WorkspacePool::new();
+        let mut built = 0usize;
+        pool.reserve_with(3, || {
+            built += 1;
+            EncoderWorkspace::new_ffn(16, 16, 32, 16)
+        });
+        assert_eq!(built, 3);
+        assert_eq!(pool.free_lanes(), 3);
+        // Already deep enough: no further construction.
+        pool.reserve_with(2, || {
+            built += 1;
+            EncoderWorkspace::new_ffn(16, 16, 32, 16)
+        });
+        assert_eq!(built, 3);
+        assert_eq!(pool.free_lanes(), 3);
     }
 
     #[test]

@@ -14,6 +14,10 @@
 //! forward (activation requantize passes, i8 GEMMs with fused dequant
 //! epilogues, f32 spine) must hit the same zero-allocation and
 //! no-stale-lane-reads bars as the f32 path.
+//!
+//! ISSUE 7 extends it to the continuous-batching entry points: the
+//! per-sequence lane forwards the scheduler refills from the admission
+//! queue must also run allocation-free once their lane exists.
 
 use std::sync::{Mutex, MutexGuard};
 
@@ -190,6 +194,41 @@ fn steady_int8_batch_loop_performs_zero_heap_allocations() {
     }
     let allocs = heap_allocs_total() - before;
     assert_eq!(allocs, 0, "steady int8 batch loop must not allocate (saw {allocs})");
+}
+
+/// ISSUE 7: the continuous engine's per-sequence entry points —
+/// `forward_lane_into` (region worker walking a claimed lane on the
+/// shared serial pool) and `forward_slice_into` (the scheduler's inline
+/// path on the model's full pool) — share the zero-allocation contract
+/// once their lanes exist, so a warm continuous serve loop allocates
+/// nothing per request.
+#[test]
+fn warm_continuous_lane_forwards_perform_zero_heap_allocations() {
+    let _g = counter_lock();
+    let cores = test_cores();
+    let model =
+        NativeModel::new_encoder(32, 32, 2, 64, 1, 16, 0xA11E).unwrap().with_cores(cores).unwrap();
+    // One lane per region worker plus the inline path's lane.
+    model.reserve_workspace_lanes(cores.max(2));
+    let mut rng = XorShift64::new(0xA11F);
+    let x = rand_vec(&mut rng, 32 * 32);
+    let mut lane_out = vec![0.0f32; 32 * 32];
+    let mut slice_out = vec![0.0f32; 32 * 32];
+    for _ in 0..3 {
+        model.forward_lane_into(&x, &mut lane_out).unwrap();
+        model.forward_slice_into(&x, &mut slice_out).unwrap();
+    }
+    let expect = lane_out.clone();
+    assert_eq!(slice_out, expect, "lane and pool forwards must agree bitwise");
+    let before = heap_allocs_total();
+    for i in 0..100 {
+        model.forward_lane_into(&x, &mut lane_out).unwrap();
+        model.forward_slice_into(&x, &mut slice_out).unwrap();
+        assert_eq!(lane_out, expect, "lane iteration {i} drifted");
+        assert_eq!(slice_out, expect, "pool iteration {i} drifted");
+    }
+    let allocs = heap_allocs_total() - before;
+    assert_eq!(allocs, 0, "warm continuous-lane forwards must not allocate (saw {allocs})");
 }
 
 /// Stale-data contract: poisoning every free lane with NaN between

@@ -1,6 +1,6 @@
-//! Coordinator integration: the dynamic batcher against a fake runner
-//! (no PJRT needed — the batching, padding, splitting, and metrics logic
-//! is what's under test), plus failure injection.
+//! Coordinator integration: the fixed-batch engine against a fake runner
+//! (no PJRT needed — the batching, padding, splitting, shedding, and
+//! metrics logic is what's under test), plus failure injection.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -10,19 +10,25 @@ use std::time::Duration;
 use anyhow::{bail, Result};
 
 use bwma::coordinator::server::{BatchRunner, Server, ServerConfig};
-use bwma::coordinator::LatencyStats;
+use bwma::coordinator::{LatencyStats, ServeError};
 use bwma::runtime::Tensor;
 
-/// Doubles every element; counts invocations per batch size.
+/// Doubles every element; counts invocations per batch size; optionally
+/// sleeps (to hold requests in flight) or fails (to exercise the error
+/// accounting).
 struct FakeModel {
     batch: usize,
     calls: Arc<AtomicU64>,
     fail: bool,
+    delay: Duration,
 }
 
 impl BatchRunner for FakeModel {
     fn run(&self, stacked: Tensor, out_shape: Vec<usize>) -> Result<Tensor> {
         self.calls.fetch_add(1, Ordering::SeqCst);
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay);
+        }
         if self.fail {
             bail!("injected model failure");
         }
@@ -32,26 +38,30 @@ impl BatchRunner for FakeModel {
     }
 }
 
-fn start_fake(
+fn start_fake_cfg(
     sizes: &[usize],
-    max_batch: usize,
+    cfg: ServerConfig,
     fail: bool,
+    delay: Duration,
 ) -> (Server, Arc<AtomicU64>) {
     let calls = Arc::new(AtomicU64::new(0));
     let calls2 = calls.clone();
     let sizes = sizes.to_vec();
-    let server = Server::start(
-        ServerConfig { max_batch, batch_timeout: Duration::from_millis(5) },
-        move || {
-            let mut m: BTreeMap<usize, Box<dyn BatchRunner>> = BTreeMap::new();
-            for &s in &sizes {
-                m.insert(s, Box::new(FakeModel { batch: s, calls: calls2.clone(), fail }));
-            }
-            Ok((m, vec![4], vec![4]))
-        },
-    )
+    let server = Server::start(cfg, move || {
+        let mut m: BTreeMap<usize, Box<dyn BatchRunner>> = BTreeMap::new();
+        for &s in &sizes {
+            m.insert(s, Box::new(FakeModel { batch: s, calls: calls2.clone(), fail, delay }));
+        }
+        Ok((m, vec![4], vec![4]))
+    })
     .unwrap();
     (server, calls)
+}
+
+fn start_fake(sizes: &[usize], max_batch: usize, fail: bool) -> (Server, Arc<AtomicU64>) {
+    let cfg =
+        ServerConfig { max_batch, batch_timeout: Duration::from_millis(5), ..Default::default() };
+    start_fake_cfg(sizes, cfg, fail, Duration::ZERO)
 }
 
 fn req(v: f32) -> Tensor {
@@ -100,6 +110,133 @@ fn odd_remainders_use_smaller_variants_or_padding() {
         assert_eq!(resp.output.data[0], 2.0 * (10.0 + i as f32), "request {i}");
     }
     server.shutdown().unwrap();
+}
+
+#[test]
+fn padded_batch_sizes_reported_on_both_sides() {
+    // Regression (accounting bugfix): the server used to record the REAL
+    // fused count while responses reported the PADDED variant, so the
+    // histogram disagreed with what clients observed. Both sides now
+    // report both numbers. Variants {4} only + 3 requests force the pad
+    // path (smallest variant > remaining requests) — previously
+    // untested.
+    let cfg = ServerConfig {
+        max_batch: 4,
+        batch_timeout: Duration::from_millis(50),
+        ..Default::default()
+    };
+    let (server, calls) = start_fake_cfg(&[4], cfg, false, Duration::ZERO);
+    let rxs: Vec<_> = (0..3).map(|i| server.submit(req(i as f32))).collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv().unwrap().unwrap();
+        assert_eq!(resp.output.data, vec![2.0 * i as f32; 4], "request {i}");
+        assert_eq!(resp.batch_real, 3, "3 live requests were fused");
+        assert_eq!(resp.batch_padded, 4, "executed at the padded variant");
+    }
+    assert_eq!(calls.load(Ordering::SeqCst), 1, "one padded execution");
+    let metrics = server.shutdown().unwrap();
+    assert_eq!(metrics.requests, 3);
+    assert_eq!(metrics.batches, 1);
+    assert_eq!(metrics.batch_size_hist[3], 1, "histogram counts REAL sizes");
+    assert_eq!(metrics.padded_size_hist[4], 1, "padded histogram counts EXECUTED sizes");
+}
+
+#[test]
+fn failed_runner_is_counted_failed_not_served() {
+    // Regression (accounting bugfix): failed executions used to be
+    // counted into `requests`/`model_exec_time` and pushed into the
+    // latency samples, silently inflating served throughput and p99.
+    let (server, calls) = start_fake(&[1, 4], 4, true);
+    let rxs: Vec<_> = (0..4).map(|i| server.submit(req(i as f32))).collect();
+    for rx in rxs {
+        assert!(rx.recv().unwrap().is_err());
+    }
+    assert!(calls.load(Ordering::SeqCst) >= 1);
+    let metrics = server.shutdown().unwrap();
+    assert_eq!(metrics.failed, 4, "every fused request counts as failed");
+    assert_eq!(metrics.requests, 0, "failures are not served requests");
+    assert_eq!(metrics.batches, 0, "failed executions record no batch stats");
+    assert!(metrics.queue_latency().is_none(), "failures contribute no latency samples");
+    assert_eq!(metrics.model_exec_time, Duration::ZERO);
+    assert_eq!(metrics.in_flight, 0, "every admission slot was released");
+}
+
+#[test]
+fn shutdown_answers_every_queued_request() {
+    // Regression (shutdown bugfix): requests already sitting in the
+    // channel behind the shutdown message used to get a bare disconnect.
+    // N submits then an immediate shutdown must produce N responses.
+    let cfg =
+        ServerConfig { max_batch: 1, batch_timeout: Duration::from_millis(1), ..Default::default() };
+    let (server, _) = start_fake_cfg(&[1], cfg, false, Duration::from_millis(2));
+    let rxs: Vec<_> = (0..12).map(|i| server.submit(req(i as f32))).collect();
+    // Same-thread sends are FIFO: all 12 requests precede the shutdown.
+    let metrics = server.shutdown().unwrap();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv().unwrap().unwrap();
+        assert_eq!(resp.output.data, vec![2.0 * i as f32; 4], "queued request {i} must be served");
+    }
+    assert_eq!(metrics.requests, 12, "the drain serves every queued request");
+    assert_eq!(metrics.in_flight, 0);
+}
+
+#[test]
+fn overload_sheds_with_typed_rejection() {
+    // Queue depth 2 + a slow runner: the first two submits occupy the
+    // gate for ~50ms, everything else sheds instantly with the typed
+    // error — the backlog never grows.
+    let cfg = ServerConfig {
+        max_batch: 1,
+        batch_timeout: Duration::from_millis(1),
+        queue_depth: 2,
+    };
+    let (server, _) = start_fake_cfg(&[1], cfg, false, Duration::from_millis(50));
+    let handle = server.handle();
+    let admitted: Vec<_> = (0..2).map(|i| handle.try_submit(req(i as f32)).unwrap()).collect();
+    let mut shed = 0;
+    for i in 0..8 {
+        match handle.try_submit(req(10.0 + i as f32)) {
+            Ok(_) => panic!("submit {i} must shed at queue depth 2"),
+            Err(e) => {
+                assert!(matches!(&e, ServeError::Overloaded { limit: 2, .. }));
+                assert!(format!("{e}").contains("overloaded"));
+                shed += 1;
+            }
+        }
+    }
+    // The untyped path funnels the same rejection through the receiver.
+    let err = handle.submit(req(99.0)).recv().unwrap().unwrap_err();
+    assert!(format!("{err:#}").contains("overloaded"));
+    for rx in admitted {
+        rx.recv().unwrap().unwrap();
+    }
+    let metrics = server.shutdown().unwrap();
+    assert_eq!(metrics.shed, shed + 1, "8 typed + 1 untyped rejections");
+    assert_eq!(metrics.requests, 2, "only the admitted requests were served");
+    assert_eq!(metrics.in_flight, 0);
+}
+
+#[test]
+fn live_metrics_snapshot_mid_flight() {
+    // The hub is readable while requests are in flight — no shutdown
+    // needed. A slow runner keeps the flood observable in the window.
+    let cfg =
+        ServerConfig { max_batch: 1, batch_timeout: Duration::from_millis(1), ..Default::default() };
+    let (server, _) = start_fake_cfg(&[1], cfg, false, Duration::from_millis(100));
+    let rxs: Vec<_> = (0..4).map(|i| server.submit(req(i as f32))).collect();
+    let live = server.metrics();
+    assert!(live.in_flight > 0, "snapshot taken mid-flight sees the queue depth");
+    assert!(live.requests < 4, "a 100ms-per-request runner cannot have served the flood yet");
+    for rx in rxs {
+        rx.recv().unwrap().unwrap();
+    }
+    // Slots are released before responses are sent, so once every
+    // response has arrived the gate must read empty.
+    let settled = server.metrics();
+    assert_eq!(settled.requests, 4);
+    assert_eq!(settled.in_flight, 0);
+    let metrics = server.shutdown().unwrap();
+    assert_eq!(metrics.requests, 4);
 }
 
 #[test]

@@ -133,7 +133,7 @@ fn start_model_server(model: Arc<NativeModel>, max_batch: usize) -> Server {
     let in_shape = model.in_shape();
     let out_shape = model.out_shape();
     Server::start(
-        ServerConfig { max_batch, batch_timeout: Duration::from_millis(1) },
+        ServerConfig { max_batch, batch_timeout: Duration::from_millis(1), ..Default::default() },
         move || {
             let mut variants: BTreeMap<usize, Box<dyn BatchRunner>> = BTreeMap::new();
             for bsz in [1usize, 2, 4, 8] {

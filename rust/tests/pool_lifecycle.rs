@@ -167,3 +167,35 @@ fn serve_loop_under_load_creates_no_threads_beyond_the_pool() {
         "batch dispatch must reuse the model's pool, not spawn per batch"
     );
 }
+
+/// ISSUE 7: the continuous engine shares the contract — the scheduler
+/// refills workspace lanes inside the model's persistent pool (one
+/// `pool.run` region per refill round), never by spawning threads per
+/// request, per region, or per bucket.
+#[test]
+fn continuous_serve_loop_under_load_creates_no_threads_beyond_the_pool() {
+    let _g = counter_lock();
+    let server = Server::start_continuous(ServerConfig::default(), || {
+        Ok(vec![NativeModel::new_encoder(32, 32, 2, 64, 1, 16, 0x9006)?.with_cores(2)?])
+    })
+    .unwrap();
+    let mut rng = XorShift64::new(0x9007);
+    let mut flood = |n: usize| {
+        let rxs: Vec<_> =
+            (0..n).map(|_| server.submit(rand_tensor(&mut rng, vec![32, 32]))).collect();
+        for rx in rxs {
+            rx.recv().unwrap().unwrap();
+        }
+    };
+    // Warm-up: build the lanes and run the first refill regions.
+    flood(8);
+    let spawned = WorkerPool::threads_spawned_total();
+    flood(48);
+    let metrics = server.shutdown().unwrap();
+    assert_eq!(metrics.requests, 56);
+    assert_eq!(
+        WorkerPool::threads_spawned_total(),
+        spawned,
+        "lane refill must ride the persistent pool, not spawn threads"
+    );
+}

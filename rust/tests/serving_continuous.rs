@@ -1,0 +1,192 @@
+//! Soak suite for the continuous-batching engine: length-bucketed
+//! admission, per-sequence lane refill, typed shedding at the queue
+//! depth limit, and full drain at shutdown — all while every response
+//! stays **bitwise identical** to the serial forward of its own input.
+//!
+//! `BWMA_TEST_CORES` (CI matrix: 1 and 4) picks the shared pool width,
+//! so the suite covers both the inline (serial) scheduler path and the
+//! multi-lane region path on every push.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use bwma::coordinator::{ServeError, Server, ServerConfig};
+use bwma::runtime::{NativeModel, Tensor};
+use bwma::util::XorShift64;
+
+/// Pool width for the models under test (CI matrix runs 1 and 4).
+fn test_cores() -> usize {
+    std::env::var("BWMA_TEST_CORES").ok().and_then(|v| v.parse().ok()).unwrap_or(4)
+}
+
+/// Everything about a bucket family except the sequence length — the
+/// whole point of bucketed serving is that `seq` is the only axis that
+/// varies, and weight init never consumes it, so same-spec models at
+/// different lengths share identical weights.
+#[derive(Clone, Copy)]
+struct Spec {
+    d_model: usize,
+    heads: usize,
+    d_ff: usize,
+    layers: usize,
+    block: usize,
+    seed: u64,
+}
+
+impl Spec {
+    fn model(&self, seq: usize) -> NativeModel {
+        let Spec { d_model, heads, d_ff, layers, block, seed } = *self;
+        NativeModel::new_encoder(seq, d_model, heads, d_ff, layers, block, seed).unwrap()
+    }
+}
+
+const SOAK: Spec = Spec { d_model: 32, heads: 2, d_ff: 64, layers: 1, block: 8, seed: 0x50AC };
+const BUCKETS: [usize; 3] = [16, 32, 48];
+
+/// One model per bucket, all sharing the first model's worker pool —
+/// the same wiring `bwma serve --batcher continuous` performs.
+fn serve_buckets(spec: Spec, buckets: &[usize], cores: usize, queue_depth: usize) -> Server {
+    let buckets = buckets.to_vec();
+    Server::start_continuous(ServerConfig { queue_depth, ..Default::default() }, move || {
+        let mut models: Vec<NativeModel> = Vec::new();
+        for &seq in &buckets {
+            let m = spec.model(seq);
+            let m = match models.first() {
+                None => m.with_cores(cores)?,
+                Some(first) => m.with_pool(Arc::clone(first.pool())),
+            };
+            models.push(m);
+        }
+        Ok(models)
+    })
+    .unwrap()
+}
+
+fn rand_input(rng: &mut XorShift64, seq: usize, d_model: usize) -> Tensor {
+    let mut data = vec![0.0f32; seq * d_model];
+    rng.fill_f32(&mut data);
+    Tensor::new(vec![seq, d_model], data)
+}
+
+/// 6 client threads × 30 requests of mixed lengths across three
+/// buckets: every response must be bitwise identical to the serial
+/// forward of its own input at its own length, with nothing shed,
+/// nothing padded, and every request in the latency aggregation.
+#[test]
+fn mixed_length_soak_is_bitwise_serial_per_request() {
+    let server = serve_buckets(SOAK, &BUCKETS, test_cores(), 1024);
+    let refs: BTreeMap<usize, NativeModel> = BUCKETS.iter().map(|&s| (s, SOAK.model(s))).collect();
+    const CLIENTS: u64 = 6;
+    const PER_CLIENT: usize = 30;
+
+    std::thread::scope(|s| {
+        for t in 0..CLIENTS {
+            let handle = server.handle();
+            let refs = &refs;
+            s.spawn(move || {
+                let mut rng = XorShift64::new(0x3000 + t);
+                let inputs: Vec<Tensor> = (0..PER_CLIENT)
+                    .map(|_| {
+                        let seq = *rng.pick(&BUCKETS);
+                        rand_input(&mut rng, seq, SOAK.d_model)
+                    })
+                    .collect();
+                let rxs: Vec<_> = inputs.iter().map(|x| handle.submit(x.clone())).collect();
+                for (i, (x, rx)) in inputs.iter().zip(rxs).enumerate() {
+                    let resp = rx.recv().expect("no response").expect("request failed");
+                    let expect = refs[&x.shape[0]].forward_with_cores(x, 1).unwrap();
+                    assert_eq!(resp.output.shape, expect.shape, "client {t} req {i}");
+                    assert_eq!(resp.batch_real, 1, "continuous batching serves sequences singly");
+                    assert_eq!(resp.batch_padded, 1, "continuous batching never pads");
+                    for (j, (a, b)) in expect.data.iter().zip(&resp.output.data).enumerate() {
+                        assert_eq!(
+                            a.to_bits(),
+                            b.to_bits(),
+                            "client {t} req {i}: served output diverges at element {j}"
+                        );
+                    }
+                }
+            });
+        }
+    });
+
+    let metrics = server.shutdown().unwrap();
+    assert_eq!(metrics.requests, CLIENTS * PER_CLIENT as u64);
+    assert_eq!(metrics.rejected, 0);
+    assert_eq!(metrics.shed, 0);
+    assert_eq!(metrics.failed, 0);
+    assert_eq!(metrics.in_flight, 0);
+    assert_eq!(metrics.queue_latency().unwrap().count(), CLIENTS as usize * PER_CLIENT);
+}
+
+/// Queue depth 1 + a deep (slow) model: one request occupies the gate,
+/// the rest shed instantly with the typed overload error and the shed
+/// counter agrees exactly with what the clients observed.
+#[test]
+fn queue_depth_limit_sheds_with_typed_error() {
+    let spec = Spec { d_model: 64, heads: 2, d_ff: 128, layers: 8, block: 16, seed: 0xDE47 };
+    let server = serve_buckets(spec, &[64], test_cores(), 1);
+    let handle = server.handle();
+    let mut rng = XorShift64::new(0xDE48);
+
+    let admitted = handle.try_submit(rand_input(&mut rng, 64, spec.d_model)).unwrap();
+    for i in 0..8 {
+        let e = handle.try_submit(rand_input(&mut rng, 64, spec.d_model)).unwrap_err();
+        assert!(matches!(&e, ServeError::Overloaded { limit: 1, .. }), "submit {i}: {e}");
+        assert!(format!("{e}").contains("overloaded"), "submit {i}: {e}");
+    }
+    admitted.recv().unwrap().expect("the admitted request must still be served");
+
+    let metrics = server.shutdown().unwrap();
+    assert_eq!(metrics.shed, 8, "every rejected submit is counted shed");
+    assert_eq!(metrics.requests, 1, "only the admitted request was served");
+    assert_eq!(metrics.in_flight, 0);
+}
+
+/// Regression (shutdown bugfix): N submits followed by an immediate
+/// shutdown must produce N successful responses — the continuous engine
+/// drains both the channel and its internal queue before replying to
+/// the shutdown.
+#[test]
+fn continuous_server_answers_every_request_across_shutdown() {
+    let server = serve_buckets(SOAK, &[32], test_cores(), 1024);
+    let mut rng = XorShift64::new(0x4A11);
+    let rxs: Vec<_> =
+        (0..32).map(|_| server.submit(rand_input(&mut rng, 32, SOAK.d_model))).collect();
+    // Same-thread sends are FIFO: all 32 requests precede the shutdown.
+    let metrics = server.shutdown().unwrap();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv().unwrap_or_else(|_| panic!("request {i} dropped at shutdown"));
+        assert!(resp.is_ok(), "request {i} failed: {:#}", resp.unwrap_err());
+    }
+    assert_eq!(metrics.requests, 32, "the drain serves every queued request");
+    assert_eq!(metrics.in_flight, 0);
+}
+
+/// A request whose length is not a bucket (or whose width is not the
+/// model's) fails alone with a typed message; well-formed requests
+/// around it are unharmed.
+#[test]
+fn rejected_shapes_fail_alone_in_continuous_mode() {
+    let server = serve_buckets(SOAK, &[16, 32], test_cores(), 1024);
+    let mut rng = XorShift64::new(0x5EED);
+
+    let good_before = server.submit(rand_input(&mut rng, 16, SOAK.d_model));
+    let bad_seq = server.submit(rand_input(&mut rng, 24, SOAK.d_model));
+    let bad_width = server.submit(rand_input(&mut rng, 16, 48));
+    let good_after = server.submit(rand_input(&mut rng, 32, SOAK.d_model));
+
+    good_before.recv().unwrap().expect("well-formed request before the offenders");
+    good_after.recv().unwrap().expect("well-formed request after the offenders");
+    for (name, rx) in [("off-bucket seq", bad_seq), ("wrong d_model", bad_width)] {
+        let err = rx.recv().unwrap().unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("does not match any bucket"), "{name}: {msg}");
+    }
+
+    let metrics = server.shutdown().unwrap();
+    assert_eq!(metrics.requests, 2, "only the well-formed requests execute");
+    assert_eq!(metrics.rejected, 2);
+    assert_eq!(metrics.shed, 0, "shape rejection is not overload shedding");
+    assert_eq!(metrics.in_flight, 0);
+}
