@@ -14,6 +14,9 @@
 //! movement to/from the ports is modelled by the memory system — it is
 //! exactly the traffic whose arrangement the paper optimizes.
 
+// Contract (checked by contract-lint + CI): timing models are safe Rust.
+#![forbid(unsafe_code)]
+
 mod simd;
 mod systolic;
 

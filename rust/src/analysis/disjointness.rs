@@ -1,0 +1,590 @@
+//! Exhaustive write-set disjointness auditor.
+//!
+//! Every `// SAFETY:` comment in [`crate::runtime::parallel`] makes the
+//! same claim: *each output unit has exactly one writer*. The unsafe
+//! core hands workers raw sub-slices on the strength of that claim —
+//! `SharedSlice::range_mut` is sound **iff** the ranges workers derive
+//! from [`chunk_range`]/[`GridPartition`]/`tile_range`/col-view `dst_fn`
+//! arithmetic never overlap and jointly cover the output.
+//!
+//! This module turns the claim into a checked fact. It re-derives the
+//! write-set arithmetic as pure integer-range models ([`model_chunk`],
+//! [`model_tile_range`] — property-tested against the real functions in
+//! this file's tests), then sweeps every partitioning scheme the runtime
+//! uses over a parameter grid (paper shapes × block ∈ {8, 16} × cores
+//! 1..=8 × batch sizes, including the degenerate `n = 0` and
+//! `workers > n` corners) and counts, per output element, how many
+//! workers write it. Exactly once, everywhere, or the audit reports a
+//! [`Violation`] naming the case, the unit, and the writers.
+//!
+//! Exposed as `bwma audit --disjointness` and pinned by the tier-1 test
+//! `tests/audit_disjointness.rs`. The models are deliberately
+//! *independent* re-derivations (no calls into `runtime` from the audit
+//! itself): agreement is established once by the property tests below,
+//! so a regression in either side — model or kernel arithmetic — shows
+//! up as a test failure rather than silently auditing the wrong thing.
+//!
+//! [`chunk_range`]: crate::runtime::parallel::chunk_range
+//! [`GridPartition`]: crate::runtime::parallel::GridPartition
+
+use std::fmt;
+use std::ops::Range;
+
+/// One exactly-once failure: `unit` (a flat element index in the audited
+/// output buffer) was written `writes` times (0 = a coverage hole,
+/// ≥ 2 = an overlap — the data race the SAFETY comments rule out).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    /// Human-readable case id: family plus the swept parameters, e.g.
+    /// `grid_partition rows=64 cols=96 block=16 cores=5`.
+    pub case: String,
+    /// Flat element index of the mis-written unit.
+    pub unit: usize,
+    /// Observed writer count (anything but 1 is a violation).
+    pub writes: u32,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let kind = if self.writes == 0 { "coverage hole" } else { "overlap" };
+        write!(
+            f,
+            "{}: unit {} written {} times ({kind})",
+            self.case, self.unit, self.writes
+        )
+    }
+}
+
+/// Per-family audit tally (one row of the report table).
+#[derive(Debug, Clone)]
+pub struct FamilyStats {
+    /// Partitioning-scheme family name.
+    pub family: &'static str,
+    /// Parameter combinations swept for this family.
+    pub cases: usize,
+    /// Output elements checked across all of the family's cases.
+    pub units_checked: u64,
+}
+
+/// Result of a full audit sweep: per-family tallies plus every
+/// violation found (empty = the exactly-once contract holds over the
+/// whole grid).
+#[derive(Debug, Clone)]
+pub struct AuditReport {
+    /// Per-family case/unit tallies.
+    pub families: Vec<FamilyStats>,
+    /// All exactly-once failures, in sweep order.
+    pub violations: Vec<Violation>,
+}
+
+impl AuditReport {
+    /// Total parameter combinations audited.
+    pub fn cases(&self) -> usize {
+        self.families.iter().map(|f| f.cases).sum()
+    }
+
+    /// Total output elements checked for exactly-once coverage.
+    pub fn units_checked(&self) -> u64 {
+        self.families.iter().map(|f| f.units_checked).sum()
+    }
+
+    /// True iff every audited unit was written exactly once.
+    pub fn ok(&self) -> bool {
+        self.violations.is_empty()
+    }
+}
+
+impl fmt::Display for AuditReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "write-set disjointness audit")?;
+        writeln!(f, "{:<24} {:>8} {:>14}", "family", "cases", "units")?;
+        for fam in &self.families {
+            writeln!(f, "{:<24} {:>8} {:>14}", fam.family, fam.cases, fam.units_checked)?;
+        }
+        writeln!(
+            f,
+            "{:<24} {:>8} {:>14}",
+            "total",
+            self.cases(),
+            self.units_checked()
+        )?;
+        if self.ok() {
+            writeln!(f, "result: OK — every unit written exactly once")?;
+        } else {
+            writeln!(f, "result: {} VIOLATION(S)", self.violations.len())?;
+            for v in self.violations.iter().take(20) {
+                writeln!(f, "  {v}")?;
+            }
+            if self.violations.len() > 20 {
+                writeln!(f, "  … and {} more", self.violations.len() - 20)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Range models (independent re-derivations; property-tested below).
+// ---------------------------------------------------------------------------
+
+/// Model of [`crate::runtime::parallel::chunk_range`]: worker `w`'s
+/// contiguous slice of `n` items split evenly over `workers` workers —
+/// the first `n % workers` workers get one extra item.
+pub fn model_chunk(n: usize, workers: usize, w: usize) -> Range<usize> {
+    debug_assert!(workers >= 1 && w < workers);
+    let base = n / workers;
+    let extra = n % workers;
+    let start = w * base + w.min(extra);
+    let len = base + usize::from(w < extra);
+    start..start + len
+}
+
+/// Model of `runtime::native::tile_range`: the element range of packed
+/// tile `(block_row, block_col)` in a BWMA buffer described by
+/// `(base, pitch, col0)` in elements. Under BWMA every `block × block`
+/// tile is one contiguous burst; the block grid is row-major with
+/// `pitch / block` tiles per block-row of the *backing* matrix, and a
+/// column view starts `col0 / block` tile columns in.
+pub fn model_tile_range(
+    base: usize,
+    pitch: usize,
+    col0: usize,
+    block: usize,
+    block_row: usize,
+    block_col: usize,
+) -> Range<usize> {
+    debug_assert!(pitch % block == 0 && col0 % block == 0);
+    let start = base + (block_row * (pitch / block) + (col0 / block + block_col)) * block * block;
+    start..start + block * block
+}
+
+// ---------------------------------------------------------------------------
+// The audit proper.
+// ---------------------------------------------------------------------------
+
+/// Write counter over one output buffer: every worker's modeled write
+/// set is marked, then `finish` demands exactly-once coverage.
+struct WriteSet {
+    counts: Vec<u32>,
+}
+
+impl WriteSet {
+    fn new(units: usize) -> Self {
+        Self { counts: vec![0; units] }
+    }
+
+    fn mark(&mut self, r: Range<usize>) {
+        for u in r {
+            self.counts[u] += 1;
+        }
+    }
+
+    /// Fold this case into the report: bump the family tally and record
+    /// a [`Violation`] for every unit not written exactly once.
+    fn finish(self, case: &dyn Fn() -> String, fam: &mut FamilyStats, out: &mut Vec<Violation>) {
+        fam.cases += 1;
+        fam.units_checked += self.counts.len() as u64;
+        for (unit, &writes) in self.counts.iter().enumerate() {
+            if writes != 1 {
+                out.push(Violation { case: case(), unit, writes });
+            }
+        }
+    }
+}
+
+/// Paper-adjacent packed shapes in block units `(block_rows,
+/// block_cols)`: square, tall, wide, and the BERT-base-ish 128×768 /
+/// 768×768 aspect ratios at audit scale.
+const SHAPES: [(usize, usize); 5] = [(1, 1), (2, 3), (4, 2), (8, 6), (6, 8)];
+
+/// Batch sizes swept for the phase-batched families, including the
+/// degenerate empty batch (`ntasks = 0`, e.g. zero live lanes) and
+/// batches both below and above the worker count.
+const NTASKS: [usize; 4] = [0, 1, 3, 12];
+
+/// Audit every partitioning scheme over cores `1..=max_cores` (see the
+/// module docs for the grid). [`audit_disjointness`] fixes
+/// `max_cores = 8`, the paper's largest core count.
+pub fn audit_disjointness_with(max_cores: usize) -> AuditReport {
+    assert!(max_cores >= 1, "audit needs at least one core");
+    let mut violations = Vec::new();
+
+    // Family 1: bare chunk partition (rowwise kernels, lane refill,
+    // batch loops) — every item 0..n owned by exactly one worker.
+    // Sweeps the degenerate corners directly: n = 0 (all chunks empty)
+    // and workers > n (trailing workers own nothing).
+    let mut chunk = FamilyStats { family: "chunk_range", cases: 0, units_checked: 0 };
+    for n in [0usize, 1, 2, 7, 100] {
+        for cores in 1..=max_cores {
+            let mut ws = WriteSet::new(n);
+            for w in 0..cores {
+                ws.mark(model_chunk(n, cores, w));
+            }
+            ws.finish(&|| format!("chunk_range n={n} cores={cores}"), &mut chunk, &mut violations);
+        }
+    }
+
+    // Family 2: GridPartition — the single-GEMM tile grid, flattened
+    // block-column-major (col outer, row inner) and chunked. Each tile
+    // maps to its packed burst via the tile-range model.
+    let mut grid = FamilyStats { family: "grid_partition", cases: 0, units_checked: 0 };
+    for block in [8usize, 16] {
+        for (bm, bn) in SHAPES {
+            let (rows, cols) = (bm * block, bn * block);
+            for cores in 1..=max_cores {
+                let case = || {
+                    format!("grid_partition rows={rows} cols={cols} block={block} cores={cores}")
+                };
+                let mut ws = WriteSet::new(rows * cols);
+                for w in 0..cores {
+                    for t in model_chunk(bm * bn, cores, w) {
+                        // Column-major flattening: t % bm is the block
+                        // row, t / bm the block column (parallel.rs
+                        // `GridPartition::tiles`).
+                        ws.mark(model_tile_range(0, cols, 0, block, t % bm, t / bm));
+                    }
+                }
+                ws.finish(&case, &mut grid, &mut violations);
+            }
+        }
+    }
+
+    // Family 3: phase-batched GEMM over per-task arenas — ntasks
+    // same-shape outputs packed back to back at `t * rows * cols`
+    // element offsets (workspace arenas addressed via `packed_desc_at`),
+    // the flat (task, tile) item grid chunked over workers
+    // (`gemm_*_batch_into`).
+    let mut arena = FamilyStats { family: "batch_arena", cases: 0, units_checked: 0 };
+    for block in [8usize, 16] {
+        for (bm, bn) in [(2usize, 3usize), (4, 2)] {
+            let (rows, cols) = (bm * block, bn * block);
+            for &ntasks in &NTASKS {
+                for cores in 1..=max_cores {
+                    let tiles_per = bm * bn;
+                    let mut ws = WriteSet::new(ntasks * rows * cols);
+                    for w in 0..cores {
+                        for item in model_chunk(ntasks * tiles_per, cores, w) {
+                            let (t, tile) = (item / tiles_per, item % tiles_per);
+                            ws.mark(model_tile_range(
+                                t * rows * cols,
+                                cols,
+                                0,
+                                block,
+                                tile % bm,
+                                tile / bm,
+                            ));
+                        }
+                    }
+                    ws.finish(
+                        &|| {
+                            format!(
+                                "batch_arena rows={rows} cols={cols} block={block} \
+                                 ntasks={ntasks} cores={cores}"
+                            )
+                        },
+                        &mut arena,
+                        &mut violations,
+                    );
+                }
+            }
+        }
+    }
+
+    // Family 4: per-head column views — `heads` tasks all writing ONE
+    // `s × (heads·dh)` backing buffer through
+    // `packed_desc(s, d, b).col_view(t · dh, dh)` (attention scores →
+    // context concat in `forward_into`). The col-view `dst_fn` is where
+    // disjointness is subtlest: tasks interleave tile *columns* of a
+    // shared pitch rather than owning contiguous arenas.
+    let mut colview = FamilyStats { family: "batch_col_view", cases: 0, units_checked: 0 };
+    for block in [8usize, 16] {
+        for (bs, bdh) in [(2usize, 1usize), (4, 2)] {
+            let (s, dh) = (bs * block, bdh * block);
+            for heads in [1usize, 2, 6] {
+                let d = heads * dh;
+                for cores in 1..=max_cores {
+                    let tiles_per = bs * bdh;
+                    let mut ws = WriteSet::new(s * d);
+                    for w in 0..cores {
+                        for item in model_chunk(heads * tiles_per, cores, w) {
+                            let (t, tile) = (item / tiles_per, item % tiles_per);
+                            ws.mark(model_tile_range(
+                                0,
+                                d,        // shared backing pitch
+                                t * dh,   // head t's column offset
+                                block,
+                                tile % bs,
+                                tile / bs,
+                            ));
+                        }
+                    }
+                    ws.finish(
+                        &|| {
+                            format!(
+                                "batch_col_view s={s} dh={dh} heads={heads} block={block} \
+                                 cores={cores}"
+                            )
+                        },
+                        &mut colview,
+                        &mut violations,
+                    );
+                }
+            }
+        }
+    }
+
+    // Family 5: rowwise kernels (layernorm / softmax / add+norm) —
+    // block-rows chunked over workers; worker w owns the contiguous
+    // element span of its block-row range (one block-row = block · cols
+    // packed elements, since a BWMA block-row is stored contiguously).
+    let mut rowwise = FamilyStats { family: "rowwise", cases: 0, units_checked: 0 };
+    for block in [8usize, 16] {
+        for (bm, bn) in SHAPES {
+            let (rows, cols) = (bm * block, bn * block);
+            for cores in 1..=max_cores {
+                let mut ws = WriteSet::new(rows * cols);
+                for w in 0..cores {
+                    let r = model_chunk(bm, cores, w);
+                    ws.mark(r.start * block * cols..r.end * block * cols);
+                }
+                ws.finish(
+                    &|| format!("rowwise rows={rows} cols={cols} block={block} cores={cores}"),
+                    &mut rowwise,
+                    &mut violations,
+                );
+            }
+        }
+    }
+
+    // Family 6: batched packed transpose — count matrices, source
+    // `rows × cols`, destination `cols × rows` arenas back to back; the
+    // flat (matrix, dst-tile) grid chunked over workers
+    // (`transpose_packed_many_into`).
+    let mut transpose = FamilyStats { family: "transpose_many", cases: 0, units_checked: 0 };
+    for block in [8usize, 16] {
+        for (bm, bn) in [(2usize, 3usize), (4, 2)] {
+            let (rows, cols) = (bm * block, bn * block);
+            for &count in &NTASKS {
+                for cores in 1..=max_cores {
+                    // Destination grid: cols × rows ⇒ bn block-rows of
+                    // bm block-columns each.
+                    let tiles_per = bn * bm;
+                    let mut ws = WriteSet::new(count * rows * cols);
+                    for w in 0..cores {
+                        for item in model_chunk(count * tiles_per, cores, w) {
+                            let (t, tile) = (item / tiles_per, item % tiles_per);
+                            ws.mark(model_tile_range(
+                                t * rows * cols,
+                                rows, // destination pitch
+                                0,
+                                block,
+                                tile % bn,
+                                tile / bn,
+                            ));
+                        }
+                    }
+                    ws.finish(
+                        &|| {
+                            format!(
+                                "transpose_many rows={rows} cols={cols} block={block} \
+                                 count={count} cores={cores}"
+                            )
+                        },
+                        &mut transpose,
+                        &mut violations,
+                    );
+                }
+            }
+        }
+    }
+
+    // Family 7: per-sequence lanes — a batch of bsz sequences, each
+    // owning a `per`-element slice of the batch output at `i · per`
+    // (`run_batch_into`'s sequence loop / continuous-batching lanes),
+    // sequences chunked over workers.
+    let mut seqs = FamilyStats { family: "batch_seqs", cases: 0, units_checked: 0 };
+    for &bsz in &NTASKS {
+        for per in [1usize, 64, 1536] {
+            for cores in 1..=max_cores {
+                let mut ws = WriteSet::new(bsz * per);
+                for w in 0..cores {
+                    for i in model_chunk(bsz, cores, w) {
+                        ws.mark(i * per..(i + 1) * per);
+                    }
+                }
+                ws.finish(
+                    &|| format!("batch_seqs bsz={bsz} per={per} cores={cores}"),
+                    &mut seqs,
+                    &mut violations,
+                );
+            }
+        }
+    }
+
+    AuditReport {
+        families: vec![chunk, grid, arena, colview, rowwise, transpose, seqs],
+        violations,
+    }
+}
+
+/// [`audit_disjointness_with`] over the full default grid
+/// (cores 1..=8 — the paper's largest configuration).
+pub fn audit_disjointness() -> AuditReport {
+    audit_disjointness_with(8)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::layout::MatrixDesc;
+    use crate::runtime::native::{packed_desc, packed_desc_at, tile_range};
+    use crate::runtime::parallel::{chunk_range, split_even, GridPartition};
+    use crate::util::proptest::check_default;
+
+    /// The chunk model IS the real partition arithmetic: byte-for-byte
+    /// agreement with `chunk_range`, `split_even`, and `GridPartition`'s
+    /// flat ranges over random (n, workers).
+    #[test]
+    fn model_chunk_matches_runtime_partitioning() {
+        check_default("model_chunk == chunk_range/split_even", |rng| {
+            let n = rng.below(500) as usize;
+            let workers = rng.range(1, 64) as usize;
+            let even = split_even(n, workers);
+            assert_eq!(even.len(), workers);
+            for w in 0..workers {
+                let model = model_chunk(n, workers, w);
+                assert_eq!(model, chunk_range(n, workers, w), "n={n} workers={workers} w={w}");
+                assert_eq!(model, even[w], "n={n} workers={workers} w={w}");
+            }
+        });
+    }
+
+    /// The tile model IS the real packed addressing: agreement with
+    /// `tile_range` on plain descriptors, offset arena descriptors, and
+    /// column views, over random shapes.
+    #[test]
+    fn model_tile_range_matches_native_tile_range() {
+        check_default("model_tile_range == native::tile_range", |rng| {
+            let block = *rng.pick(&[8usize, 16]);
+            let bm = rng.range(1, 8) as usize;
+            let bn = rng.range(1, 8) as usize;
+            let (rows, cols) = (bm * block, bn * block);
+
+            // Plain packed matrix and an offset arena sub-matrix.
+            let base = (rng.below(16) as usize) * rows * cols;
+            let descs: [MatrixDesc; 2] =
+                [packed_desc(rows, cols, block), packed_desc_at(base as u64, rows, cols, block)];
+            for m in &descs {
+                for br in 0..bm {
+                    for bc in 0..bn {
+                        assert_eq!(
+                            model_tile_range(
+                                m.base as usize,
+                                m.pitch,
+                                m.col0,
+                                block,
+                                br,
+                                bc
+                            ),
+                            tile_range(m, br, bc),
+                            "plain/arena rows={rows} cols={cols} block={block} br={br} bc={bc}"
+                        );
+                    }
+                }
+            }
+
+            // Column view of a wider backing: the per-head `dst_fn` path.
+            let heads = rng.range(1, 6) as usize;
+            let backing = packed_desc(rows, heads * cols, block);
+            let head = rng.below(heads as u64) as usize;
+            let view = backing.col_view(head * cols, cols);
+            for br in 0..bm {
+                for bc in 0..bn {
+                    assert_eq!(
+                        model_tile_range(
+                            view.base as usize,
+                            view.pitch,
+                            view.col0,
+                            block,
+                            br,
+                            bc
+                        ),
+                        tile_range(&view, br, bc),
+                        "col_view heads={heads} head={head} rows={rows} cols={cols} \
+                         block={block} br={br} bc={bc}"
+                    );
+                }
+            }
+        });
+    }
+
+    /// The grid-partition family models the REAL `GridPartition` tile
+    /// enumeration: same (block_row, block_col) assignment per worker.
+    #[test]
+    fn grid_family_mirrors_real_grid_partition() {
+        check_default("audit grid family == GridPartition", |rng| {
+            let bm = rng.range(1, 10) as usize;
+            let bn = rng.range(1, 10) as usize;
+            let cores = rng.range(1, 9) as usize;
+            let p = GridPartition::new(bm, bn, cores);
+            for w in 0..cores {
+                let real: Vec<(usize, usize)> =
+                    p.tiles(w).map(|t| (t.block_row, t.block_col)).collect();
+                let model: Vec<(usize, usize)> =
+                    model_chunk(bm * bn, cores, w).map(|t| (t % bm, t / bm)).collect();
+                assert_eq!(model, real, "bm={bm} bn={bn} cores={cores} w={w}");
+            }
+        });
+    }
+
+    /// The full default sweep is clean: exactly-once coverage holds on
+    /// every family × shape × block × cores × ntasks combination,
+    /// degenerate corners included.
+    #[test]
+    fn default_audit_grid_is_clean() {
+        let report = audit_disjointness();
+        assert!(report.ok(), "unexpected violations:\n{report}");
+        assert_eq!(report.families.len(), 7);
+        for fam in &report.families {
+            assert!(fam.cases > 0, "family {} swept no cases", fam.family);
+        }
+    }
+
+    /// The auditor can actually see a violation: an overlapping and a
+    /// gapped write set must both be reported with the right counts.
+    #[test]
+    fn write_set_detects_overlap_and_hole() {
+        let mut fam = FamilyStats { family: "negative", cases: 0, units_checked: 0 };
+        let mut out = Vec::new();
+
+        let mut ws = WriteSet::new(4);
+        ws.mark(0..2);
+        ws.mark(1..3); // unit 1 written twice; unit 3 never.
+        ws.finish(&|| "negative".to_string(), &mut fam, &mut out);
+
+        assert_eq!(
+            out,
+            vec![
+                Violation { case: "negative".into(), unit: 1, writes: 2 },
+                Violation { case: "negative".into(), unit: 3, writes: 0 },
+            ]
+        );
+        assert_eq!(fam.units_checked, 4);
+    }
+
+    /// Degenerate corners behave as the SAFETY comments assume: n = 0
+    /// yields all-empty chunks, workers > n gives the first n workers
+    /// exactly one item each.
+    #[test]
+    fn model_chunk_degenerate_corners() {
+        for w in 0..8 {
+            assert!(model_chunk(0, 8, w).is_empty());
+        }
+        for (n, workers) in [(3usize, 8usize), (1, 4)] {
+            for w in 0..workers {
+                assert_eq!(model_chunk(n, workers, w).len(), usize::from(w < n));
+            }
+        }
+        assert_eq!(model_chunk(1, 1, 0), 0..1);
+    }
+}

@@ -11,11 +11,21 @@
 //!   CACTI-class constants) turning the Fig. 8 counters into the energy
 //!   claim the paper's introduction motivates.
 
+// Contract (checked by contract-lint + CI): analysis is safe Rust — the
+// disjointness auditor *models* the unsafe core's write sets without
+// touching a pointer.
+#![forbid(unsafe_code)]
+// Pedantic-gate allow-list: histogram bucketing narrows u64 counters to
+// usize bins by design (see DESIGN.md "Static guarantees").
+#![allow(clippy::cast_possible_truncation)]
+
+pub mod disjointness;
 pub mod energy;
 pub mod profile;
 pub mod reuse;
 pub mod utilization;
 
+pub use disjointness::{audit_disjointness, audit_disjointness_with, AuditReport, Violation};
 pub use energy::{EnergyModel, EnergyReport};
 pub use profile::{profile_workload, AnalysisSink};
 pub use reuse::ReuseHistogram;

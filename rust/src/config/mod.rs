@@ -31,6 +31,9 @@
 //! gemm_span_overhead = 6
 //! ```
 
+// Contract (checked by contract-lint + CI): config parsing is safe Rust.
+#![forbid(unsafe_code)]
+
 use anyhow::{bail, Context, Result};
 
 use crate::accel::AccelKind;

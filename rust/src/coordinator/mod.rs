@@ -13,6 +13,14 @@
 //! server uses std threads + channels, which at this request scale is
 //! indistinguishable.)
 
+// Contracts (checked by contract-lint + CI): the serving layer is safe
+// Rust, and `unwrap()` is banned here — failures must travel as typed
+// `ServeError`s or `expect`s naming the invariant they lean on.
+#![forbid(unsafe_code)]
+// Pedantic-gate allow-list: metrics snapshots narrow u64/u128 counters
+// to report fields by design (see DESIGN.md "Static guarantees").
+#![allow(clippy::cast_possible_truncation)]
+
 pub mod experiment;
 pub mod metrics;
 pub mod report;

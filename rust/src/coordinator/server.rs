@@ -496,7 +496,12 @@ fn run_batch(
             .rev()
             .find(|&&s| s <= batch.len())
             .copied()
-            .unwrap_or_else(|| *variants.keys().next().unwrap());
+            .unwrap_or_else(|| {
+                *variants
+                    .keys()
+                    .next()
+                    .expect("variant map is non-empty: the factory compiles >= 1 batch size")
+            });
         let take = size.min(batch.len());
         // If even the smallest variant is larger than what remains, pad by
         // repeating the last request (outputs for pads are dropped).
@@ -509,8 +514,11 @@ fn run_batch(
         for r in &chunk {
             stacked.extend_from_slice(&r.input.data);
         }
+        let pad_src = chunk
+            .last()
+            .expect("chunk is non-empty: the batch loop drains >= 1 request per iteration");
         while stacked.len() < size * per_seq {
-            stacked.extend_from_slice(&chunk.last().unwrap().input.data); // pad
+            stacked.extend_from_slice(&pad_src.input.data); // pad
         }
         let mut full_in_shape = vec![size];
         full_in_shape.extend_from_slice(in_shape);

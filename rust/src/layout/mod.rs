@@ -45,6 +45,14 @@
 //! assert_eq!(bwma_to_rwma(&packed, 4, 6, 2), x);
 //! ```
 
+// Contract (checked by `cargo run -p contract-lint` + CI): the layout
+// layer is pure arithmetic — no unsafe, ever.
+#![forbid(unsafe_code)]
+// Pedantic-gate allow-list: index math deliberately narrows u64 byte
+// addresses to usize element offsets on 64-bit hosts (see DESIGN.md
+// "Static guarantees").
+#![allow(clippy::cast_possible_truncation)]
+
 mod address;
 mod convert;
 mod tile;

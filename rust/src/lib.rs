@@ -57,6 +57,36 @@
 //! See `rust/README.md` for build instructions, the feature matrix, and
 //! the experiment index (`bwma experiment …` regenerates every paper
 //! figure; `bwma verify all` checks backend numerics against references).
+//!
+//! ## Machine-checked contracts
+//!
+//! Three load-bearing contracts are enforced by tooling, not prose (the
+//! full rule spec lives in `rust/DESIGN.md` § "Static guarantees"):
+//!
+//! 1. **One writer per output unit** — the claim every `// SAFETY:`
+//!    comment in [`runtime::parallel`] makes is proved exhaustively over
+//!    a swept parameter grid by [`analysis::audit_disjointness`]
+//!    (`bwma audit --disjointness`, pinned by
+//!    `tests/audit_disjointness.rs`).
+//! 2. **Annotated, contained unsafety** — `cargo run -p contract-lint`
+//!    (a zero-dependency token-level linter, blocking in CI) requires a
+//!    `SAFETY` comment on every `unsafe`, confines `thread::spawn`/
+//!    `thread::scope` to `runtime/parallel.rs`, bans `.unwrap()` under
+//!    [`coordinator`], and checks `#![forbid(unsafe_code)]` on every
+//!    module that needs no unsafe. `#![deny(unsafe_op_in_unsafe_fn)]`
+//!    below makes each unsafe *operation* inside unsafe fns carry its
+//!    own block (and therefore its own SAFETY comment).
+//! 3. **Zero-allocation steady state** — hot-path functions listed in
+//!    `rust/tools/contract-lint/hotpath.txt` are statically scanned for
+//!    allocation idioms; `tests/alloc_steady_state.rs` measures the same
+//!    contract (`steady_allocs = 0`) at runtime with
+//!    [`util::alloc::CountingAllocator`]. Every verify tag registered in
+//!    [`runtime::native`]'s `native_tags()` must appear in a test.
+
+// Contract 2: unsafe operations inside `unsafe fn` bodies need their own
+// `unsafe {}` block — so every single operation carries a SAFETY comment
+// the contract linter can see.
+#![deny(unsafe_op_in_unsafe_fn)]
 
 pub mod accel;
 pub mod analysis;

@@ -12,6 +12,9 @@
 //!   verify <tag>       check backend numerics against references
 //!                      (native suite by default; PJRT goldens with
 //!                      --backend pjrt)
+//!   audit              static write-set audits (--disjointness: prove
+//!                      the parallel core's exactly-once tile ownership
+//!                      over the full swept parameter grid)
 //!   config <list|dump> inspect configuration presets
 //!
 //! (Arg parsing is hand-rolled: the offline crate cache has no clap.)
@@ -57,6 +60,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         Some("simulate") => cmd_simulate(&args[1..]),
         Some("serve") => cmd_serve(&args[1..]),
         Some("verify") => cmd_verify(&args[1..]),
+        Some("audit") => cmd_audit(&args[1..]),
         Some("config") => cmd_config(&args[1..]),
         Some("help") | None => {
             print!("{HELP}");
@@ -79,6 +83,7 @@ USAGE:
              [--model ffn|encoder] [--layers N] [--precision f32|int8]
              [--backend native|pjrt] [--tag encoder_jnp_b16]
   bwma verify <check-tag|all> [--cores N] [--backend native|pjrt]
+  bwma audit --disjointness [--max-cores N]
   bwma config <list|dump <preset>>
 
 The default backend is `native`: blocked CPU kernels executing directly on
@@ -121,6 +126,32 @@ fn parse_cores(args: &[String]) -> Result<usize> {
     };
     ensure!(cores >= 1, "--cores must be >= 1 (got {cores})");
     Ok(cores)
+}
+
+/// `bwma audit --disjointness`: prove the unsafe core's one-writer-per-
+/// unit claim over the full swept parameter grid (see
+/// `analysis::disjointness`). Exits non-zero on any violation, so the
+/// command doubles as a CI gate.
+fn cmd_audit(args: &[String]) -> Result<()> {
+    ensure!(
+        flag(args, "--disjointness"),
+        "usage: bwma audit --disjointness [--max-cores N]; see `bwma help`"
+    );
+    let max_cores: usize = match opt(args, "--max-cores") {
+        Some(c) => c.parse().context("--max-cores")?,
+        None => 8, // the paper's largest core count
+    };
+    ensure!(max_cores >= 1, "--max-cores must be >= 1 (got {max_cores})");
+    let t0 = Instant::now();
+    let report = bwma::analysis::audit_disjointness_with(max_cores);
+    print!("{report}");
+    eprintln!("[audited {} units in {:?}]", report.units_checked(), t0.elapsed());
+    ensure!(
+        report.ok(),
+        "{} write-set violation(s): the exactly-once contract is broken",
+        report.violations.len()
+    );
+    Ok(())
 }
 
 fn cmd_experiment(args: &[String]) -> Result<()> {

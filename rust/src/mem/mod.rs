@@ -15,6 +15,12 @@
 //!   shared, banked L2 over DRAM, returning a latency per access and
 //!   accumulating the per-level statistics Fig. 8 plots.
 
+// Contract (checked by contract-lint + CI): the timing model is safe Rust.
+#![forbid(unsafe_code)]
+// Pedantic-gate allow-list: set/bank index math narrows u64 addresses to
+// usize table indices by design (see DESIGN.md "Static guarantees").
+#![allow(clippy::cast_possible_truncation)]
+
 pub mod cache;
 pub mod dram;
 pub mod prefetch;

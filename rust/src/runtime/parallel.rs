@@ -136,6 +136,9 @@ pub(crate) struct SharedSlice<'a, T> {
 // completion barrier keeps the underlying borrow alive until every
 // worker is done.
 unsafe impl<T: Send> Send for SharedSlice<'_, T> {}
+// SAFETY: same argument as `Send` above — shared references to the view
+// only expose `range_mut`, and its callers keep worker ranges disjoint,
+// so concurrent `&SharedSlice` access never aliases a written element.
 unsafe impl<T: Send> Sync for SharedSlice<'_, T> {}
 
 impl<'a, T> SharedSlice<'a, T> {
@@ -151,7 +154,10 @@ impl<'a, T> SharedSlice<'a, T> {
     #[allow(clippy::mut_from_ref)]
     pub(crate) unsafe fn range_mut(&self, r: Range<usize>) -> &mut [T] {
         debug_assert!(r.start <= r.end && r.end <= self.len);
-        std::slice::from_raw_parts_mut(self.ptr.add(r.start), r.end - r.start)
+        // SAFETY: the caller guarantees `r` is in bounds and disjoint
+        // from every other live range, so the raw-parts slice neither
+        // escapes the allocation nor aliases another borrow.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.add(r.start), r.end - r.start) }
     }
 }
 
@@ -1287,6 +1293,27 @@ mod tests {
         let ranges = split_even(5, 0);
         assert_eq!(ranges.len(), 1);
         assert_eq!(ranges[0], 0..5);
+    }
+
+    /// The degenerate corners the disjointness auditor's edge grid
+    /// sweeps (`analysis::disjointness`), pinned directly: n = 0 gives
+    /// every worker an empty chunk, workers > n gives the first n
+    /// workers exactly one item, and a single item on a single worker
+    /// is the whole range.
+    #[test]
+    fn chunk_range_degenerate_edges() {
+        for w in 0..8 {
+            assert!(chunk_range(0, 8, w).is_empty(), "n=0 w={w}");
+        }
+        for (n, workers) in [(3usize, 8usize), (1, 4), (7, 100)] {
+            for w in 0..workers {
+                let r = chunk_range(n, workers, w);
+                assert_eq!(r.len(), usize::from(w < n), "n={n} workers={workers} w={w}");
+            }
+            // Jointly they still tile 0..n exactly.
+            assert_eq!(chunk_range(n, workers, workers - 1).end, n);
+        }
+        assert_eq!(chunk_range(1, 1, 0), 0..1);
     }
 
     #[test]

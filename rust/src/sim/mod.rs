@@ -11,6 +11,9 @@
 //! [`Phase`]: crate::workload::Phase
 //! [`WorkItem`]: crate::workload::WorkItem
 
+// Contract (checked by contract-lint + CI): the simulator is safe Rust.
+#![forbid(unsafe_code)]
+
 mod engine;
 mod result;
 

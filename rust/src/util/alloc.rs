@@ -43,22 +43,36 @@ pub struct CountingAllocator;
 // `GlobalAlloc` contract; the counter bump has no effect on the
 // returned memory.
 unsafe impl GlobalAlloc for CountingAllocator {
+    // SAFETY: the caller upholds `GlobalAlloc::alloc`'s contract
+    // (non-zero-sized `layout`), which is exactly what `System` needs.
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);
-        System.alloc(layout)
+        // SAFETY: `layout` is forwarded unchanged from our own contract.
+        unsafe { System.alloc(layout) }
     }
 
+    // SAFETY: same forwarding argument as `alloc`.
     unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);
-        System.alloc_zeroed(layout)
+        // SAFETY: `layout` is forwarded unchanged from our own contract.
+        unsafe { System.alloc_zeroed(layout) }
     }
 
+    // SAFETY: the caller guarantees `ptr` came from this allocator with
+    // this `layout`; every acquisition path above returned `System`
+    // memory, so handing it back to `System` is sound.
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
-        System.dealloc(ptr, layout)
+        // SAFETY: `ptr`/`layout` are forwarded unchanged; all our
+        // allocations come from `System`.
+        unsafe { System.dealloc(ptr, layout) }
     }
 
+    // SAFETY: same provenance argument as `dealloc`, plus the caller's
+    // guarantee that `new_size` is non-zero and layout-compatible.
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);
-        System.realloc(ptr, layout, new_size)
+        // SAFETY: arguments forwarded unchanged; the block came from
+        // `System` (see `dealloc`).
+        unsafe { System.realloc(ptr, layout, new_size) }
     }
 }

@@ -12,6 +12,12 @@
 //! per-core item lists (heads or output block-rows partitioned across
 //! cores, paper §4.2).
 
+// Contract (checked by contract-lint + CI): trace generation is safe Rust.
+#![forbid(unsafe_code)]
+// Pedantic-gate allow-list: stream emitters narrow element counts to
+// u64 byte offsets and back by design (see DESIGN.md "Static guarantees").
+#![allow(clippy::cast_possible_truncation)]
+
 pub mod bert;
 pub mod cost;
 pub mod gemm;

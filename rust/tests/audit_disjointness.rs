@@ -1,0 +1,47 @@
+//! Tier-1 pin of the write-set disjointness audit: the unsafe core's
+//! one-writer-per-unit claim must hold over the full swept parameter
+//! grid (`bwma audit --disjointness` runs exactly this). The model's
+//! agreement with the real `chunk_range`/`tile_range`/`GridPartition`
+//! arithmetic is property-tested inside `analysis::disjointness`; this
+//! test exercises the public API end to end.
+
+use bwma::analysis::{audit_disjointness, audit_disjointness_with};
+
+#[test]
+fn full_grid_proves_exactly_once_coverage() {
+    let report = audit_disjointness();
+    assert!(
+        report.ok(),
+        "exactly-once contract violated over the default grid:\n{report}"
+    );
+    // The sweep is exhaustive, not a smoke test: seven partitioning
+    // families, hundreds of parameter combinations, millions of units.
+    assert_eq!(report.families.len(), 7, "{report}");
+    assert!(report.cases() >= 500, "grid shrank: {} cases\n{report}", report.cases());
+    assert!(
+        report.units_checked() >= 1_000_000,
+        "grid shrank: {} units\n{report}",
+        report.units_checked()
+    );
+    for fam in &report.families {
+        assert!(fam.cases > 0, "family {} swept nothing\n{report}", fam.family);
+        assert!(fam.units_checked > 0, "family {} checked nothing\n{report}", fam.family);
+    }
+}
+
+#[test]
+fn single_core_grid_is_the_serial_schedule() {
+    // cores = 1 degenerates every family to the serial kernel: one
+    // worker owning the whole output — still exactly once.
+    let report = audit_disjointness_with(1);
+    assert!(report.ok(), "{report}");
+}
+
+#[test]
+fn report_renders_family_table() {
+    let report = audit_disjointness_with(2);
+    let text = report.to_string();
+    assert!(text.contains("grid_partition"), "{text}");
+    assert!(text.contains("batch_col_view"), "{text}");
+    assert!(text.contains("result: OK"), "{text}");
+}

@@ -29,6 +29,36 @@ fn verify_suite_is_green() {
     }
 }
 
+/// The full tag registry, spelled out literally. contract-lint's
+/// `verify-tags` rule requires every string registered in
+/// `native_tags()` to appear quoted in at least one file under
+/// `rust/tests/`, and this equality is the tier-1 pin that keeps the
+/// registry and the suite in lockstep: a tag added to `native_tags()`
+/// fails here (and the linter) until a test spells it out.
+#[test]
+fn every_registered_verify_tag_is_spelled_in_tests() {
+    let expected = [
+        "native_gemm_f32_b8",
+        "native_gemm_f32_b16",
+        "native_gemm_i8_b16",
+        "native_bias_gelu_b16",
+        "native_layernorm_b16",
+        "native_softmax_b16",
+        "native_transpose_b16",
+        "native_masked_softmax_b16",
+        "native_add_norm_b16",
+        "native_ffn_b16",
+        "native_encoder_equiv_b8",
+        "native_encoder_equiv_b16",
+        "native_parallel_equiv_b16",
+        "native_encoder_parallel_equiv_b16",
+        "native_gemm_i8_parallel_equiv_b16",
+        "native_encoder_int8_accuracy_b16",
+        "native_encoder_int8_parallel_equiv_b16",
+    ];
+    assert_eq!(native_tags(), expected);
+}
+
 #[test]
 fn prop_blocked_gemm_matches_reference_on_random_shapes() {
     check("blocked-gemm-vs-reference", 48, |rng| {

@@ -1,0 +1,788 @@
+//! contract-lint — a zero-registry-dependency, token-level source linter
+//! that turns the bwma repo's load-bearing prose contracts into
+//! machine-checked gates (std only, no `syn`: the offline crate cache is
+//! the whole point of this workspace).
+//!
+//! Rules (see `rust/DESIGN.md` "Static guarantees" for the full spec):
+//!
+//! * **safety-comment** — every `unsafe` keyword in `rust/src` is
+//!   immediately preceded (same line, or above across doc/attribute
+//!   lines) by a comment containing `SAFETY` or `# Safety`.
+//! * **thread-containment** — `thread::spawn` / `thread::scope` appear
+//!   nowhere in `rust/src` outside `runtime/parallel.rs`: the worker
+//!   pool is the only thread factory for compute (the serving event loop
+//!   uses `thread::Builder`, which stays auditable by name).
+//! * **hotpath-alloc** — no allocation idioms (`Vec::new`, `vec!`,
+//!   `.to_vec(`, `.clone()`, `Box::new`, `format!`, `.collect()`, …)
+//!   inside any function listed in the hot-path manifest
+//!   (`hotpath.txt`); a manifest entry whose function cannot be found is
+//!   itself a violation, so the manifest cannot silently rot.
+//! * **verify-tags** — every tag string registered in
+//!   `runtime/native.rs::native_tags()` appears (quoted) in at least one
+//!   file under `rust/tests/`.
+//! * **coordinator-unwrap** — no `.unwrap()` in non-test code under
+//!   `rust/src/coordinator/` (typed errors or `expect` with an invariant
+//!   message).
+//! * **forbid-unsafe** — the modules that need no unsafe (`accel`,
+//!   `analysis`, `config`, `coordinator`, `layout`, `mem`, `sim`,
+//!   `workload`) carry `#![forbid(unsafe_code)]`.
+//!
+//! The scanner is deliberately token-level, not a parser: each source
+//! line is split into *code* (string/char-literal contents blanked,
+//! comments removed) and *comment* text by a small state machine that
+//! understands line comments, nested block comments, (raw) string
+//! literals, and char-literal-vs-lifetime disambiguation. Rules then
+//! match word-bounded tokens against the code text only, so `unsafe` in
+//! a doc string or `.unwrap()` in an error message never false-positive.
+
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// One rule violation, rendered as `file:line: [rule] message` — the
+/// `file:line` prefix is the CI-clickable diagnostic format the
+/// acceptance tests pin.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    /// Path relative to the repo root, `/`-separated.
+    pub file: String,
+    /// 1-based source line.
+    pub line: usize,
+    /// Rule id (kebab-case).
+    pub rule: &'static str,
+    /// Human-readable explanation.
+    pub msg: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// Where to lint: `root` is the repository root (the directory holding
+/// `rust/`), `manifest` the hot-path manifest file.
+pub struct LintConfig {
+    pub root: PathBuf,
+    pub manifest: PathBuf,
+}
+
+/// One scanned source line.
+#[derive(Debug, Default)]
+struct Line {
+    /// Code text: comments removed, string/char contents blanked (the
+    /// delimiting quotes are kept so token positions stay meaningful).
+    code: String,
+    /// Comment text (line + block comments), markers included.
+    comment: String,
+    /// The raw source line (used only where literal text is needed,
+    /// e.g. extracting the tag strings out of `native_tags()`).
+    raw: String,
+}
+
+/// A scanned file: lines plus a per-line "inside `#[cfg(test)]`" mask.
+struct SourceFile {
+    rel: String,
+    lines: Vec<Line>,
+    in_test: Vec<bool>,
+}
+
+// ---------------------------------------------------------------------------
+// Lexing: raw source → (code, comment) per line.
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, PartialEq)]
+enum State {
+    Code,
+    LineComment,
+    BlockComment(u32),
+    Str,
+    RawStr(usize),
+    Char,
+}
+
+fn is_word(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+fn scan_source(src: &str) -> Vec<Line> {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut lines = Vec::new();
+    let mut cur = Line::default();
+    let mut state = State::Code;
+    let mut i = 0;
+
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            // Line boundary in any state (block comments and strings
+            // continue on the next line).
+            if state == State::LineComment {
+                state = State::Code;
+            }
+            lines.push(std::mem::take(&mut cur));
+            i += 1;
+            continue;
+        }
+        match state {
+            State::Code => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('/') {
+                    state = State::LineComment;
+                    cur.comment.push_str("//");
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    state = State::BlockComment(1);
+                    i += 2;
+                } else if c == '"' {
+                    cur.code.push('"');
+                    state = State::Str;
+                    i += 1;
+                } else if c == 'r' && (i == 0 || !is_word_char(chars[i - 1])) {
+                    // `r"…"` / `r#"…"#` raw string — or a plain `r`
+                    // identifier char / `r#raw_ident`.
+                    match raw_str_hashes(&chars, i) {
+                        Some(hashes) => {
+                            cur.code.push_str("r\"");
+                            state = State::RawStr(hashes);
+                            i += 2 + hashes; // r, hashes, opening quote
+                        }
+                        None => {
+                            cur.code.push('r');
+                            i += 1;
+                        }
+                    }
+                } else if c == '\'' {
+                    // Lifetime or char literal: a char literal is an
+                    // escape ('\x') or a single char followed by a
+                    // closing quote ('x'); everything else is a
+                    // lifetime.
+                    if next == Some('\\') {
+                        cur.code.push('\'');
+                        state = State::Char;
+                        i += 1;
+                    } else if chars.get(i + 2) == Some(&'\'') && next != Some('\'') {
+                        cur.code.push_str("'_'");
+                        i += 3;
+                    } else {
+                        cur.code.push('\'');
+                        i += 1;
+                    }
+                } else {
+                    cur.code.push(c);
+                    i += 1;
+                }
+            }
+            State::LineComment => {
+                cur.comment.push(c);
+                i += 1;
+            }
+            State::BlockComment(depth) => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('*') {
+                    state = State::BlockComment(depth + 1);
+                    i += 2;
+                } else if c == '*' && next == Some('/') {
+                    state = if depth == 1 { State::Code } else { State::BlockComment(depth - 1) };
+                    i += 2;
+                } else {
+                    cur.comment.push(c);
+                    i += 1;
+                }
+            }
+            State::Str | State::Char => {
+                let close = if state == State::Str { '"' } else { '\'' };
+                if c == '\\' {
+                    // Consume the escaped char too — unless it is a
+                    // newline (line continuation), which the main loop
+                    // must see to keep line numbers honest.
+                    if chars.get(i + 1).is_some_and(|&e| e != '\n') {
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                } else if c == close {
+                    cur.code.push(close);
+                    state = State::Code;
+                    i += 1;
+                } else {
+                    i += 1; // blank literal contents
+                }
+            }
+            State::RawStr(hashes) => {
+                if c == '"' && (1..=hashes).all(|k| chars.get(i + k) == Some(&'#')) {
+                    cur.code.push('"');
+                    state = State::Code;
+                    i += 1 + hashes;
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !cur.code.is_empty() || !cur.comment.is_empty() {
+        lines.push(cur);
+    }
+    // Raw text comes straight from the input: the state machine above
+    // only produces code/comment splits, so it cannot desynchronize the
+    // raw view.
+    for (line, raw) in lines.iter_mut().zip(src.lines()) {
+        line.raw = raw.to_string();
+    }
+    lines
+}
+
+fn is_word_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// If position `i` (which holds `r`) starts a raw string literal,
+/// return its hash count.
+fn raw_str_hashes(chars: &[char], i: usize) -> Option<usize> {
+    let mut j = i + 1;
+    let mut hashes = 0;
+    while chars.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    (chars.get(j) == Some(&'"')).then_some(hashes)
+}
+
+/// Mark the line span of every `#[cfg(test)]`-gated item (brace-matched
+/// from the attribute; a `;` before any `{` ends a braceless item).
+fn mark_test_regions(lines: &[Line]) -> Vec<bool> {
+    let mut in_test = vec![false; lines.len()];
+    let mut i = 0;
+    while i < lines.len() {
+        let Some(pos) = lines[i].code.find("#[cfg(test)]") else {
+            i += 1;
+            continue;
+        };
+        let mut depth: i64 = 0;
+        let mut opened = false;
+        let mut end = lines.len() - 1;
+        'scan: for (j, line) in lines.iter().enumerate().skip(i) {
+            let code = if j == i { &line.code[pos..] } else { line.code.as_str() };
+            for b in code.bytes() {
+                match b {
+                    b'{' => {
+                        depth += 1;
+                        opened = true;
+                    }
+                    b'}' => {
+                        depth -= 1;
+                        if opened && depth == 0 {
+                            end = j;
+                            break 'scan;
+                        }
+                    }
+                    b';' if !opened => {
+                        end = j;
+                        break 'scan;
+                    }
+                    _ => {}
+                }
+            }
+        }
+        for t in in_test.iter_mut().take(end + 1).skip(i) {
+            *t = true;
+        }
+        i = end + 1;
+    }
+    in_test
+}
+
+fn parse_source(rel: String, text: &str) -> SourceFile {
+    let lines = scan_source(text);
+    let in_test = mark_test_regions(&lines);
+    SourceFile { rel, lines, in_test }
+}
+
+// ---------------------------------------------------------------------------
+// Token matching.
+// ---------------------------------------------------------------------------
+
+/// Find `tok` in `code` as a word-bounded token: where the token starts
+/// (ends) with an identifier char, the preceding (following) char must
+/// not be one — so `unsafe` never matches inside `unsafe_op_in_unsafe_fn`
+/// and `to_vec` never matches inside `into_vector`.
+fn find_token(code: &str, tok: &str) -> Option<usize> {
+    let bytes = code.as_bytes();
+    let tb = tok.as_bytes();
+    let mut start = 0;
+    while let Some(pos) = code[start..].find(tok) {
+        let abs = start + pos;
+        let end = abs + tok.len();
+        let pre_ok = !is_word(tb[0]) || abs == 0 || !is_word(bytes[abs - 1]);
+        let post_ok = !is_word(tb[tok.len() - 1]) || end >= bytes.len() || !is_word(bytes[end]);
+        if pre_ok && post_ok {
+            return Some(abs);
+        }
+        start = abs + 1;
+    }
+    None
+}
+
+fn has_token(code: &str, tok: &str) -> bool {
+    find_token(code, tok).is_some()
+}
+
+// ---------------------------------------------------------------------------
+// Rules.
+// ---------------------------------------------------------------------------
+
+fn comment_has_safety_marker(comment: &str) -> bool {
+    comment.contains("SAFETY") || comment.contains("# Safety")
+}
+
+/// safety-comment: an `unsafe` token must carry a marker on its own
+/// line, or on a comment line directly above — doc comments, attribute
+/// lines, and further comment lines may sit between, a blank line or
+/// real code breaks adjacency.
+fn rule_safety_comment(files: &[SourceFile], diags: &mut Vec<Diagnostic>) {
+    for f in files {
+        for (idx, line) in f.lines.iter().enumerate() {
+            if !has_token(&line.code, "unsafe") {
+                continue;
+            }
+            if comment_has_safety_marker(&line.comment) {
+                continue;
+            }
+            let mut documented = false;
+            let mut j = idx;
+            while j > 0 {
+                j -= 1;
+                let above = &f.lines[j];
+                if comment_has_safety_marker(&above.comment) {
+                    documented = true;
+                    break;
+                }
+                let code = above.code.trim();
+                if code.is_empty() && above.comment.is_empty() {
+                    break; // blank line: adjacency broken
+                }
+                if code.is_empty() || code.starts_with("#[") || code.starts_with("#!") {
+                    continue; // unmarked comment / attribute: keep looking up
+                }
+                break; // real code intervenes
+            }
+            if !documented {
+                diags.push(Diagnostic {
+                    file: f.rel.clone(),
+                    line: idx + 1,
+                    rule: "safety-comment",
+                    msg: "`unsafe` without an immediately preceding `// SAFETY:` comment"
+                        .to_string(),
+                });
+            }
+        }
+    }
+}
+
+/// thread-containment: compute threads come from the worker pool only.
+fn rule_thread_containment(files: &[SourceFile], diags: &mut Vec<Diagnostic>) {
+    for f in files {
+        if f.rel == "rust/src/runtime/parallel.rs" {
+            continue;
+        }
+        for (idx, line) in f.lines.iter().enumerate() {
+            if f.in_test[idx] {
+                continue;
+            }
+            for tok in ["thread::spawn", "thread::scope"] {
+                if has_token(&line.code, tok) {
+                    diags.push(Diagnostic {
+                        file: f.rel.clone(),
+                        line: idx + 1,
+                        rule: "thread-containment",
+                        msg: format!(
+                            "`{tok}` outside runtime/parallel.rs — all compute threads \
+                             must come from WorkerPool"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+}
+
+/// coordinator-unwrap: no `.unwrap()` in non-test coordinator code.
+fn rule_coordinator_unwrap(files: &[SourceFile], diags: &mut Vec<Diagnostic>) {
+    for f in files {
+        if !f.rel.starts_with("rust/src/coordinator/") {
+            continue;
+        }
+        for (idx, line) in f.lines.iter().enumerate() {
+            if f.in_test[idx] {
+                continue;
+            }
+            if has_token(&line.code, ".unwrap()") {
+                diags.push(Diagnostic {
+                    file: f.rel.clone(),
+                    line: idx + 1,
+                    rule: "coordinator-unwrap",
+                    msg: "`.unwrap()` under coordinator/ — use a typed error path or \
+                          `expect` with an invariant message"
+                        .to_string(),
+                });
+            }
+        }
+    }
+}
+
+/// Modules that must compile under `#![forbid(unsafe_code)]`.
+const FORBID_UNSAFE_MODULES: [&str; 8] =
+    ["accel", "analysis", "config", "coordinator", "layout", "mem", "sim", "workload"];
+
+/// forbid-unsafe: safe modules declare it at the crate boundary.
+fn rule_forbid_unsafe(files: &[SourceFile], diags: &mut Vec<Diagnostic>) {
+    for module in FORBID_UNSAFE_MODULES {
+        let rel = format!("rust/src/{module}/mod.rs");
+        let Some(f) = files.iter().find(|f| f.rel == rel) else {
+            continue; // module not present (fixture trees)
+        };
+        if !f.lines.iter().any(|l| l.code.contains("#![forbid(unsafe_code)]")) {
+            diags.push(Diagnostic {
+                file: f.rel.clone(),
+                line: 1,
+                rule: "forbid-unsafe",
+                msg: format!("module `{module}` must declare #![forbid(unsafe_code)]"),
+            });
+        }
+    }
+}
+
+/// Allocation idioms banned from hot-path functions. `.to_vec(` and
+/// `.to_string(` are matched with the open paren so the *names* of the
+/// rules can still be spelled in nearby comments.
+const ALLOC_TOKENS: [&str; 13] = [
+    "Vec::new",
+    "vec!",
+    ".to_vec(",
+    ".clone()",
+    "Box::new",
+    "format!",
+    ".collect()",
+    ".collect::",
+    "String::new",
+    ".to_string(",
+    ".to_owned(",
+    "with_capacity",
+    "Arc::new",
+];
+
+/// Line span (inclusive, 0-based) of `fn name` in `file`, located by
+/// token matching plus brace counting.
+fn find_fn_span(file: &SourceFile, name: &str) -> Option<(usize, usize)> {
+    for (i, line) in file.lines.iter().enumerate() {
+        let Some(pos) = find_token(&line.code, name) else {
+            continue;
+        };
+        // The token must be a function name: preceded by the `fn`
+        // keyword, followed by `(` or generics.
+        let before = line.code[..pos].trim_end();
+        if !before.ends_with("fn") {
+            continue;
+        }
+        if before.len() >= 3 && is_word(before.as_bytes()[before.len() - 3]) {
+            continue; // e.g. `spawn_fn` — not the keyword
+        }
+        let after = line.code[pos + name.len()..].trim_start();
+        if !(after.starts_with('(') || after.starts_with('<') || after.is_empty()) {
+            continue;
+        }
+        // Brace-match the body from the declaration onward.
+        let mut depth: i64 = 0;
+        let mut opened = false;
+        for (j, l) in file.lines.iter().enumerate().skip(i) {
+            let code = if j == i { &l.code[pos..] } else { l.code.as_str() };
+            for b in code.bytes() {
+                match b {
+                    b'{' => {
+                        depth += 1;
+                        opened = true;
+                    }
+                    b'}' => {
+                        depth -= 1;
+                        if opened && depth == 0 {
+                            return Some((i, j));
+                        }
+                    }
+                    b';' if !opened => return Some((i, j)), // prototype
+                    _ => {}
+                }
+            }
+        }
+        return Some((i, file.lines.len() - 1));
+    }
+    None
+}
+
+/// hotpath-alloc: manifest-listed functions must not touch the heap.
+fn rule_hotpath_alloc(files: &[SourceFile], manifest: &str, diags: &mut Vec<Diagnostic>) {
+    for (lineno, entry) in manifest.lines().enumerate() {
+        let entry = entry.trim();
+        if entry.is_empty() || entry.starts_with('#') {
+            continue;
+        }
+        let mut parts = entry.split_whitespace();
+        let (Some(path), Some(name), None) = (parts.next(), parts.next(), parts.next()) else {
+            diags.push(Diagnostic {
+                file: "hotpath.txt".to_string(),
+                line: lineno + 1,
+                rule: "hotpath-alloc",
+                msg: format!("malformed manifest entry {entry:?} (want `<path> <fn>`)"),
+            });
+            continue;
+        };
+        let rel = format!("rust/{path}");
+        let Some(f) = files.iter().find(|f| f.rel == rel) else {
+            diags.push(Diagnostic {
+                file: rel,
+                line: 1,
+                rule: "hotpath-alloc",
+                msg: format!("manifest file not found (entry `{path} {name}`)"),
+            });
+            continue;
+        };
+        let Some((start, end)) = find_fn_span(f, name) else {
+            diags.push(Diagnostic {
+                file: f.rel.clone(),
+                line: 1,
+                rule: "hotpath-alloc",
+                msg: format!("manifest fn `{name}` not found"),
+            });
+            continue;
+        };
+        for idx in start..=end {
+            for tok in ALLOC_TOKENS {
+                if has_token(&f.lines[idx].code, tok) {
+                    diags.push(Diagnostic {
+                        file: f.rel.clone(),
+                        line: idx + 1,
+                        rule: "hotpath-alloc",
+                        msg: format!("allocation idiom `{tok}` in hot-path fn `{name}`"),
+                    });
+                }
+            }
+        }
+    }
+}
+
+/// Pull the quoted string literals out of raw source text (comments
+/// skipped, escapes honoured).
+fn string_literals(raw: &str) -> Vec<String> {
+    let chars: Vec<char> = raw.chars().collect();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < chars.len() {
+        match chars[i] {
+            '/' if chars.get(i + 1) == Some(&'/') => {
+                while i < chars.len() && chars[i] != '\n' {
+                    i += 1;
+                }
+            }
+            '"' => {
+                let mut lit = String::new();
+                i += 1;
+                while i < chars.len() && chars[i] != '"' {
+                    if chars[i] == '\\' {
+                        i += 1;
+                    }
+                    if i < chars.len() {
+                        lit.push(chars[i]);
+                        i += 1;
+                    }
+                }
+                i += 1;
+                out.push(lit);
+            }
+            _ => i += 1,
+        }
+    }
+    out
+}
+
+/// verify-tags: every tag registered in `native_tags()` must appear,
+/// quoted, somewhere under `rust/tests/`.
+fn rule_verify_tags(
+    files: &[SourceFile],
+    tests_dir: &Path,
+    diags: &mut Vec<Diagnostic>,
+) -> io::Result<()> {
+    let Some(f) = files.iter().find(|f| f.rel == "rust/src/runtime/native.rs") else {
+        return Ok(()); // fixture tree without a tag registry
+    };
+    let Some((start, end)) = find_fn_span(f, "native_tags") else {
+        return Ok(());
+    };
+    let body: String =
+        f.lines[start..=end].iter().map(|l| l.raw.as_str()).collect::<Vec<_>>().join("\n");
+    let tags = string_literals(&body);
+    if tags.is_empty() || !tests_dir.is_dir() {
+        return Ok(());
+    }
+    let mut test_text = String::new();
+    let mut test_files = Vec::new();
+    collect_rs(tests_dir, &mut test_files)?;
+    for path in test_files {
+        test_text.push_str(&fs::read_to_string(&path)?);
+        test_text.push('\n');
+    }
+    for tag in tags {
+        if !test_text.contains(&format!("\"{tag}\"")) {
+            diags.push(Diagnostic {
+                file: f.rel.clone(),
+                line: start + 1,
+                rule: "verify-tags",
+                msg: format!("verify tag \"{tag}\" appears in no test under rust/tests/"),
+            });
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Driver.
+// ---------------------------------------------------------------------------
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    let mut entries: Vec<_> =
+        fs::read_dir(dir)?.collect::<Result<Vec<_>, _>>()?.into_iter().map(|e| e.path()).collect();
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+fn rel_path(root: &Path, path: &Path) -> String {
+    let rel = path.strip_prefix(root).unwrap_or(path);
+    rel.components()
+        .map(|c| c.as_os_str().to_string_lossy())
+        .collect::<Vec<_>>()
+        .join("/")
+}
+
+/// Lint the repository at `cfg.root`, returning all diagnostics sorted
+/// by file and line (empty = every contract holds).
+pub fn lint_repo(cfg: &LintConfig) -> io::Result<Vec<Diagnostic>> {
+    let src_dir = cfg.root.join("rust").join("src");
+    if !src_dir.is_dir() {
+        return Err(io::Error::new(
+            io::ErrorKind::NotFound,
+            format!("{} is not a repo root (no rust/src)", cfg.root.display()),
+        ));
+    }
+    let mut paths = Vec::new();
+    collect_rs(&src_dir, &mut paths)?;
+    let mut files = Vec::new();
+    for path in &paths {
+        let text = fs::read_to_string(path)?;
+        files.push(parse_source(rel_path(&cfg.root, path), &text));
+    }
+    let manifest = fs::read_to_string(&cfg.manifest).map_err(|e| {
+        io::Error::new(e.kind(), format!("hot-path manifest {}: {e}", cfg.manifest.display()))
+    })?;
+
+    let mut diags = Vec::new();
+    rule_safety_comment(&files, &mut diags);
+    rule_thread_containment(&files, &mut diags);
+    rule_coordinator_unwrap(&files, &mut diags);
+    rule_forbid_unsafe(&files, &mut diags);
+    rule_hotpath_alloc(&files, &manifest, &mut diags);
+    rule_verify_tags(&files, &cfg.root.join("rust").join("tests"), &mut diags)?;
+    diags.sort_by(|a, b| (a.file.as_str(), a.line).cmp(&(b.file.as_str(), b.line)));
+    Ok(diags)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scanner_strips_comments_and_blanks_strings() {
+        let src = "let s = \"unsafe .unwrap()\"; // unsafe in comment\n\
+                   let c = 'x'; /* block\n\
+                   unsafe */ let l: &'static str = \"\";\n";
+        let lines = scan_source(src);
+        assert_eq!(lines.len(), 3);
+        assert!(!has_token(&lines[0].code, "unsafe"));
+        assert!(!has_token(&lines[0].code, ".unwrap()"));
+        assert!(lines[0].comment.contains("unsafe in comment"));
+        assert_eq!(lines[1].code, "let c = '_'; ");
+        assert!(!has_token(&lines[2].code, "unsafe"));
+        assert!(lines[2].code.contains("'static"));
+    }
+
+    #[test]
+    fn raw_strings_and_raw_identifiers() {
+        let lines = scan_source("let a = r\"unsafe\"; let b = r#\"x .unwrap() \"#;\n");
+        assert!(!has_token(&lines[0].code, "unsafe"));
+        assert!(!has_token(&lines[0].code, ".unwrap()"));
+        // `r#match`-style raw identifiers must not start a string.
+        let lines = scan_source("let r#match = 1; let after = r#match + 1;\n");
+        assert!(lines[0].code.contains("after"));
+    }
+
+    #[test]
+    fn token_boundaries_reject_substrings() {
+        assert!(has_token("unsafe {", "unsafe"));
+        assert!(!has_token("#![deny(unsafe_op_in_unsafe_fn)]", "unsafe"));
+        assert!(!has_token("#![forbid(unsafe_code)]", "unsafe"));
+        assert!(has_token("std::thread::spawn(|| {})", "thread::spawn"));
+        assert!(!has_token("my_thread::spawner()", "thread::spawn"));
+        assert!(has_token("x.unwrap()", ".unwrap()"));
+        assert!(!has_token("x.unwrap_or(0)", ".unwrap()"));
+    }
+
+    #[test]
+    fn cfg_test_regions_are_masked() {
+        let src = "fn a() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\nfn b() {}\n";
+        let lines = scan_source(src);
+        let mask = mark_test_regions(&lines);
+        assert_eq!(mask, vec![false, true, true, true, true, false]);
+    }
+
+    #[test]
+    fn fn_spans_are_brace_matched() {
+        let src = "fn outer() {\n    let f = || { 1 };\n    f()\n}\nfn other() {}\n";
+        let f = parse_source("x.rs".to_string(), src);
+        assert_eq!(find_fn_span(&f, "outer"), Some((0, 3)));
+        assert_eq!(find_fn_span(&f, "other"), Some((4, 4)));
+        assert_eq!(find_fn_span(&f, "missing"), None);
+    }
+
+    #[test]
+    fn safety_walkup_accepts_attributes_and_doc_blocks() {
+        let src = "\
+/// # Safety
+/// caller keeps `p` alive.
+#[inline]
+pub unsafe fn deref(p: *const u8) -> u8 {
+    // SAFETY: forwarded contract.
+    unsafe { *p }
+}
+";
+        let files = [parse_source("rust/src/runtime/x.rs".to_string(), src)];
+        let mut diags = Vec::new();
+        rule_safety_comment(&files, &mut diags);
+        assert!(diags.is_empty(), "{diags:?}");
+    }
+
+    #[test]
+    fn blank_line_breaks_safety_adjacency() {
+        let src = "// SAFETY: stale comment.\n\nlet x = unsafe { f() };\n";
+        let files = [parse_source("rust/src/runtime/x.rs".to_string(), src)];
+        let mut diags = Vec::new();
+        rule_safety_comment(&files, &mut diags);
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].line, 3);
+    }
+}

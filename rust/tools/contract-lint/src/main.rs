@@ -1,0 +1,47 @@
+//! CLI driver: `cargo run -p contract-lint [-- --root <repo> --manifest <file>]`.
+//!
+//! Exit 0 when every contract holds; exit 1 with one `file:line: [rule]
+//! message` diagnostic per violation otherwise — the blocking CI gate
+//! (.github/workflows/ci.yml, job `contracts`).
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use contract_lint::{lint_repo, LintConfig};
+
+fn opt(args: &[String], name: &str) -> Option<PathBuf> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).map(PathBuf::from)
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    // Under `cargo run -p contract-lint` the manifest dir is
+    // <repo>/rust/tools/contract-lint; three ancestors up is the root.
+    let root = opt(&args, "--root")
+        .or_else(|| {
+            std::env::var_os("CARGO_MANIFEST_DIR")
+                .map(|d| PathBuf::from(d).join("..").join("..").join(".."))
+        })
+        .unwrap_or_else(|| PathBuf::from("."));
+    let manifest = opt(&args, "--manifest").unwrap_or_else(|| {
+        root.join("rust").join("tools").join("contract-lint").join("hotpath.txt")
+    });
+
+    match lint_repo(&LintConfig { root, manifest }) {
+        Ok(diags) if diags.is_empty() => {
+            println!("contract-lint: OK — all contracts hold");
+            ExitCode::SUCCESS
+        }
+        Ok(diags) => {
+            for d in &diags {
+                println!("{d}");
+            }
+            eprintln!("contract-lint: {} violation(s)", diags.len());
+            ExitCode::FAILURE
+        }
+        Err(e) => {
+            eprintln!("contract-lint: error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}

@@ -1,0 +1,4 @@
+pub fn no_comment() -> u8 {
+    let x = 1u8;
+    unsafe { core::ptr::read(&x) }
+}

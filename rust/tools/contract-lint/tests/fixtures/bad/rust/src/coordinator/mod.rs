@@ -1,0 +1,3 @@
+pub fn risky() -> i32 {
+    Some(1).unwrap()
+}

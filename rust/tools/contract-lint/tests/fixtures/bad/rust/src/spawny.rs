@@ -1,0 +1,3 @@
+pub fn sneaky() {
+    std::thread::spawn(|| {});
+}

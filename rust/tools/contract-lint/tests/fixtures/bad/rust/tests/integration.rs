@@ -1,0 +1,4 @@
+#[test]
+fn runs_tag_a() {
+    assert!(!"tag_a".is_empty());
+}

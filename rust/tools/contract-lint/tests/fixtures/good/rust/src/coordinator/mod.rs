@@ -1,0 +1,5 @@
+#![forbid(unsafe_code)]
+
+pub fn fine() -> i32 {
+    Some(1).unwrap_or(0)
+}

@@ -1,0 +1,6 @@
+pub fn critical_into(dst: &mut [f32]) {
+    for v in dst.iter_mut() {
+        // SAFETY: fixture demo — reading through a live &mut is sound.
+        *v = unsafe { core::ptr::read(v) };
+    }
+}

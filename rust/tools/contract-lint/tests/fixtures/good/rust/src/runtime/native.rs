@@ -1,0 +1,3 @@
+pub fn native_tags() -> &'static [&'static str] {
+    &["tag_a"]
+}

@@ -1,0 +1,55 @@
+//! Acceptance tests for the contract linter: the bad fixture tree must
+//! fail with precise `file:line: [rule]` diagnostics (one per planted
+//! violation), the good tree must pass clean, and — the gate itself —
+//! the real repository must lint clean.
+
+use std::path::PathBuf;
+
+use contract_lint::{lint_repo, LintConfig};
+
+fn fixture(name: &str) -> LintConfig {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests").join("fixtures").join(name);
+    LintConfig { manifest: root.join("hotpath.txt"), root }
+}
+
+#[test]
+fn bad_fixture_fails_with_file_line_diagnostics() {
+    let diags = lint_repo(&fixture("bad")).expect("bad fixture lints");
+    let rendered: Vec<String> = diags.iter().map(|d| d.to_string()).collect();
+    let has = |frag: &str| rendered.iter().any(|d| d.contains(frag));
+
+    // One planted violation per rule, each pinned to its exact line.
+    assert!(has("rust/src/bad_unsafe.rs:3: [safety-comment]"), "{rendered:#?}");
+    assert!(has("rust/src/spawny.rs:2: [thread-containment]"), "{rendered:#?}");
+    assert!(has("rust/src/coordinator/mod.rs:2: [coordinator-unwrap]"), "{rendered:#?}");
+    assert!(has("rust/src/coordinator/mod.rs:1: [forbid-unsafe]"), "{rendered:#?}");
+    assert!(has("rust/src/hot.rs:2: [hotpath-alloc]"), "{rendered:#?}");
+    // A manifest entry whose fn does not exist is itself a violation.
+    assert!(has("[hotpath-alloc] manifest fn `missing_fn` not found"), "{rendered:#?}");
+    // tag_b is registered but appears in no test.
+    assert!(has("rust/src/runtime/native.rs:1: [verify-tags]"), "{rendered:#?}");
+    assert!(has("\"tag_b\""), "{rendered:#?}");
+
+    assert_eq!(diags.len(), 7, "exactly the planted violations: {rendered:#?}");
+}
+
+#[test]
+fn good_fixture_is_clean() {
+    let diags = lint_repo(&fixture("good")).expect("good fixture lints");
+    assert!(diags.is_empty(), "{:#?}", diags.iter().map(ToString::to_string).collect::<Vec<_>>());
+}
+
+/// The gate: the actual repository holds every contract. This runs
+/// under `cargo test -p contract-lint`, and the same check runs as the
+/// blocking `cargo run -p contract-lint` CI step.
+#[test]
+fn real_repo_lints_clean() {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..").join("..").join("..");
+    let manifest = root.join("rust").join("tools").join("contract-lint").join("hotpath.txt");
+    let diags = lint_repo(&LintConfig { root, manifest }).expect("repo lints");
+    assert!(
+        diags.is_empty(),
+        "contract violations:\n{}",
+        diags.iter().map(ToString::to_string).collect::<Vec<_>>().join("\n")
+    );
+}
