@@ -1,0 +1,152 @@
+//! Bench decode — incremental generative decoding on the native stack:
+//! tokens/sec against KV-cache depth (the per-token cost grows with the
+//! attended context), and the batch 1..8 latency-bound regime (each
+//! sequence decodes one token per round on its own session/lane — the
+//! shape the continuous batcher's lane refills produce). The bench
+//! installs the counting global allocator and asserts every measured
+//! window spawns **zero threads and performs zero heap allocations**
+//! (the `steady_allocs=0 / steady_spawns=0` serving contract), plus the
+//! determinism contract: pooled decode steps are bitwise identical to
+//! serial ones.
+//!
+//! Run: `cargo bench --bench decode`
+//! Greppable summary: lines starting `decode-context` / `decode-batch`.
+
+use std::time::Instant;
+
+use bwma::runtime::{available_cores, NativeModel, WorkerPool};
+use bwma::util::alloc::{heap_allocs_total, CountingAllocator};
+use bwma::util::XorShift64;
+
+#[global_allocator]
+static ALLOC: CountingAllocator = CountingAllocator;
+
+/// Decode steps per measured window.
+const STEPS: usize = 29;
+
+/// Prefill `depth` tokens, warm three steps, then measure `STEPS` decode
+/// steps under the zero-allocation / zero-spawn contract. Returns the
+/// window's wall time and the final step's output row (the bitwise
+/// cross-check between pool widths).
+fn run_window(
+    model: &NativeModel,
+    prompt: &[f32],
+    depth: usize,
+    token: &[f32],
+    d: usize,
+) -> (f64, Vec<f32>) {
+    let mut sess = model.begin_decode().unwrap();
+    let mut pre = vec![0.0f32; depth * d];
+    model.prefill_into(&mut sess, &prompt[..depth * d], depth, &mut pre).unwrap();
+    let mut out = vec![0.0f32; d];
+    for _ in 0..3 {
+        model.decode_step_into(&mut sess, token, &mut out).unwrap();
+    }
+    let spawned_before = WorkerPool::threads_spawned_total();
+    let allocs_before = heap_allocs_total();
+    let t0 = Instant::now();
+    for _ in 0..STEPS {
+        model.decode_step_into(&mut sess, token, &mut out).unwrap();
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let spawned = WorkerPool::threads_spawned_total() - spawned_before;
+    let allocs = heap_allocs_total() - allocs_before;
+    assert_eq!(spawned, 0, "steady decode steps must not spawn threads");
+    assert_eq!(allocs, 0, "warm decode steps must not allocate");
+    model.end_decode(sess);
+    (dt, out)
+}
+
+fn main() {
+    let (d_model, heads, d_ff, block, layers, ctx) =
+        (128usize, 2usize, 512usize, 16usize, 2usize, 256usize);
+    let model =
+        NativeModel::new_decoder(32, d_model, heads, d_ff, layers, block, ctx, 0xDECD).unwrap();
+    let mut rng = XorShift64::new(0xDECE);
+    let mut prompt = vec![0.0f32; 224 * d_model];
+    rng.fill_f32(&mut prompt);
+    let mut token = vec![0.0f32; d_model];
+    rng.fill_f32(&mut token);
+
+    println!(
+        "# decode: d_model {d_model}, {heads} heads, d_ff {d_ff}, block {block}, \
+         {layers} layer(s), max-context {ctx}; host parallelism {}",
+        available_cores()
+    );
+
+    // Tokens/sec vs KV-cache depth, batch 1: serial first (the golden
+    // bits), then pooled widths — every pooled window must land on the
+    // serial bits exactly. Depth 224 ends the window at position 255,
+    // one short of --max-context.
+    let depths = [16usize, 64, 128, 224];
+    let serial = model.clone().with_cores(1).unwrap();
+    let mut golden: Vec<Vec<f32>> = Vec::new();
+    for &p in &depths {
+        let (dt, out) = run_window(&serial, &prompt, p, &token, d_model);
+        println!(
+            "decode-context cores=1 context={p} tokens_per_sec={:.0} \
+             steady_spawns=0 steady_allocs=0",
+            STEPS as f64 / dt
+        );
+        golden.push(out);
+    }
+    for cores in [2usize, 4, 8] {
+        let m = model.clone().with_cores(cores).unwrap();
+        for (gi, &p) in depths.iter().enumerate() {
+            let (dt, out) = run_window(&m, &prompt, p, &token, d_model);
+            let bitwise = golden[gi].iter().zip(&out).all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(bitwise, "pooled decode at {cores} cores diverged from serial at depth {p}");
+            println!(
+                "decode-context cores={cores} context={p} tokens_per_sec={:.0} \
+                 steady_spawns=0 steady_allocs=0",
+                STEPS as f64 / dt
+            );
+        }
+    }
+
+    // The latency-bound batch regime: B sessions, one lane each, decode
+    // one token per round, round-robin across sequences.
+    let cores = available_cores().min(4);
+    let m = model.clone().with_cores(cores).unwrap();
+    for batch in 1usize..=8 {
+        m.reserve_workspace_lanes(batch);
+        let mut sessions = Vec::new();
+        let mut pre = vec![0.0f32; 32 * d_model];
+        for s in 0..batch {
+            let mut sess = m.begin_decode().unwrap();
+            // Staggered prompt slices so every sequence carries its own
+            // history.
+            let lo = s * 16 * d_model;
+            m.prefill_into(&mut sess, &prompt[lo..lo + 32 * d_model], 32, &mut pre).unwrap();
+            sessions.push(sess);
+        }
+        let mut out = vec![0.0f32; d_model];
+        for _ in 0..3 {
+            for sess in &mut sessions {
+                m.decode_step_into(sess, &token, &mut out).unwrap();
+            }
+        }
+        let spawned_before = WorkerPool::threads_spawned_total();
+        let allocs_before = heap_allocs_total();
+        let t0 = Instant::now();
+        for _ in 0..STEPS {
+            for sess in &mut sessions {
+                m.decode_step_into(sess, &token, &mut out).unwrap();
+            }
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let spawned = WorkerPool::threads_spawned_total() - spawned_before;
+        let allocs = heap_allocs_total() - allocs_before;
+        assert_eq!(spawned, 0, "steady batch decode must not spawn threads");
+        assert_eq!(allocs, 0, "warm batch decode must not allocate");
+        for sess in sessions {
+            m.end_decode(sess);
+        }
+        println!(
+            "decode-batch cores={cores} batch={batch} tokens_per_sec={:.0} \
+             per_token_latency_us={:.1} steady_spawns={spawned} steady_allocs={allocs}",
+            (batch * STEPS) as f64 / dt,
+            dt * 1e6 / STEPS as f64
+        );
+    }
+}

@@ -158,6 +158,57 @@ pub fn model_tile_range(
     start..start + block * block
 }
 
+/// Model of `runtime::parallel::kv_append_into`'s per-unit write set:
+/// unit `(h, bt)` owns K-chunk tile `bt` and V tile-column `bt` of head
+/// `h` while appending positions `old_len..new_len` into a
+/// `max_context = ctx` cache with per-head K chunks (`ctx/block` packed
+/// `d_head × block` matrices) and packed `ctx × d_head` V. `sink`
+/// receives each written element exactly once per unit — the zero-fill
+/// of freshly-opened packing tiles *unioned* with the scattered
+/// K-column / V-row stores (the in-unit overwrite is a single worker's
+/// business, not a disjointness fact) — with V ranges offset by `v_off`
+/// so one flat buffer can audit both caches.
+#[allow(clippy::too_many_arguments)]
+pub fn model_kv_append_unit(
+    h: usize,
+    bt: usize,
+    d_head: usize,
+    ctx: usize,
+    block: usize,
+    old_len: usize,
+    new_len: usize,
+    v_off: usize,
+    sink: &mut dyn FnMut(Range<usize>),
+) {
+    debug_assert!(old_len < new_len && new_len <= ctx);
+    let b2 = block * block;
+    let head_elems = d_head * ctx;
+    let tiles = d_head / block;
+    for j in old_len / block..=(new_len - 1) / block {
+        let kt = h * head_elems + j * d_head * block + bt * b2;
+        let vt = v_off + h * head_elems + (j * tiles + bt) * b2;
+        if j * block >= old_len {
+            // Freshly-opened tile: the whole burst is zero-filled
+            // before the scatter lands inside it.
+            sink(kt..kt + b2);
+            sink(vt..vt + b2);
+        } else {
+            // Tile already live from an earlier append: only the new
+            // positions' K column / V row are touched.
+            let lo = old_len.max(j * block);
+            let hi = new_len.min((j + 1) * block);
+            for p in lo..hi {
+                let pc = p - j * block;
+                for r in 0..block {
+                    let at = kt + r * block + pc;
+                    sink(at..at + 1);
+                }
+                sink(vt + pc * block..vt + (pc + 1) * block);
+            }
+        }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // The audit proper.
 // ---------------------------------------------------------------------------
@@ -421,8 +472,91 @@ pub fn audit_disjointness_with(max_cores: usize) -> AuditReport {
         }
     }
 
+    // Family 8: KV-cache append — the decoder's incremental
+    // `kv_append_into`, whose (head, feature-tile) units scatter new
+    // positions into a persistent per-head cache. Appends touch the
+    // cache *partially* by design, so exactly-once is established by
+    // pre-marking everything outside the expected append region once: a
+    // stray write then surfaces as an overlap, a missed expected
+    // element as a coverage hole. Spans are chosen to cross packing-
+    // tile boundaries every way a decode session can: first token,
+    // partial first tile, tile-boundary step, boundary-crossing append,
+    // whole-capacity prefill, and the last position before the cache
+    // fills.
+    let mut kv = FamilyStats { family: "kv_append", cases: 0, units_checked: 0 };
+    for block in [8usize, 16] {
+        for (heads, bdh) in [(1usize, 1usize), (2, 1), (3, 2)] {
+            let dh = bdh * block;
+            let ctx = 4 * block;
+            let hoff = heads * dh * ctx;
+            let total_units = heads * bdh;
+            let spans = [
+                (0usize, 1usize),
+                (0, block - 1),
+                (block - 1, block),
+                (block - 1, block + 1),
+                (block, block + 1),
+                (0, ctx),
+                (ctx - 1, ctx),
+            ];
+            for (old_len, new_len) in spans {
+                let mut expected = vec![false; 2 * hoff];
+                for u in 0..total_units {
+                    model_kv_append_unit(
+                        u / bdh,
+                        u % bdh,
+                        dh,
+                        ctx,
+                        block,
+                        old_len,
+                        new_len,
+                        hoff,
+                        &mut |r| {
+                            for i in r {
+                                expected[i] = true;
+                            }
+                        },
+                    );
+                }
+                for cores in 1..=max_cores {
+                    let mut ws = WriteSet::new(2 * hoff);
+                    for (i, &e) in expected.iter().enumerate() {
+                        if !e {
+                            ws.mark(i..i + 1);
+                        }
+                    }
+                    for w in 0..cores {
+                        for u in model_chunk(total_units, cores, w) {
+                            model_kv_append_unit(
+                                u / bdh,
+                                u % bdh,
+                                dh,
+                                ctx,
+                                block,
+                                old_len,
+                                new_len,
+                                hoff,
+                                &mut |r| ws.mark(r),
+                            );
+                        }
+                    }
+                    ws.finish(
+                        &|| {
+                            format!(
+                                "kv_append heads={heads} d_head={dh} ctx={ctx} block={block} \
+                                 span={old_len}..{new_len} cores={cores}"
+                            )
+                        },
+                        &mut kv,
+                        &mut violations,
+                    );
+                }
+            }
+        }
+    }
+
     AuditReport {
-        families: vec![chunk, grid, arena, colview, rowwise, transpose, seqs],
+        families: vec![chunk, grid, arena, colview, rowwise, transpose, seqs, kv],
         violations,
     }
 }
@@ -537,6 +671,70 @@ mod tests {
         });
     }
 
+    /// The KV model IS the real append kernel: running `kv_append_into`
+    /// on sentinel-filled caches touches exactly the elements the model
+    /// claims, over random shapes, random append windows (prefill-sized
+    /// and step-sized alike), and random pool widths.
+    #[test]
+    fn kv_model_matches_real_kv_append_kernel() {
+        use crate::runtime::parallel::{kv_append_into, WorkerPool};
+        check_default("model_kv_append_unit == kv_append_into", |rng| {
+            let block = *rng.pick(&[8usize, 16]);
+            let heads = rng.range(1, 4) as usize;
+            let bdh = rng.range(1, 3) as usize;
+            let dh = bdh * block;
+            let ctx = (rng.range(2, 4) as usize) * block;
+            let old_len = rng.below(ctx as u64) as usize;
+            let new_len = old_len + 1 + rng.below((ctx - old_len) as u64) as usize;
+            // The projected window the runtime would use: a block-
+            // aligned span starting at old_len's tile, covering new_len.
+            let q0 = (old_len / block) * block;
+            let qrows = (new_len - q0).div_ceil(block) * block;
+
+            let sentinel = -777.25f32;
+            let mut kv_k = vec![sentinel; heads * dh * ctx];
+            let mut kv_v = vec![sentinel; heads * dh * ctx];
+            let k_src: Vec<f32> = (0..heads * qrows * dh).map(|i| 1.0 + i as f32).collect();
+            let v_src: Vec<f32> = (0..heads * qrows * dh).map(|i| -(1.0 + i as f32)).collect();
+            let pool = WorkerPool::new(rng.range(1, 8) as usize).unwrap();
+            kv_append_into(
+                &k_src, &v_src, &mut kv_k, &mut kv_v, heads, qrows, dh, ctx, block, q0,
+                old_len, new_len, &pool,
+            )
+            .unwrap();
+
+            let hoff = heads * dh * ctx;
+            let mut expected = vec![false; 2 * hoff];
+            for u in 0..heads * bdh {
+                model_kv_append_unit(
+                    u / bdh,
+                    u % bdh,
+                    dh,
+                    ctx,
+                    block,
+                    old_len,
+                    new_len,
+                    hoff,
+                    &mut |r| {
+                        for i in r {
+                            expected[i] = true;
+                        }
+                    },
+                );
+            }
+            for (i, v) in kv_k.iter().chain(&kv_v).enumerate() {
+                assert_eq!(
+                    *v != sentinel,
+                    expected[i],
+                    "element {i}: kernel {} model {} (heads={heads} dh={dh} ctx={ctx} \
+                     block={block} span={old_len}..{new_len})",
+                    if *v == sentinel { "untouched" } else { "wrote" },
+                    if expected[i] { "expects a write" } else { "expects none" },
+                );
+            }
+        });
+    }
+
     /// The full default sweep is clean: exactly-once coverage holds on
     /// every family × shape × block × cores × ntasks combination,
     /// degenerate corners included.
@@ -544,7 +742,7 @@ mod tests {
     fn default_audit_grid_is_clean() {
         let report = audit_disjointness();
         assert!(report.ok(), "unexpected violations:\n{report}");
-        assert_eq!(report.families.len(), 7);
+        assert_eq!(report.families.len(), 8);
         for fam in &report.families {
             assert!(fam.cases > 0, "family {} swept no cases", fam.family);
         }

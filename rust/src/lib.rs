@@ -40,10 +40,24 @@
 //!    `native_encoder_int8_parallel_equiv_b16`). The masked softmax
 //!    defines fully-masked rows (all `-inf`) as all-zero, and the
 //!    blocked GEMM propagates `0 × NaN`/`0 × ∞` — conventions shared by
-//!    blocked, parallel, and reference kernels. The execution
+//!    blocked, parallel, and reference kernels. **Generative decoding**
+//!    ([`runtime::NativeModel::new_decoder`], served via
+//!    `bwma serve --model decoder --max-context N`) runs causal decoder
+//!    layers incrementally: a prefill pass, then per-token decode steps
+//!    ([`runtime::NativeModel::decode_step_into`]) whose K/V persist in
+//!    BWMA-packed layout across steps — a KV-cache arena pre-sized to
+//!    `--max-context` inside each workspace lane, keys stored
+//!    pre-transposed (the append *is* the transpose), causal masking
+//!    folded into the softmax exp pass. Incremental decode is provably
+//!    **bitwise identical** to a full causal recompute, serial == pooled
+//!    at every core count, and a warm step allocates and spawns nothing
+//!    (verify tags `native_causal_softmax_b16`,
+//!    `native_decoder_equiv_b8`/`_b16`,
+//!    `native_decode_incremental_equiv_b16`). The execution
 //!    architecture (packing → kernel grid → pool ownership → workspace
-//!    lifetime → phase DAG, incl. the "Precision & quantization"
-//!    section) is documented in `rust/DESIGN.md`.
+//!    lifetime → phase DAG, incl. the "Precision & quantization" and
+//!    "Decoding & the KV-cache lifetime" sections) is documented in
+//!    `rust/DESIGN.md`.
 //!    With `--features pjrt`, AOT-compiled JAX/Pallas artifacts (built
 //!    by `python/compile/`) execute through PJRT instead;
 //! 3. **Serving** — an admission-gated request router ([`coordinator`])

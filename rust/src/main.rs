@@ -80,8 +80,9 @@ USAGE:
                 [--precision f32|int8]
   bwma serve [--requests N] [--batcher continuous|fixed] [--buckets S1,S2,…]
              [--queue-depth D] [--max-batch B] [--cores N]
-             [--model ffn|encoder] [--layers N] [--precision f32|int8]
-             [--backend native|pjrt] [--tag encoder_jnp_b16]
+             [--model ffn|encoder|decoder] [--layers N] [--max-context N]
+             [--precision f32|int8] [--backend native|pjrt]
+             [--tag encoder_jnp_b16]
   bwma verify <check-tag|all> [--cores N] [--backend native|pjrt]
   bwma audit --disjointness [--max-cores N]
   bwma config <list|dump <preset>>
@@ -102,6 +103,18 @@ bytes. On `simulate`, `--precision` sets the modeled element size
 (int8 = 1 byte, the paper's accelerator; f32 = 4). The
 `pjrt` backend needs a build with `--features pjrt` (and real xla
 bindings) plus artifacts from `python/compile/aot.py`.
+
+`serve --model decoder` serves a **causal decoder** stack: every request
+runs a causal prefill over its bucket length, and every workspace lane
+embeds a BWMA-packed KV cache pre-sized to `--max-context` (>= 1,
+rounded nowhere — it must be a multiple of the pack block; default 256).
+The cache capacity is what incremental decode sessions
+(`begin_decode`/`decode_step_into` in the library API) decode into; a
+request or step past it is rejected with a typed error, like `--cores
+0`. `--precision int8` stays encoder-only — the decoder has no quantized
+path and rejects the combination cleanly. Verify tags:
+`native_causal_softmax_b16`, `native_decoder_equiv_b8`,
+`native_decoder_equiv_b16`, `native_decode_incremental_equiv_b16`.
 
 Serving runs **continuous batching** by default (`--batcher continuous`,
 native backend only): `--buckets 32,64` builds one model per sequence
@@ -126,6 +139,17 @@ fn parse_cores(args: &[String]) -> Result<usize> {
     };
     ensure!(cores >= 1, "--cores must be >= 1 (got {cores})");
     Ok(cores)
+}
+
+/// Parse `--max-context` (the decoder's KV-cache capacity in positions,
+/// default 256) and reject `0` at the CLI boundary, mirroring the
+/// `--cores 0` convention; `new_decoder` additionally enforces the
+/// block-multiple and `seq <= max_context` invariants with typed errors.
+fn parse_max_context(args: &[String]) -> Result<usize> {
+    let ctx: usize =
+        opt(args, "--max-context").unwrap_or("256").parse().context("--max-context")?;
+    ensure!(ctx >= 1, "--max-context must be >= 1 (got {ctx})");
+    Ok(ctx)
 }
 
 /// `bwma audit --disjointness`: prove the unsafe core's one-writer-per-
@@ -363,15 +387,19 @@ fn drive_server(
     Ok(())
 }
 
-/// Build one native bucket model: `--model ffn` (the demo FFN block) or
+/// Build one native bucket model: `--model ffn` (the demo FFN block),
 /// `--model encoder` (a full multi-head BERT encoder stack `layers`
-/// deep); `--precision int8` swaps in the quantized encoder — the server
-/// stack is precision-agnostic, so nothing else changes.
+/// deep), or `--model decoder` (a causal decoder stack whose lanes embed
+/// a KV cache sized to `max_context`); `--precision int8` swaps in the
+/// quantized encoder — the server stack is precision-agnostic, so
+/// nothing else changes. The decoder has no quantized path and rejects
+/// int8 with a typed error.
 fn build_native_model(
     kind: &str,
     precision: Precision,
     seq: usize,
     layers: usize,
+    max_context: usize,
 ) -> Result<NativeModel> {
     let (d_model, d_ff, block, heads) = NATIVE_DIMS; // d_head = 96/3 = 32, block-aligned
     match kind {
@@ -390,7 +418,14 @@ fn build_native_model(
                 NativeModel::new_encoder_int8(seq, d_model, heads, d_ff, layers, block, 0xB3D)
             }
         },
-        other => bail!("unknown --model {other:?} (ffn|encoder)"),
+        "decoder" => {
+            ensure!(
+                precision == Precision::F32,
+                "--precision int8 needs --model encoder (the decoder has no quantized path)"
+            );
+            NativeModel::new_decoder(seq, d_model, heads, d_ff, layers, block, max_context, 0xB3D)
+        }
+        other => bail!("unknown --model {other:?} (ffn|encoder|decoder)"),
     }
 }
 
@@ -407,6 +442,7 @@ fn serve_native(args: &[String], opts: &ServeOpts) -> Result<()> {
     let precision: Precision = opt(args, "--precision").unwrap_or("f32").parse()?;
     let kind = opt(args, "--model").unwrap_or("ffn").to_string();
     let layers: usize = opt(args, "--layers").unwrap_or("2").parse().context("--layers")?;
+    let max_context = parse_max_context(args)?;
     let buckets = parse_buckets(args, default_seq, block)?;
     let in_shapes: Vec<Vec<usize>> = buckets.iter().map(|&s| vec![s, NATIVE_DIMS.0]).collect();
     let cores = opts.cores;
@@ -419,7 +455,7 @@ fn serve_native(args: &[String], opts: &ServeOpts) -> Result<()> {
                 move || {
                     let mut models: Vec<NativeModel> = Vec::with_capacity(buckets2.len());
                     for &seq in &buckets2 {
-                        let m = build_native_model(&kind2, precision, seq, layers)?;
+                        let m = build_native_model(&kind2, precision, seq, layers, max_context)?;
                         let m = match models.first() {
                             // One pool for every bucket: tenancy never
                             // multiplies worker threads.
@@ -444,8 +480,8 @@ fn serve_native(args: &[String], opts: &ServeOpts) -> Result<()> {
                 "--batcher fixed serves a single sequence length (got --buckets {buckets:?}); \
                  use --batcher continuous for length bucketing"
             );
-            let model =
-                build_native_model(&kind, precision, buckets[0], layers)?.with_cores(cores)?;
+            let model = build_native_model(&kind, precision, buckets[0], layers, max_context)?
+                .with_cores(cores)?;
             let in_shape = model.in_shape();
             let out_shape = model.out_shape();
             let in_shape2 = in_shape.clone();
@@ -617,5 +653,63 @@ fn cmd_config(args: &[String]) -> Result<()> {
             Ok(())
         }
         _ => bail!("usage: bwma config <list|dump <preset>>"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli(parts: &[&str]) -> Vec<String> {
+        parts.iter().map(|s| (*s).to_string()).collect()
+    }
+
+    #[test]
+    fn max_context_zero_rejected_at_the_cli_boundary() {
+        let err = parse_max_context(&cli(&["--max-context", "0"])).unwrap_err();
+        assert!(err.to_string().contains("--max-context must be >= 1"), "{err:#}");
+        // The default and explicit values parse.
+        assert_eq!(parse_max_context(&cli(&[])).unwrap(), 256);
+        assert_eq!(parse_max_context(&cli(&["--max-context", "128"])).unwrap(), 128);
+    }
+
+    #[test]
+    fn decoder_max_context_must_be_a_block_multiple() {
+        // 100 is >= 1 (passes the CLI gate) but not a multiple of the
+        // pack block — `new_decoder` rejects it with a typed error.
+        let err = build_native_model("decoder", Precision::F32, 64, 1, 100).unwrap_err();
+        assert!(err.to_string().contains("positive multiple of block"), "{err:#}");
+    }
+
+    #[test]
+    fn decoder_rejects_int8_with_a_typed_error() {
+        let err = build_native_model("decoder", Precision::Int8, 64, 1, 256).unwrap_err();
+        assert!(err.to_string().contains("no quantized path"), "{err:#}");
+    }
+
+    #[test]
+    fn decode_request_longer_than_max_context_rejected() {
+        let model = build_native_model("decoder", Precision::F32, 64, 1, 64).unwrap();
+        let d = NATIVE_DIMS.0;
+        let mut sess = model.begin_decode().unwrap();
+        // A prefill longer than the cache capacity is a typed error...
+        let x = vec![0.0f32; 65 * d];
+        let mut out = vec![0.0f32; 65 * d];
+        let err = model.prefill_into(&mut sess, &x, 65, &mut out).unwrap_err();
+        assert!(err.to_string().contains("longer than max context"), "{err:#}");
+        // ...and so is the step that would overflow a full cache.
+        let mut row = vec![0.0f32; d];
+        for t in 0..64 {
+            model.decode_step_into(&mut sess, &x[t * d..(t + 1) * d], &mut row).unwrap();
+        }
+        let err = model.decode_step_into(&mut sess, &x[..d], &mut row).unwrap_err();
+        assert!(err.to_string().contains("longer than max context"), "{err:#}");
+        model.end_decode(sess);
+    }
+
+    #[test]
+    fn unknown_model_kind_lists_the_decoder() {
+        let err = build_native_model("gpt", Precision::F32, 64, 1, 256).unwrap_err();
+        assert!(err.to_string().contains("ffn|encoder|decoder"), "{err:#}");
     }
 }

@@ -44,8 +44,8 @@ pub use artifacts::{artifacts_dir, GoldenSet};
 #[cfg(feature = "pjrt")]
 pub use client::{Executable, Runtime};
 pub use native::{
-    native_tags, run_native_check, run_native_check_with_cores, NativeCheck, NativeModel,
-    PhaseTimings, Precision,
+    native_tags, run_native_check, run_native_check_with_cores, DecoderSession, NativeCheck,
+    NativeModel, PhaseTimings, Precision,
 };
 pub use parallel::{available_cores, WorkerPool};
 pub use quant::{qgemm, rel_error, QTensor};

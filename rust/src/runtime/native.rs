@@ -587,6 +587,110 @@ fn softmax_row(x: &mut [f32], d: &MatrixDesc, r: usize, mask: Option<&[f32]>, sc
     }
 }
 
+/// Causal, scaled, numerically-stable softmax over the stacked per-head
+/// score stripes of a decoder attention step. `x` holds `heads` packed
+/// `qrows × cols` matrices back to back (equivalently: one packed
+/// `heads·qrows × cols` matrix, since `qrows % block == 0`). The row for
+/// local query index `r` of any head sits at absolute position
+/// `q = q0 + r` and may attend to key positions `0..=q`:
+///
+/// - `q >= len` (a padding row past the real sequence): the row becomes
+///   all zeros without reading it — padding rows carry no information
+///   and must not depend on arena residue.
+/// - otherwise the max/exp/sum passes read **only** columns `0..=q`
+///   (ascending, the exact [`softmax_row`] float-op order with
+///   `mask = None`), and columns `q+1..cols` are **written** `0.0`
+///   without being read. This is what makes incremental decoding
+///   lossless: a shorter score row computed at step `q` reduces over
+///   exactly the same column set, in the same order, as row `q` of a
+///   full-prefix recompute.
+///
+/// Shares the fully-masked-row and NaN conventions of
+/// [`masked_softmax`]: a clean all-`-inf` visible prefix zeroes the row,
+/// a NaN logit poisons the visible prefix (the structurally-masked tail
+/// still comes out `0.0`).
+#[allow(clippy::too_many_arguments)]
+pub fn causal_softmax(
+    x: &mut [f32],
+    scale: f32,
+    heads: usize,
+    qrows: usize,
+    cols: usize,
+    block: usize,
+    q0: usize,
+    len: usize,
+) -> Result<()> {
+    ensure!(heads >= 1, "causal softmax needs at least one head");
+    ensure!(qrows > 0 && qrows % block == 0, "qrows {qrows} not a positive multiple of block {block}");
+    check_rowwise(x.len(), heads * qrows, cols, block)?;
+    ensure!(len <= cols, "causal length {len} exceeds the {cols} score columns");
+    let stripe = qrows * cols;
+    let chunk_elems = block * cols;
+    for h in 0..heads {
+        for br in 0..qrows / block {
+            let chunk = &mut x[h * stripe + br * chunk_elems..][..chunk_elems];
+            causal_softmax_block_row(chunk, cols, block, scale, q0 + br * block, len);
+        }
+    }
+    Ok(())
+}
+
+/// One block-row (`block` consecutive rows of one head, a contiguous
+/// `block·cols` span in packed layout) of [`causal_softmax`]. `qpos0` is
+/// the absolute query position of the chunk's first row. Shared by the
+/// serial kernel and [`super::parallel::causal_softmax_pooled`], whose
+/// partitioning never splits a block-row — so pooled output is bitwise
+/// identical to serial for any worker count.
+pub(crate) fn causal_softmax_block_row(
+    chunk: &mut [f32],
+    cols: usize,
+    block: usize,
+    scale: f32,
+    qpos0: usize,
+    len: usize,
+) {
+    debug_assert_eq!(chunk.len(), block * cols);
+    let d = packed_desc(block, cols, block);
+    for r in 0..block {
+        let q = qpos0 + r;
+        if q >= len {
+            for c in 0..cols {
+                chunk[d.elem_index(r, c)] = 0.0;
+            }
+            continue;
+        }
+        // `len <= cols` is checked by the caller, so `limit <= cols`.
+        let limit = q + 1;
+        let mut max = f32::NEG_INFINITY;
+        let mut has_nan = false;
+        for c in 0..limit {
+            let l = chunk[d.elem_index(r, c)] * scale;
+            has_nan |= l.is_nan();
+            max = max.max(l);
+        }
+        if max == f32::NEG_INFINITY && !has_nan {
+            for c in 0..cols {
+                chunk[d.elem_index(r, c)] = 0.0;
+            }
+            continue;
+        }
+        let mut sum = 0.0f32;
+        for c in 0..limit {
+            let i = d.elem_index(r, c);
+            let e = (chunk[i] * scale - max).exp();
+            chunk[i] = e;
+            sum += e;
+        }
+        let inv = 1.0 / sum;
+        for c in 0..limit {
+            chunk[d.elem_index(r, c)] *= inv;
+        }
+        for c in limit..cols {
+            chunk[d.elem_index(r, c)] = 0.0;
+        }
+    }
+}
+
 /// Row-major reference kernels the blocked implementations are verified
 /// against (`bwma verify`, tests). GEMM accumulates in f64.
 pub mod reference {
@@ -726,6 +830,55 @@ pub mod reference {
             }
             let inv = 1.0 / sum;
             for v in row.iter_mut() {
+                *v *= inv;
+            }
+        }
+    }
+
+    /// Row-major counterpart of [`super::causal_softmax`]: `x` is
+    /// `heads` stacked row-major `qrows × cols` score matrices; row `r`
+    /// of each head sits at absolute query position `q0 + r`, reduces
+    /// over columns `0..=q0+r` only, and zero-fills the causal tail.
+    /// Shares the padding-row (`q >= len` → zeros), clean all-`-inf`,
+    /// and NaN conventions of the blocked kernel.
+    pub fn causal_softmax(
+        x: &mut [f32],
+        scale: f32,
+        heads: usize,
+        qrows: usize,
+        cols: usize,
+        q0: usize,
+        len: usize,
+    ) {
+        assert_eq!(x.len(), heads * qrows * cols);
+        assert!(len <= cols, "causal length must fit in the score columns");
+        for hr in 0..heads * qrows {
+            let row = &mut x[hr * cols..(hr + 1) * cols];
+            let q = q0 + hr % qrows;
+            if q >= len {
+                row.fill(0.0);
+                continue;
+            }
+            let (vis, tail) = row.split_at_mut(q + 1);
+            tail.fill(0.0);
+            let mut max = f32::NEG_INFINITY;
+            let mut has_nan = false;
+            for v in vis.iter() {
+                let l = v * scale;
+                has_nan |= l.is_nan();
+                max = max.max(l);
+            }
+            if max == f32::NEG_INFINITY && !has_nan {
+                vis.fill(0.0);
+                continue;
+            }
+            let mut sum = 0.0f32;
+            for v in vis.iter_mut() {
+                *v = (*v * scale - max).exp();
+                sum += *v;
+            }
+            let inv = 1.0 / sum;
+            for v in vis.iter_mut() {
                 *v *= inv;
             }
         }
@@ -969,6 +1122,40 @@ enum ModelKind {
     /// Add/Norm affines of the f32 spine *and* the unquantized
     /// reference forward the accuracy bound compares against.
     EncoderInt8 { qlayers: Vec<QEncoderLayerParams>, golden: Vec<EncoderLayerParams> },
+    /// Stack of **causal decoder** layers ([`NativeModel::new_decoder`]):
+    /// the encoder's parameter shapes with causal attention, incremental
+    /// decode steps, and a persistent BWMA-packed KV cache pre-sized to
+    /// `max_context` inside every workspace lane. `seq` is the serving
+    /// (prefill) length and needs no block alignment — prefill pads to
+    /// the block boundary internally.
+    Decoder { layers: Vec<EncoderLayerParams>, max_context: usize },
+}
+
+/// An in-flight generative decoding session: one workspace lane checked
+/// out of the model's shared stack, whose embedded KV arena holds every
+/// position decoded so far. Create with [`NativeModel::begin_decode`],
+/// feed with [`NativeModel::prefill_into`] /
+/// [`NativeModel::decode_step_into`], and return the lane with
+/// [`NativeModel::end_decode`]. Sessions on the same model are
+/// independent — the continuous batcher checks one out per admitted
+/// sequence — and a recycled lane never leaks a previous session's K/V
+/// rows (`tests/alloc_steady_state.rs` pins this with NaN poisoning).
+#[derive(Debug)]
+pub struct DecoderSession {
+    ws: EncoderWorkspace,
+}
+
+impl DecoderSession {
+    /// Positions currently resident in the KV cache (the next decode
+    /// step computes this absolute position).
+    pub fn len(&self) -> usize {
+        self.ws.kv_len
+    }
+
+    /// True until a prefill or decode step has run.
+    pub fn is_empty(&self) -> bool {
+        self.ws.kv_len == 0
+    }
 }
 
 /// Wall-time per encoder phase, accumulated across heads and layers by
@@ -1188,6 +1375,92 @@ impl NativeModel {
         Ok(model)
     }
 
+    /// Deterministically-initialized stack of `layers` **causal
+    /// decoder** layers: the encoder's parameter shapes (pre-packed
+    /// BWMA weights, same [`XorShift64`] init for a given `seed`) with
+    /// causal attention and a persistent KV cache, driven either as a
+    /// whole-prefix forward ([`Self::forward`] over `seq` rows, also
+    /// what `bwma serve --model decoder` batches) or incrementally
+    /// ([`Self::begin_decode`] / [`Self::prefill_into`] /
+    /// [`Self::decode_step_into`]).
+    ///
+    /// Every workspace lane embeds a KV arena pre-sized to
+    /// `max_context` (see `EncoderWorkspace::new_decoder`), so a warm
+    /// decode step allocates nothing and spawns nothing. `max_context`
+    /// must be a positive multiple of `block`; `seq` — the serving /
+    /// prefill length — only needs `1 ≤ seq ≤ max_context`, **no**
+    /// block alignment: prefill pads the trailing partial block with
+    /// deterministic zero rows that are never unpacked and never enter
+    /// the cache. `d_model / heads` (the per-head width) must still be
+    /// a block multiple, so skinny-head configurations with
+    /// `d_head < block` are rejected here with a typed error rather
+    /// than mis-partitioned downstream.
+    ///
+    /// Incremental decode is **bitwise** identical to recomputing the
+    /// full prefix, and serial == pooled at every core count:
+    ///
+    /// ```
+    /// use bwma::runtime::NativeModel;
+    ///
+    /// let model = NativeModel::new_decoder(5, 16, 2, 32, 1, 8, 64, 42).unwrap();
+    /// let mut sess = model.begin_decode().unwrap();
+    /// let x = vec![0.5f32; 5 * 16];
+    /// let mut full = vec![0.0f32; 5 * 16];
+    /// model.prefill_into(&mut sess, &x, 5, &mut full).unwrap();
+    /// let mut step = vec![0.0f32; 16];
+    /// model.decode_step_into(&mut sess, &x[..16], &mut step).unwrap();
+    /// assert_eq!(sess.len(), 6);
+    /// model.end_decode(sess);
+    /// ```
+    #[allow(clippy::too_many_arguments)]
+    pub fn new_decoder(
+        seq: usize,
+        d_model: usize,
+        heads: usize,
+        d_ff: usize,
+        layers: usize,
+        block: usize,
+        max_context: usize,
+        seed: u64,
+    ) -> Result<Self> {
+        ensure!(layers >= 1, "decoder needs at least one layer");
+        ensure!(heads >= 1 && d_model % heads == 0, "d_model {d_model} not divisible by heads {heads}");
+        let d_head = d_model / heads;
+        ensure!(
+            block > 0 && d_model % block == 0 && d_head % block == 0 && d_ff % block == 0,
+            "decoder dims d_model={d_model}/d_head={d_head}/d_ff={d_ff} not divisible by block {block}"
+        );
+        ensure!(
+            max_context >= 1 && max_context % block == 0,
+            "--max-context must be a positive multiple of block {block} (got {max_context})"
+        );
+        ensure!(
+            seq >= 1 && seq <= max_context,
+            "serving length {seq} outside 1..=max-context {max_context}"
+        );
+        let mut rng = XorShift64::new(seed);
+        let stack = (0..layers)
+            .map(|_| EncoderLayerParams {
+                attn: AttentionParams::init(&mut rng, d_model, heads, block),
+                ffn: FfnParams::init(&mut rng, d_model, d_ff, block),
+            })
+            .collect();
+        let pool = Arc::new(WorkerPool::new(1)?);
+        let workspaces = Arc::new(WorkspacePool::new());
+        workspaces
+            .checkin(EncoderWorkspace::new_decoder(max_context, d_model, heads, d_ff, layers, block));
+        Ok(Self {
+            seq,
+            d_model,
+            d_ff,
+            block,
+            pool,
+            workspaces,
+            mask: None,
+            kind: ModelKind::Decoder { layers: stack, max_context },
+        })
+    }
+
     /// The numeric format this model's GEMM stack runs in.
     pub fn precision(&self) -> Precision {
         match self.kind {
@@ -1210,6 +1483,7 @@ impl NativeModel {
         match &self.kind {
             ModelKind::Ffn(f) => 4 * (f.w1.len() + f.w2.len()),
             ModelKind::Encoder(stack) => stack.iter().map(f32_layer).sum(),
+            ModelKind::Decoder { layers, .. } => layers.iter().map(f32_layer).sum(),
             ModelKind::EncoderInt8 { qlayers, .. } => qlayers
                 .iter()
                 .map(|l| {
@@ -1301,6 +1575,14 @@ impl NativeModel {
                 self.d_ff,
                 self.block,
             ),
+            ModelKind::Decoder { layers, max_context } => EncoderWorkspace::new_decoder(
+                *max_context,
+                self.d_model,
+                layers[0].attn.heads,
+                self.d_ff,
+                layers.len(),
+                self.block,
+            ),
             ModelKind::EncoderInt8 { golden, .. } => EncoderWorkspace::new_encoder_int8(
                 self.seq,
                 self.d_model,
@@ -1340,11 +1622,26 @@ impl NativeModel {
         matches!(self.kind, ModelKind::Encoder(_) | ModelKind::EncoderInt8 { .. })
     }
 
+    /// Whether this model is a causal decoder ([`Self::new_decoder`]).
+    pub fn is_decoder(&self) -> bool {
+        matches!(self.kind, ModelKind::Decoder { .. })
+    }
+
+    /// The decoder's KV-cache capacity in positions (`--max-context`);
+    /// `None` for non-decoder models.
+    pub fn max_context(&self) -> Option<usize> {
+        match &self.kind {
+            ModelKind::Decoder { max_context, .. } => Some(*max_context),
+            _ => None,
+        }
+    }
+
     /// Number of encoder layers (1 for the FFN-only model).
     pub fn num_layers(&self) -> usize {
         match &self.kind {
             ModelKind::Ffn(_) => 1,
             ModelKind::Encoder(stack) => stack.len(),
+            ModelKind::Decoder { layers, .. } => layers.len(),
             ModelKind::EncoderInt8 { golden, .. } => golden.len(),
         }
     }
@@ -1496,6 +1793,15 @@ impl NativeModel {
         mut timings: Option<&mut PhaseTimings>,
     ) -> Result<()> {
         let (s, d, b) = (self.seq, self.d_model, self.block);
+        if let ModelKind::Decoder { layers, max_context } = &self.kind {
+            // The decoder's whole-sequence forward (also what the
+            // batcher and `bwma serve --model decoder` drive) is a
+            // causal prefill over the serving length. `seq` needn't be
+            // block-aligned, so the pack/unpack at the door is the
+            // prefill's own padded scatter rather than the encoder's
+            // whole-matrix repack.
+            return self.prefill_ws(layers, *max_context, ws, x, s, out, pool);
+        }
         crate::layout::rwma_to_bwma_into(x, &mut ws.x, s, d, b);
         match &self.kind {
             ModelKind::Ffn(ffn) => {
@@ -1520,6 +1826,7 @@ impl NativeModel {
                     ws.advance_layer();
                 }
             }
+            ModelKind::Decoder { .. } => unreachable!("decoder prefill returned above"),
         }
         crate::layout::bwma_to_rwma_into(&ws.x, out, s, d, b);
         Ok(())
@@ -1630,6 +1937,385 @@ impl NativeModel {
             Some(e) => Err(e),
             None => Ok(()),
         }
+    }
+
+    /// Check a decode session out of the lane stack (decoder models
+    /// only). The lane's KV length is reset to zero so whatever an
+    /// earlier session decoded is invisible here — the cache contents
+    /// themselves need no clearing because every position is
+    /// overwritten (and its packing tile zero-filled) by the append
+    /// that makes it visible.
+    pub fn begin_decode(&self) -> Result<DecoderSession> {
+        ensure!(
+            matches!(self.kind, ModelKind::Decoder { .. }),
+            "begin_decode requires a decoder model (new_decoder)"
+        );
+        let mut ws = self.workspaces.checkout().unwrap_or_else(|| self.make_workspace());
+        ws.kv_len = 0;
+        Ok(DecoderSession { ws })
+    }
+
+    /// Return a session's lane to the shared stack. Dropping the
+    /// session instead leaks the lane (the pool re-allocates on the
+    /// next checkout), so steady-state serving must check back in.
+    pub fn end_decode(&self, sess: DecoderSession) {
+        self.workspaces.checkin(sess.ws);
+    }
+
+    /// Causal prefill: forward a `t`-row prompt (row-major, `t ×
+    /// d_model`) through the decoder, leaving positions `0..t` resident
+    /// in the session's KV cache and the prompt's outputs in `out`
+    /// (row-major, same shape as `x`). Resets the session — any
+    /// previously decoded positions are discarded. `t` needs no block
+    /// alignment and must satisfy `1 ≤ t ≤ max_context`. Warm calls
+    /// allocate nothing and spawn nothing.
+    pub fn prefill_into(
+        &self,
+        sess: &mut DecoderSession,
+        x: &[f32],
+        t: usize,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let ModelKind::Decoder { layers, max_context } = &self.kind else {
+            bail!("prefill requires a decoder model (new_decoder)");
+        };
+        let d = self.d_model;
+        ensure!(
+            x.len() == t * d && out.len() == x.len(),
+            "prefill buffers must hold t*d_model = {t}*{d} elements (got {} in / {} out)",
+            x.len(),
+            out.len()
+        );
+        self.prefill_ws(layers, *max_context, &mut sess.ws, x, t, out, &self.pool)
+    }
+
+    /// One incremental decode step: forward a single `d_model`-element
+    /// token row at the next position `p = sess.len()`, appending its
+    /// K/V to the cache and writing the position's output row to
+    /// `out`. Bitwise identical to recomputing the whole `p+1`-row
+    /// prefix from scratch (`native_decode_incremental_equiv_b16`
+    /// proves this at every core count), and allocation-free when warm.
+    ///
+    /// Errors with a typed message once the cache is full — the serving
+    /// layer surfaces this as a rejected over-length request.
+    pub fn decode_step_into(
+        &self,
+        sess: &mut DecoderSession,
+        x: &[f32],
+        out: &mut [f32],
+    ) -> Result<()> {
+        let ModelKind::Decoder { layers, max_context } = &self.kind else {
+            bail!("decode_step requires a decoder model (new_decoder)");
+        };
+        let (d, b, ctx) = (self.d_model, self.block, *max_context);
+        ensure!(
+            x.len() == d && out.len() == d,
+            "decode step takes one {d}-element token row in and out"
+        );
+        let p = sess.ws.kv_len;
+        ensure!(
+            p < ctx,
+            "decode request longer than max context: cache holds {p} positions, --max-context is {ctx}"
+        );
+        let ws = &mut sess.ws;
+        let q0 = (p / b) * b;
+        // Zero the one-block x prefix, then scatter the token at its
+        // in-block row. Rows before it in the block are deterministic
+        // zero-input rows whose outputs are never unpacked and never
+        // reach the cache; rows at and after it in the padded score row
+        // are masked by the causal softmax.
+        for v in &mut ws.x[..b * d] {
+            *v = 0.0;
+        }
+        let desc = packed_desc(b, d, b);
+        for c in 0..d {
+            ws.x[desc.elem_index(p - q0, c)] = x[c];
+        }
+        for (li, layer) in layers.iter().enumerate() {
+            self.decoder_layer_step_ws(layer, ws, li, b, q0, p, p + 1, ctx, &self.pool)?;
+            ws.advance_layer();
+        }
+        ws.kv_len = p + 1;
+        for c in 0..d {
+            out[c] = ws.x[desc.elem_index(p - q0, c)];
+        }
+        Ok(())
+    }
+
+    /// Prefill body in a checked-out lane: pad the prompt to the block
+    /// boundary with zero rows, scatter it into the packed `x` arena,
+    /// run every layer as one big causal step (`old_len = 0`), then
+    /// gather the live rows back out. Shared by [`Self::prefill_into`]
+    /// and the decoder arm of the whole-sequence forward (so the
+    /// batcher and server drive the identical code path).
+    #[allow(clippy::too_many_arguments)]
+    fn prefill_ws(
+        &self,
+        layers: &[EncoderLayerParams],
+        ctx: usize,
+        ws: &mut EncoderWorkspace,
+        x: &[f32],
+        t: usize,
+        out: &mut [f32],
+        pool: &WorkerPool,
+    ) -> Result<()> {
+        let (d, b) = (self.d_model, self.block);
+        ensure!(
+            t >= 1 && t <= ctx,
+            "decode request longer than max context: prefill length {t} outside 1..={ctx}"
+        );
+        let t_pad = t.div_ceil(b) * b;
+        for v in &mut ws.x[..t_pad * d] {
+            *v = 0.0;
+        }
+        let desc = packed_desc(t_pad, d, b);
+        for r in 0..t {
+            for c in 0..d {
+                ws.x[desc.elem_index(r, c)] = x[r * d + c];
+            }
+        }
+        ws.kv_len = 0;
+        for (li, layer) in layers.iter().enumerate() {
+            self.decoder_layer_step_ws(layer, ws, li, t_pad, 0, 0, t, ctx, pool)?;
+            ws.advance_layer();
+        }
+        ws.kv_len = t;
+        for r in 0..t {
+            for c in 0..d {
+                out[r * d + c] = ws.x[desc.elem_index(r, c)];
+            }
+        }
+        Ok(())
+    }
+
+    /// One causal decoder layer as a unified *step*: project `qrows`
+    /// query rows (the packed prefix of `ws.x`, covering absolute
+    /// positions `q0 .. q0+qrows`), append the freshly-projected K/V
+    /// for positions `old_len..new_len` to layer `li`'s cache region,
+    /// then attend the query rows against the cached prefix
+    /// `0..new_len` padded to `ctx_pad`. Prefill is the `qrows = t_pad,
+    /// q0 = old_len = 0` instance; a decode step is `qrows = block`
+    /// with `new_len = old_len + 1`. Reads `ws.x`, leaves the layer
+    /// output in `ws.out` (caller swaps via `advance_layer`), exactly
+    /// like the encoder layer.
+    ///
+    /// Ten phases mirroring `encoder_layer_forward_ws`, with the
+    /// K-Transpose phase *gone*: the cache append scatters K directly
+    /// into transposed `d_head × block` chunks, so QKᵀ reads the cache
+    /// as its pre-transposed right operand. The AV GEMM reduces over
+    /// `ctx_pad` cached columns; probability columns past `new_len` are
+    /// exact `+0.0`s (causal softmax writes them without reading) and
+    /// cached rows past `new_len` are exact `+0.0`s (append zero-fills
+    /// each tile it opens), and since every GEMM accumulator starts at
+    /// `+0.0` — where adding `±0.0` is an IEEE-754 no-op — widening the
+    /// padded reduction never changes a bit. That is the whole
+    /// lossless-cache argument (DESIGN.md "Decoding & the KV-cache
+    /// lifetime").
+    #[allow(clippy::too_many_arguments)]
+    fn decoder_layer_step_ws(
+        &self,
+        layer: &EncoderLayerParams,
+        ws: &mut EncoderWorkspace,
+        li: usize,
+        qrows: usize,
+        q0: usize,
+        old_len: usize,
+        new_len: usize,
+        ctx: usize,
+        pool: &WorkerPool,
+    ) -> Result<()> {
+        let (d, dff, b) = (self.d_model, self.d_ff, self.block);
+        let attn = &layer.attn;
+        let ffn = &layer.ffn;
+        let (heads, dh) = (attn.heads, attn.d_head);
+        let scale = 1.0 / (dh as f32).sqrt();
+        let qdh = qrows * dh;
+        let ctx_pad = new_len.div_ceil(b) * b;
+        let EncoderWorkspace { x, hc, proj, out, qkv, scores, hid, kv_k, kv_v, .. } = ws;
+        let xs: &[f32] = &x[..qrows * d];
+
+        // 1. Q/K/V projections of the query rows, one batched grid.
+        parallel::gemm_f32_batch_into(
+            3 * heads,
+            &|t| {
+                let (kind, i) = (t / heads, t % heads);
+                let (w, bias) = match kind {
+                    0 => (&attn.wq[i], &attn.bq[i]),
+                    1 => (&attn.wk[i], &attn.bk[i]),
+                    _ => (&attn.wv[i], &attn.bv[i]),
+                };
+                GemmTask { a: xs, b: w, m: qrows, k: d, n: dh, epilogue: Epilogue::Bias(bias) }
+            },
+            qkv,
+            &|t| packed_desc_at((t * qdh) as u64, qrows, dh, b),
+            b,
+            pool,
+        )?;
+
+        // 2. Append positions old_len..new_len to layer li's cache
+        //    region (K scattered pre-transposed — the K-Transpose phase
+        //    of the encoder is folded into this write).
+        let lk = &mut kv_k[li * d * ctx..(li + 1) * d * ctx];
+        let lv = &mut kv_v[li * d * ctx..(li + 1) * d * ctx];
+        parallel::kv_append_into(
+            &qkv[heads * qdh..2 * heads * qdh],
+            &qkv[2 * heads * qdh..3 * heads * qdh],
+            lk,
+            lv,
+            heads,
+            qrows,
+            dh,
+            ctx,
+            b,
+            q0,
+            old_len,
+            new_len,
+            pool,
+        )?;
+
+        // 3. QKᵀ against the cached transposed chunks, one task per
+        //    (head, context block) so skinny steps still fan out.
+        let q_region = &qkv[..heads * qdh];
+        let lk: &[f32] = lk;
+        let nchunks = ctx_pad / b;
+        parallel::gemm_f32_batch_into(
+            heads * nchunks,
+            &|t| {
+                let (h, j) = (t / nchunks, t % nchunks);
+                GemmTask {
+                    a: &q_region[h * qdh..(h + 1) * qdh],
+                    b: &lk[h * dh * ctx + j * dh * b..][..dh * b],
+                    m: qrows,
+                    k: dh,
+                    n: b,
+                    epilogue: Epilogue::None,
+                }
+            },
+            scores,
+            &|t| {
+                let (h, j) = (t / nchunks, t % nchunks);
+                packed_desc_at((h * qrows * ctx_pad) as u64, qrows, ctx_pad, b)
+                    .col_view(j * b, b)
+            },
+            b,
+            pool,
+        )?;
+
+        // 4. Causal softmax over the live score prefix: row for
+        //    absolute position q attends keys 0..=q, padded columns are
+        //    written +0.0, padding rows (q >= new_len) zeroed.
+        parallel::causal_softmax_pooled(
+            &mut scores[..heads * qrows * ctx_pad],
+            scale,
+            heads,
+            qrows,
+            ctx_pad,
+            b,
+            q0,
+            new_len,
+            pool,
+        )?;
+
+        // 5. AV against the cached V prefix, concatenating heads into
+        //    column stripes of `hc`.
+        let sc: &[f32] = scores;
+        let lv: &[f32] = lv;
+        let d_concat = packed_desc(qrows, d, b);
+        parallel::gemm_f32_batch_into(
+            heads,
+            &|h| GemmTask {
+                a: &sc[h * qrows * ctx_pad..(h + 1) * qrows * ctx_pad],
+                b: &lv[h * dh * ctx..h * dh * ctx + ctx_pad * dh],
+                m: qrows,
+                k: ctx_pad,
+                n: dh,
+                epilogue: Epilogue::None,
+            },
+            hc,
+            &|h| d_concat.col_view(h * dh, dh),
+            b,
+            pool,
+        )?;
+
+        // 6. Output projection.
+        let hcs: &[f32] = &hc[..qrows * d];
+        parallel::gemm_f32_batch_into(
+            1,
+            &|_| GemmTask {
+                a: hcs,
+                b: &attn.wo,
+                m: qrows,
+                k: d,
+                n: d,
+                epilogue: Epilogue::Bias(&attn.bo),
+            },
+            proj,
+            &|_| packed_desc(qrows, d, b),
+            b,
+            pool,
+        )?;
+
+        // 7. Residual + LayerNorm 1.
+        parallel::add_norm_pooled(
+            &mut proj[..qrows * d],
+            xs,
+            &attn.gamma,
+            &attn.beta,
+            qrows,
+            d,
+            b,
+            Self::EPS,
+            pool,
+        )?;
+
+        // 8. FF1 with fused bias+GELU.
+        let ps: &[f32] = &proj[..qrows * d];
+        parallel::gemm_f32_batch_into(
+            1,
+            &|_| GemmTask {
+                a: ps,
+                b: &ffn.w1,
+                m: qrows,
+                k: d,
+                n: dff,
+                epilogue: Epilogue::BiasGelu(&ffn.b1),
+            },
+            hid,
+            &|_| packed_desc(qrows, dff, b),
+            b,
+            pool,
+        )?;
+
+        // 9. FF2 with fused bias.
+        let hs: &[f32] = &hid[..qrows * dff];
+        parallel::gemm_f32_batch_into(
+            1,
+            &|_| GemmTask {
+                a: hs,
+                b: &ffn.w2,
+                m: qrows,
+                k: dff,
+                n: d,
+                epilogue: Epilogue::Bias(&ffn.b2),
+            },
+            out,
+            &|_| packed_desc(qrows, d, b),
+            b,
+            pool,
+        )?;
+
+        // 10. Residual + LayerNorm 2.
+        parallel::add_norm_pooled(
+            &mut out[..qrows * d],
+            ps,
+            &ffn.gamma,
+            &ffn.beta,
+            qrows,
+            d,
+            b,
+            Self::EPS,
+            pool,
+        )
     }
 
     /// Legacy FFN block on workspace arenas (no residual — PR-1
@@ -2188,6 +2874,11 @@ impl NativeModel {
                     cur = self.encoder_layer_reference(&cur, layer);
                 }
             }
+            ModelKind::Decoder { layers, .. } => {
+                for layer in layers {
+                    cur = self.decoder_layer_reference(&cur, layer);
+                }
+            }
         }
         Ok(Tensor::new(vec![s, d], cur))
     }
@@ -2240,6 +2931,39 @@ impl NativeModel {
         reference::add_norm(&mut proj, x, &attn.gamma, &attn.beta, s, d, Self::EPS);
         self.ffn_reference(&proj, &layer.ffn, true)
     }
+
+    /// Row-major reference of one causal decoder layer: the encoder
+    /// reference with [`reference::causal_softmax`] in place of the key
+    /// mask (decoders carry no padding mask — [`Self::with_mask`]
+    /// rejects them).
+    fn decoder_layer_reference(&self, x: &[f32], layer: &EncoderLayerParams) -> Vec<f32> {
+        let (s, d) = (self.seq, self.d_model);
+        let attn = &layer.attn;
+        let (heads, dh) = (attn.heads, attn.d_head);
+        let scale = 1.0 / (dh as f32).sqrt();
+
+        let mut h_concat = vec![0.0f32; s * d];
+        for i in 0..heads {
+            let mut q = reference::gemm(x, &attn.wq_rm[i], s, d, dh);
+            reference::bias_add(&mut q, &attn.bq[i], s, dh);
+            let mut k = reference::gemm(x, &attn.wk_rm[i], s, d, dh);
+            reference::bias_add(&mut k, &attn.bk[i], s, dh);
+            let mut v = reference::gemm(x, &attn.wv_rm[i], s, d, dh);
+            reference::bias_add(&mut v, &attn.bv[i], s, dh);
+            let kt = reference::transpose(&k, s, dh);
+            let mut sc = reference::gemm(&q, &kt, s, dh, s);
+            reference::causal_softmax(&mut sc, scale, 1, s, s, 0, s);
+            let av = reference::gemm(&sc, &v, s, s, dh);
+            for r in 0..s {
+                h_concat[r * d + i * dh..r * d + (i + 1) * dh]
+                    .copy_from_slice(&av[r * dh..(r + 1) * dh]);
+            }
+        }
+        let mut proj = reference::gemm(&h_concat, &attn.wo_rm, s, d, d);
+        reference::bias_add(&mut proj, &attn.bo, s, d);
+        reference::add_norm(&mut proj, x, &attn.gamma, &attn.beta, s, d, Self::EPS);
+        self.ffn_reference(&proj, &layer.ffn, true)
+    }
 }
 
 /// Result of one native-backend verification check.
@@ -2271,6 +2995,10 @@ pub fn native_tags() -> &'static [&'static str] {
         "native_gemm_i8_parallel_equiv_b16",
         "native_encoder_int8_accuracy_b16",
         "native_encoder_int8_parallel_equiv_b16",
+        "native_causal_softmax_b16",
+        "native_decoder_equiv_b8",
+        "native_decoder_equiv_b16",
+        "native_decode_incremental_equiv_b16",
     ]
 }
 
@@ -2507,6 +3235,127 @@ fn check_encoder_parallel(tag: &'static str, block: usize) -> Result<NativeCheck
     Ok(NativeCheck { tag, max_diff, ok })
 }
 
+/// Blocked causal softmax vs the row-major reference, plus the
+/// conventions the lossless-cache argument rests on: live rows
+/// normalize over exactly the visible prefix, padded columns are
+/// written `+0.0`, padding rows (`q >= len`) are zeroed — and pooled is
+/// bitwise serial at several core counts.
+fn check_causal_softmax(tag: &'static str, block: usize, cores: usize) -> Result<NativeCheck> {
+    let (heads, qrows, cols) = (2usize, 2 * block, 3 * block);
+    let (q0, len) = (block, 2 * block + 3);
+    let mut rng = XorShift64::new(0xCA5A);
+    let x = rand_vec(&mut rng, heads * qrows * cols);
+    let scale = 0.125f32;
+    let stripe = qrows * cols;
+    let mut packed = vec![0.0f32; heads * qrows * cols];
+    for h in 0..heads {
+        let p = Tensor::new(vec![qrows, cols], x[h * stripe..(h + 1) * stripe].to_vec())
+            .pack_blocked(block)?;
+        packed[h * stripe..(h + 1) * stripe].copy_from_slice(&p.data);
+    }
+    let mut serial = packed.clone();
+    causal_softmax(&mut serial, scale, heads, qrows, cols, block, q0, len)?;
+    let mut expect = x;
+    reference::causal_softmax(&mut expect, scale, heads, qrows, cols, q0, len);
+    let mut unpacked = vec![0.0f32; heads * stripe];
+    for h in 0..heads {
+        let u = Tensor::new(
+            vec![qrows / block, cols / block, block, block],
+            serial[h * stripe..(h + 1) * stripe].to_vec(),
+        )
+        .unpack_blocked()?;
+        unpacked[h * stripe..(h + 1) * stripe].copy_from_slice(&u.data);
+    }
+    let mut max_diff = 0.0f32;
+    let mut ok = true;
+    for (g, e) in unpacked.iter().zip(&expect) {
+        max_diff = max_diff.max((g - e).abs());
+    }
+    ok &= max_diff < 1e-5;
+    for hr in 0..heads * qrows {
+        let row = &unpacked[hr * cols..(hr + 1) * cols];
+        let q = q0 + hr % qrows;
+        if q >= len {
+            ok &= row.iter().all(|&v| v == 0.0);
+        } else {
+            let s: f32 = row.iter().sum();
+            ok &= (s - 1.0).abs() < 1e-4;
+            ok &= row[q + 1..].iter().all(|&v| v.to_bits() == 0);
+        }
+    }
+    // Pooled runs are bitwise serial at every width.
+    for c in [2usize, 3, 8, cores.max(2)] {
+        let pool = WorkerPool::new(c)?;
+        let mut pooled = packed.clone();
+        super::parallel::causal_softmax_pooled(
+            &mut pooled, scale, heads, qrows, cols, block, q0, len, &pool,
+        )?;
+        ok &= pooled.iter().zip(&serial).all(|(a, b)| a.to_bits() == b.to_bits());
+    }
+    Ok(NativeCheck { tag, max_diff, ok })
+}
+
+/// A small two-layer causal decoder for the decoder-level checks: the
+/// serving length `2b + 3` deliberately straddles a block boundary,
+/// d_model 2b (2 heads × d_head b), d_ff 4b, max context 4b.
+fn check_decoder_model(block: usize, seed: u64) -> Result<NativeModel> {
+    NativeModel::new_decoder(2 * block + 3, 2 * block, 2, 4 * block, 2, block, 4 * block, seed)
+}
+
+fn check_decoder(tag: &'static str, block: usize, cores: usize) -> Result<NativeCheck> {
+    let model = check_decoder_model(block, 0xDEC0)?;
+    let mut rng = XorShift64::new(0xDEC1);
+    let x = Tensor::new(model.in_shape(), rand_vec(&mut rng, model.seq * model.d_model));
+    let got = model.forward_with_cores(&x, cores)?;
+    let expect = model.forward_reference(&x)?;
+    let diff = got.max_abs_diff(&expect);
+    Ok(NativeCheck { tag, max_diff: diff, ok: got.allclose(&expect, 2e-3, 2e-3) })
+}
+
+/// The cache-losslessness contract, bit for bit: token-by-token
+/// incremental decode — and a mixed prefill-then-step session — must
+/// reproduce the whole-prefix causal forward exactly, at every core
+/// count. `max_diff` is a true max |Δ| and must come out 0.
+fn check_decode_incremental(tag: &'static str, block: usize) -> Result<NativeCheck> {
+    let model = check_decoder_model(block, 0xDEC2)?;
+    let (s, d) = (model.seq, model.d_model);
+    let mut rng = XorShift64::new(0xDEC3);
+    let x = Tensor::new(model.in_shape(), rand_vec(&mut rng, s * d));
+    let full = model.forward_with_cores(&x, 1)?;
+    let mut max_diff = 0.0f32;
+    let mut ok = true;
+    let mut row = vec![0.0f32; d];
+    for cores in [1usize, 2, 3, 8] {
+        let mc = model.clone().with_cores(cores)?;
+        // Pure step-by-step session from an empty cache.
+        let mut sess = mc.begin_decode()?;
+        for t in 0..s {
+            mc.decode_step_into(&mut sess, &x.data[t * d..(t + 1) * d], &mut row)?;
+            let expect = &full.data[t * d..(t + 1) * d];
+            for (a, e) in row.iter().zip(expect) {
+                max_diff = max_diff.max((a - e).abs());
+                ok &= a.to_bits() == e.to_bits();
+            }
+        }
+        mc.end_decode(sess);
+        // Mixed session: prefill half the prefix, step the rest.
+        let t0 = (s / 2).max(1);
+        let mut sess = mc.begin_decode()?;
+        let mut pre = vec![0.0f32; t0 * d];
+        mc.prefill_into(&mut sess, &x.data[..t0 * d], t0, &mut pre)?;
+        ok &= pre.iter().zip(&full.data[..t0 * d]).all(|(a, e)| a.to_bits() == e.to_bits());
+        for t in t0..s {
+            mc.decode_step_into(&mut sess, &x.data[t * d..(t + 1) * d], &mut row)?;
+            ok &= row
+                .iter()
+                .zip(&full.data[t * d..(t + 1) * d])
+                .all(|(a, e)| a.to_bits() == e.to_bits());
+        }
+        mc.end_decode(sess);
+    }
+    Ok(NativeCheck { tag, max_diff, ok })
+}
+
 fn check_ffn(tag: &'static str, block: usize, cores: usize) -> Result<NativeCheck> {
     let model = NativeModel::new(4 * block, 6 * block, 8 * block, block, 0xFF1)?;
     let mut rng = XorShift64::new(0xFF2);
@@ -2703,6 +3552,14 @@ pub fn run_native_check_with_cores(tag: &str, cores: usize) -> Result<NativeChec
         }
         "native_encoder_int8_parallel_equiv_b16" => {
             check_encoder_int8_parallel("native_encoder_int8_parallel_equiv_b16", 16)
+        }
+        "native_causal_softmax_b16" => {
+            check_causal_softmax("native_causal_softmax_b16", 16, cores)
+        }
+        "native_decoder_equiv_b8" => check_decoder("native_decoder_equiv_b8", 8, cores),
+        "native_decoder_equiv_b16" => check_decoder("native_decoder_equiv_b16", 16, cores),
+        "native_decode_incremental_equiv_b16" => {
+            check_decode_incremental("native_decode_incremental_equiv_b16", 16)
         }
         _ => bail!("unknown native check {tag:?} (see `bwma verify all`)"),
     }

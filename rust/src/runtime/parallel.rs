@@ -932,6 +932,119 @@ pub fn transpose_packed_many_into(
     })
 }
 
+/// Append the freshly-projected K/V rows for positions
+/// `old_len..new_len` of ONE decoder layer into its persistent
+/// BWMA-packed cache regions. The scatter **is** the transpose: keys
+/// land pre-transposed, so the decoder has no K-transpose phase at all.
+///
+/// Sources: `k_src` / `v_src` each hold `heads` packed `qrows × d_head`
+/// matrices back to back (the K and V thirds of the qkv arena prefix);
+/// position `p`'s row sits at source row `p - q0`. Destinations, per
+/// head `h` (regions of `d_head·ctx` elements each):
+///
+/// - `kv_k`: `ctx/block` **chunks**, chunk `j` a packed
+///   `d_head × block` matrix at `j·d_head·block` holding the transposed
+///   keys of positions `j·block..(j+1)·block` — exactly the `b`-operand
+///   shape the per-chunk QKᵀ GEMM consumes.
+/// - `kv_v`: one packed `ctx × d_head` matrix; any block-aligned row
+///   prefix is itself a valid packed matrix (the AV GEMM's `b` operand).
+///
+/// The work-unit grid is `heads × (d_head/block)` column tiles; unit
+/// `(h, bt)` owns tile `bt` of every K chunk and V block-row of head
+/// `h`, so writes are disjoint and pooled == serial bitwise. When a
+/// unit first touches a cache block whose positions start at or past
+/// `old_len` it zero-fills the whole tile before writing rows: positions
+/// between `new_len` and the next block boundary are then exactly
+/// `+0.0`, which the causal GEMMs rely on (a padded score/AV column
+/// contributes `±0.0`, never stale-lane garbage or NaN).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn kv_append_into(
+    k_src: &[f32],
+    v_src: &[f32],
+    kv_k: &mut [f32],
+    kv_v: &mut [f32],
+    heads: usize,
+    qrows: usize,
+    d_head: usize,
+    ctx: usize,
+    block: usize,
+    q0: usize,
+    old_len: usize,
+    new_len: usize,
+    pool: &WorkerPool,
+) -> Result<()> {
+    ensure!(heads >= 1, "KV append needs at least one head");
+    native::check_rowwise(qrows * d_head, qrows, d_head, block)?;
+    ensure!(ctx % block == 0, "max context {ctx} not divisible by block {block}");
+    ensure!(
+        k_src.len() == heads * qrows * d_head && v_src.len() == k_src.len(),
+        "K/V sources hold {}/{} elements, {heads} packed {qrows}x{d_head} matrices need {}",
+        k_src.len(),
+        v_src.len(),
+        heads * qrows * d_head
+    );
+    ensure!(
+        kv_k.len() == heads * d_head * ctx && kv_v.len() == kv_k.len(),
+        "KV cache regions hold {}/{} elements, want {} each",
+        kv_k.len(),
+        kv_v.len(),
+        heads * d_head * ctx
+    );
+    ensure!(old_len < new_len && new_len <= ctx, "append range {old_len}..{new_len} outside 0..={ctx}");
+    ensure!(
+        q0 <= old_len && new_len <= q0 + qrows,
+        "positions {old_len}..{new_len} not inside the projected window {q0}..{}",
+        q0 + qrows
+    );
+    let src = native::packed_desc(qrows, d_head, block);
+    let tiles = d_head / block;
+    let total = heads * tiles;
+    let b2 = block * block;
+    let head_elems = d_head * ctx;
+    let jb0 = old_len / block;
+    let jb1 = (new_len - 1) / block;
+    let workers = pool.workers();
+    let kdst = SharedSlice::new(kv_k);
+    let vdst = SharedSlice::new(kv_v);
+    pool.run(&|w| {
+        for u in chunk_range(total, workers, w) {
+            let (h, bt) = (u / tiles, u % tiles);
+            let src_base = h * qrows * d_head;
+            let c0 = bt * block;
+            for j in jb0..=jb1 {
+                let kt_base = h * head_elems + j * d_head * block + bt * b2;
+                let vt_base = h * head_elems + (j * tiles + bt) * b2;
+                // SAFETY: unit (h, bt) exclusively owns K-chunk tile `bt`
+                // and V tile column `bt` within head `h`'s region;
+                // `chunk_range` assigns each unit to exactly one worker,
+                // and distinct units address disjoint `b²` bursts.
+                let kt = unsafe { kdst.range_mut(kt_base..kt_base + b2) };
+                let vt = unsafe { vdst.range_mut(vt_base..vt_base + b2) };
+                if j * block >= old_len {
+                    // Newly-opened cache block: zero the whole tile so
+                    // positions past `new_len` read back as exactly +0.0
+                    // and nothing a previous lane checkout wrote survives.
+                    kt.fill(0.0);
+                    vt.fill(0.0);
+                }
+                let lo = old_len.max(j * block);
+                let hi = new_len.min((j + 1) * block);
+                for p in lo..hi {
+                    let s = p - q0;
+                    let pc = p - j * block;
+                    for r in 0..block {
+                        kt[r * block + pc] = k_src[src_base + src.elem_index(s, c0 + r)];
+                    }
+                    let vrow = pc * block;
+                    for c in 0..block {
+                        vt[vrow + c] = v_src[src_base + src.elem_index(s, c0 + c)];
+                    }
+                }
+            }
+        }
+    })
+}
+
 /// Pooled blocked f32 GEMM: bitwise identical to [`native::gemm_f32`]
 /// for any pool width (each output tile is reduced over `p` in the
 /// serial order by exactly one worker). A 1-worker pool runs the serial
@@ -1215,6 +1328,56 @@ pub fn masked_softmax(
         return native::masked_softmax(x, mask, scale, rows, cols, block);
     }
     masked_softmax_pooled(x, mask, scale, rows, cols, block, &WorkerPool::new(cores)?)
+}
+
+/// Pooled causal softmax over the stacked per-head score stripes of a
+/// decoder step: bitwise identical to [`native::causal_softmax`] for any
+/// pool width. Unlike the other row-wise kernels this cannot ride on the
+/// generic row partitioner — each row's visible column count depends on
+/// its **global** row index (absolute query position `q0 + r` within its
+/// head), which the offset-blind sub-chunk would lose. The work units
+/// are therefore the block-rows of the stacked `heads·qrows × cols`
+/// buffer; each unit recovers its head and query position from its
+/// global block-row index and runs the shared serial pass
+/// ([`native::causal_softmax_block_row`]) over its own contiguous span.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn causal_softmax_pooled(
+    x: &mut [f32],
+    scale: f32,
+    heads: usize,
+    qrows: usize,
+    cols: usize,
+    block: usize,
+    q0: usize,
+    len: usize,
+    pool: &WorkerPool,
+) -> Result<()> {
+    if pool.workers() <= 1 {
+        return native::causal_softmax(x, scale, heads, qrows, cols, block, q0, len);
+    }
+    ensure!(heads >= 1, "causal softmax needs at least one head");
+    ensure!(qrows > 0 && qrows % block == 0, "qrows {qrows} not a positive multiple of block {block}");
+    native::check_rowwise(x.len(), heads * qrows, cols, block)?;
+    ensure!(len <= cols, "causal length {len} exceeds the {cols} score columns");
+    let chunk_elems = block * cols;
+    let nchunks = heads * qrows / block;
+    let rows_per_head = qrows / block;
+    let workers = pool.workers();
+    let shared = SharedSlice::new(x);
+    pool.run(&|w| {
+        for j in chunk_range(nchunks, workers, w) {
+            // SAFETY: block-row `j` of the stacked stripes is the
+            // contiguous span `j·block·cols..(j+1)·block·cols`, and
+            // `chunk_range` assigns each block-row index to exactly one
+            // worker — spans are disjoint across workers.
+            let chunk = unsafe { shared.range_mut(j * chunk_elems..(j + 1) * chunk_elems) };
+            // A block-row never straddles heads (`qrows % block == 0`),
+            // so the chunk's first row sits at query position
+            // `q0 + (block-row index within its head) · block`.
+            let qpos0 = q0 + (j % rows_per_head) * block;
+            native::causal_softmax_block_row(chunk, cols, block, scale, qpos0, len);
+        }
+    })
 }
 
 /// Pooled fused residual add + LayerNorm: bitwise identical to

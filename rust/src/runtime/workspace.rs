@@ -40,6 +40,19 @@
 //! residual/norm/softmax spine and the dequantized GEMM outputs. f32
 //! models leave them empty.
 //!
+//! A **decoder** model ([`EncoderWorkspace::new_decoder`]) sizes the
+//! scratch arenas by `max_context` instead of `seq` (a decode step or
+//! prefill works on a *prefix* of each arena), drops `kt` (the KV append
+//! kernel writes keys transposed, so no transpose phase or buffer
+//! exists), and adds the persistent KV cache: `kv_k` and `kv_v`, each
+//! `layers·d_model·max_context` f32 elements, holding every layer's
+//! packed per-head K (transposed, chunked by key-position block) and V
+//! for all positions `0..kv_len`. The cache is pre-sized to the maximum
+//! context at construction — the one way a *growing* per-step state
+//! coexists with the `steady_allocs = 0` contract. Total:
+//! `6·ctx·d_model + heads·ctx² + ctx·d_ff + 2·layers·d_model·ctx`
+//! (see `DESIGN.md` "Decoding & the KV-cache lifetime").
+//!
 //! ## Ping-pong across layers
 //!
 //! A layer reads `x` and leaves its result in `out`; the internal
@@ -93,6 +106,19 @@ pub struct EncoderWorkspace {
     pub(crate) scores: Vec<f32>,
     /// FFN hidden activations (`seq·d_ff`).
     pub(crate) hid: Vec<f32>,
+    /// Decoder KV cache, key half (`layers·d_model·max_context`; empty
+    /// for non-decoder models): per layer, per head, the transposed keys
+    /// of positions `0..kv_len`, stored as `max_context/block` packed
+    /// `d_head × block` chunks so a key append is a column scatter and
+    /// the QKᵀ step consumes chunks directly.
+    pub(crate) kv_k: Vec<f32>,
+    /// Decoder KV cache, value half (`layers·d_model·max_context`; empty
+    /// for non-decoder models): per layer, per head, a packed
+    /// `max_context × d_head` matrix whose first `kv_len` rows are live.
+    pub(crate) kv_v: Vec<f32>,
+    /// Number of positions currently resident in the KV cache (all
+    /// layers advance in lockstep). Reset on session begin / prefill.
+    pub(crate) kv_len: usize,
     /// Quantized layer input / Add-Norm-1 output (`seq·d_model` i8;
     /// empty for f32 models — as are all `*q` arenas below).
     pub(crate) xq: Vec<i8>,
@@ -140,6 +166,9 @@ impl EncoderWorkspace {
             kt: vec![0.0; sd],
             scores: vec![0.0; heads * seq * seq],
             hid: vec![0.0; seq * d_ff],
+            kv_k: Vec::new(),
+            kv_v: Vec::new(),
+            kv_len: 0,
             xq: Vec::new(),
             qkvq: Vec::new(),
             ktq: Vec::new(),
@@ -188,6 +217,55 @@ impl EncoderWorkspace {
             kt: Vec::new(),
             scores: Vec::new(),
             hid: vec![0.0; seq * d_ff],
+            kv_k: Vec::new(),
+            kv_v: Vec::new(),
+            kv_len: 0,
+            xq: Vec::new(),
+            qkvq: Vec::new(),
+            ktq: Vec::new(),
+            scoresq: Vec::new(),
+            hcq: Vec::new(),
+            hidq: Vec::new(),
+        }
+    }
+
+    /// Workspace for a causal decoder stack: scratch arenas sized by
+    /// `max_context` (prefill and decode steps work on block-aligned
+    /// *prefixes*), no `kt` (the KV append writes keys pre-transposed),
+    /// and the persistent per-layer KV cache pre-sized to the maximum
+    /// context so a warm decode step never allocates.
+    pub fn new_decoder(
+        max_context: usize,
+        d_model: usize,
+        heads: usize,
+        d_ff: usize,
+        layers: usize,
+        block: usize,
+    ) -> Self {
+        debug_assert!(
+            block > 0
+                && heads > 0
+                && layers > 0
+                && max_context % block == 0
+                && d_model % block == 0
+                && d_model % heads == 0
+                && (d_model / heads) % block == 0
+                && d_ff % block == 0,
+            "workspace dims ctx={max_context}/d_model={d_model}/heads={heads}/d_ff={d_ff} vs block {block}"
+        );
+        let cd = max_context * d_model;
+        Self {
+            x: vec![0.0; cd],
+            hc: vec![0.0; cd],
+            proj: vec![0.0; cd],
+            out: vec![0.0; cd],
+            qkv: vec![0.0; 3 * cd],
+            kt: Vec::new(),
+            scores: vec![0.0; heads * max_context * max_context],
+            hid: vec![0.0; max_context * d_ff],
+            kv_k: vec![0.0; layers * cd],
+            kv_v: vec![0.0; layers * cd],
+            kv_len: 0,
             xq: Vec::new(),
             qkvq: Vec::new(),
             ktq: Vec::new(),
@@ -207,6 +285,8 @@ impl EncoderWorkspace {
             + self.kt.len()
             + self.scores.len()
             + self.hid.len()
+            + self.kv_k.len()
+            + self.kv_v.len()
     }
 
     /// Total i8 elements held (the quantized-operand footprint; 0 for
@@ -234,6 +314,9 @@ impl EncoderWorkspace {
     /// loudly through any read); i8 arenas have no NaN, so they get
     /// `i8::MIN` — a value the requantize passes never produce (outputs
     /// are clamped to ±127), making any stale read corrupt the result.
+    /// The decoder KV cache is poisoned too: a decode session must
+    /// depend only on the cache rows *it* appended, never on rows a
+    /// previous checkout of the same lane left behind.
     pub(crate) fn poison(&mut self) {
         for buf in [
             &mut self.x,
@@ -244,6 +327,8 @@ impl EncoderWorkspace {
             &mut self.kt,
             &mut self.scores,
             &mut self.hid,
+            &mut self.kv_k,
+            &mut self.kv_v,
         ] {
             buf.fill(f32::NAN);
         }
@@ -346,6 +431,29 @@ mod tests {
         // Q|K|V (3·s·d), Kᵀ (s·d), concatenated heads (s·d), probs
         // (h·s²), FFN hidden (s·d_ff).
         assert_eq!(ws.total_i8(), 6 * s * d + h * s * s + s * f);
+    }
+
+    #[test]
+    fn decoder_sizing_adds_the_kv_cache_and_drops_kt() {
+        let (ctx, d, h, f, l, b) = (128usize, 32usize, 2usize, 64usize, 2usize, 16usize);
+        let ws = EncoderWorkspace::new_decoder(ctx, d, h, f, l, b);
+        // 6 scratch arenas sized by ctx (x/hc/proj/out + 3·qkv, no kt)
+        // plus the per-layer K and V cache halves.
+        assert_eq!(
+            ws.total_f32(),
+            6 * ctx * d + h * ctx * ctx + ctx * f + 2 * l * ctx * d
+        );
+        assert!(ws.kt.is_empty(), "the decoder has no transpose phase");
+        assert_eq!(ws.total_i8(), 0);
+        assert_eq!(ws.kv_len, 0);
+    }
+
+    #[test]
+    fn poison_covers_the_kv_cache() {
+        let mut ws = EncoderWorkspace::new_decoder(64, 16, 1, 32, 2, 16);
+        ws.poison();
+        assert!(ws.kv_k.iter().all(|v| v.is_nan()));
+        assert!(ws.kv_v.iter().all(|v| v.is_nan()));
     }
 
     #[test]

@@ -18,10 +18,15 @@
 //! ISSUE 7 extends it to the continuous-batching entry points: the
 //! per-sequence lane forwards the scheduler refills from the admission
 //! queue must also run allocation-free once their lane exists.
+//!
+//! ISSUE 9 extends it to generative decoding: a warm per-token decode
+//! step — including the KV-cache append into the lane's BWMA-packed
+//! arenas — allocates nothing and spawns nothing, and no stale K/V rows
+//! survive between checked-out sessions.
 
 use std::sync::{Mutex, MutexGuard};
 
-use bwma::runtime::{NativeModel, Tensor};
+use bwma::runtime::{NativeModel, Tensor, WorkerPool};
 use bwma::util::alloc::{heap_allocs_total, CountingAllocator};
 use bwma::util::XorShift64;
 
@@ -229,6 +234,108 @@ fn warm_continuous_lane_forwards_perform_zero_heap_allocations() {
     }
     let allocs = heap_allocs_total() - before;
     assert_eq!(allocs, 0, "warm continuous-lane forwards must not allocate (saw {allocs})");
+}
+
+/// ISSUE 9: a warm decode step — one token through every causal layer,
+/// its K/V appended into the lane's BWMA-packed cache — allocates
+/// nothing and spawns nothing. The session's lane plus the persistent
+/// pool hold every byte the step touches.
+#[test]
+fn warm_decode_step_performs_zero_allocations_and_spawns() {
+    let _g = counter_lock();
+    let model = NativeModel::new_decoder(4, 32, 2, 64, 2, 16, 128, 0xA120)
+        .unwrap()
+        .with_cores(test_cores())
+        .unwrap();
+    let d = 32;
+    let mut rng = XorShift64::new(0xA121);
+    let prompt = rand_vec(&mut rng, 4 * d);
+    let token = rand_vec(&mut rng, d);
+    let mut out = vec![0.0f32; 4 * d];
+    let mut step_out = vec![0.0f32; d];
+    let mut sess = model.begin_decode().unwrap();
+    model.prefill_into(&mut sess, &prompt, 4, &mut out).unwrap();
+    // Warm-up steps: fault the cache pages, exercise first-use paths.
+    for _ in 0..3 {
+        model.decode_step_into(&mut sess, &token, &mut step_out).unwrap();
+    }
+    let before_allocs = heap_allocs_total();
+    let before_spawns = WorkerPool::threads_spawned_total();
+    for _ in 0..100 {
+        model.decode_step_into(&mut sess, &token, &mut step_out).unwrap();
+    }
+    let allocs = heap_allocs_total() - before_allocs;
+    let spawns = WorkerPool::threads_spawned_total() - before_spawns;
+    assert_eq!(sess.len(), 107);
+    assert_eq!(allocs, 0, "100 warm decode steps must not allocate (saw {allocs})");
+    assert_eq!(spawns, 0, "decode steps must run on the persistent pool (saw {spawns} spawns)");
+    model.end_decode(sess);
+}
+
+/// ISSUE 9: warm prefills share the contract — resetting a session and
+/// re-running the prompt reuses the same lane arenas end to end.
+#[test]
+fn warm_prefill_performs_zero_heap_allocations() {
+    let _g = counter_lock();
+    let model = NativeModel::new_decoder(32, 32, 2, 64, 2, 16, 64, 0xA124)
+        .unwrap()
+        .with_cores(test_cores())
+        .unwrap();
+    let mut rng = XorShift64::new(0xA125);
+    let x = rand_vec(&mut rng, 32 * 32);
+    let mut out = vec![0.0f32; 32 * 32];
+    let mut sess = model.begin_decode().unwrap();
+    for _ in 0..3 {
+        model.prefill_into(&mut sess, &x, 32, &mut out).unwrap();
+    }
+    let expect = out.clone();
+    let before = heap_allocs_total();
+    for i in 0..100 {
+        model.prefill_into(&mut sess, &x, 32, &mut out).unwrap();
+        assert_eq!(out, expect, "prefill iteration {i} drifted");
+    }
+    let allocs = heap_allocs_total() - before;
+    assert_eq!(allocs, 0, "100 warm prefills must not allocate (saw {allocs})");
+    model.end_decode(sess);
+}
+
+/// ISSUE 9: no stale K/V rows leak between checked-out sequences — a
+/// lane that served one session, then got NaN-poisoned, must produce
+/// bit-identical outputs for the next session, because every cached row
+/// is re-appended (its packing tile zero-filled on open) before any
+/// read.
+#[test]
+fn poisoned_kv_cache_does_not_leak_between_sessions() {
+    let _g = counter_lock();
+    let model = NativeModel::new_decoder(8, 32, 2, 64, 2, 16, 64, 0xA122)
+        .unwrap()
+        .with_cores(test_cores())
+        .unwrap();
+    let d = 32;
+    let mut rng = XorShift64::new(0xA123);
+    let xa = rand_vec(&mut rng, 8 * d);
+    let xb = rand_vec(&mut rng, 8 * d);
+    let decode = |x: &[f32]| {
+        let mut sess = model.begin_decode().unwrap();
+        let mut out = vec![0.0f32; 8 * d];
+        for i in 0..8 {
+            let (lo, hi) = (i * d, (i + 1) * d);
+            model.decode_step_into(&mut sess, &x[lo..hi], &mut out[lo..hi]).unwrap();
+        }
+        model.end_decode(sess);
+        out
+    };
+    let expect = decode(&xb);
+    assert!(expect.iter().all(|v| v.is_finite()), "baseline must be clean");
+    for round in 0..3 {
+        let _ = decode(&xa); // session A leaves its history in the lane
+        model.poison_workspaces(); // ...which is then NaN-poisoned...
+        let got = decode(&xb); // ...and session B must see neither
+        assert!(
+            got.iter().zip(&expect).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "round {round}: stale or poisoned K/V leaked between sessions"
+        );
+    }
 }
 
 /// Stale-data contract: poisoning every free lane with NaN between

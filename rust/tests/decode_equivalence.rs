@@ -1,0 +1,374 @@
+//! Generative-decoding equivalence wall: incremental decode through the
+//! BWMA-packed KV cache must be **bitwise identical** to a full causal
+//! recompute over the same prefix — the cache is provably lossless (see
+//! DESIGN.md "Decoding & the KV-cache lifetime") — and serial == pooled
+//! at every tested core count. The suite pins:
+//!
+//! * token-by-token decode == single causal forward, t ∈
+//!   {1, B−1, B, B+1, 2B+3} (block-boundary crossings), cores ∈
+//!   {1, 2, 3, 8};
+//! * prefill-then-step sessions at arbitrary split points (property
+//!   test over random context lengths);
+//! * degenerate skinny shapes (seq = 1, heads > cores, single-block
+//!   grids) that exercise `chunk_range` with fewer units than workers;
+//! * lane poisoning between sessions — no stale K/V rows leak;
+//! * the decoder served through the dynamic batcher;
+//! * typed rejections for bad configs and context overflow;
+//! * the four `bwma verify` causal tags.
+//!
+//! `BWMA_TEST_CORES` (CI matrix: 1 and 4) picks the pool width for the
+//! served-model and verify-tag tests, mirroring `encoder_equivalence.rs`.
+
+use std::collections::BTreeMap;
+
+use bwma::coordinator::server::BatchRunner;
+use bwma::coordinator::{Server, ServerConfig};
+use bwma::runtime::{DecoderSession, NativeModel, Tensor};
+use bwma::util::proptest::check;
+use bwma::util::XorShift64;
+
+/// Pool width for the served-model test (CI matrix runs 1 and 4).
+fn test_cores() -> usize {
+    std::env::var("BWMA_TEST_CORES").ok().and_then(|v| v.parse().ok()).unwrap_or(4)
+}
+
+fn rand_vec(rng: &mut XorShift64, n: usize) -> Vec<f32> {
+    let mut v = vec![0.0f32; n];
+    rng.fill_f32(&mut v);
+    v
+}
+
+fn assert_bits_eq(serial: &[f32], parallel: &[f32], what: &str) {
+    assert_eq!(serial.len(), parallel.len(), "{what}: length");
+    for (i, (s, p)) in serial.iter().zip(parallel).enumerate() {
+        assert_eq!(
+            s.to_bits(),
+            p.to_bits(),
+            "{what}: byte divergence at element {i} ({s:?} vs {p:?})"
+        );
+    }
+}
+
+/// A small 2-layer decoder: `d_model = 2b`, 2 heads (so `d_head = b`),
+/// `d_ff = 2b`.
+fn small_decoder(seq: usize, b: usize, max_context: usize, seed: u64) -> NativeModel {
+    NativeModel::new_decoder(seq, 2 * b, 2, 2 * b, 2, b, max_context, seed).unwrap()
+}
+
+/// Run a full token-by-token decode session over `t` rows of `x`,
+/// returning the concatenated per-step outputs.
+fn decode_all(model: &NativeModel, x: &[f32], t: usize, d: usize) -> Vec<f32> {
+    let mut sess: DecoderSession = model.begin_decode().unwrap();
+    assert!(sess.is_empty());
+    let mut out = vec![0.0f32; t * d];
+    for i in 0..t {
+        let (lo, hi) = (i * d, (i + 1) * d);
+        model.decode_step_into(&mut sess, &x[lo..hi], &mut out[lo..hi]).unwrap();
+        assert_eq!(sess.len(), i + 1);
+    }
+    model.end_decode(sess);
+    out
+}
+
+/// The tentpole invariant at the exact context lengths the issue names:
+/// incremental decode over `t` steps is **bitwise identical** to one
+/// causal forward over the full `t`-token prefix, for t crossing every
+/// block-boundary flavor, at cores ∈ {1, 2, 3, 8} — and a mixed
+/// prefill-then-step session lands on the same bits.
+#[test]
+fn incremental_decode_is_bitwise_identical_to_full_recompute() {
+    for b in [8usize, 16] {
+        let (ctx, d) = (4 * b, 2 * b);
+        for t in [1usize, b - 1, b, b + 1, 2 * b + 3] {
+            let model = small_decoder(t, b, ctx, 0xDE01 ^ ((b as u64) << 8) ^ t as u64);
+            let mut rng = XorShift64::new(0xDE02 + t as u64);
+            let x = rand_vec(&mut rng, t * d);
+            let full = model.forward_with_cores(&Tensor::new(vec![t, d], x.clone()), 1).unwrap();
+            for cores in [1usize, 2, 3, 8] {
+                let mc = model.clone().with_cores(cores).unwrap();
+                let stepped = decode_all(&mc, &x, t, d);
+                assert_bits_eq(&full.data, &stepped, &format!("b{b} t{t} cores{cores} stepped"));
+
+                // Prefill a prefix, then step the rest of the sequence.
+                let t0 = t.div_ceil(2);
+                let mut sess = mc.begin_decode().unwrap();
+                let mut out = vec![0.0f32; t * d];
+                mc.prefill_into(&mut sess, &x[..t0 * d], t0, &mut out[..t0 * d]).unwrap();
+                assert_eq!(sess.len(), t0);
+                for i in t0..t {
+                    let (lo, hi) = (i * d, (i + 1) * d);
+                    mc.decode_step_into(&mut sess, &x[lo..hi], &mut out[lo..hi]).unwrap();
+                }
+                assert_eq!(sess.len(), t);
+                mc.end_decode(sess);
+                assert_bits_eq(&full.data, &out, &format!("b{b} t{t} cores{cores} prefill@{t0}"));
+            }
+        }
+    }
+}
+
+/// Property version: random context lengths (uniform over 1..=4B, so
+/// every block-boundary crossing shows up) and a random prefill/step
+/// split point must still reproduce the full recompute bitwise.
+#[test]
+fn prop_decode_sessions_match_full_recompute_across_block_boundaries() {
+    check("decode-incremental-vs-full", 6, |rng| {
+        let b = *rng.pick(&[8usize, 16]);
+        let (ctx, d) = (4 * b, 2 * b);
+        let t = rng.range(1, 4 * b as u64 + 1) as usize;
+        let model = small_decoder(t, b, ctx, rng.next_u64());
+        let x = rand_vec(rng, t * d);
+        let full = model.forward_with_cores(&Tensor::new(vec![t, d], x.clone()), 1).unwrap();
+        let cores = *rng.pick(&[1usize, 2, 3, 8]);
+        let mc = model.clone().with_cores(cores).unwrap();
+        let stepped = decode_all(&mc, &x, t, d);
+        assert_bits_eq(&full.data, &stepped, &format!("b{b} t{t} cores{cores} stepped"));
+
+        let t0 = rng.range(1, t as u64 + 1) as usize;
+        let mut sess = mc.begin_decode().unwrap();
+        let mut out = vec![0.0f32; t * d];
+        mc.prefill_into(&mut sess, &x[..t0 * d], t0, &mut out[..t0 * d]).unwrap();
+        for i in t0..t {
+            let (lo, hi) = (i * d, (i + 1) * d);
+            mc.decode_step_into(&mut sess, &x[lo..hi], &mut out[lo..hi]).unwrap();
+        }
+        mc.end_decode(sess);
+        assert_bits_eq(&full.data, &out, &format!("b{b} t{t} cores{cores} prefill@{t0}"));
+    });
+}
+
+/// The blocked causal forward must reproduce the row-major causal
+/// reference within tolerance, over random decoder shapes.
+#[test]
+fn prop_decoder_blocked_matches_reference() {
+    check("decoder-blocked-vs-reference", 8, |rng| {
+        let b = *rng.pick(&[8usize, 16]);
+        let heads = rng.range(1, 4) as usize;
+        let d_model = heads * b * rng.range(1, 3) as usize;
+        let ctx = b * rng.range(2, 5) as usize;
+        let seq = rng.range(1, ctx as u64 + 1) as usize;
+        let d_ff = b * rng.range(1, 5) as usize;
+        let layers = rng.range(1, 3) as usize;
+        let model =
+            NativeModel::new_decoder(seq, d_model, heads, d_ff, layers, b, ctx, rng.next_u64())
+                .unwrap();
+        let x = Tensor::new(model.in_shape(), rand_vec(rng, seq * d_model));
+        let got = model.forward(&x).unwrap();
+        let expect = model.forward_reference(&x).unwrap();
+        assert!(
+            got.allclose(&expect, 2e-3, 2e-3),
+            "seq {seq} ctx {ctx} heads {heads} ff {d_ff} layers {layers} b{b}: max|Δ| = {:.3e}",
+            got.max_abs_diff(&expect)
+        );
+    });
+}
+
+/// Serial == pooled, bitwise, for the full causal prefill at several
+/// core counts over random shapes.
+#[test]
+fn prop_decoder_parallel_is_bitwise_serial() {
+    check("decoder-parallel-bitwise", 6, |rng| {
+        let b = *rng.pick(&[8usize, 16]);
+        let heads = rng.range(1, 3) as usize;
+        let d_model = heads * b;
+        let ctx = 4 * b;
+        let seq = rng.range(1, ctx as u64 + 1) as usize;
+        let model =
+            NativeModel::new_decoder(seq, d_model, heads, 2 * d_model, 2, b, ctx, rng.next_u64())
+                .unwrap();
+        let x = Tensor::new(model.in_shape(), rand_vec(rng, seq * d_model));
+        let serial = model.forward_with_cores(&x, 1).unwrap();
+        for cores in [2usize, 3, 8] {
+            let par = model.forward_with_cores(&x, cores).unwrap();
+            assert_eq!(serial.shape, par.shape);
+            assert_bits_eq(&serial.data, &par.data, &format!("decoder seq{seq} b{b} cores{cores}"));
+        }
+    });
+}
+
+/// Skinny-regime regression: the decode step hands the partitioners far
+/// fewer units than workers (seq = 1 prefills, single-block score
+/// grids, heads ≫ cores' worth of GEMV-shaped tasks). `chunk_range`
+/// hands the surplus workers empty chunks — nothing may panic, and the
+/// bits must still match serial and the reference.
+#[test]
+fn degenerate_skinny_shapes_stay_panic_free_and_bitwise() {
+    // (seq, heads, ff_blocks): single real row in a padded block-row;
+    // more heads than any tested pool width; single-block-column FFN.
+    for (seq, heads, ff_blocks) in [(1usize, 8usize, 1usize), (1, 2, 1), (3, 8, 2)] {
+        let b = 8;
+        let d = heads * b;
+        let model =
+            NativeModel::new_decoder(seq, d, heads, ff_blocks * b, 1, b, 4 * b, 0xD36E).unwrap();
+        let mut rng = XorShift64::new(0xD36F + seq as u64);
+        let x = Tensor::new(model.in_shape(), rand_vec(&mut rng, seq * d));
+        let expect = model.forward_reference(&x).unwrap();
+        let serial = model.forward_with_cores(&x, 1).unwrap();
+        assert!(
+            serial.allclose(&expect, 2e-3, 2e-3),
+            "seq {seq} heads {heads}: max|Δ| = {:.3e}",
+            serial.max_abs_diff(&expect)
+        );
+        for cores in [2usize, 3, 8, 16] {
+            let par = model.forward_with_cores(&x, cores).unwrap();
+            assert_bits_eq(
+                &serial.data,
+                &par.data,
+                &format!("skinny seq{seq} heads{heads} cores{cores}"),
+            );
+            // And the per-token session at the same width.
+            let mc = model.clone().with_cores(cores).unwrap();
+            let stepped = decode_all(&mc, &x.data, seq, d);
+            assert_bits_eq(
+                &serial.data,
+                &stepped,
+                &format!("skinny stepped seq{seq} heads{heads} cores{cores}"),
+            );
+        }
+    }
+}
+
+/// Stale-KV contract: a finished session's K/V rows, then a full NaN
+/// poison of every lane (KV arenas included), must leave the next
+/// session's outputs bitwise identical to a cold model's — at every
+/// tested core count (see `tests/alloc_steady_state.rs` for the
+/// allocation side of the same discipline).
+#[test]
+fn poisoned_lanes_leak_no_stale_kv_between_sessions() {
+    let b = 16;
+    let (t, d) = (2 * b + 3, 2 * b);
+    let model = small_decoder(t, b, 4 * b, 0xDEAF);
+    let mut rng = XorShift64::new(0xDEB0);
+    let xa = rand_vec(&mut rng, t * d);
+    let xb = rand_vec(&mut rng, t * d);
+    let golden = model.forward_with_cores(&Tensor::new(vec![t, d], xb.clone()), 1).unwrap();
+    for cores in [1usize, 2, 3, 8] {
+        let mc = model.clone().with_cores(cores).unwrap();
+        // Session A fills the lane's KV arenas with its own history...
+        let _ = decode_all(&mc, &xa, t, d);
+        // ...then everything checked in is poisoned with NaN...
+        mc.poison_workspaces();
+        // ...and session B must neither see A's rows nor the poison.
+        let got = decode_all(&mc, &xb, t, d);
+        assert_bits_eq(&golden.data, &got, &format!("poisoned KV lane, cores {cores}"));
+        assert!(got.iter().all(|v| v.is_finite()), "NaN leaked at cores {cores}");
+    }
+}
+
+/// A decoder model served through the dynamic batcher: each response is
+/// one causal prefill of its own sequence — reference numerics within
+/// tolerance, and bitwise identical to the local serial forward.
+#[test]
+fn decoder_serves_correct_numerics_through_the_batcher() {
+    let model = std::sync::Arc::new(
+        NativeModel::new_decoder(32, 32, 2, 64, 2, 16, 64, 0x5EDE)
+            .unwrap()
+            .with_cores(test_cores())
+            .unwrap(),
+    );
+    let in_shape = model.in_shape();
+    let out_shape = model.out_shape();
+    let model2 = model.clone();
+    let in_shape2 = in_shape.clone();
+    let server = Server::start(ServerConfig { max_batch: 4, ..Default::default() }, move || {
+        let mut variants: BTreeMap<usize, Box<dyn BatchRunner>> = BTreeMap::new();
+        for bsz in [1usize, 2, 4] {
+            variants.insert(bsz, Box::new(model2.clone()));
+        }
+        Ok((variants, in_shape2, out_shape))
+    })
+    .unwrap();
+
+    let mut rng = XorShift64::new(0x5EDF);
+    let inputs: Vec<Tensor> =
+        (0..7).map(|_| Tensor::new(in_shape.clone(), rand_vec(&mut rng, 32 * 32))).collect();
+    let rxs: Vec<_> = inputs.iter().map(|x| server.submit(x.clone())).collect();
+    for (i, (rx, x)) in rxs.into_iter().zip(&inputs).enumerate() {
+        let resp = rx.recv().unwrap().unwrap();
+        let expect = model.forward_reference(x).unwrap();
+        assert!(
+            resp.output.allclose(&expect, 2e-3, 2e-3),
+            "request {i}: served decoder numerics diverge (max|Δ| = {:.3e})",
+            resp.output.max_abs_diff(&expect)
+        );
+        let blocked = model.forward_with_cores(x, 1).unwrap();
+        assert_bits_eq(&blocked.data, &resp.output.data, &format!("request {i} vs serial"));
+    }
+    let metrics = server.shutdown().unwrap();
+    assert_eq!(metrics.requests, 7);
+    assert_eq!(metrics.rejected, 0);
+}
+
+/// Typed rejections at the model boundary, mirroring the cores=0
+/// convention: bad `--max-context`, undersized head dims, oversized
+/// serving length, and encoder-only affordances on a decoder (and vice
+/// versa) all fail with messages that name the offending knob.
+#[test]
+fn decoder_rejects_bad_configs_with_typed_errors() {
+    let e = NativeModel::new_decoder(8, 32, 2, 64, 1, 16, 0, 1).unwrap_err().to_string();
+    assert!(e.contains("positive multiple of block"), "max_context=0: {e}");
+    let e = NativeModel::new_decoder(8, 32, 2, 64, 1, 16, 100, 1).unwrap_err().to_string();
+    assert!(e.contains("positive multiple of block"), "max_context=100: {e}");
+    let e = NativeModel::new_decoder(80, 32, 2, 64, 1, 16, 64, 1).unwrap_err().to_string();
+    assert!(e.contains("outside 1..=max-context"), "seq>ctx: {e}");
+    // d_head = 8 < block = 16.
+    let e = NativeModel::new_decoder(8, 32, 4, 64, 1, 16, 64, 1).unwrap_err().to_string();
+    assert!(e.contains("not divisible by block"), "d_head<block: {e}");
+
+    let model = NativeModel::new_decoder(8, 32, 2, 64, 1, 16, 64, 1).unwrap();
+    let e = model.clone().with_mask(vec![0.0; 8]).unwrap_err().to_string();
+    assert!(e.contains("requires an encoder model"), "with_mask: {e}");
+    let x = Tensor::new(model.in_shape(), vec![0.25; 8 * 32]);
+    let e = model.forward_timed(&x, 1).unwrap_err().to_string();
+    assert!(e.contains("requires an encoder model"), "forward_timed: {e}");
+
+    let enc = NativeModel::new_encoder(16, 32, 2, 64, 1, 16, 1).unwrap();
+    let e = enc.begin_decode().unwrap_err().to_string();
+    assert!(e.contains("requires a decoder model"), "begin_decode on encoder: {e}");
+}
+
+/// Context overflow is a typed error, not UB: the step past
+/// `--max-context` is rejected *before* touching the cache, and an
+/// over-long prefill is rejected whole.
+#[test]
+fn decode_past_max_context_is_rejected_with_a_typed_error() {
+    let (b, d) = (16usize, 32usize);
+    let ctx = 2 * b;
+    let model = NativeModel::new_decoder(ctx, d, 2, 64, 1, b, ctx, 7).unwrap();
+    let x = vec![0.5f32; d];
+    let mut out = vec![0.0f32; d];
+    let mut sess = model.begin_decode().unwrap();
+    for _ in 0..ctx {
+        model.decode_step_into(&mut sess, &x, &mut out).unwrap();
+    }
+    let e = model.decode_step_into(&mut sess, &x, &mut out).unwrap_err().to_string();
+    assert!(e.contains("longer than max context"), "{e}");
+    assert_eq!(sess.len(), ctx, "the rejected step must leave the cache untouched");
+    model.end_decode(sess);
+
+    let mut sess = model.begin_decode().unwrap();
+    let xl = vec![0.5f32; (ctx + 1) * d];
+    let mut outl = vec![0.0f32; (ctx + 1) * d];
+    let e = model.prefill_into(&mut sess, &xl, ctx + 1, &mut outl).unwrap_err().to_string();
+    assert!(e.contains("longer than max context"), "{e}");
+    assert!(sess.is_empty(), "the rejected prefill must leave the cache empty");
+    model.end_decode(sess);
+}
+
+/// The causal verify tags the acceptance criteria name — and the
+/// incremental-decode tag must be *exact* (max diff 0.0), because the
+/// KV cache is bitwise lossless by construction.
+#[test]
+fn decoder_verify_tags_are_green() {
+    for tag in [
+        "native_causal_softmax_b16",
+        "native_decoder_equiv_b8",
+        "native_decoder_equiv_b16",
+        "native_decode_incremental_equiv_b16",
+    ] {
+        let c = bwma::runtime::run_native_check_with_cores(tag, test_cores()).unwrap();
+        assert!(c.ok, "{tag}: max diff {}", c.max_diff);
+    }
+    let c = bwma::runtime::run_native_check("native_decode_incremental_equiv_b16").unwrap();
+    assert_eq!(c.max_diff, 0.0, "incremental decode must exactly reproduce the full recompute");
+}

@@ -55,6 +55,10 @@ fn every_registered_verify_tag_is_spelled_in_tests() {
         "native_gemm_i8_parallel_equiv_b16",
         "native_encoder_int8_accuracy_b16",
         "native_encoder_int8_parallel_equiv_b16",
+        "native_causal_softmax_b16",
+        "native_decoder_equiv_b8",
+        "native_decoder_equiv_b16",
+        "native_decode_incremental_equiv_b16",
     ];
     assert_eq!(native_tags(), expected);
 }
