@@ -81,6 +81,24 @@ pub struct ServerMetrics {
     /// Requests shed at the admission gate because the queue-depth limit
     /// was reached (typed overload rejection, before any queueing).
     pub shed: u64,
+    /// Requests shed **after** admission because their queue wait crossed
+    /// the per-request deadline (`--deadline-ms`): answered with a typed
+    /// `ServeError::DeadlineExceeded` instead of a late execution.
+    pub deadline_shed: u64,
+    /// Times the event loop's bounded fallback wait expired with no
+    /// message (a liveness backstop, not a duty cycle: an idle server
+    /// parks on a blocking receive and leaves this at 0).
+    pub nap_timeouts: u64,
+    /// Worker threads the pool respawned after a desertion (pool
+    /// self-healing; 0 in any fault-free run).
+    pub pool_respawns: u64,
+    /// Whether the pool is running degraded (a respawn failed and every
+    /// region now executes inline at the surviving width).
+    pub pool_degraded: bool,
+    /// Workspace lanes scrubbed back into service after a quarantine
+    /// (a panicked or abandoned execution poisons its lane; the next
+    /// checkout scrubs it before reuse).
+    pub lane_scrubs: u64,
     /// Requests in flight (admitted, not yet answered) at snapshot time
     /// — the live queue-depth reading.
     pub in_flight: u64,
@@ -152,6 +170,12 @@ pub struct MetricsHub {
     failed: AtomicU64,
     rejected: AtomicU64,
     shed: AtomicU64,
+    deadline_shed: AtomicU64,
+    nap_timeouts: AtomicU64,
+    pool_respawns: AtomicU64,
+    pool_degraded: AtomicU64,
+    lane_scrubs: AtomicU64,
+    exec_nanos: AtomicU64,
     in_flight: AtomicU64,
     inner: Mutex<HubInner>,
 }
@@ -202,9 +226,50 @@ impl MetricsHub {
     /// Record one successfully served request's latency breakdown.
     pub fn record_served(&self, queue: Duration, exec: Duration) {
         self.served.fetch_add(1, Ordering::SeqCst);
+        self.exec_nanos
+            .fetch_add(u64::try_from(exec.as_nanos()).unwrap_or(u64::MAX), Ordering::SeqCst);
         let mut inner = self.lock();
         inner.queue_samples.push(queue);
         inner.exec_samples.push(exec);
+    }
+
+    /// Record one admitted request answered with a deadline rejection
+    /// instead of an execution (its queue wait crossed `--deadline-ms`).
+    pub fn record_deadline_shed(&self) {
+        self.deadline_shed.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// Record one expiry of the event loop's bounded fallback wait (the
+    /// liveness backstop behind the parked receive; see
+    /// `tests/serving_continuous.rs::idle_server_parks_instead_of_spinning`).
+    pub fn record_nap_timeout(&self) {
+        self.nap_timeouts.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// Publish the worker pool's health (respawn count + degraded flag),
+    /// refreshed by the executor after every scheduling pass.
+    pub fn set_pool_health(&self, respawns: u64, degraded: bool) {
+        self.pool_respawns.store(respawns, Ordering::SeqCst);
+        self.pool_degraded.store(u64::from(degraded), Ordering::SeqCst);
+    }
+
+    /// Publish the cumulative lane-scrub count from the workspace pools.
+    pub fn set_lane_scrubs(&self, scrubs: u64) {
+        self.lane_scrubs.store(scrubs, Ordering::SeqCst);
+    }
+
+    /// How long a shed client should wait before retrying: the mean
+    /// successful execution time so far, clamped to [100 µs, 100 ms]
+    /// (1 ms before any request completed). Attached to
+    /// `ServeError::Overloaded` so backoff tracks the actual service
+    /// rate instead of a hard-coded constant.
+    pub fn retry_after_hint(&self) -> Duration {
+        let served = self.served.load(Ordering::SeqCst);
+        if served == 0 {
+            return Duration::from_millis(1);
+        }
+        let mean = self.exec_nanos.load(Ordering::SeqCst) / served;
+        Duration::from_nanos(mean.clamp(100_000, 100_000_000))
     }
 
     /// Record `n` requests whose model execution failed (kept out of the
@@ -228,6 +293,11 @@ impl MetricsHub {
             failed: self.failed.load(Ordering::SeqCst),
             rejected: self.rejected.load(Ordering::SeqCst),
             shed: self.shed.load(Ordering::SeqCst),
+            deadline_shed: self.deadline_shed.load(Ordering::SeqCst),
+            nap_timeouts: self.nap_timeouts.load(Ordering::SeqCst),
+            pool_respawns: self.pool_respawns.load(Ordering::SeqCst),
+            pool_degraded: self.pool_degraded.load(Ordering::SeqCst) != 0,
+            lane_scrubs: self.lane_scrubs.load(Ordering::SeqCst),
             in_flight: self.in_flight.load(Ordering::SeqCst),
             batch_size_hist: inner.batch_size_hist.clone(),
             padded_size_hist: inner.padded_size_hist.clone(),
@@ -304,6 +374,39 @@ mod tests {
         assert!(!hub.try_admit(0));
         assert_eq!(hub.in_flight(), 0);
         assert_eq!(hub.snapshot().shed, 1);
+    }
+
+    #[test]
+    fn deadline_sheds_and_pool_health_surface_in_the_snapshot() {
+        let hub = MetricsHub::default();
+        hub.record_deadline_shed();
+        hub.record_deadline_shed();
+        hub.record_nap_timeout();
+        hub.set_pool_health(3, true);
+        hub.set_lane_scrubs(5);
+        let m = hub.snapshot();
+        assert_eq!(m.deadline_shed, 2);
+        assert_eq!(m.nap_timeouts, 1);
+        assert_eq!(m.pool_respawns, 3);
+        assert!(m.pool_degraded);
+        assert_eq!(m.lane_scrubs, 5);
+        hub.set_pool_health(3, false);
+        assert!(!hub.snapshot().pool_degraded, "health is a live gauge, not a latch");
+    }
+
+    #[test]
+    fn retry_after_tracks_the_mean_exec_time_within_clamps() {
+        let hub = MetricsHub::default();
+        assert_eq!(hub.retry_after_hint(), Duration::from_millis(1), "cold default");
+        hub.record_served(Duration::ZERO, Duration::from_millis(4));
+        hub.record_served(Duration::ZERO, Duration::from_millis(8));
+        assert_eq!(hub.retry_after_hint(), Duration::from_millis(6), "mean exec");
+        let fast = MetricsHub::default();
+        fast.record_served(Duration::ZERO, Duration::from_nanos(10));
+        assert_eq!(fast.retry_after_hint(), Duration::from_micros(100), "floor clamp");
+        let slow = MetricsHub::default();
+        slow.record_served(Duration::ZERO, Duration::from_secs(9));
+        assert_eq!(slow.retry_after_hint(), Duration::from_millis(100), "ceiling clamp");
     }
 
     #[test]

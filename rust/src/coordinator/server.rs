@@ -144,22 +144,68 @@ impl BatchRunner for WithParams {
     }
 }
 
-/// Typed admission rejection: returned by [`ServerHandle::try_submit`]
-/// *before* the request is queued, so an overloaded server answers in
-/// constant time instead of growing its backlog.
+/// Typed serving rejections, classified for **retryability**.
+///
+/// The retryability contract: an `Err` answer that downcasts to
+/// `ServeError` (`err.downcast_ref::<ServeError>()`) is a *transient
+/// server state* — overload or queueing delay — and
+/// [`Self::is_retryable`] returns `true`; the same request may be
+/// resubmitted unchanged (after [`Self::retry_after`], when the variant
+/// carries a hint). An error that does **not** downcast to `ServeError`
+/// is a malformed request or a model failure: resubmitting it unchanged
+/// will fail again, so it must not be blindly retried.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum ServeError {
     /// The admission gate is full: `in_flight` requests already hold the
     /// server's `limit` (= [`ServerConfig::queue_depth`]) slots.
-    Overloaded { in_flight: usize, limit: usize },
+    /// Returned by [`ServerHandle::try_submit`] *before* the request is
+    /// queued, so an overloaded server answers in constant time instead
+    /// of growing its backlog. `retry_after` is the server's live
+    /// backoff hint (its mean execution time so far, clamped — see
+    /// [`MetricsHub::retry_after_hint`]).
+    Overloaded { in_flight: usize, limit: usize, retry_after: Duration },
+    /// The request was admitted but sat queued past the server's
+    /// per-request deadline ([`ServerConfig::deadline`], `--deadline-ms`)
+    /// and was shed instead of executed late — the answer a latency-bound
+    /// client no longer wants is never computed.
+    DeadlineExceeded { waited: Duration, deadline: Duration },
+}
+
+impl ServeError {
+    /// Whether the client may resubmit the same request unchanged. True
+    /// for every `ServeError` variant (they all describe transient load
+    /// states); the discriminating power is against errors that do *not*
+    /// downcast to `ServeError` — see the type-level contract above.
+    pub fn is_retryable(&self) -> bool {
+        match self {
+            ServeError::Overloaded { .. } | ServeError::DeadlineExceeded { .. } => true,
+        }
+    }
+
+    /// Suggested backoff before retrying. `Some` on admission overload
+    /// (the server knows its service rate); `None` on a deadline shed,
+    /// where the sensible reaction is the client's own deadline policy,
+    /// not a server-paced wait.
+    pub fn retry_after(&self) -> Option<Duration> {
+        match self {
+            ServeError::Overloaded { retry_after, .. } => Some(*retry_after),
+            ServeError::DeadlineExceeded { .. } => None,
+        }
+    }
 }
 
 impl std::fmt::Display for ServeError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
-            ServeError::Overloaded { in_flight, limit } => write!(
+            ServeError::Overloaded { in_flight, limit, retry_after } => write!(
                 f,
-                "server overloaded: {in_flight} requests in flight at queue depth limit {limit}"
+                "server overloaded: {in_flight} requests in flight at queue depth limit {limit} \
+                 (retry after {retry_after:?})"
+            ),
+            ServeError::DeadlineExceeded { waited, deadline } => write!(
+                f,
+                "deadline exceeded: request waited {waited:?} in queue, past its {deadline:?} \
+                 deadline"
             ),
         }
     }
@@ -180,11 +226,22 @@ pub struct ServerConfig {
     /// (queued + executing) before submits shed with
     /// [`ServeError::Overloaded`]. Applies to both engines.
     pub queue_depth: usize,
+    /// Per-request deadline (`--deadline-ms`): an admitted request whose
+    /// queue wait crosses this is answered with a typed
+    /// [`ServeError::DeadlineExceeded`] instead of executed late.
+    /// `None` (the default) disables deadline shedding. Applies to both
+    /// engines.
+    pub deadline: Option<Duration>,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        Self { max_batch: 8, batch_timeout: Duration::from_millis(2), queue_depth: 1024 }
+        Self {
+            max_batch: 8,
+            batch_timeout: Duration::from_millis(2),
+            queue_depth: 1024,
+            deadline: None,
+        }
     }
 }
 
@@ -210,6 +267,11 @@ pub struct Response {
 
 enum Msg {
     Req(Request),
+    /// Wake the executor's channel wait without carrying work: sent by
+    /// the continuous engine's lane that finishes the last in-flight
+    /// request, so worker 0's bounded fallback wait ([`NAP_FALLBACK`])
+    /// ends the moment the region actually has nothing left to do.
+    Nudge,
     Shutdown(mpsc::Sender<ServerMetrics>),
 }
 
@@ -245,6 +307,7 @@ impl ServerHandle {
             return Err(ServeError::Overloaded {
                 in_flight: self.hub.in_flight() as usize,
                 limit: self.queue_depth,
+                retry_after: self.hub.retry_after_hint(),
             });
         }
         let (rtx, rrx) = mpsc::channel();
@@ -323,9 +386,12 @@ impl Server {
         let (tx, rx) = mpsc::channel::<Msg>();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         let hub2 = Arc::clone(&hub);
+        // The engine keeps a sender to its own channel so a finishing
+        // lane can nudge worker 0's parked wait (see `Msg::Nudge`).
+        let tx2 = tx.clone();
         let worker = std::thread::Builder::new()
             .name("bwma-executor".into())
-            .spawn(move || continuous_loop(queue_depth, factory, rx, ready_tx, hub2))
+            .spawn(move || continuous_loop(cfg, tx2, factory, rx, ready_tx, hub2))
             .context("spawning executor")?;
         ready_rx.recv().context("executor died during init")??;
         Ok(Self { tx, hub, queue_depth, worker: Some(worker) })
@@ -399,13 +465,23 @@ fn executor_loop<F>(
         }
     };
     assert!(!variants.is_empty(), "no batch variants");
+    let req_deadline = cfg.deadline;
 
     loop {
         // Block for the first request.
         let first = match rx.recv() {
             Ok(Msg::Req(r)) => r,
+            Ok(Msg::Nudge) => continue,
             Ok(Msg::Shutdown(mtx)) => {
-                drain_at_shutdown(&variants, &in_shape, &out_shape, &rx, Vec::new(), &hub);
+                drain_at_shutdown(
+                    &variants,
+                    &in_shape,
+                    &out_shape,
+                    &rx,
+                    Vec::new(),
+                    &hub,
+                    req_deadline,
+                );
                 let _ = mtx.send(hub.snapshot());
                 return;
             }
@@ -421,8 +497,17 @@ fn executor_loop<F>(
             }
             match rx.recv_timeout(deadline - now) {
                 Ok(Msg::Req(r)) => batch.push(r),
+                Ok(Msg::Nudge) => {}
                 Ok(Msg::Shutdown(mtx)) => {
-                    drain_at_shutdown(&variants, &in_shape, &out_shape, &rx, batch, &hub);
+                    drain_at_shutdown(
+                        &variants,
+                        &in_shape,
+                        &out_shape,
+                        &rx,
+                        batch,
+                        &hub,
+                        req_deadline,
+                    );
                     let _ = mtx.send(hub.snapshot());
                     return;
                 }
@@ -430,7 +515,7 @@ fn executor_loop<F>(
                 Err(mpsc::RecvTimeoutError::Disconnected) => break,
             }
         }
-        run_batch(&variants, &in_shape, &out_shape, batch, &hub);
+        run_batch(&variants, &in_shape, &out_shape, batch, &hub, req_deadline);
     }
 }
 
@@ -446,16 +531,18 @@ fn drain_at_shutdown(
     rx: &mpsc::Receiver<Msg>,
     mut pending: Vec<Request>,
     hub: &MetricsHub,
+    deadline: Option<Duration>,
 ) {
     let mut replies = Vec::new();
     while let Ok(msg) = rx.try_recv() {
         match msg {
             Msg::Req(r) => pending.push(r),
+            Msg::Nudge => {}
             Msg::Shutdown(mtx) => replies.push(mtx),
         }
     }
     if !pending.is_empty() {
-        run_batch(variants, in_shape, out_shape, pending, hub);
+        run_batch(variants, in_shape, out_shape, pending, hub, deadline);
     }
     for mtx in replies {
         let _ = mtx.send(hub.snapshot());
@@ -469,25 +556,40 @@ fn run_batch(
     out_shape: &[usize],
     batch: Vec<Request>,
     hub: &MetricsHub,
+    deadline: Option<Duration>,
 ) {
     // Batch-assembly validation: requests are blindly concatenated below
     // (and the last one is reused as padding), so one malformed request
     // would poison or mis-pad everyone fused with it. Reject offenders
-    // individually; everyone else proceeds.
+    // individually; everyone else proceeds. Deadline shedding happens at
+    // the same gate: a request that already waited past its deadline is
+    // answered with the typed rejection instead of padding a batch no one
+    // wants.
+    let now = Instant::now();
     let mut batch: Vec<Request> = batch
         .into_iter()
         .filter_map(|r| {
-            if r.input.shape == in_shape {
-                Some(r)
-            } else {
+            if r.input.shape != in_shape {
                 hub.record_rejected();
                 hub.release();
                 let _ = r.respond.send(Err(anyhow!(
                     "request shape {:?} does not match server input shape {in_shape:?}",
                     r.input.shape
                 )));
-                None
+                return None;
             }
+            if let Some(deadline) = deadline {
+                let waited = now.duration_since(r.enqueued);
+                if waited > deadline {
+                    hub.record_deadline_shed();
+                    hub.release();
+                    let _ = r
+                        .respond
+                        .send(Err(ServeError::DeadlineExceeded { waited, deadline }.into()));
+                    return None;
+                }
+            }
+            Some(r)
         })
         .collect();
     while !batch.is_empty() {
@@ -527,8 +629,19 @@ fn run_batch(
         let mut full_out_shape = vec![size];
         full_out_shape.extend_from_slice(out_shape);
 
+        // Containment boundary: a panicking runner must fail this batch
+        // (typed, per-request) without killing the executor thread for
+        // every later submitter.
         let t0 = Instant::now();
-        let result = exe.run(input, full_out_shape);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            exe.run(input, full_out_shape)
+        }))
+        .unwrap_or_else(|p| {
+            Err(anyhow!(
+                "model execution panicked: {}",
+                crate::runtime::parallel::panic_msg(&*p)
+            ))
+        });
         let exec = t0.elapsed();
 
         match result {
@@ -570,6 +683,13 @@ fn run_batch(
 
 type Buckets = BTreeMap<usize, NativeModel>;
 
+/// Bounded liveness fallback for worker 0's parked channel wait
+/// ([`Continuous::nap`]): the wait is normally ended by a [`Msg::Nudge`]
+/// or fresh traffic, so this timeout only fires when neither arrives —
+/// each expiry is counted in `ServerMetrics::nap_timeouts`, and the
+/// idle-server test pins that an idle event loop records none.
+const NAP_FALLBACK: Duration = Duration::from_millis(20);
+
 /// Shared state of the scheduler: the admission queue plus the region
 /// lifecycle flags. Workers claim requests under the queue lock, so
 /// "queue empty and nothing in flight" is a sound region-exit test.
@@ -608,6 +728,10 @@ impl RegionState {
     }
 
     fn push(&self, r: Request) {
+        // Fault site "server:queue_push": a scheduled stall here models a
+        // slow producer path (a relaxed load and nothing else when the
+        // fault layer is disarmed).
+        crate::util::faults::stall(crate::util::faults::QUEUE_PUSH_SITE);
         self.lock_queue().push_back(r);
         self.cv.notify_one();
     }
@@ -640,10 +764,6 @@ impl RegionState {
         }
     }
 
-    fn done(&self) {
-        self.inflight.fetch_sub(1, Ordering::SeqCst);
-    }
-
     fn queued(&self) -> usize {
         self.lock_queue().len()
     }
@@ -667,15 +787,21 @@ impl Drop for LiveGuard<'_> {
 /// admission queue, one pool region whose lanes refill from the queue.
 struct Continuous {
     rx: Mutex<mpsc::Receiver<Msg>>,
+    /// Loopback sender to our own channel, used by [`Self::finish_claim`]
+    /// to nudge worker 0's parked wait. Behind a mutex only to make
+    /// `&self` Sync for the pool region (`mpsc::Sender` is `!Sync`).
+    tx: Mutex<mpsc::Sender<Msg>>,
     models: Buckets,
     d_model: usize,
     pool: Arc<WorkerPool>,
     hub: Arc<MetricsHub>,
+    deadline: Option<Duration>,
     st: RegionState,
 }
 
 fn continuous_loop<F>(
-    depth: usize,
+    cfg: ServerConfig,
+    tx: mpsc::Sender<Msg>,
     factory: F,
     rx: mpsc::Receiver<Msg>,
     ready: mpsc::Sender<Result<()>>,
@@ -683,7 +809,7 @@ fn continuous_loop<F>(
 ) where
     F: FnOnce() -> Result<Vec<NativeModel>>,
 {
-    let eng = match Continuous::build(depth, factory, rx, hub) {
+    let eng = match Continuous::build(cfg, tx, factory, rx, hub) {
         Ok(eng) => {
             let _ = ready.send(Ok(()));
             eng
@@ -698,7 +824,8 @@ fn continuous_loop<F>(
 
 impl Continuous {
     fn build<F>(
-        depth: usize,
+        cfg: ServerConfig,
+        tx: mpsc::Sender<Msg>,
         factory: F,
         rx: mpsc::Receiver<Msg>,
         hub: Arc<MetricsHub>,
@@ -706,6 +833,7 @@ impl Continuous {
     where
         F: FnOnce() -> Result<Vec<NativeModel>>,
     {
+        let depth = cfg.queue_depth;
         let list = factory()?;
         ensure!(!list.is_empty(), "continuous server needs at least one bucket model");
         let d_model = list[0].d_model;
@@ -732,11 +860,45 @@ impl Continuous {
         for m in models.values() {
             m.reserve_workspace_lanes(pool.workers());
         }
-        Ok(Self { rx: Mutex::new(rx), models, d_model, pool, hub, st: RegionState::new(depth) })
+        Ok(Self {
+            rx: Mutex::new(rx),
+            tx: Mutex::new(tx),
+            models,
+            d_model,
+            pool,
+            hub,
+            deadline: cfg.deadline,
+            st: RegionState::new(depth),
+        })
     }
 
     fn lock_rx(&self) -> MutexGuard<'_, mpsc::Receiver<Msg>> {
         self.rx.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn lock_tx(&self) -> MutexGuard<'_, mpsc::Sender<Msg>> {
+        self.tx.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Finish one claimed request. The lane that takes `inflight` to 0
+    /// while the region is live nudges worker 0's channel wait
+    /// ([`Msg::Nudge`]), so the region notices "nothing left to do"
+    /// event-driven instead of waiting out [`NAP_FALLBACK`].
+    fn finish_claim(&self) {
+        let was = self.st.inflight.fetch_sub(1, Ordering::SeqCst);
+        if was == 1 && self.st.live.load(Ordering::SeqCst) {
+            let _ = self.lock_tx().send(Msg::Nudge);
+        }
+    }
+
+    /// Refresh the health gauges in the hub: pool respawns / degraded
+    /// state and the cumulative lane-scrub count across the bucket
+    /// models' workspace pools.
+    fn record_health(&self) {
+        let scrubs: u64 = self.models.values().map(NativeModel::workspace_scrubs).sum();
+        let respawns = u64::try_from(self.pool.respawned_workers()).unwrap_or(u64::MAX);
+        self.hub.set_pool_health(respawns, self.pool.is_degraded());
+        self.hub.set_lane_scrubs(scrubs);
     }
 
     fn event_loop(&self) {
@@ -751,14 +913,16 @@ impl Continuous {
             self.handle_msg(msg);
             self.pump();
             self.serve_queued();
+            self.record_health();
             if self.st.stop.load(Ordering::SeqCst) {
                 // Intake is over. Serve whatever raced in behind the
                 // shutdown message, answer the caller, exit.
                 self.pump();
                 while let Some(r) = self.st.claim() {
                     self.serve_one(r, true);
-                    self.st.done();
+                    self.finish_claim();
                 }
+                self.record_health();
                 if let Some(mtx) = self.st.lock_reply().take() {
                     let _ = mtx.send(self.hub.snapshot());
                 }
@@ -770,6 +934,7 @@ impl Continuous {
     fn handle_msg(&self, msg: Msg) {
         match msg {
             Msg::Req(r) => self.admit(r),
+            Msg::Nudge => {}
             Msg::Shutdown(mtx) => {
                 *self.st.lock_reply() = Some(mtx);
                 self.st.stop.store(true, Ordering::SeqCst);
@@ -816,11 +981,17 @@ impl Continuous {
     }
 
     /// Worker 0's idle tick: helpers are busy but the queue is empty, so
-    /// block briefly on the channel instead of spinning on `try_recv`.
+    /// park on the channel. The wait is event-driven — it ends on fresh
+    /// traffic, on shutdown, or on the [`Msg::Nudge`] the last finishing
+    /// lane sends ([`Self::finish_claim`]) — with [`NAP_FALLBACK`] as a
+    /// bounded liveness backstop, each expiry counted in the hub.
     fn nap(&self) {
-        let msg = match self.lock_rx().recv_timeout(Duration::from_micros(200)) {
+        let msg = match self.lock_rx().recv_timeout(NAP_FALLBACK) {
             Ok(m) => m,
-            Err(mpsc::RecvTimeoutError::Timeout) => return,
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                self.hub.record_nap_timeout();
+                return;
+            }
             Err(mpsc::RecvTimeoutError::Disconnected) => {
                 self.st.stop.store(true, Ordering::SeqCst);
                 return;
@@ -841,19 +1012,22 @@ impl Continuous {
         if self.pool.workers() < 2 || queued == 1 {
             while let Some(r) = self.st.claim() {
                 self.serve_one(r, true);
-                self.st.done();
+                self.finish_claim();
             }
             return;
         }
         if let Err(e) = self.run_region() {
             // A panicked worker: the queue is structurally intact, but
             // anything still queued must be answered, not stranded.
+            // Heal the pool first (respawn deserted workers, or degrade
+            // to the surviving width) so the *next* region is healthy.
+            self.pool.heal();
             let msg = format!("{e:#}");
             while let Some(r) = self.st.claim() {
                 self.hub.record_failed(1);
                 self.hub.release();
                 let _ = r.respond.send(Err(anyhow!("{msg}")));
-                self.st.done();
+                self.finish_claim();
             }
         }
     }
@@ -870,7 +1044,7 @@ impl Continuous {
             } else {
                 while let Some(r) = self.st.wait_claim() {
                     self.serve_one(r, false);
-                    self.st.done();
+                    self.finish_claim();
                 }
             }
         })
@@ -889,7 +1063,7 @@ impl Continuous {
             }
             if let Some(r) = self.st.claim() {
                 self.serve_one(r, false);
-                self.st.done();
+                self.finish_claim();
                 continue;
             }
             if self.st.inflight.load(Ordering::SeqCst) == 0 {
@@ -901,7 +1075,7 @@ impl Continuous {
         drop(guard);
         while let Some(r) = self.st.claim() {
             self.serve_one(r, false);
-            self.st.done();
+            self.finish_claim();
         }
     }
 
@@ -921,6 +1095,20 @@ impl Continuous {
             let _ = r.respond.send(Err(e));
             return;
         };
+        // Deadline shed: a request that already waited past its deadline
+        // is answered with the typed, retryable-classified rejection —
+        // the late answer is never computed, and the lane moves straight
+        // to the next sequence.
+        if let Some(deadline) = self.deadline {
+            if queue_t > deadline {
+                self.hub.record_deadline_shed();
+                self.hub.release();
+                let _ = r
+                    .respond
+                    .send(Err(ServeError::DeadlineExceeded { waited: queue_t, deadline }.into()));
+                return;
+            }
+        }
         let mut out = vec![0.0f32; r.input.data.len()];
         let res = if pooled {
             model.forward_slice_into(&r.input.data, &mut out)

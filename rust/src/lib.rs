@@ -68,6 +68,27 @@
 //!    a configurable queue depth, and live mid-flight metrics snapshots
 //!    — with Python nowhere in sight.
 //!
+//! ## Failure domains
+//!
+//! The serving runtime is partitioned into failure domains with typed
+//! recovery at each seam (`rust/DESIGN.md` §8): a panicked forward is
+//! caught at the lane boundary and its workspace lane *quarantined*,
+//! then scrubbed on its next checkout before reuse; an abandoned or
+//! expired decode session returns its lane on `Drop` (TTL via
+//! `DecoderSession::set_ttl`); a dead pool worker is respawned before
+//! the next region — or the pool degrades to inline execution, which
+//! stays bitwise identical. Requests carry per-queue-time deadlines
+//! (`--deadline-ms`, typed `ServeError::DeadlineExceeded`), and every
+//! `ServeError` classifies itself via `is_retryable()` /
+//! `retry_after()` so clients can distinguish transient congestion
+//! from deterministic rejection. All of it is exercised by a
+//! deterministic, seedable fault-injection layer ([`util::faults`] —
+//! inert single-atomic-load probes unless a pool opts in via
+//! `WorkerPool::enable_faults`) and a randomized chaos soak
+//! (`tests/chaos_soak.rs`) asserting one typed answer per admitted
+//! request, bitwise-correct successes, and an unchanged zero-alloc /
+//! zero-spawn warm path when disarmed.
+//!
 //! See `rust/README.md` for build instructions, the feature matrix, and
 //! the experiment index (`bwma experiment …` regenerates every paper
 //! figure; `bwma verify all` checks backend numerics against references).

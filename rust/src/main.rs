@@ -20,7 +20,7 @@
 //! (Arg parsing is hand-rolled: the offline crate cache has no clap.)
 
 use std::collections::BTreeMap;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, ensure, Context, Result};
 
@@ -79,7 +79,7 @@ USAGE:
   bwma simulate <preset|config-file> [--layers N] [--convert] [--cores N]
                 [--precision f32|int8]
   bwma serve [--requests N] [--batcher continuous|fixed] [--buckets S1,S2,…]
-             [--queue-depth D] [--max-batch B] [--cores N]
+             [--queue-depth D] [--deadline-ms T] [--max-batch B] [--cores N]
              [--model ffn|encoder|decoder] [--layers N] [--max-context N]
              [--precision f32|int8] [--backend native|pjrt]
              [--tag encoder_jnp_b16]
@@ -123,7 +123,13 @@ are admitted into their length bucket instead of padding to max seq, and
 pool workers refill their workspace lanes from the shared queue as
 individual sequences complete. `--queue-depth D` bounds the requests in
 flight — submits beyond it shed immediately with a typed overload error
-(never an unbounded queue). `--batcher fixed` keeps the classic dynamic
+(never an unbounded queue). `--deadline-ms T` adds a per-request
+queue-wait deadline: an admitted request that waits longer than T ms is
+answered with a typed `DeadlineExceeded` instead of executed late. Both
+rejections are **retryable** (`ServeError::is_retryable()`); overload
+additionally carries a `retry_after` backoff hint paced by the server's
+own mean execution time. Any other error (shape mismatch, model failure)
+is non-retryable by contract. `--batcher fixed` keeps the classic dynamic
 batcher (pad-to-variant, batch variants 1/2/4/8, `--max-batch` cap);
 the PJRT backend always serves fixed batches. Live metrics (queue depth,
 shed/failed counts, latency percentiles) are snapshotted mid-flight.
@@ -270,6 +276,10 @@ struct ServeOpts {
     max_batch: usize,
     cores: usize,
     queue_depth: usize,
+    /// `--deadline-ms`: per-request queue-wait deadline; admitted
+    /// requests that wait longer are shed with a typed, retryable
+    /// `ServeError::DeadlineExceeded`. `None` = no deadline.
+    deadline: Option<Duration>,
 }
 
 /// Fixed demo dims of the native serving models:
@@ -285,6 +295,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             .unwrap_or("1024")
             .parse()
             .context("--queue-depth")?,
+        deadline: parse_deadline_ms(args)?,
     };
     match opt(args, "--backend").unwrap_or("native") {
         "native" => serve_native(args, &opts),
@@ -294,6 +305,17 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         "pjrt" => bail!("this build has no PJRT support (rebuild with --features pjrt)"),
         other => bail!("unknown backend {other:?} (native|pjrt)"),
     }
+}
+
+/// Parse `--deadline-ms` (per-request queue-wait deadline, in whole
+/// milliseconds; absent = no deadline) and reject `0` at the CLI
+/// boundary — a zero deadline would shed every request that queued at
+/// all, which is never what the user meant.
+fn parse_deadline_ms(args: &[String]) -> Result<Option<Duration>> {
+    let Some(ms) = opt(args, "--deadline-ms") else { return Ok(None) };
+    let ms: u64 = ms.parse().context("--deadline-ms")?;
+    ensure!(ms >= 1, "--deadline-ms must be >= 1 (got {ms}); omit the flag for no deadline");
+    Ok(Some(Duration::from_millis(ms)))
 }
 
 /// Parse `--buckets 32,64` into sorted, deduplicated sequence lengths
@@ -356,15 +378,24 @@ fn drive_server(
     let stats = bwma::coordinator::LatencyStats::from_samples(latencies);
     println!(
         "done ({label}): {} served in {wall:?} → {:.1} req/s | p50 {:?} p99 {:?} | \
-         shed {} failed {} rejected {}",
+         shed {} deadline-shed {} failed {} rejected {}",
         metrics.requests,
         metrics.requests as f64 / wall.as_secs_f64(),
         stats.p50(),
         stats.p99(),
         metrics.shed,
+        metrics.deadline_shed,
         metrics.failed,
         metrics.rejected,
     );
+    if metrics.pool_respawns > 0 || metrics.pool_degraded || metrics.lane_scrubs > 0 {
+        println!(
+            "failure domains: {} worker respawn(s){} | {} lane scrub(s)",
+            metrics.pool_respawns,
+            if metrics.pool_degraded { " — pool DEGRADED to inline execution" } else { "" },
+            metrics.lane_scrubs,
+        );
+    }
     if metrics.batches > 0 {
         println!(
             "batching: {} executions, mean real size {:.2}",
@@ -451,7 +482,11 @@ fn serve_native(args: &[String], opts: &ServeOpts) -> Result<()> {
             let kind2 = kind.clone();
             let buckets2 = buckets.clone();
             let server = Server::start_continuous(
-                ServerConfig { queue_depth: opts.queue_depth, ..Default::default() },
+                ServerConfig {
+                    queue_depth: opts.queue_depth,
+                    deadline: opts.deadline,
+                    ..Default::default()
+                },
                 move || {
                     let mut models: Vec<NativeModel> = Vec::with_capacity(buckets2.len());
                     for &seq in &buckets2 {
@@ -488,6 +523,7 @@ fn serve_native(args: &[String], opts: &ServeOpts) -> Result<()> {
             let cfg = ServerConfig {
                 max_batch: opts.max_batch,
                 queue_depth: opts.queue_depth,
+                deadline: opts.deadline,
                 ..Default::default()
             };
             let server = Server::start(cfg, move || {
@@ -536,6 +572,7 @@ fn serve_pjrt(args: &[String], opts: &ServeOpts) -> Result<()> {
     let cfg = ServerConfig {
         max_batch: opts.max_batch,
         queue_depth: opts.queue_depth,
+        deadline: opts.deadline,
         ..Default::default()
     };
     let server = Server::start(cfg, move || {

@@ -1140,21 +1140,68 @@ enum ModelKind {
 /// independent — the continuous batcher checks one out per admitted
 /// sequence — and a recycled lane never leaks a previous session's K/V
 /// rows (`tests/alloc_steady_state.rs` pins this with NaN poisoning).
+///
+/// **Reclamation.** Dropping a session without `end_decode` does *not*
+/// leak its lane: `Drop` returns the lane through the pool's quarantine
+/// stack, where the next checkout scrubs it (poison-fill + cursor
+/// reset) before reuse — an abandoned client costs one scrub, never an
+/// allocation. An optional TTL ([`DecoderSession::set_ttl`]) lets the
+/// serving layer bound session lifetime: prefill/decode on an expired
+/// session return a typed error, and the caller reclaims the lane by
+/// dropping (or ending) the session.
 #[derive(Debug)]
 pub struct DecoderSession {
-    ws: EncoderWorkspace,
+    /// `Some` for a live session; taken by `end_decode` (clean checkin)
+    /// or by `Drop` (quarantined checkin) — never both.
+    ws: Option<EncoderWorkspace>,
+    /// The lane stack this session's lane came from (shared with the
+    /// model and its clones).
+    home: Arc<WorkspacePool>,
+    /// Absolute deadline, when a TTL was set.
+    expires_at: Option<Instant>,
 }
 
 impl DecoderSession {
     /// Positions currently resident in the KV cache (the next decode
     /// step computes this absolute position).
     pub fn len(&self) -> usize {
-        self.ws.kv_len
+        self.ws.as_ref().map_or(0, |ws| ws.kv_len)
     }
 
     /// True until a prefill or decode step has run.
     pub fn is_empty(&self) -> bool {
-        self.ws.kv_len == 0
+        self.len() == 0
+    }
+
+    /// Bound the session's lifetime: after `ttl` from now, prefill and
+    /// decode steps refuse with a typed error and the lane should be
+    /// reclaimed (drop or `end_decode`). Serving uses this to stop
+    /// abandoned interactive sessions from squatting on lanes.
+    pub fn set_ttl(&mut self, ttl: Duration) {
+        self.expires_at = Some(Instant::now() + ttl);
+    }
+
+    /// Whether the session's TTL (if any) has elapsed.
+    pub fn expired(&self) -> bool {
+        self.expires_at.is_some_and(|t| Instant::now() >= t)
+    }
+
+    /// The live lane. The invariant (`ws` is `Some` until `end_decode`
+    /// consumes the session or `Drop` runs) holds by construction.
+    fn ws_mut(&mut self) -> &mut EncoderWorkspace {
+        self.ws.as_mut().expect("a live session holds its lane until end_decode or drop")
+    }
+}
+
+impl Drop for DecoderSession {
+    fn drop(&mut self) {
+        if let Some(ws) = self.ws.take() {
+            // Abandoned without `end_decode`: the lane returns through
+            // quarantine — its contents (including a mid-flight KV
+            // cursor) are scrubbed on the next checkout, so an
+            // abandoned session can never bleed state into a later one.
+            self.home.checkin_quarantined(ws);
+        }
     }
 }
 
@@ -1616,6 +1663,18 @@ impl NativeModel {
         self.workspaces.poison_all();
     }
 
+    /// Lanes currently quarantined after a failed/abandoned execution,
+    /// awaiting a scrub-on-checkout (test hook).
+    pub fn workspace_lanes_quarantined(&self) -> usize {
+        self.workspaces.quarantined_lanes()
+    }
+
+    /// Quarantined lanes scrubbed back into service so far (test hook —
+    /// also surfaced as `ServerMetrics::lane_scrubs`).
+    pub fn workspace_scrubs(&self) -> u64 {
+        self.workspaces.scrubs()
+    }
+
     /// Whether this model runs the full encoder stack (vs the legacy
     /// FFN-only block), in either precision.
     pub fn is_encoder(&self) -> bool {
@@ -1761,6 +1820,15 @@ impl NativeModel {
     /// lane out, pack at the door, run the blocked pipeline in the lane,
     /// unpack into `out`, check the lane back in. Zero heap allocations
     /// once a lane exists.
+    ///
+    /// This is the **failure containment boundary** of a lane execution:
+    /// a panic anywhere in the pipeline (a bug, or an injected fault) is
+    /// caught here and becomes this request's typed error — it never
+    /// unwinds into a serving region or a sibling request. A lane whose
+    /// execution failed (error or panic) or whose workspace was flagged
+    /// corrupt returns through quarantine and is scrubbed before its
+    /// next use; only a fully successful forward checks its lane back
+    /// in clean.
     fn forward_slices(
         &self,
         in_shape: &[usize],
@@ -1776,10 +1844,33 @@ impl NativeModel {
             self.seq * self.d_model
         );
         let mut ws = self.workspaces.checkout().unwrap_or_else(|| self.make_workspace());
-        let result = self.forward_in_ws(x, out, &mut ws, pool, timings);
-        // Check the lane back in even on error: its contents are always
-        // fully overwritten before the next use.
-        self.workspaces.checkin(ws);
+        // Fault gate: probes consult an armed plan only when the model's
+        // persistent pool opted in (`WorkerPool::enable_faults`) — keyed
+        // on `self.pool` rather than the execution pool so continuous
+        // per-lane forwards (which run on the shared serial pool) are
+        // still covered for an opted-in model.
+        let chaos = self.pool.fault_prone();
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            if chaos {
+                crate::util::faults::fire("lane:forward");
+            }
+            self.forward_in_ws(x, out, &mut ws, pool, timings)
+        }));
+        let result = match caught {
+            Ok(r) => r,
+            Err(p) => Err(anyhow::anyhow!(
+                "model forward panicked: {}",
+                parallel::panic_msg(&*p)
+            )),
+        };
+        let poisoned = chaos && crate::util::faults::lane_poison_due();
+        if result.is_ok() && !poisoned {
+            self.workspaces.checkin(ws);
+        } else {
+            // Failed (or flagged-corrupt) execution: the lane may hold
+            // arbitrary partial state — quarantine it for a scrub.
+            self.workspaces.checkin_quarantined(ws);
+        }
         result
     }
 
@@ -1952,14 +2043,21 @@ impl NativeModel {
         );
         let mut ws = self.workspaces.checkout().unwrap_or_else(|| self.make_workspace());
         ws.kv_len = 0;
-        Ok(DecoderSession { ws })
+        Ok(DecoderSession {
+            ws: Some(ws),
+            home: Arc::clone(&self.workspaces),
+            expires_at: None,
+        })
     }
 
-    /// Return a session's lane to the shared stack. Dropping the
-    /// session instead leaks the lane (the pool re-allocates on the
-    /// next checkout), so steady-state serving must check back in.
-    pub fn end_decode(&self, sess: DecoderSession) {
-        self.workspaces.checkin(sess.ws);
+    /// Return a session's lane to the shared stack, clean. Dropping the
+    /// session instead routes the lane through quarantine (scrubbed on
+    /// its next checkout) — safe either way, but the explicit checkin
+    /// skips the scrub, so steady-state serving should prefer it.
+    pub fn end_decode(&self, mut sess: DecoderSession) {
+        if let Some(ws) = sess.ws.take() {
+            self.workspaces.checkin(ws);
+        }
     }
 
     /// Causal prefill: forward a `t`-row prompt (row-major, `t ×
@@ -1986,7 +2084,11 @@ impl NativeModel {
             x.len(),
             out.len()
         );
-        self.prefill_ws(layers, *max_context, &mut sess.ws, x, t, out, &self.pool)
+        ensure!(
+            !sess.expired(),
+            "decode session expired: its TTL elapsed; end or drop it and begin a new session"
+        );
+        self.prefill_ws(layers, *max_context, sess.ws_mut(), x, t, out, &self.pool)
     }
 
     /// One incremental decode step: forward a single `d_model`-element
@@ -2012,12 +2114,16 @@ impl NativeModel {
             x.len() == d && out.len() == d,
             "decode step takes one {d}-element token row in and out"
         );
-        let p = sess.ws.kv_len;
+        ensure!(
+            !sess.expired(),
+            "decode session expired: its TTL elapsed; end or drop it and begin a new session"
+        );
+        let p = sess.len();
         ensure!(
             p < ctx,
             "decode request longer than max context: cache holds {p} positions, --max-context is {ctx}"
         );
-        let ws = &mut sess.ws;
+        let ws = sess.ws_mut();
         let q0 = (p / b) * b;
         // Zero the one-block x prefix, then scatter the token at its
         // in-block row. Rows before it in the block are deterministic
@@ -2999,6 +3105,7 @@ pub fn native_tags() -> &'static [&'static str] {
         "native_decoder_equiv_b8",
         "native_decoder_equiv_b16",
         "native_decode_incremental_equiv_b16",
+        "native_lane_scrub_equiv_b16",
     ]
 }
 
@@ -3356,6 +3463,44 @@ fn check_decode_incremental(tag: &'static str, block: usize) -> Result<NativeChe
     Ok(NativeCheck { tag, max_diff, ok })
 }
 
+/// The lane-quarantine contract as a verify tag: a forward that panics
+/// mid-phase (injected via [`crate::util::faults`]) must surface as a
+/// typed `Err`, quarantine its workspace lane, and the very next forward
+/// — which scrubs that lane on checkout — must be **bitwise identical**
+/// to the pre-fault golden run. `max_diff` is a true max |Δ| across the
+/// recovery forward and must come out 0.
+fn check_lane_scrub(tag: &'static str, block: usize, cores: usize) -> Result<NativeCheck> {
+    let model = check_encoder_model(block, 0xFA17)?.with_cores(cores)?;
+    // The model's own pool opts in; pools of concurrently running
+    // checks stay blind to the armed window.
+    model.pool().enable_faults();
+    let mut rng = XorShift64::new(0xFA18);
+    let x = Tensor::new(model.in_shape(), rand_vec(&mut rng, model.seq * model.d_model));
+    let golden = model.forward(&x)?;
+    let scrubs_before = model.workspace_scrubs();
+    {
+        let _g = crate::util::faults::install(
+            crate::util::faults::FaultPlan::new().panic_at("kernel:gemm_f32_batch", 0),
+        );
+        ensure!(
+            model.forward(&x).is_err(),
+            "injected kernel panic must surface as a typed Err"
+        );
+    }
+    ensure!(
+        model.workspace_lanes_quarantined() >= 1,
+        "a panicked forward must quarantine its lane"
+    );
+    let again = model.forward(&x)?;
+    ensure!(
+        model.workspace_scrubs() > scrubs_before,
+        "the recovery forward must scrub the quarantined lane on checkout"
+    );
+    let max_diff = golden.max_abs_diff(&again);
+    let ok = golden.data.iter().zip(&again.data).all(|(a, b)| a.to_bits() == b.to_bits());
+    Ok(NativeCheck { tag, max_diff, ok })
+}
+
 fn check_ffn(tag: &'static str, block: usize, cores: usize) -> Result<NativeCheck> {
     let model = NativeModel::new(4 * block, 6 * block, 8 * block, block, 0xFF1)?;
     let mut rng = XorShift64::new(0xFF2);
@@ -3560,6 +3705,9 @@ pub fn run_native_check_with_cores(tag: &str, cores: usize) -> Result<NativeChec
         "native_decoder_equiv_b16" => check_decoder("native_decoder_equiv_b16", 16, cores),
         "native_decode_incremental_equiv_b16" => {
             check_decode_incremental("native_decode_incremental_equiv_b16", 16)
+        }
+        "native_lane_scrub_equiv_b16" => {
+            check_lane_scrub("native_lane_scrub_equiv_b16", 16, cores)
         }
         _ => bail!("unknown native check {tag:?} (see `bwma verify all`)"),
     }

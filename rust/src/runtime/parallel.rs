@@ -77,7 +77,7 @@
 use std::cell::Cell;
 use std::ops::Range;
 use std::panic::AssertUnwindSafe;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
 use anyhow::{anyhow, ensure, Result};
@@ -226,6 +226,11 @@ static THREADS_SPAWNED: AtomicUsize = AtomicUsize::new(0);
 /// dropping a pool must return this to its prior value).
 static LIVE_WORKERS: AtomicUsize = AtomicUsize::new(0);
 
+/// Worker threads respawned by pool self-healing across the process (a
+/// test hook; only fault injection can kill a worker, so this stays 0
+/// outside chaos suites).
+static WORKER_RESPAWNS: AtomicUsize = AtomicUsize::new(0);
+
 thread_local! {
     /// Whether this thread is currently executing a pool task. Pool
     /// worker threads set it for their whole life; the caller sets it
@@ -253,6 +258,10 @@ struct PoolState {
     remaining: usize,
     /// Background tasks of the current epoch that panicked.
     panicked: usize,
+    /// Worker indices that exited their thread (simulated death via
+    /// fault injection — real task panics are caught and never kill a
+    /// worker). Healed by the next region before it publishes.
+    deserted: Vec<usize>,
     shutdown: bool,
 }
 
@@ -262,6 +271,14 @@ struct PoolShared {
     work: Condvar,
     /// `run` waits here for `remaining == 0`.
     done: Condvar,
+    /// Whether this pool observes the process-global fault plan
+    /// ([`crate::util::faults`]). Off by default: fault probes are
+    /// compiled into the workers and batch kernels unconditionally, but
+    /// only pools explicitly opted in by [`WorkerPool::enable_faults`]
+    /// consult an armed plan — so a chaos test arming the global plan
+    /// cannot panic, stall, or desert an innocent pool owned by a
+    /// concurrently running test in the same binary.
+    fault_prone: AtomicBool,
 }
 
 /// A persistent pool of `N` workers: `N - 1` long-lived background
@@ -290,8 +307,18 @@ struct PoolShared {
 /// [`NativeModel`]: super::NativeModel
 pub struct WorkerPool {
     shared: Arc<PoolShared>,
-    handles: Vec<std::thread::JoinHandle<()>>,
+    /// Behind a `Mutex` so self-healing (`heal`, under `run_lock`) can
+    /// push respawned-thread handles through a shared reference.
+    /// Finished deserter handles accumulate here harmlessly until Drop.
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
     workers: usize,
+    /// Set when a respawn failed: the pool can no longer restore its
+    /// width, so every region from then on runs inline on the caller
+    /// (serially correct for all indices, bitwise identical by the
+    /// serial==pooled contract).
+    degraded: AtomicBool,
+    /// Workers this pool respawned after desertion (monotonic).
+    respawned: AtomicUsize,
     /// Serializes concurrent `run` calls from different threads: one
     /// phase owns the pool at a time (two would oversubscribe the cores
     /// the pool stands for anyway).
@@ -315,10 +342,12 @@ impl WorkerPool {
                 job: None,
                 remaining: 0,
                 panicked: 0,
+                deserted: Vec::new(),
                 shutdown: false,
             }),
             work: Condvar::new(),
             done: Condvar::new(),
+            fault_prone: AtomicBool::new(false),
         });
         let mut handles = Vec::with_capacity(workers - 1);
         for w in 1..workers {
@@ -349,7 +378,14 @@ impl WorkerPool {
             THREADS_SPAWNED.fetch_add(1, Ordering::SeqCst);
             handles.push(handle);
         }
-        Ok(Self { shared, handles, workers, run_lock: Mutex::new(()) })
+        Ok(Self {
+            shared,
+            handles: Mutex::new(handles),
+            workers,
+            degraded: AtomicBool::new(false),
+            respawned: AtomicUsize::new(0),
+            run_lock: Mutex::new(()),
+        })
     }
 
     /// Number of workers (including the caller, worker 0).
@@ -369,6 +405,43 @@ impl WorkerPool {
         LIVE_WORKERS.load(Ordering::SeqCst)
     }
 
+    /// Worker threads respawned by self-healing across the whole
+    /// process (0 outside fault-injection suites — task panics are
+    /// caught in `worker_loop` and never kill a worker).
+    pub fn worker_respawns_total() -> usize {
+        WORKER_RESPAWNS.load(Ordering::SeqCst)
+    }
+
+    /// Workers this pool respawned after simulated death (monotonic).
+    pub fn respawned_workers(&self) -> usize {
+        self.respawned.load(Ordering::SeqCst)
+    }
+
+    /// Whether the pool gave up restoring its width after a failed
+    /// respawn and now runs every region inline on the caller.
+    pub fn is_degraded(&self) -> bool {
+        self.degraded.load(Ordering::SeqCst)
+    }
+
+    /// Opt this pool into the process-global fault plan
+    /// ([`crate::util::faults`]) — chaos suites only. The fault probes
+    /// in `worker_loop` and the batch kernels are always compiled in,
+    /// but they consult an armed plan only for pools marked here, so an
+    /// armed window in one test cannot panic, stall, or desert an
+    /// innocent pool owned by a concurrently running sibling test.
+    /// Irreversible for the pool's lifetime (plans are disarmed
+    /// globally instead); a never-marked pool pays one relaxed load per
+    /// probe and nothing else.
+    pub fn enable_faults(&self) {
+        self.shared.fault_prone.store(true, Ordering::SeqCst);
+    }
+
+    /// Whether [`Self::enable_faults`] opted this pool into armed fault
+    /// plans.
+    pub fn fault_prone(&self) -> bool {
+        self.shared.fault_prone.load(Ordering::Relaxed)
+    }
+
     /// Execute one parallel region: `f(w)` runs exactly once for every
     /// worker index `w ∈ 0..workers()`, worker 0 on the calling thread,
     /// the rest on the pool threads, with a completion barrier before
@@ -381,18 +454,24 @@ impl WorkerPool {
     /// thread — by the ownership contract that is bitwise identical, and
     /// it cannot deadlock.
     pub fn run(&self, f: &(dyn Fn(usize) + Sync)) -> Result<()> {
-        if self.workers == 1 || IN_POOL_JOB.with(|g| g.get()) {
-            let inline = std::panic::catch_unwind(AssertUnwindSafe(|| {
-                for w in 0..self.workers {
-                    f(w);
-                }
-            }));
-            return match inline {
-                Ok(()) => Ok(()),
-                Err(p) => Err(anyhow!("worker pool task panicked: {}", panic_msg(&*p))),
-            };
+        if self.workers == 1
+            || IN_POOL_JOB.with(|g| g.get())
+            || self.degraded.load(Ordering::SeqCst)
+        {
+            return self.run_inline(f);
         }
         let _phase = self.run_lock.lock().unwrap_or_else(|e| e.into_inner());
+        // Self-heal before publishing: a deserted worker (simulated
+        // death — real task panics never kill workers) would leave the
+        // barrier one check-in short forever and silently skip its
+        // chunk. The fast path is one lock + an is_empty check.
+        self.heal_locked();
+        if self.degraded.load(Ordering::SeqCst) {
+            // A respawn failed mid-heal: the surviving width cannot
+            // cover every index, so degrade this and all future regions
+            // to the inline (serial) path — bitwise identical output.
+            return self.run_inline(f);
+        }
         // SAFETY: the erased borrow is only dereferenced by workers
         // between the publish below and the `remaining == 0` barrier at
         // the bottom of this function, which we reach on every path
@@ -428,6 +507,70 @@ impl WorkerPool {
             Ok(()) => Ok(()),
         }
     }
+
+    /// Every worker index on the calling thread, in order — the width-1
+    /// / nested / degraded execution path. Bitwise identical to the
+    /// dispatched path by the one-writer-per-unit contract.
+    fn run_inline(&self, f: &(dyn Fn(usize) + Sync)) -> Result<()> {
+        let inline = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            for w in 0..self.workers {
+                f(w);
+            }
+        }));
+        match inline {
+            Ok(()) => Ok(()),
+            Err(p) => Err(anyhow!("worker pool task panicked: {}", panic_msg(&*p))),
+        }
+    }
+
+    /// Self-heal now instead of at the next region: respawn any
+    /// deserted workers (or degrade if a respawn fails). Returns the
+    /// cumulative number of workers this pool has respawned. The
+    /// serving loop calls this between regions so a simulated worker
+    /// death is repaired before the next batch, and surfaces the count
+    /// in `ServerMetrics`.
+    pub fn heal(&self) -> usize {
+        let _phase = self.run_lock.lock().unwrap_or_else(|e| e.into_inner());
+        self.heal_locked();
+        self.respawned.load(Ordering::SeqCst)
+    }
+
+    /// Respawn deserted workers. Caller holds `run_lock`, so no region
+    /// can publish while the roster is short.
+    fn heal_locked(&self) {
+        let deserters = {
+            let mut st = self.shared.state.lock().unwrap();
+            if st.deserted.is_empty() {
+                return;
+            }
+            std::mem::take(&mut st.deserted)
+        };
+        for w in deserters {
+            // LIVE must be up before the worker can ever decrement it
+            // (same ordering as `new`).
+            LIVE_WORKERS.fetch_add(1, Ordering::SeqCst);
+            let worker_shared = Arc::clone(&self.shared);
+            let spawned = std::thread::Builder::new()
+                .name(format!("bwma-pool-{w}"))
+                .spawn(move || worker_loop(w, &worker_shared));
+            match spawned {
+                Ok(h) => {
+                    THREADS_SPAWNED.fetch_add(1, Ordering::SeqCst);
+                    WORKER_RESPAWNS.fetch_add(1, Ordering::SeqCst);
+                    self.respawned.fetch_add(1, Ordering::SeqCst);
+                    self.handles.lock().unwrap_or_else(|e| e.into_inner()).push(h);
+                }
+                Err(_) => {
+                    // Cannot restore the width. Worker indices are
+                    // structural (chunk_range partitions by index), so
+                    // the roster cannot be renumbered — degrade: every
+                    // future region runs inline on the caller instead.
+                    LIVE_WORKERS.fetch_sub(1, Ordering::SeqCst);
+                    self.degraded.store(true, Ordering::SeqCst);
+                }
+            }
+        }
+    }
 }
 
 /// The process-wide width-1 pool: it owns no threads and its `run` is a
@@ -446,7 +589,8 @@ impl Drop for WorkerPool {
             st.shutdown = true;
             self.shared.work.notify_all();
         }
-        for h in self.handles.drain(..) {
+        let handles = self.handles.get_mut().unwrap_or_else(|e| e.into_inner());
+        for h in handles.drain(..) {
             let _ = h.join();
         }
     }
@@ -477,7 +621,18 @@ fn worker_loop(w: usize, shared: &PoolShared) {
         // SAFETY: see `WorkerPool::run` — the closure outlives the
         // barrier we feed below.
         let f = unsafe { &*job.0 };
+        // Fault sites (consulted only when the pool opted in via
+        // `enable_faults`): a scheduled stall here models a straggling
+        // worker (the barrier waits it out — slowness, not failure).
+        let chaos = shared.fault_prone.load(Ordering::Relaxed);
+        if chaos {
+            crate::util::faults::stall(crate::util::faults::WORKER_JOB_SITE);
+        }
         let ok = std::panic::catch_unwind(AssertUnwindSafe(|| f(w))).is_ok();
+        // Fault site: a scheduled desertion simulates this worker dying
+        // after its share. Decided before taking the state lock; acted
+        // on after the barrier bookkeeping so `run` never hangs.
+        let desert = chaos && crate::util::faults::worker_desertion_due();
         let mut st = shared.state.lock().unwrap();
         if !ok {
             st.panicked += 1;
@@ -486,12 +641,18 @@ fn worker_loop(w: usize, shared: &PoolShared) {
         if st.remaining == 0 {
             shared.done.notify_all();
         }
+        if desert {
+            st.deserted.push(w);
+            drop(st);
+            LIVE_WORKERS.fetch_sub(1, Ordering::SeqCst);
+            return;
+        }
     }
 }
 
 /// Best-effort panic payload as text (panics carry `&str` or `String`
 /// in practice).
-fn panic_msg(p: &(dyn std::any::Any + Send)) -> &str {
+pub(crate) fn panic_msg(p: &(dyn std::any::Any + Send)) -> &str {
     if let Some(s) = p.downcast_ref::<&'static str>() {
         s
     } else if let Some(s) = p.downcast_ref::<String>() {
@@ -644,6 +805,9 @@ pub fn gemm_f32_batch_into<'a>(
     block: usize,
     pool: &WorkerPool,
 ) -> Result<()> {
+    if pool.fault_prone() {
+        crate::util::faults::fire("kernel:gemm_f32_batch");
+    }
     if ntasks == 0 {
         return Ok(());
     }
@@ -820,6 +984,9 @@ pub fn gemm_i8_batch_into<'a>(
     block: usize,
     pool: &WorkerPool,
 ) -> Result<()> {
+    if pool.fault_prone() {
+        crate::util::faults::fire("kernel:gemm_i8_batch");
+    }
     if ntasks == 0 {
         return Ok(());
     }
@@ -895,6 +1062,9 @@ pub fn transpose_packed_many_into(
     block: usize,
     pool: &WorkerPool,
 ) -> Result<()> {
+    if pool.fault_prone() {
+        crate::util::faults::fire("kernel:transpose_packed");
+    }
     let per = rows * cols;
     ensure!(
         src.len() == count * per,
@@ -973,6 +1143,9 @@ pub(crate) fn kv_append_into(
     new_len: usize,
     pool: &WorkerPool,
 ) -> Result<()> {
+    if pool.fault_prone() {
+        crate::util::faults::fire("kernel:kv_append");
+    }
     ensure!(heads >= 1, "KV append needs at least one head");
     native::check_rowwise(qrows * d_head, qrows, d_head, block)?;
     ensure!(ctx % block == 0, "max context {ctx} not divisible by block {block}");
@@ -1352,6 +1525,9 @@ pub(crate) fn causal_softmax_pooled(
     len: usize,
     pool: &WorkerPool,
 ) -> Result<()> {
+    if pool.fault_prone() {
+        crate::util::faults::fire("kernel:causal_softmax");
+    }
     if pool.workers() <= 1 {
         return native::causal_softmax(x, scale, heads, qrows, cols, block, q0, len);
     }

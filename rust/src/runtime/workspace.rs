@@ -81,6 +81,7 @@
 //! [`NativeModel::forward_into`]: super::NativeModel::forward_into
 //! [`NativeModel::poison_workspaces`]: super::NativeModel::poison_workspaces
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Mutex, MutexGuard};
 
 /// All per-forward intermediates of one [`NativeModel`](super::NativeModel)
@@ -353,14 +354,40 @@ const LANE_CAPACITY: usize = 64;
 /// A stack of interchangeable [`EncoderWorkspace`] lanes shared by every
 /// clone of a model (the server's batch-variant slots): concurrent batch
 /// sequences each check a lane out instead of allocating per request.
+///
+/// ## Quarantine & scrub-on-checkout
+///
+/// A lane touched by a *failed* execution (a panic caught mid-phase, an
+/// error after partial writes, an abandoned decode session) may hold
+/// arbitrary partial state — including a non-zero `kv_len` pointing at
+/// half-appended cache rows. Such lanes are returned through
+/// [`checkin_quarantined`](Self::checkin_quarantined) instead of the
+/// clean stack, and a checkout only reaches for the quarantine stack
+/// when no clean lane exists — after **scrubbing**: the lane is
+/// poison-filled (NaN / `i8::MIN`) and its `kv_len` reset, so any stale
+/// datum a later request could conceivably read would propagate loudly
+/// instead of silently. (The poison tests prove every arena element is
+/// overwritten before it is read on the success path, which is exactly
+/// why poison *is* a sufficient scrub.) The lane itself is never
+/// discarded — its allocation survives quarantine, so recovery stays
+/// allocation-free.
 #[derive(Debug)]
 pub(crate) struct WorkspacePool {
     lanes: Mutex<Vec<EncoderWorkspace>>,
+    /// Lanes whose last execution failed or was abandoned; scrubbed on
+    /// their next checkout, never handed out as-is.
+    quarantine: Mutex<Vec<EncoderWorkspace>>,
+    /// Quarantined lanes scrubbed back into service (monotonic).
+    scrubs: AtomicU64,
 }
 
 impl WorkspacePool {
     pub(crate) fn new() -> Self {
-        Self { lanes: Mutex::new(Vec::with_capacity(LANE_CAPACITY)) }
+        Self {
+            lanes: Mutex::new(Vec::with_capacity(LANE_CAPACITY)),
+            quarantine: Mutex::new(Vec::with_capacity(LANE_CAPACITY)),
+            scrubs: AtomicU64::new(0),
+        }
     }
 
     fn lock(&self) -> MutexGuard<'_, Vec<EncoderWorkspace>> {
@@ -370,10 +397,27 @@ impl WorkspacePool {
         self.lanes.lock().unwrap_or_else(|e| e.into_inner())
     }
 
-    /// Pop a free lane, if any (the caller creates one otherwise — the
-    /// only allocating path, taken once per peak-concurrency slot).
+    fn lock_quarantine(&self) -> MutexGuard<'_, Vec<EncoderWorkspace>> {
+        self.quarantine.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Pop a free lane, if any — preferring the clean stack, falling
+    /// back to scrubbing a quarantined lane (the caller creates one
+    /// otherwise — the only allocating path, taken once per
+    /// peak-concurrency slot).
     pub(crate) fn checkout(&self) -> Option<EncoderWorkspace> {
-        self.lock().pop()
+        if let Some(ws) = self.lock().pop() {
+            return Some(ws);
+        }
+        let quarantined = self.lock_quarantine().pop();
+        quarantined.map(|mut ws| {
+            // Scrub: poison-fill every arena and reset the session
+            // cursor. No allocation — the arenas are reused in place.
+            ws.poison();
+            ws.kv_len = 0;
+            self.scrubs.fetch_add(1, Ordering::SeqCst);
+            ws
+        })
     }
 
     /// Return a lane to the stack (no allocation up to [`LANE_CAPACITY`]).
@@ -381,9 +425,25 @@ impl WorkspacePool {
         self.lock().push(ws);
     }
 
+    /// Return a lane whose execution failed or was abandoned: it lands
+    /// on the quarantine stack and is scrubbed before its next use.
+    pub(crate) fn checkin_quarantined(&self, ws: EncoderWorkspace) {
+        self.lock_quarantine().push(ws);
+    }
+
     /// Free lanes currently checked in (test hook).
     pub(crate) fn free_lanes(&self) -> usize {
         self.lock().len()
+    }
+
+    /// Lanes currently in quarantine awaiting a scrub (test hook).
+    pub(crate) fn quarantined_lanes(&self) -> usize {
+        self.lock_quarantine().len()
+    }
+
+    /// Quarantined lanes scrubbed back into service so far (test hook).
+    pub(crate) fn scrubs(&self) -> u64 {
+        self.scrubs.load(Ordering::SeqCst)
     }
 
     /// Top the stack up to at least `n` free lanes under ONE lock
@@ -399,8 +459,14 @@ impl WorkspacePool {
     }
 
     /// Poison every free lane (test hook — see [`EncoderWorkspace::poison`]).
+    /// Quarantined lanes are covered too: they are poison targets by
+    /// definition, and will be scrubbed (re-poisoned + cursor reset) on
+    /// checkout anyway.
     pub(crate) fn poison_all(&self) {
         for ws in self.lock().iter_mut() {
+            ws.poison();
+        }
+        for ws in self.lock_quarantine().iter_mut() {
             ws.poison();
         }
     }
@@ -487,6 +553,41 @@ mod tests {
         });
         assert_eq!(built, 3);
         assert_eq!(pool.free_lanes(), 3);
+    }
+
+    #[test]
+    fn quarantined_lane_is_scrubbed_on_checkout_and_never_handed_out_raw() {
+        let pool = WorkspacePool::new();
+        let mut dirty = EncoderWorkspace::new_decoder(64, 16, 1, 32, 2, 16);
+        dirty.x.fill(7.25); // plausible stale data — worse than NaN
+        dirty.kv_k.fill(3.5);
+        dirty.kv_len = 48; // a half-finished session left its cursor up
+        pool.checkin_quarantined(dirty);
+        assert_eq!(pool.free_lanes(), 0);
+        assert_eq!(pool.quarantined_lanes(), 1);
+        assert_eq!(pool.scrubs(), 0);
+
+        let ws = pool.checkout().expect("quarantine backfills checkout");
+        assert_eq!(pool.scrubs(), 1);
+        assert_eq!(pool.quarantined_lanes(), 0);
+        assert_eq!(ws.kv_len, 0, "scrub resets the session cursor");
+        assert!(
+            ws.x.iter().all(|v| v.is_nan()) && ws.kv_k.iter().all(|v| v.is_nan()),
+            "scrub replaces stale plausible data with loud poison"
+        );
+    }
+
+    #[test]
+    fn clean_lanes_are_preferred_over_quarantined_ones() {
+        let pool = WorkspacePool::new();
+        let mut clean = EncoderWorkspace::new_ffn(16, 16, 32, 16);
+        clean.x.fill(1.0);
+        pool.checkin(clean);
+        pool.checkin_quarantined(EncoderWorkspace::new_ffn(16, 16, 32, 16));
+        let ws = pool.checkout().expect("clean lane available");
+        assert!(ws.x.iter().all(|&v| v == 1.0), "the clean lane came first, unscrubbed");
+        assert_eq!(pool.scrubs(), 0);
+        assert_eq!(pool.quarantined_lanes(), 1);
     }
 
     #[test]

@@ -1,0 +1,442 @@
+//! Deterministic, seedable fault injection for the serving runtime.
+//!
+//! The paper's premise — long-lived, carefully arranged state (BWMA
+//! arenas, packed KV caches, checked-out workspace lanes) kept hot
+//! across requests — is exactly what makes failures dangerous: a panic
+//! mid-phase can strand a lane, corrupt a region, or deadlock the
+//! continuous batcher. This module lets tests *schedule* such failures
+//! deterministically and then assert the recovery invariants (see
+//! `tests/chaos_soak.rs` and DESIGN.md §8 "Failure domains & recovery").
+//!
+//! ## Model
+//!
+//! A [`FaultPlan`] is a list of [`FaultSpec`]s: *at the `hit`-th arrival
+//! at `site`, perform `action`*. Production code is instrumented with
+//! named **sites** — cheap probe calls like [`fire`] at kernel entries,
+//! [`stall`] at queue handoffs, [`lane_poison_due`] after a lane
+//! forward, [`worker_desertion_due`] at the pool barrier. Installing a
+//! plan ([`install`]) arms the layer; the returned guard disarms it on
+//! drop, so a panicking test cannot leak faults into its neighbors.
+//!
+//! Plans are deterministic by construction: [`FaultPlan::randomized`]
+//! derives the whole schedule from one `u64` seed via [`XorShift64`],
+//! and per-site hit counters make "the 3rd gemm of the run panics"
+//! reproducible. (Which *thread* observes a given hit still depends on
+//! runtime interleaving — the schedule is deterministic, the victim
+//! assignment is whatever the race produces, which is the point of a
+//! chaos test.)
+//!
+//! ## Blast-radius containment across tests
+//!
+//! The armed plan is process-global, but the kernel, lane, and pool
+//! probes consult it only for worker pools that explicitly opted in via
+//! `WorkerPool::enable_faults` (and for models whose persistent pool
+//! did). Cargo runs the tests *within* one binary concurrently, so
+//! without that gate a chaos test's armed window could panic, stall, or
+//! desert an innocent sibling test's pool; with it, a plan can only hit
+//! the pools its own test marked fault-prone.
+//!
+//! ## Zero cost when disarmed
+//!
+//! Every probe starts with a single relaxed atomic load and returns
+//! immediately when no plan is installed — no locks, no allocation, no
+//! branches beyond the one test. The probes are registered in
+//! `hotpath.txt`, so contract-lint statically checks they stay
+//! allocation-free, and `tests/alloc_steady_state.rs` measures the same
+//! thing at runtime (`steady_allocs = 0` holds with this layer in every
+//! warm path).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use super::rng::XorShift64;
+
+/// Kernel-phase sites instrumented with [`fire`] (panic or sleep lands
+/// inside the containment boundary of `NativeModel::forward_slices`).
+pub const KERNEL_SITES: &[&str] = &[
+    "kernel:gemm_f32_batch",
+    "kernel:gemm_i8_batch",
+    "kernel:transpose_packed",
+    "kernel:kv_append",
+    "kernel:causal_softmax",
+    "lane:forward",
+];
+
+/// Site probed by [`lane_poison_due`] once per lane forward.
+pub const LANE_POISON_SITE: &str = "lane:poison";
+/// Site probed by [`stall`] in the continuous batcher's queue handoff.
+pub const QUEUE_PUSH_SITE: &str = "server:queue_push";
+/// Site probed by [`stall`] before each pool worker runs its task share
+/// (a slow worker / straggler).
+pub const WORKER_JOB_SITE: &str = "pool:worker_job";
+/// Site probed by [`worker_desertion_due`] after each pool worker
+/// finishes a region (a simulated worker death).
+pub const WORKER_DESERT_SITE: &str = "pool:worker";
+
+/// What happens when a spec's site reaches its scheduled hit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Panic with a `"fault injected: <site>"` message. Honored by
+    /// [`fire`] sites only (a [`stall`] site ignores it — stalls model
+    /// congestion, not crashes).
+    Panic,
+    /// Sleep for the given duration on the probing thread.
+    Sleep(Duration),
+    /// Report corruption to [`lane_poison_due`]: the lane forward
+    /// succeeds but its workspace is treated as suspect.
+    PoisonLane,
+    /// Report desertion to [`worker_desertion_due`]: the pool worker
+    /// exits its thread after the current region (simulated death; real
+    /// task panics are caught and never kill workers).
+    DesertWorker,
+}
+
+/// One scheduled fault: at the `hit`-th arrival (0-based) at `site`,
+/// perform `action`. Each spec fires at most once.
+#[derive(Debug, Clone)]
+pub struct FaultSpec {
+    /// Probe site name (see the `*_SITE` constants / [`KERNEL_SITES`]).
+    pub site: &'static str,
+    /// 0-based arrival count at which this spec triggers.
+    pub hit: u64,
+    /// The injected behavior.
+    pub action: FaultAction,
+}
+
+/// A deterministic schedule of faults, built explicitly or derived from
+/// a seed, then armed with [`install`].
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    specs: Vec<FaultSpec>,
+}
+
+impl FaultPlan {
+    /// An empty plan (arming it injects nothing but still exercises the
+    /// armed probe paths).
+    #[must_use]
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Panic at the `hit`-th arrival at `site`.
+    #[must_use]
+    pub fn panic_at(mut self, site: &'static str, hit: u64) -> Self {
+        self.specs.push(FaultSpec { site, hit, action: FaultAction::Panic });
+        self
+    }
+
+    /// Sleep `dur` at the `hit`-th arrival at `site` (slow worker /
+    /// queue stall, depending on the site).
+    #[must_use]
+    pub fn sleep_at(mut self, site: &'static str, hit: u64, dur: Duration) -> Self {
+        self.specs.push(FaultSpec { site, hit, action: FaultAction::Sleep(dur) });
+        self
+    }
+
+    /// Mark the `hit`-th lane forward's workspace as corrupted (the
+    /// lane goes to quarantine even though the forward succeeded).
+    #[must_use]
+    pub fn poison_lane_at(mut self, hit: u64) -> Self {
+        self.specs.push(FaultSpec {
+            site: LANE_POISON_SITE,
+            hit,
+            action: FaultAction::PoisonLane,
+        });
+        self
+    }
+
+    /// Desert (simulate the death of) the pool worker that completes
+    /// the `hit`-th region share after arming.
+    #[must_use]
+    pub fn desert_worker_at(mut self, hit: u64) -> Self {
+        self.specs.push(FaultSpec {
+            site: WORKER_DESERT_SITE,
+            hit,
+            action: FaultAction::DesertWorker,
+        });
+        self
+    }
+
+    /// Derive a whole schedule from one seed: `n` faults drawn across
+    /// every fault family (kernel panics, slow kernels, slow workers,
+    /// queue stalls, lane poison, worker desertion). Same seed, same
+    /// plan — the chaos soak replays any failing seed exactly.
+    #[must_use]
+    pub fn randomized(seed: u64, n: usize) -> Self {
+        let mut rng = XorShift64::new(seed ^ 0x9E37_79B9_7F4A_7C15);
+        let mut plan = Self::new();
+        for _ in 0..n {
+            let hit = rng.next_u64() % 24;
+            let site = KERNEL_SITES[(rng.next_u64() as usize) % KERNEL_SITES.len()];
+            match rng.next_u64() % 8 {
+                // Panics are the most interesting family: weight them.
+                0..=2 => plan = plan.panic_at(site, hit),
+                3 => {
+                    let us = 50 + rng.next_u64() % 450;
+                    plan = plan.sleep_at(site, hit, Duration::from_micros(us));
+                }
+                4 => {
+                    let us = 100 + rng.next_u64() % 900;
+                    plan = plan.sleep_at(WORKER_JOB_SITE, hit, Duration::from_micros(us));
+                }
+                5 => {
+                    let us = 100 + rng.next_u64() % 900;
+                    plan = plan.sleep_at(QUEUE_PUSH_SITE, hit, Duration::from_micros(us));
+                }
+                6 => plan = plan.poison_lane_at(hit % 8),
+                _ => plan = plan.desert_worker_at(hit % 8),
+            }
+        }
+        plan
+    }
+
+    /// Number of scheduled faults.
+    #[must_use]
+    pub fn len(&self) -> usize {
+        self.specs.len()
+    }
+
+    /// True when the plan schedules nothing.
+    #[must_use]
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+}
+
+/// The armed plan plus per-site arrival counters.
+struct ActivePlan {
+    specs: Vec<FaultSpec>,
+    /// `(site, arrivals-so-far)` — sites are few `'static` names, so a
+    /// linear scan beats a map.
+    counts: Vec<(&'static str, u64)>,
+}
+
+static ARMED: AtomicBool = AtomicBool::new(false);
+static FIRED: AtomicU64 = AtomicU64::new(0);
+static PLAN: Mutex<Option<ActivePlan>> = Mutex::new(None);
+
+/// Disarms the fault layer when dropped, so a panicking test (most
+/// fault tests panic *on purpose*) cannot leak its plan into the next.
+#[must_use = "dropping the guard disarms the plan immediately"]
+pub struct FaultGuard {
+    _priv: (),
+}
+
+impl Drop for FaultGuard {
+    fn drop(&mut self) {
+        disarm();
+    }
+}
+
+/// Arm a plan process-wide, replacing any previous one. Tests sharing a
+/// process must serialize around this (the chaos suites hold a mutex).
+pub fn install(plan: FaultPlan) -> FaultGuard {
+    let mut g = PLAN.lock().unwrap_or_else(|e| e.into_inner());
+    *g = Some(ActivePlan { specs: plan.specs, counts: Vec::new() });
+    drop(g);
+    ARMED.store(true, Ordering::SeqCst);
+    FaultGuard { _priv: () }
+}
+
+/// Disarm and forget the installed plan (idempotent).
+pub fn disarm() {
+    ARMED.store(false, Ordering::SeqCst);
+    let mut g = PLAN.lock().unwrap_or_else(|e| e.into_inner());
+    *g = None;
+}
+
+/// Whether a plan is currently armed.
+#[must_use]
+pub fn armed() -> bool {
+    ARMED.load(Ordering::SeqCst)
+}
+
+/// Total faults actually injected since process start (test hook).
+#[must_use]
+pub fn fired_total() -> u64 {
+    FIRED.load(Ordering::SeqCst)
+}
+
+/// Probe a kernel/forward site: panics or sleeps if the armed plan says
+/// so, otherwise a single relaxed load. Registered in `hotpath.txt` —
+/// allocation-free by construction.
+#[inline]
+pub fn fire(site: &'static str) {
+    if !ARMED.load(Ordering::Relaxed) {
+        return;
+    }
+    fire_armed(site);
+}
+
+/// Probe a congestion site: only `Sleep` actions apply (a stall site
+/// models slowness, never a crash). Registered in `hotpath.txt`.
+#[inline]
+pub fn stall(site: &'static str) {
+    if !ARMED.load(Ordering::Relaxed) {
+        return;
+    }
+    stall_armed(site);
+}
+
+/// Probe the lane-poison site once per lane forward: true when the
+/// armed plan marks this forward's workspace as corrupted. Registered
+/// in `hotpath.txt`.
+#[inline]
+#[must_use]
+pub fn lane_poison_due() -> bool {
+    if !ARMED.load(Ordering::Relaxed) {
+        return false;
+    }
+    take(LANE_POISON_SITE).is_some_and(|a| {
+        let due = a == FaultAction::PoisonLane;
+        if due {
+            FIRED.fetch_add(1, Ordering::SeqCst);
+        }
+        due
+    })
+}
+
+/// Probe the desertion site after a pool worker's region share: true
+/// when this worker should exit its thread (simulated death).
+/// Registered in `hotpath.txt`.
+#[inline]
+#[must_use]
+pub fn worker_desertion_due() -> bool {
+    if !ARMED.load(Ordering::Relaxed) {
+        return false;
+    }
+    take(WORKER_DESERT_SITE).is_some_and(|a| {
+        let due = a == FaultAction::DesertWorker;
+        if due {
+            FIRED.fetch_add(1, Ordering::SeqCst);
+        }
+        due
+    })
+}
+
+#[cold]
+fn fire_armed(site: &'static str) {
+    match take(site) {
+        Some(FaultAction::Panic) => {
+            FIRED.fetch_add(1, Ordering::SeqCst);
+            panic!("fault injected: {site}");
+        }
+        Some(FaultAction::Sleep(dur)) => {
+            FIRED.fetch_add(1, Ordering::SeqCst);
+            std::thread::sleep(dur);
+        }
+        _ => {}
+    }
+}
+
+#[cold]
+fn stall_armed(site: &'static str) {
+    if let Some(FaultAction::Sleep(dur)) = take(site) {
+        FIRED.fetch_add(1, Ordering::SeqCst);
+        std::thread::sleep(dur);
+    }
+}
+
+/// Count one arrival at `site` and return the action scheduled for this
+/// arrival, if any.
+#[cold]
+fn take(site: &'static str) -> Option<FaultAction> {
+    let mut g = PLAN.lock().unwrap_or_else(|e| e.into_inner());
+    let plan = g.as_mut()?;
+    let n = match plan.counts.iter_mut().find(|(s, _)| *s == site) {
+        Some((_, c)) => {
+            let n = *c;
+            *c += 1;
+            n
+        }
+        None => {
+            plan.counts.push((site, 1));
+            0
+        }
+    };
+    plan.specs
+        .iter()
+        .find(|sp| sp.site == site && sp.hit == n)
+        .map(|sp| sp.action)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Mutex as TestMutex, MutexGuard, OnceLock};
+
+    /// The fault layer is process-global; in-file tests serialize here.
+    fn serial() -> MutexGuard<'static, ()> {
+        static LOCK: OnceLock<TestMutex<()>> = OnceLock::new();
+        LOCK.get_or_init(|| TestMutex::new(()))
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn disarmed_probes_are_inert() {
+        let _s = serial();
+        disarm();
+        fire("kernel:gemm_f32_batch");
+        stall(QUEUE_PUSH_SITE);
+        assert!(!lane_poison_due());
+        assert!(!worker_desertion_due());
+        assert!(!armed());
+    }
+
+    // Hit-count assertions below arm synthetic sites no production
+    // probe ever visits, so a concurrently running sibling test in this
+    // binary (the server's queue-push stall, in particular, is not
+    // pool-gated) can never consume or shift a scheduled arrival.
+    #[test]
+    fn panic_fires_on_the_scheduled_hit_only() {
+        let _s = serial();
+        let guard = install(FaultPlan::new().panic_at("test:panic", 1));
+        fire("test:panic"); // hit 0: scheduled for hit 1 — no-op
+        let r = std::panic::catch_unwind(|| fire("test:panic"));
+        assert!(r.is_err(), "hit 1 must panic");
+        fire("test:panic"); // hit 2: spec already consumed its hit
+        drop(guard);
+        assert!(!armed(), "guard drop disarms");
+    }
+
+    #[test]
+    fn stall_ignores_panic_actions() {
+        let _s = serial();
+        let _g = install(FaultPlan::new().panic_at("test:stall", 0));
+        stall("test:stall"); // must not panic: stall sites model congestion
+    }
+
+    #[test]
+    fn poison_and_desertion_report_their_scheduled_hits() {
+        let _s = serial();
+        let _g = install(FaultPlan::new().poison_lane_at(1).desert_worker_at(0));
+        assert!(!lane_poison_due()); // hit 0
+        assert!(lane_poison_due()); // hit 1
+        assert!(!lane_poison_due()); // hit 2
+        assert!(worker_desertion_due()); // hit 0
+        assert!(!worker_desertion_due()); // hit 1
+    }
+
+    #[test]
+    fn randomized_plans_are_deterministic_in_the_seed() {
+        let a = FaultPlan::randomized(42, 8);
+        let b = FaultPlan::randomized(42, 8);
+        assert_eq!(a.len(), 8);
+        for (x, y) in a.specs.iter().zip(b.specs.iter()) {
+            assert_eq!(x.site, y.site);
+            assert_eq!(x.hit, y.hit);
+            assert_eq!(x.action, y.action);
+        }
+        // A different seed produces a different schedule (overwhelmingly).
+        let c = FaultPlan::randomized(43, 8);
+        assert!(
+            a.specs
+                .iter()
+                .zip(c.specs.iter())
+                .any(|(x, y)| x.site != y.site || x.hit != y.hit || x.action != y.action),
+            "seeds 42 and 43 drew identical schedules"
+        );
+    }
+}

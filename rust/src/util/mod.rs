@@ -9,6 +9,7 @@
 
 pub mod alloc;
 pub mod bench;
+pub mod faults;
 pub mod kv;
 pub mod proptest;
 pub mod rng;

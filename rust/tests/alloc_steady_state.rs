@@ -23,11 +23,17 @@
 //! step — including the KV-cache append into the lane's BWMA-packed
 //! arenas — allocates nothing and spawns nothing, and no stale K/V rows
 //! survive between checked-out sessions.
+//!
+//! ISSUE 10 extends it to failure recovery: scrubbing a quarantined
+//! lane back into service (after an injected panic, or an abandoned
+//! decode session) is poison-fill-in-place — the recovery forward and
+//! the abandon/checkout cycle both stay at zero allocations.
 
 use std::sync::{Mutex, MutexGuard};
 
 use bwma::runtime::{NativeModel, Tensor, WorkerPool};
 use bwma::util::alloc::{heap_allocs_total, CountingAllocator};
+use bwma::util::faults::{install, FaultPlan};
 use bwma::util::XorShift64;
 
 #[global_allocator]
@@ -384,4 +390,81 @@ fn poisoned_int8_workspace_does_not_leak_into_results() {
             "round {round}: poisoned int8 workspace leaked into the output"
         );
     }
+}
+
+/// ISSUE 10: lane scrub is allocation-free. An injected kernel panic
+/// quarantines the executing lane; the very next forward scrubs it on
+/// checkout (poison-fill in place, session cursor reset) and must be
+/// **bitwise identical** to the pre-fault baseline while allocating
+/// nothing — recovery is part of the warm path, not a rebuild.
+#[test]
+fn scrubbed_lane_recovers_bitwise_with_zero_allocations() {
+    let _g = counter_lock();
+    let model = NativeModel::new_encoder(32, 32, 2, 64, 2, 16, 0xA126)
+        .unwrap()
+        .with_cores(test_cores())
+        .unwrap();
+    let mut rng = XorShift64::new(0xA127);
+    let x = Tensor::new(model.in_shape(), rand_vec(&mut rng, 32 * 32));
+    let mut out = Tensor::zeros(model.out_shape());
+    for _ in 0..3 {
+        model.forward_into(&x, &mut out).unwrap();
+    }
+    let golden = out.clone();
+
+    // Only this model's pool observes the armed plan; the guard drops
+    // (disarming) before the recovery forward below.
+    model.pool().enable_faults();
+    {
+        let _faults = install(FaultPlan::new().panic_at("kernel:gemm_f32_batch", 0));
+        let e = model.forward_into(&x, &mut out).unwrap_err();
+        assert!(
+            format!("{e:#}").contains("panicked"),
+            "the injected panic must surface as a typed error: {e:#}"
+        );
+    }
+    assert_eq!(model.workspace_lanes_quarantined(), 1, "the failed lane lands in quarantine");
+    let scrubs_before = model.workspace_scrubs();
+
+    let before = heap_allocs_total();
+    model.forward_into(&x, &mut out).unwrap();
+    let allocs = heap_allocs_total() - before;
+    assert_eq!(allocs, 0, "the scrub-and-recover forward must not allocate (saw {allocs})");
+    assert_eq!(model.workspace_scrubs(), scrubs_before + 1, "recovery scrubs the lane");
+    assert_eq!(model.workspace_lanes_quarantined(), 0, "quarantine drains on checkout");
+    assert!(
+        golden.data.iter().zip(&out.data).all(|(a, b)| a.to_bits() == b.to_bits()),
+        "recovery forward diverges from the pre-fault baseline"
+    );
+}
+
+/// ISSUE 10: abandoning decode sessions is allocation-free in steady
+/// state — each `Drop` pushes the lane into the preallocated quarantine
+/// stack and each subsequent `begin_decode` scrubs it in place.
+#[test]
+fn abandoned_session_cycles_perform_zero_heap_allocations() {
+    let _g = counter_lock();
+    let model = NativeModel::new_decoder(8, 32, 2, 64, 2, 16, 64, 0xA128)
+        .unwrap()
+        .with_cores(test_cores())
+        .unwrap();
+    let mut rng = XorShift64::new(0xA129);
+    let x = rand_vec(&mut rng, 8 * 32);
+    let mut out = vec![0.0f32; 8 * 32];
+    // Warm-up: create the lane and exercise the quarantine path once.
+    for _ in 0..2 {
+        let mut sess = model.begin_decode().unwrap();
+        model.prefill_into(&mut sess, &x, 8, &mut out).unwrap();
+        drop(sess);
+    }
+    let scrubs_before = model.workspace_scrubs();
+    let before = heap_allocs_total();
+    for _ in 0..8 {
+        let mut sess = model.begin_decode().unwrap();
+        model.prefill_into(&mut sess, &x, 8, &mut out).unwrap();
+        drop(sess);
+    }
+    let allocs = heap_allocs_total() - before;
+    assert_eq!(allocs, 0, "8 abandon/checkout cycles must not allocate (saw {allocs})");
+    assert_eq!(model.workspace_scrubs(), scrubs_before + 8, "every cycle scrubs the lane");
 }

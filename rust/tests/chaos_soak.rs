@@ -1,0 +1,285 @@
+//! Chaos soak for the serving runtime: randomized, seed-deterministic
+//! fault schedules ([`bwma::util::faults::FaultPlan::randomized`]) run
+//! through the continuous-batching server while clients hammer it, then
+//! the failure-domain invariants are asserted:
+//!
+//! 1. **Exactly one typed answer per admitted request** — injected
+//!    panics, stalls, lane poisonings, and worker desertions never drop
+//!    or duplicate a response, and never deadlock the engine (every
+//!    `recv` is bounded).
+//! 2. **Successful answers stay bitwise identical** to the serial walk
+//!    of their own input — a fault blast radius is one request, never a
+//!    neighbor's numerics.
+//! 3. **Accounting closes**: served + failed equals what clients
+//!    observed, nothing is left in flight, and pool self-healing is
+//!    surfaced (never a silently degraded pool).
+//!
+//! The per-request answer timeout is generous (30 s) because the suite
+//! runs under sanitizers in the nightly lane; a deadlock still fails
+//! fast relative to CI, and promptly on a dev box.
+//!
+//! `BWMA_CHAOS_ROUNDS` picks how many fault seeds each soak run covers
+//! (tier-1 default 4; the nightly sanitizer lane raises it), and
+//! `BWMA_TEST_CORES` the pool width, matching the CI matrix.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+use std::time::Duration;
+
+use bwma::coordinator::{Server, ServerConfig};
+use bwma::runtime::{NativeModel, Tensor, WorkerPool};
+use bwma::util::faults::{install, FaultPlan};
+use bwma::util::XorShift64;
+
+/// The fault layer is process-global and the lane/pool counters are
+/// shared hooks, so every test in this binary serializes here.
+fn serial() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(())).lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Pool width for the models under test (CI matrix runs 1 and 4).
+fn test_cores() -> usize {
+    std::env::var("BWMA_TEST_CORES").ok().and_then(|v| v.parse().ok()).unwrap_or(4)
+}
+
+/// Fault seeds per soak run: tier-1 keeps it small and bounded; the
+/// nightly sanitizer job raises it for a long randomized schedule.
+fn chaos_rounds() -> u64 {
+    std::env::var("BWMA_CHAOS_ROUNDS").ok().and_then(|v| v.parse().ok()).unwrap_or(4)
+}
+
+const D_MODEL: usize = 32;
+const BUCKETS: [usize; 2] = [16, 32];
+
+fn bucket_model(seq: usize) -> NativeModel {
+    NativeModel::new_encoder(seq, D_MODEL, 2, 64, 2, 8, 0xC405).unwrap()
+}
+
+/// The `bwma serve --batcher continuous` wiring, with the shared pool
+/// opted into the armed fault plan (`WorkerPool::enable_faults`) — the
+/// opt-in is what keeps the injected chaos scoped to this server.
+fn chaos_server(cores: usize) -> Server {
+    Server::start_continuous(
+        ServerConfig { queue_depth: 1024, ..Default::default() },
+        move || {
+            let mut models: Vec<NativeModel> = Vec::new();
+            for &seq in &BUCKETS {
+                let m = bucket_model(seq);
+                let m = match models.first() {
+                    None => {
+                        let m = m.with_cores(cores)?;
+                        m.pool().enable_faults();
+                        m
+                    }
+                    Some(first) => m.with_pool(Arc::clone(first.pool())),
+                };
+                models.push(m);
+            }
+            Ok(models)
+        },
+    )
+    .unwrap()
+}
+
+fn rand_input(rng: &mut XorShift64, seq: usize) -> Tensor {
+    let mut data = vec![0.0f32; seq * D_MODEL];
+    rng.fill_f32(&mut data);
+    Tensor::new(vec![seq, D_MODEL], data)
+}
+
+/// The capstone: randomized fault schedules against live traffic.
+#[test]
+fn randomized_fault_schedules_preserve_the_serving_invariants() {
+    let _s = serial();
+    let cores = test_cores();
+    // Reference models run serial and never opt into faults, so they
+    // are safe to consult inside armed windows.
+    let refs: Vec<NativeModel> = BUCKETS.iter().map(|&s| bucket_model(s)).collect();
+    let ref_for = |seq: usize| &refs[BUCKETS.iter().position(|&s| s == seq).unwrap()];
+
+    for seed in 0..chaos_rounds() {
+        let server = chaos_server(cores);
+        let ok_count = AtomicU64::new(0);
+        let err_count = AtomicU64::new(0);
+        {
+            let _faults = install(FaultPlan::randomized(seed, 6));
+            std::thread::scope(|s| {
+                for t in 0..3u64 {
+                    let handle = server.handle();
+                    let (ok_count, err_count) = (&ok_count, &err_count);
+                    let ref_for = &ref_for;
+                    s.spawn(move || {
+                        let mut rng = XorShift64::new(0xCA05_0000 + seed * 31 + t);
+                        let inputs: Vec<Tensor> =
+                            (0..8).map(|_| rand_input(&mut rng, *rng.pick(&BUCKETS))).collect();
+                        let rxs: Vec<_> =
+                            inputs.iter().map(|x| handle.submit(x.clone())).collect();
+                        for (i, (x, rx)) in inputs.iter().zip(rxs).enumerate() {
+                            // Bounded wait: a deadlocked engine fails here
+                            // instead of hanging the suite.
+                            let answer = rx
+                                .recv_timeout(Duration::from_secs(30))
+                                .unwrap_or_else(|_| {
+                                    panic!("seed {seed} client {t} req {i}: no answer (deadlock?)")
+                                });
+                            match answer {
+                                Ok(resp) => {
+                                    let expect =
+                                        ref_for(x.shape[0]).forward_with_cores(x, 1).unwrap();
+                                    assert!(
+                                        expect
+                                            .data
+                                            .iter()
+                                            .zip(&resp.output.data)
+                                            .all(|(a, b)| a.to_bits() == b.to_bits()),
+                                        "seed {seed} client {t} req {i}: successful answer \
+                                         diverges from the serial walk"
+                                    );
+                                    ok_count.fetch_add(1, Ordering::SeqCst);
+                                }
+                                Err(e) => {
+                                    assert!(
+                                        !format!("{e:#}").is_empty(),
+                                        "seed {seed} client {t} req {i}: untyped failure"
+                                    );
+                                    err_count.fetch_add(1, Ordering::SeqCst);
+                                }
+                            }
+                        }
+                    });
+                }
+            });
+            // `_faults` drops here: the plan is disarmed before shutdown,
+            // after every request has already been answered.
+        }
+        let metrics = server.shutdown().unwrap();
+        let (ok, err) = (ok_count.load(Ordering::SeqCst), err_count.load(Ordering::SeqCst));
+        assert_eq!(ok + err, 24, "seed {seed}: exactly one answer per admitted request");
+        assert_eq!(metrics.requests, ok, "seed {seed}: served counter matches client successes");
+        assert_eq!(metrics.failed, err, "seed {seed}: failed counter matches client failures");
+        assert_eq!(metrics.rejected, 0, "seed {seed}: every request was well-formed");
+        assert_eq!(metrics.shed, 0, "seed {seed}: depth 1024 never overloads");
+        assert_eq!(metrics.deadline_shed, 0, "seed {seed}: no deadline configured");
+        assert_eq!(metrics.in_flight, 0, "seed {seed}: nothing left in flight at shutdown");
+        assert!(
+            !metrics.pool_degraded,
+            "seed {seed}: deserted workers must be respawned, not degraded (respawns: {})",
+            metrics.pool_respawns
+        );
+    }
+}
+
+/// Faults off, warm paths untouched: after a soak of armed windows the
+/// disarmed layer must still be inert (the zero-alloc / zero-spawn
+/// steady-state pins live in `tests/alloc_steady_state.rs` and
+/// `tests/pool_lifecycle.rs`; this guards the disarmed gate itself).
+#[test]
+fn disarmed_layer_is_inert_after_chaos() {
+    let _s = serial();
+    assert!(!bwma::util::faults::armed(), "no plan may leak out of a chaos test");
+    let before = WorkerPool::threads_spawned_total();
+    let model = bucket_model(32).with_cores(test_cores()).unwrap();
+    let mut rng = XorShift64::new(0x1E47);
+    let x = rand_input(&mut rng, 32);
+    let golden = model.forward(&x).unwrap();
+    for _ in 0..4 {
+        let again = model.forward(&x).unwrap();
+        assert!(golden.data.iter().zip(&again.data).all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
+    assert_eq!(
+        model.workspace_lanes_quarantined(),
+        0,
+        "no forward may quarantine a lane with faults off"
+    );
+    // The model's own pool creation spawned workers; forwards must not.
+    let spawned_by_pool = WorkerPool::threads_spawned_total() - before;
+    assert!(
+        spawned_by_pool <= test_cores().saturating_sub(1),
+        "steady forwards must not spawn threads ({spawned_by_pool} spawned)"
+    );
+}
+
+/// Satellite 1: abandoned decode sessions (dropped without `end_decode`)
+/// return their lane through quarantine — after N abandonments the lane
+/// population is unchanged, the scrub counter shows the recycling, and
+/// the next session's numerics are bitwise clean.
+#[test]
+fn abandoned_decode_sessions_recycle_their_lanes() {
+    let _s = serial();
+    let model = NativeModel::new_decoder(8, 16, 2, 32, 2, 8, 32, 0xABA7).unwrap();
+    let mut rng = XorShift64::new(0xABA8);
+    let mut x = vec![0.0f32; 8 * 16];
+    rng.fill_f32(&mut x);
+    let mut golden = vec![0.0f32; 8 * 16];
+    {
+        let mut sess = model.begin_decode().unwrap();
+        model.prefill_into(&mut sess, &x, 8, &mut golden).unwrap();
+        model.end_decode(sess);
+    }
+    let lanes = model.workspace_lanes_free() + model.workspace_lanes_quarantined();
+    let scrubs_before = model.workspace_scrubs();
+
+    const ABANDONED: u64 = 8;
+    for i in 0..ABANDONED {
+        let mut sess = model.begin_decode().unwrap();
+        let mut out = vec![0.0f32; 8 * 16];
+        model.prefill_into(&mut sess, &x, 8, &mut out).unwrap();
+        // Dropped mid-session: the `Drop` impl must hand the lane back
+        // (quarantined — its KV state is half-built garbage).
+        drop(sess);
+        assert_eq!(
+            model.workspace_lanes_free() + model.workspace_lanes_quarantined(),
+            lanes,
+            "abandonment {i}: lanes leaked"
+        );
+    }
+    assert!(
+        model.workspace_scrubs() >= scrubs_before + ABANDONED - 1,
+        "each post-abandonment checkout must scrub the quarantined lane (scrubs: {} -> {})",
+        scrubs_before,
+        model.workspace_scrubs()
+    );
+
+    let mut sess = model.begin_decode().unwrap();
+    let mut again = vec![0.0f32; 8 * 16];
+    model.prefill_into(&mut sess, &x, 8, &mut again).unwrap();
+    model.end_decode(sess);
+    assert!(
+        golden.iter().zip(&again).all(|(a, b)| a.to_bits() == b.to_bits()),
+        "a session on a scrubbed lane must be bitwise identical to the first"
+    );
+    assert_eq!(model.workspace_lanes_free() + model.workspace_lanes_quarantined(), lanes);
+}
+
+/// Decode-session TTL: an expired session refuses further work with a
+/// typed error, and dropping it still reclaims the lane.
+#[test]
+fn expired_decode_sessions_refuse_work_and_release_their_lane() {
+    let _s = serial();
+    let model = NativeModel::new_decoder(8, 16, 2, 32, 2, 8, 32, 0x77A1).unwrap();
+    let mut rng = XorShift64::new(0x77A2);
+    let mut x = vec![0.0f32; 8 * 16];
+    rng.fill_f32(&mut x);
+
+    let mut sess = model.begin_decode().unwrap();
+    sess.set_ttl(Duration::ZERO);
+    assert!(sess.expired(), "a zero TTL expires immediately");
+    let mut out = vec![0.0f32; 8 * 16];
+    let e = model.prefill_into(&mut sess, &x, 8, &mut out).unwrap_err();
+    assert!(format!("{e:#}").contains("expired"), "typed expiry error, got: {e:#}");
+    let e = model.decode_step_into(&mut sess, &x[..16], &mut out[..16]).unwrap_err();
+    assert!(format!("{e:#}").contains("expired"), "typed expiry error, got: {e:#}");
+    let lanes_before = model.workspace_lanes_free() + model.workspace_lanes_quarantined();
+    drop(sess);
+    assert_eq!(
+        model.workspace_lanes_free() + model.workspace_lanes_quarantined(),
+        lanes_before + 1,
+        "dropping an expired session must reclaim its lane"
+    );
+
+    // A fresh session is unaffected by the sibling's expiry.
+    let mut sess = model.begin_decode().unwrap();
+    model.prefill_into(&mut sess, &x, 8, &mut out).unwrap();
+    model.end_decode(sess);
+}

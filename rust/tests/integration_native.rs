@@ -59,6 +59,7 @@ fn every_registered_verify_tag_is_spelled_in_tests() {
         "native_decoder_equiv_b8",
         "native_decoder_equiv_b16",
         "native_decode_incremental_equiv_b16",
+        "native_lane_scrub_equiv_b16",
     ];
     assert_eq!(native_tags(), expected);
 }

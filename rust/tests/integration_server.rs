@@ -189,6 +189,7 @@ fn overload_sheds_with_typed_rejection() {
         max_batch: 1,
         batch_timeout: Duration::from_millis(1),
         queue_depth: 2,
+        ..Default::default()
     };
     let (server, _) = start_fake_cfg(&[1], cfg, false, Duration::from_millis(50));
     let handle = server.handle();
@@ -199,6 +200,8 @@ fn overload_sheds_with_typed_rejection() {
             Ok(_) => panic!("submit {i} must shed at queue depth 2"),
             Err(e) => {
                 assert!(matches!(&e, ServeError::Overloaded { limit: 2, .. }));
+                assert!(e.is_retryable(), "overload is a transient, retryable state");
+                assert!(e.retry_after().is_some(), "overload carries a backoff hint");
                 assert!(format!("{e}").contains("overloaded"));
                 shed += 1;
             }

@@ -11,11 +11,13 @@
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
 
 use bwma::coordinator::server::BatchRunner;
 use bwma::coordinator::{Server, ServerConfig};
 use bwma::runtime::parallel::WorkerPool;
 use bwma::runtime::{NativeModel, Tensor};
+use bwma::util::faults::{install, FaultPlan};
 use bwma::util::XorShift64;
 
 static COUNTER_LOCK: Mutex<()> = Mutex::new(());
@@ -198,4 +200,47 @@ fn continuous_serve_loop_under_load_creates_no_threads_beyond_the_pool() {
         spawned,
         "lane refill must ride the persistent pool, not spawn threads"
     );
+}
+
+/// ISSUE 10: worker desertion (simulated death via fault injection —
+/// the only way a pool thread can die; real task panics are caught) is
+/// healed by respawning before the next region publishes. The deserting
+/// region itself still covers every index (desertion acts after the
+/// barrier check-in), the healed region covers every index again, and
+/// the pool never degrades.
+#[test]
+fn deserted_workers_are_respawned_before_the_next_region() {
+    let _g = counter_lock();
+    let live = WorkerPool::live_worker_threads();
+    let pool = WorkerPool::new(3).unwrap();
+    // Only this pool observes the armed plan; sibling tests' pools
+    // (and their worker threads) stay blind to the window.
+    pool.enable_faults();
+    assert_eq!(WorkerPool::live_worker_threads(), live + 2);
+    let run_sum = |pool: &WorkerPool| {
+        let sum = AtomicUsize::new(0);
+        pool.run(&|w| {
+            sum.fetch_add(w + 1, Ordering::SeqCst);
+        })
+        .unwrap();
+        sum.load(Ordering::SeqCst)
+    };
+    assert_eq!(run_sum(&pool), 6, "healthy warm-up region");
+    {
+        let _faults = install(FaultPlan::new().desert_worker_at(0).desert_worker_at(1));
+        assert_eq!(run_sum(&pool), 6, "the deserting region still covers every index");
+        // Both background workers desert after their share; they exit
+        // their threads outside the barrier, so wait the exits out.
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while WorkerPool::live_worker_threads() > live && Instant::now() < deadline {
+            std::thread::yield_now();
+        }
+        assert_eq!(WorkerPool::live_worker_threads(), live, "both deserters exit their threads");
+    }
+    assert_eq!(run_sum(&pool), 6, "the healed region covers every index again");
+    assert_eq!(pool.respawned_workers(), 2, "self-healing respawns both deserters");
+    assert!(!pool.is_degraded(), "a successful respawn never degrades the pool");
+    assert_eq!(WorkerPool::live_worker_threads(), live + 2, "the pool is back at full width");
+    drop(pool);
+    assert_eq!(WorkerPool::live_worker_threads(), live, "drop joins respawned workers too");
 }

@@ -9,6 +9,7 @@
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
+use std::time::Duration;
 
 use bwma::coordinator::{ServeError, Server, ServerConfig};
 use bwma::runtime::{NativeModel, Tensor};
@@ -46,8 +47,13 @@ const BUCKETS: [usize; 3] = [16, 32, 48];
 /// One model per bucket, all sharing the first model's worker pool —
 /// the same wiring `bwma serve --batcher continuous` performs.
 fn serve_buckets(spec: Spec, buckets: &[usize], cores: usize, queue_depth: usize) -> Server {
+    serve_buckets_cfg(spec, buckets, cores, ServerConfig { queue_depth, ..Default::default() })
+}
+
+/// [`serve_buckets`] with a full [`ServerConfig`] (deadline tests).
+fn serve_buckets_cfg(spec: Spec, buckets: &[usize], cores: usize, cfg: ServerConfig) -> Server {
     let buckets = buckets.to_vec();
-    Server::start_continuous(ServerConfig { queue_depth, ..Default::default() }, move || {
+    Server::start_continuous(cfg, move || {
         let mut models: Vec<NativeModel> = Vec::new();
         for &seq in &buckets {
             let m = spec.model(seq);
@@ -134,6 +140,8 @@ fn queue_depth_limit_sheds_with_typed_error() {
         let e = handle.try_submit(rand_input(&mut rng, 64, spec.d_model)).unwrap_err();
         assert!(matches!(&e, ServeError::Overloaded { limit: 1, .. }), "submit {i}: {e}");
         assert!(format!("{e}").contains("overloaded"), "submit {i}: {e}");
+        assert!(e.is_retryable(), "overload is transient, clients may retry: {e}");
+        assert!(e.retry_after().is_some(), "overload carries a backoff hint: {e}");
     }
     admitted.recv().unwrap().expect("the admitted request must still be served");
 
@@ -188,5 +196,83 @@ fn rejected_shapes_fail_alone_in_continuous_mode() {
     assert_eq!(metrics.requests, 2, "only the well-formed requests execute");
     assert_eq!(metrics.rejected, 2);
     assert_eq!(metrics.shed, 0, "shape rejection is not overload shedding");
+    assert_eq!(metrics.in_flight, 0);
+}
+
+/// `--deadline-ms`: a slow model and a tight per-request deadline. A
+/// burst larger than the lane count forces later requests to wait out at
+/// least one full forward in the queue, past the deadline — those must
+/// be answered with the typed, retryable `DeadlineExceeded` rejection
+/// (never silently dropped, never computed late), and the accounting
+/// must cover the whole burst exactly.
+#[test]
+fn queued_past_deadline_requests_shed_with_typed_error() {
+    let spec = Spec { d_model: 64, heads: 2, d_ff: 128, layers: 8, block: 16, seed: 0xDDA7 };
+    let deadline = Duration::from_micros(200);
+    let cfg = ServerConfig { queue_depth: 1024, deadline: Some(deadline), ..Default::default() };
+    let server = serve_buckets_cfg(spec, &[64], test_cores(), cfg);
+    let mut rng = XorShift64::new(0xDDA8);
+    const BURST: usize = 12;
+
+    let inputs: Vec<Tensor> = (0..BURST).map(|_| rand_input(&mut rng, 64, spec.d_model)).collect();
+    let rxs: Vec<_> = inputs.iter().map(|x| server.submit(x.clone())).collect();
+    let mut served = 0u64;
+    let mut shed = 0u64;
+    for (i, rx) in rxs.into_iter().enumerate() {
+        match rx.recv().unwrap_or_else(|_| panic!("request {i} was never answered")) {
+            Ok(_) => served += 1,
+            Err(e) => {
+                let Some(se) = e.downcast_ref::<ServeError>() else {
+                    panic!("request {i}: non-deadline failure under a deadline config: {e:#}");
+                };
+                assert!(
+                    matches!(se, ServeError::DeadlineExceeded { .. }),
+                    "request {i}: unexpected typed error: {se}"
+                );
+                assert!(se.is_retryable(), "a deadline shed is retryable: {se}");
+                assert!(
+                    se.retry_after().is_none(),
+                    "deadline sheds carry no backoff hint (the queue already drained): {se}"
+                );
+                assert!(format!("{se}").contains("deadline"), "request {i}: {se}");
+                shed += 1;
+            }
+        }
+    }
+    assert_eq!(served + shed, BURST as u64, "exactly one answer per request");
+    assert!(shed >= 1, "a {BURST}-deep burst behind a {deadline:?} deadline must shed");
+
+    let metrics = server.shutdown().unwrap();
+    assert_eq!(metrics.requests, served, "served counter matches client-observed successes");
+    assert_eq!(metrics.deadline_shed, shed, "deadline sheds are counted distinctly");
+    assert_eq!(metrics.shed, 0, "no overload shedding at depth 1024");
+    assert_eq!(metrics.failed, 0, "deadline sheds are not execution failures");
+    assert_eq!(metrics.in_flight, 0);
+}
+
+/// Regression (idle CPU pin): an idle continuous server parks on its
+/// channel — the event loop blocks in `recv()` between requests instead
+/// of spinning a poll loop, so an idle stretch records **zero** nap
+/// timeouts. (Naps — bounded `recv_timeout` waits — happen only inside
+/// a live region while helpers still hold lanes, and even there the
+/// last finishing lane nudges worker 0 awake event-driven.)
+#[test]
+fn idle_continuous_server_parks_without_polling() {
+    let server = serve_buckets(SOAK, &[32], test_cores(), 1024);
+    let mut rng = XorShift64::new(0x1D1E);
+
+    // One warm round-trip so the engine has definitely entered (and
+    // left) its serving path before the idle window we measure.
+    let rx = server.submit(rand_input(&mut rng, 32, SOAK.d_model));
+    rx.recv().unwrap().expect("warm-up request");
+
+    std::thread::sleep(Duration::from_millis(150));
+
+    let metrics = server.shutdown().unwrap();
+    assert_eq!(
+        metrics.nap_timeouts, 0,
+        "an idle server must block on its channel, not wake on a poll interval"
+    );
+    assert_eq!(metrics.requests, 1);
     assert_eq!(metrics.in_flight, 0);
 }
